@@ -1,0 +1,38 @@
+//! Fig 4 (data overhead) on patterns + synthetic workflows: replica
+//! bytes copied by WOW COPs relative to unique generated data.
+//!
+//! ```bash
+//! cargo run --release --example data_overhead
+//! ```
+
+use wow::dfs::DfsKind;
+use wow::exec::{run, RunConfig};
+use wow::report::Table;
+use wow::scheduler::Strategy;
+
+fn main() {
+    let mut specs = wow::workflow::synthetic::all_synthetic();
+    specs.extend(wow::workflow::patterns::all_patterns());
+    let mut t = Table::new(
+        "WOW data overhead (Ceph ref = 100%, NFS ref = 0%)",
+        &["Workflow", "WOW on Ceph", "WOW on NFS", "COPs", "COPs used"],
+    );
+    for spec in specs {
+        let ceph = run(
+            &spec,
+            &RunConfig { dfs: DfsKind::Ceph, strategy: Strategy::Wow, ..Default::default() },
+        );
+        let nfs = run(
+            &spec,
+            &RunConfig { dfs: DfsKind::Nfs, strategy: Strategy::Wow, ..Default::default() },
+        );
+        t.row(vec![
+            spec.name.clone(),
+            format!("{:.1}%", ceph.data_overhead_pct()),
+            format!("{:.1}%", nfs.data_overhead_pct()),
+            ceph.cops_created.to_string(),
+            format!("{:.1}%", ceph.pct_cops_used()),
+        ]);
+    }
+    println!("{}", t.render());
+}

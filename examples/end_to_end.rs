@@ -1,0 +1,85 @@
+//! End-to-end driver — the full-system validation run.
+//!
+//! Exercises every layer on a real full-scale workload: the Chip-Seq
+//! trace model (3,537 physical tasks, 141 GB input, 787 GB generated —
+//! Table I) executed on the simulated 8-node / 1 Gbit cluster under all
+//! three strategies and both DFS backends, with the DPS served by the
+//! **AOT XLA artifact** (Pallas kernel -> JAX graph -> HLO -> PJRT)
+//! when available. Prints the paper-vs-measured headline metrics that
+//! EXPERIMENTS.md records.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use wow::dfs::DfsKind;
+use wow::exec::{run_with_backend, RunConfig};
+use wow::exp::make_backend;
+use wow::report::Table;
+use wow::scheduler::Strategy;
+use wow::util::stats::rel_change_pct;
+use wow::workflow::realworld;
+
+fn main() {
+    let spec = realworld::chipseq();
+    let use_xla = {
+        #[cfg(feature = "xla-runtime")]
+        {
+            wow::runtime::XlaCostModel::available()
+        }
+        #[cfg(not(feature = "xla-runtime"))]
+        {
+            false
+        }
+    };
+    eprintln!(
+        "end-to-end: {} | {} tasks | DPS backend: {}",
+        spec.name,
+        wow::workflow::engine::WorkflowEngine::dry_run_counts(&spec, 0).physical_tasks,
+        if use_xla { "XLA (AOT artifact)" } else { "native (run `make artifacts` for XLA)" },
+    );
+
+    // Paper Table II reference deltas for Chip-Seq (WOW vs Orig).
+    let paper = [(DfsKind::Ceph, -15.4), (DfsKind::Nfs, -44.8)];
+
+    let mut t = Table::new(
+        "End-to-end: Chip-Seq, 8 nodes, 1 Gbit",
+        &["DFS", "Strategy", "Makespan [min]", "vs Orig", "CPU [h]", "no-COP", "COPs used", "wall [s]"],
+    );
+    let mut summary = Vec::new();
+    for (dfs, paper_delta) in paper {
+        let mut orig_min = 0.0;
+        for strategy in [Strategy::Orig, Strategy::Cws, Strategy::Wow] {
+            let cfg = RunConfig { n_nodes: 8, link_gbit: 1.0, dfs, strategy, ..Default::default() };
+            let t0 = std::time::Instant::now();
+            let m = run_with_backend(&spec, &cfg, make_backend(use_xla));
+            let wall = t0.elapsed().as_secs_f64();
+            if strategy == Strategy::Orig {
+                orig_min = m.makespan_min();
+            }
+            let delta = rel_change_pct(orig_min, m.makespan_min());
+            if strategy == Strategy::Wow {
+                summary.push((dfs, delta, paper_delta));
+            }
+            t.row(vec![
+                dfs.label().into(),
+                strategy.label().into(),
+                format!("{:.1}", m.makespan_min()),
+                format!("{delta:+.1}%"),
+                format!("{:.1}", m.cpu_alloc_hours),
+                format!("{:.1}%", m.pct_tasks_no_cop()),
+                format!("{:.1}%", m.pct_cops_used()),
+                format!("{wall:.2}"),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    for (dfs, ours, paper) in summary {
+        println!(
+            "headline ({}): WOW makespan {:+.1}% vs Orig (paper Table II: {:+.1}%)",
+            dfs.label(),
+            ours,
+            paper
+        );
+    }
+}

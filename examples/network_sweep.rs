@@ -1,0 +1,40 @@
+//! Table III (network dependence) on the patterns: makespan change when
+//! the links go from 1 Gbit to 2 Gbit. WOW should barely care.
+//!
+//! ```bash
+//! cargo run --release --example network_sweep
+//! ```
+
+use wow::dfs::DfsKind;
+use wow::exec::{run, RunConfig};
+use wow::report::Table;
+use wow::scheduler::Strategy;
+use wow::util::stats::rel_change_pct;
+use wow::workflow::patterns;
+
+fn main() {
+    let mut t = Table::new(
+        "Makespan change 1 Gbit -> 2 Gbit (Ceph)",
+        &["Pattern", "Orig", "CWS", "WOW"],
+    );
+    for spec in patterns::all_patterns() {
+        let mut row = vec![spec.name.clone()];
+        for strat in [Strategy::Orig, Strategy::Cws, Strategy::Wow] {
+            let m1 = run(
+                &spec,
+                &RunConfig { dfs: DfsKind::Ceph, strategy: strat, link_gbit: 1.0, ..Default::default() },
+            );
+            let m2 = run(
+                &spec,
+                &RunConfig { dfs: DfsKind::Ceph, strategy: strat, link_gbit: 2.0, ..Default::default() },
+            );
+            row.push(format!(
+                "{:+.1}%",
+                rel_change_pct(m1.makespan_min(), m2.makespan_min())
+            ));
+        }
+        t.row(row);
+    }
+    println!("{}", t.render());
+    println!("Lower |change| = less network-bound (paper Table III: WOW smallest).");
+}

@@ -1,0 +1,39 @@
+//! Fig 3 patterns under all strategies: regenerates the pattern block
+//! of Table II on one seed.
+//!
+//! ```bash
+//! cargo run --release --example patterns
+//! ```
+
+use wow::dfs::DfsKind;
+use wow::exec::{run, RunConfig};
+use wow::report::Table;
+use wow::scheduler::Strategy;
+use wow::util::stats::rel_change_pct;
+use wow::workflow::patterns;
+
+fn main() {
+    for dfs in [DfsKind::Ceph, DfsKind::Nfs] {
+        let mut t = Table::new(
+            &format!("Workflow patterns (Fig 3) on {} — 8 nodes, 1 Gbit", dfs.label()),
+            &["Pattern", "Orig [min]", "CWS", "WOW", "WOW COPs", "no-COP"],
+        );
+        for spec in patterns::all_patterns() {
+            let m = |s: Strategy| {
+                run(&spec, &RunConfig { dfs, strategy: s, ..Default::default() })
+            };
+            let orig = m(Strategy::Orig);
+            let cws = m(Strategy::Cws);
+            let wowm = m(Strategy::Wow);
+            t.row(vec![
+                spec.name.clone(),
+                format!("{:.1}", orig.makespan_min()),
+                format!("{:+.1}%", rel_change_pct(orig.makespan_min(), cws.makespan_min())),
+                format!("{:+.1}%", rel_change_pct(orig.makespan_min(), wowm.makespan_min())),
+                wowm.cops_created.to_string(),
+                format!("{:.1}%", wowm.pct_tasks_no_cop()),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+}

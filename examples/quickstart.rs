@@ -1,0 +1,53 @@
+//! Quickstart: simulate the Chain pattern (WOW's showcase workflow)
+//! under all three scheduling strategies on a Ceph-backed 8-node
+//! cluster and compare makespans.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use wow::dfs::DfsKind;
+use wow::exec::{run, RunConfig};
+use wow::report::Table;
+use wow::scheduler::Strategy;
+use wow::util::stats::rel_change_pct;
+use wow::workflow::patterns;
+
+fn main() {
+    let spec = patterns::chain();
+    println!("workflow: {} ({} abstract stages)\n", spec.name, spec.stages.len());
+
+    let mut results = Vec::new();
+    for strategy in [Strategy::Orig, Strategy::Cws, Strategy::Wow] {
+        let cfg = RunConfig {
+            n_nodes: 8,
+            link_gbit: 1.0,
+            dfs: DfsKind::Ceph,
+            strategy,
+            ..Default::default()
+        };
+        results.push(run(&spec, &cfg));
+    }
+
+    let orig_makespan = results[0].makespan_min();
+    let mut t = Table::new(
+        "Chain pattern — 8 nodes, 1 Gbit, Ceph",
+        &["Strategy", "Makespan [min]", "vs Orig", "CPU [h]", "COPs", "Overhead"],
+    );
+    for m in &results {
+        t.row(vec![
+            m.strategy.to_uppercase(),
+            format!("{:.1}", m.makespan_min()),
+            format!("{:+.1}%", rel_change_pct(orig_makespan, m.makespan_min())),
+            format!("{:.1}", m.cpu_alloc_hours),
+            m.cops_created.to_string(),
+            format!("{:.1}%", m.data_overhead_pct()),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "WOW keeps each chain's intermediate file on the node that produced\n\
+         it, so successor tasks start on *prepared* nodes and no bytes cross\n\
+         the network (paper Table II: -86.4% makespan on Ceph)."
+    );
+}

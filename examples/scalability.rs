@@ -1,0 +1,38 @@
+//! Fig 5 (scalability) on the Chain pattern: makespan + efficiency for
+//! 1..8 nodes, WOW vs CWS.
+//!
+//! ```bash
+//! cargo run --release --example scalability
+//! ```
+
+use wow::dfs::DfsKind;
+use wow::exec::{run, RunConfig};
+use wow::report::Table;
+use wow::scheduler::Strategy;
+use wow::workflow::patterns;
+
+fn main() {
+    let spec = patterns::chain();
+    for dfs in [DfsKind::Ceph, DfsKind::Nfs] {
+        let mut t = Table::new(
+            &format!("Chain scalability on {} (efficiency = makespan(1)/(makespan(n)*n))", dfs.label()),
+            &["Nodes", "CWS [min]", "CWS eff", "WOW [min]", "WOW eff"],
+        );
+        let mut base = [f64::NAN; 2];
+        for n in [1usize, 2, 4, 6, 8] {
+            let mut row = vec![n.to_string()];
+            for (i, strat) in [Strategy::Cws, Strategy::Wow].into_iter().enumerate() {
+                let cfg = RunConfig { n_nodes: n, dfs, strategy: strat, ..Default::default() };
+                let m = run(&spec, &cfg).makespan_min();
+                if n == 1 {
+                    base[i] = m;
+                }
+                row.push(format!("{m:.1}"));
+                row.push(format!("{:.0}%", base[i] / (m * n as f64) * 100.0));
+            }
+            // reorder: nodes, cws, cws eff, wow, wow eff
+            t.row(row);
+        }
+        println!("{}", t.render());
+    }
+}

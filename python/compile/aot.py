@@ -1,0 +1,63 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO text -> artifacts/.
+
+HLO *text* is the interchange format, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate\'s xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and gen_hlo.py there).
+
+Usage::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Python runs exactly once per artifact build; the rust coordinator never
+imports it at runtime.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_cost_model() -> str:
+    lowered = jax.jit(model.cost_model).lower(*model.example_args())
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--out",
+        default="../artifacts",
+        help="artifact output directory (default: ../artifacts)",
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    path = os.path.join(args.out, "cost_model.hlo.txt")
+    text = build_cost_model()
+    with open(path, "w") as f:
+        f.write(text)
+    print(
+        f"wrote {path}: {len(text)} chars, tile (T,F,N)="
+        f"({model.TILE_T},{model.TILE_F},{model.TILE_N})"
+    )
+
+
+if __name__ == "__main__":
+    main()

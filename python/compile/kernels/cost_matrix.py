@@ -1,0 +1,100 @@
+"""Layer 1: the DPS cost-matrix Pallas kernel.
+
+The hot spot of every WOW scheduling iteration is the pair of masked
+matmuls over the (tasks x files x nodes) brick::
+
+    missing[t, n] = sum_f req[t, f] * size[f] * (1 - present[f, n])
+    local[t, n]   = sum_f req[t, f] * size[f] * present[f, n]
+
+``missing`` drives preparedness (step 1 candidates), transfer-time
+estimates (step 2) and price bulk terms (step 3); ``local`` is the
+locality diagnostic.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the contraction
+over files is MXU-shaped work. The kernel tiles (T, F) x (F, N) blocks
+into VMEM via BlockSpec, does the size/presence masking on the VPU, and
+accumulates both products in f32. ``interpret=True`` everywhere: the CPU
+PJRT plugin cannot run Mosaic custom-calls, and interpret-mode lowering
+produces plain HLO the rust runtime executes (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default VMEM block shape. f32 footprint per grid step:
+#   req (BT x BF) + present/sizes (BF x BN, BF) + 2 outputs (BT x BN)
+#   = 16*128*4 + 128*16*4 + 128*4 + 2*16*16*4 B ~ 19 KiB  << 16 MiB VMEM.
+BLOCK_T = 16
+BLOCK_F = 128
+BLOCK_N = 16
+
+
+def _cost_kernel(req_ref, present_ref, sizes_ref, miss_ref, loc_ref):
+    """One (BT, BF, BN) grid step: mask + two matmul accumulations."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        miss_ref[...] = jnp.zeros_like(miss_ref)
+        loc_ref[...] = jnp.zeros_like(loc_ref)
+
+    req = req_ref[...]  # (BT, BF)
+    present = present_ref[...]  # (BF, BN)
+    sizes = sizes_ref[...]  # (BF,)
+    weighted_local = present * sizes[:, None]  # VPU masking
+    weighted_missing = (1.0 - present) * sizes[:, None]
+    # MXU contractions, f32 accumulation.
+    loc_ref[...] += jnp.dot(req, weighted_local, preferred_element_type=jnp.float32)
+    miss_ref[...] += jnp.dot(req, weighted_missing, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_f", "block_n"))
+def cost_matrix(
+    req: jax.Array,
+    present: jax.Array,
+    sizes: jax.Array,
+    *,
+    block_t: int = BLOCK_T,
+    block_f: int = BLOCK_F,
+    block_n: int = BLOCK_N,
+):
+    """Compute (missing, local), each (T, N) f32.
+
+    Shapes must tile evenly into the block shape; the AOT entry point
+    (:mod:`python.compile.model`) fixes (32, 256, 16) and zero-pads, so
+    this holds by construction. Zero padding is exact: padded files have
+    size 0 and padded tasks request nothing.
+    """
+    t, f = req.shape
+    f2, n = present.shape
+    assert f == f2, f"req/present file mismatch: {f} vs {f2}"
+    assert sizes.shape == (f,)
+    assert t % block_t == 0 and f % block_f == 0 and n % block_n == 0, (
+        f"shape ({t},{f},{n}) must tile into ({block_t},{block_f},{block_n})"
+    )
+    grid = (t // block_t, n // block_n, f // block_f)
+    out_shape = [
+        jax.ShapeDtypeStruct((t, n), jnp.float32),
+        jax.ShapeDtypeStruct((t, n), jnp.float32),
+    ]
+    return pl.pallas_call(
+        _cost_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, block_f), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_f, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((block_f,), lambda i, j, k: (k,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t, block_n), lambda i, j, k: (i, j)),
+            pl.BlockSpec((block_t, block_n), lambda i, j, k: (i, j)),
+        ],
+        out_shape=out_shape,
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(req, present, sizes)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the cost-matrix kernel.
+
+The correctness contract for Layer 1: :func:`cost_matrix_ref` is the
+reference semantics the Pallas kernel must reproduce (pytest sweeps
+shapes with hypothesis in ``python/tests/test_kernel.py``), and the rust
+``NativeCost`` backend implements the same formula, so all three agree.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def cost_matrix_ref(req: jax.Array, present: jax.Array, sizes: jax.Array):
+    """(missing, local) by direct masked matmuls.
+
+    req: (T, F) 0/1 f32 -- task-to-file requirement mask.
+    present: (F, N) 0/1 f32 -- replica presence per node.
+    sizes: (F,) f32 -- file sizes (GB).
+    """
+    weighted_local = present * sizes[:, None]
+    weighted_missing = (1.0 - present) * sizes[:, None]
+    local = req @ weighted_local
+    missing = req @ weighted_missing
+    return missing, local

@@ -1,0 +1,56 @@
+"""Layer 2: the DPS cost model as a JAX graph.
+
+Wraps the Layer-1 Pallas kernel (:mod:`.kernels.cost_matrix`) with the
+surrounding computation the rust DPS consumes per scheduling iteration:
+
+- ``missing``/``local`` byte matrices (from the kernel),
+- a ``prepared`` mask (``missing <= EPS`` -- a node holding every
+  intermediate input of a task, paper sec. III-B),
+- the per-task best candidate node by missing bytes (step 2\'s
+  "earliest start ~ fewest bytes to copy" estimate, sec. IV-C).
+
+``aot.py`` lowers :func:`cost_model` once at the fixed tile shape
+(T, F, N) = (32, 256, 16); the rust runtime zero-pads real queries into
+tiles and accumulates partial results across file tiles.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.cost_matrix import cost_matrix
+
+# Fixed AOT tile shape -- keep in sync with rust/src/dps/cost.rs
+# (TILE_T, TILE_F, TILE_N).
+TILE_T = 32
+TILE_F = 256
+TILE_N = 16
+
+# Preparedness threshold, matching CostMatrix::is_prepared. Exact zero:
+# `present` is exactly 0/1, so a fully-present row sums to exactly 0.0
+# in f32; a tolerance would misclassify sub-KB files.
+EPS_GB = 0.0
+
+
+def cost_model(req: jax.Array, present: jax.Array, sizes: jax.Array):
+    """The full per-iteration DPS query.
+
+    Returns (missing, local, prepared, best_node):
+      missing, local: (T, N) f32 GB
+      prepared: (T, N) f32 0/1
+      best_node: (T,) int32 argmin of missing bytes
+    """
+    missing, local = cost_matrix(req, present, sizes)
+    prepared = (missing <= EPS_GB).astype(jnp.float32)
+    best_node = jnp.argmin(missing, axis=1).astype(jnp.int32)
+    return missing, local, prepared, best_node
+
+
+def example_args():
+    """ShapeDtypeStructs at the AOT tile shape."""
+    return (
+        jax.ShapeDtypeStruct((TILE_T, TILE_F), jnp.float32),
+        jax.ShapeDtypeStruct((TILE_F, TILE_N), jnp.float32),
+        jax.ShapeDtypeStruct((TILE_F,), jnp.float32),
+    )

@@ -1,0 +1,38 @@
+"""AOT path: the HLO-text artifact is well-formed and deterministic."""
+
+import os
+import subprocess
+import sys
+
+from compile.aot import build_cost_model
+from compile.model import TILE_F, TILE_N, TILE_T
+
+
+def test_hlo_text_is_produced_and_well_formed():
+    text = build_cost_model()
+    assert len(text) > 1000
+    assert text.startswith("HloModule")
+    # Entry layout mentions the tile shapes.
+    assert f"f32[{TILE_T},{TILE_F}]" in text
+    assert f"f32[{TILE_F},{TILE_N}]" in text
+    # Tuple of 4 outputs (missing, local, prepared, best_node).
+    assert f"s32[{TILE_T}]" in text
+
+
+def test_lowering_is_deterministic():
+    assert build_cost_model() == build_cost_model()
+
+
+def test_cli_writes_artifact(tmp_path):
+    env = dict(os.environ)
+    out = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(tmp_path)],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert out.returncode == 0, out.stderr
+    artifact = tmp_path / "cost_model.hlo.txt"
+    assert artifact.exists()
+    assert artifact.read_text().startswith("HloModule")

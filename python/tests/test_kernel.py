@@ -1,0 +1,137 @@
+"""Layer-1 correctness: the Pallas cost-matrix kernel vs the pure-jnp
+oracle, hypothesis-swept over shapes, densities and size scales.
+
+This is the core correctness signal for the compute layer: the rust
+NativeCost backend and the AOT artifact are both held to the same
+reference (rust/tests/runtime_xla.rs closes the loop on the rust side).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.cost_matrix import BLOCK_F, BLOCK_N, BLOCK_T, cost_matrix
+from compile.kernels.ref import cost_matrix_ref
+
+
+def make_instance(rng, t, f, n, req_density=0.25, present_density=0.4, size_scale=4.0):
+    req = (rng.random((t, f)) < req_density).astype(np.float32)
+    present = (rng.random((f, n)) < present_density).astype(np.float32)
+    sizes = (rng.random(f) * size_scale).astype(np.float32)
+    return jnp.array(req), jnp.array(present), jnp.array(sizes)
+
+
+def assert_matches_ref(req, present, sizes, **kw):
+    m_k, l_k = cost_matrix(req, present, sizes, **kw)
+    m_r, l_r = cost_matrix_ref(req, present, sizes)
+    np.testing.assert_allclose(m_k, m_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(l_k, l_r, rtol=1e-5, atol=1e-5)
+
+
+def test_aot_tile_shape_matches_ref():
+    rng = np.random.default_rng(0)
+    req, present, sizes = make_instance(rng, 32, 256, 16)
+    assert_matches_ref(req, present, sizes)
+
+
+@hypothesis.settings(deadline=None, max_examples=25)
+@hypothesis.given(
+    tt=st.integers(1, 4),
+    ff=st.integers(1, 4),
+    nn=st.integers(1, 2),
+    seed=st.integers(0, 2**31 - 1),
+    req_density=st.floats(0.0, 1.0),
+    present_density=st.floats(0.0, 1.0),
+)
+def test_kernel_matches_ref_across_shapes(tt, ff, nn, seed, req_density, present_density):
+    """Sweep multiples of the block shape (Pallas grids must tile)."""
+    rng = np.random.default_rng(seed)
+    t, f, n = tt * BLOCK_T, ff * BLOCK_F, nn * BLOCK_N
+    req, present, sizes = make_instance(rng, t, f, n, req_density, present_density)
+    assert_matches_ref(req, present, sizes)
+
+
+@hypothesis.settings(deadline=None, max_examples=10)
+@hypothesis.given(
+    bt=st.sampled_from([8, 16, 32]),
+    bf=st.sampled_from([64, 128, 256]),
+    bn=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_across_block_shapes(bt, bf, bn, seed):
+    """The kernel must be correct for any valid VMEM blocking."""
+    rng = np.random.default_rng(seed)
+    req, present, sizes = make_instance(rng, 2 * bt, 2 * bf, bn)
+    assert_matches_ref(req, present, sizes, block_t=bt, block_f=bf, block_n=bn)
+
+
+@hypothesis.settings(deadline=None, max_examples=10)
+@hypothesis.given(scale=st.floats(1e-3, 1e3), seed=st.integers(0, 2**31 - 1))
+def test_size_scale_invariance(scale, seed):
+    """missing/local scale linearly with file sizes."""
+    rng = np.random.default_rng(seed)
+    req, present, sizes = make_instance(rng, BLOCK_T, BLOCK_F, BLOCK_N)
+    m1, l1 = cost_matrix(req, present, sizes)
+    m2, l2 = cost_matrix(req, present, sizes * scale)
+    np.testing.assert_allclose(np.asarray(m2), np.asarray(m1) * scale, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(l2), np.asarray(l1) * scale, rtol=1e-4)
+
+
+def test_missing_plus_local_is_total_requirement():
+    rng = np.random.default_rng(3)
+    req, present, sizes = make_instance(rng, 32, 256, 16)
+    m, l = cost_matrix(req, present, sizes)
+    total = req @ np.asarray(sizes)  # (T,)
+    np.testing.assert_allclose(
+        np.asarray(m) + np.asarray(l),
+        np.tile(np.asarray(total)[:, None], (1, 16)),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_zero_padding_is_exact():
+    """Zero rows/files/sizes contribute nothing — the property the rust
+    runtime's tile padding relies on."""
+    rng = np.random.default_rng(4)
+    req, present, sizes = make_instance(rng, 16, 128, 16)
+    # Pad with zero tasks and zero-size files.
+    req_p = jnp.zeros((32, 256), jnp.float32).at[:16, :128].set(req)
+    present_p = jnp.zeros((256, 16), jnp.float32).at[:128, :].set(present)
+    sizes_p = jnp.zeros((256,), jnp.float32).at[:128].set(sizes)
+    m_small, l_small = cost_matrix(req, present, sizes)
+    m_big, l_big = cost_matrix(req_p, present_p, sizes_p)
+    np.testing.assert_allclose(m_big[:16], m_small, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(l_big[:16], l_small, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(m_big[16:], 0.0, atol=1e-6)
+
+
+def test_all_present_means_nothing_missing():
+    rng = np.random.default_rng(5)
+    req, _, sizes = make_instance(rng, 16, 128, 16)
+    present = jnp.ones((128, 16), jnp.float32)
+    m, l = cost_matrix(req, present, sizes)
+    np.testing.assert_allclose(np.asarray(m), 0.0, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(l),
+        np.broadcast_to(np.asarray(req @ sizes)[:, None], (16, 16)),
+        rtol=1e-5,
+    )
+
+
+def test_shape_mismatch_rejected():
+    req = jnp.zeros((16, 128), jnp.float32)
+    present = jnp.zeros((64, 16), jnp.float32)  # wrong F
+    sizes = jnp.zeros((128,), jnp.float32)
+    with pytest.raises(AssertionError):
+        cost_matrix(req, present, sizes)
+
+
+def test_non_tiling_shape_rejected():
+    req = jnp.zeros((10, 128), jnp.float32)  # 10 % 16 != 0
+    present = jnp.zeros((128, 16), jnp.float32)
+    sizes = jnp.zeros((128,), jnp.float32)
+    with pytest.raises(AssertionError):
+        cost_matrix(req, present, sizes)

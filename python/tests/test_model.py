@@ -1,0 +1,53 @@
+"""Layer-2 correctness: the cost_model graph around the kernel."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import EPS_GB, TILE_F, TILE_N, TILE_T, cost_model
+from compile.kernels.ref import cost_matrix_ref
+
+
+def instance(seed=0):
+    rng = np.random.default_rng(seed)
+    req = (rng.random((TILE_T, TILE_F)) < 0.2).astype(np.float32)
+    present = (rng.random((TILE_F, TILE_N)) < 0.5).astype(np.float32)
+    sizes = (rng.random(TILE_F) * 3).astype(np.float32)
+    return jnp.array(req), jnp.array(present), jnp.array(sizes)
+
+
+def test_outputs_shapes_and_dtypes():
+    req, present, sizes = instance()
+    missing, local, prepared, best = cost_model(req, present, sizes)
+    assert missing.shape == (TILE_T, TILE_N) and missing.dtype == jnp.float32
+    assert local.shape == (TILE_T, TILE_N) and local.dtype == jnp.float32
+    assert prepared.shape == (TILE_T, TILE_N) and prepared.dtype == jnp.float32
+    assert best.shape == (TILE_T,) and best.dtype == jnp.int32
+
+
+def test_matrices_match_reference():
+    req, present, sizes = instance(1)
+    missing, local, _, _ = cost_model(req, present, sizes)
+    m_r, l_r = cost_matrix_ref(req, present, sizes)
+    np.testing.assert_allclose(missing, m_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(local, l_r, rtol=1e-5, atol=1e-5)
+
+
+def test_prepared_mask_consistent_with_missing():
+    req, present, sizes = instance(2)
+    missing, _, prepared, _ = cost_model(req, present, sizes)
+    np.testing.assert_array_equal(
+        np.asarray(prepared) > 0.5, np.asarray(missing) <= EPS_GB
+    )
+
+
+def test_best_node_is_argmin_of_missing():
+    req, present, sizes = instance(3)
+    missing, _, _, best = cost_model(req, present, sizes)
+    np.testing.assert_array_equal(np.asarray(best), np.asarray(missing).argmin(axis=1))
+
+
+def test_task_requiring_nothing_is_prepared_everywhere():
+    req, present, sizes = instance(4)
+    req = req.at[0, :].set(0.0)
+    _, _, prepared, _ = cost_model(req, present, sizes)
+    assert np.all(np.asarray(prepared)[0] == 1.0)

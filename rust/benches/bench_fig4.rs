@@ -1,0 +1,32 @@
+//! Bench: regenerate Fig 4 (data overhead) on the pattern + synthetic
+//! set.
+//!
+//! `cargo bench --bench bench_fig4`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use wow::dfs::DfsKind;
+use wow::exec::{run, RunConfig};
+use wow::scheduler::Strategy;
+
+fn main() {
+    println!("bench_fig4 — WOW data overhead per workflow\n");
+    let mut specs = wow::workflow::synthetic::all_synthetic();
+    specs.extend(wow::workflow::patterns::all_patterns());
+    for spec in &specs {
+        for dfs in [DfsKind::Ceph, DfsKind::Nfs] {
+            let cfg = RunConfig { dfs, strategy: Strategy::Wow, ..Default::default() };
+            let (m, wall) = common::time_it(|| run(spec, &cfg));
+            println!(
+                "{:<16} {:<4} overhead {:>6.1}%  cops {:>5}  used {:>5.1}%  sim-wall {:>6.3} s",
+                spec.name,
+                dfs.label(),
+                m.data_overhead_pct(),
+                m.cops_created,
+                m.pct_cops_used(),
+                wall
+            );
+        }
+    }
+}

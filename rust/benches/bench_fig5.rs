@@ -1,0 +1,42 @@
+//! Bench: regenerate Fig 5 (scalability, 1..8 nodes) for Chain and
+//! All-in-One under CWS and WOW.
+//!
+//! `cargo bench --bench bench_fig5`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use wow::dfs::DfsKind;
+use wow::exec::{run, RunConfig};
+use wow::scheduler::Strategy;
+
+fn main() {
+    println!("bench_fig5 — scalability sweep\n");
+    for spec in [wow::workflow::patterns::chain(), wow::workflow::patterns::all_in_one()] {
+        for strategy in [Strategy::Cws, Strategy::Wow] {
+            let mut base = f64::NAN;
+            for n in [1usize, 2, 4, 6, 8] {
+                let cfg = RunConfig {
+                    n_nodes: n,
+                    dfs: DfsKind::Ceph,
+                    strategy,
+                    ..Default::default()
+                };
+                let (m, wall) = common::time_it(|| run(&spec, &cfg));
+                if n == 1 {
+                    base = m.makespan_min();
+                }
+                let eff = base / (m.makespan_min() * n as f64) * 100.0;
+                println!(
+                    "{:<12} {:<4} n={}  makespan {:>7.1} min  eff {:>5.1}%  sim-wall {:>6.3} s",
+                    spec.name,
+                    strategy.label(),
+                    n,
+                    m.makespan_min(),
+                    eff,
+                    wall
+                );
+            }
+        }
+    }
+}

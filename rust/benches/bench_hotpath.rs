@@ -1,0 +1,78 @@
+//! Bench: the DPS cost-matrix hot path — Native rust vs the AOT XLA
+//! artifact (Layers 1/2), plus the greedy COP planner. This is the
+//! Layer-1/2 performance instrument for EXPERIMENTS.md §Perf.
+//!
+//! `cargo bench --bench bench_hotpath`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use wow::dps::cost::{CostEval, NativeCost};
+use wow::util::rng::Rng;
+
+fn instance(rng: &mut Rng, t: usize, f: usize, n: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let req = (0..t * f).map(|_| (rng.next_f64() < 0.25) as u8 as f32).collect();
+    let present = (0..f * n).map(|_| (rng.next_f64() < 0.4) as u8 as f32).collect();
+    let sizes = (0..f).map(|_| rng.range_f64(0.01, 8.0) as f32).collect();
+    (req, present, sizes)
+}
+
+fn main() {
+    println!("bench_hotpath — DPS cost-matrix backends\n");
+    let mut rng = Rng::new(1);
+    let shapes = [(32usize, 256usize, 8usize), (64, 512, 8), (256, 1024, 8), (1024, 4096, 8)];
+
+    for &(t, f, n) in &shapes {
+        let (req, present, sizes) = instance(&mut rng, t, f, n);
+        common::bench_n(&format!("native  ({t:>4} x {f:>4} x {n})"), 20, || {
+            let _ = NativeCost.missing_local(&req, &present, &sizes, t, f, n);
+        });
+    }
+
+    #[cfg(feature = "xla-runtime")]
+    {
+        if wow::runtime::XlaCostModel::available() {
+            let mut xla = wow::runtime::XlaCostModel::load_default().expect("artifact");
+            for &(t, f, n) in &shapes {
+                let (req, present, sizes) = instance(&mut rng, t, f, n);
+                common::bench_n(&format!("xla     ({t:>4} x {f:>4} x {n})"), 20, || {
+                    let _ = xla.missing_local(&req, &present, &sizes, t, f, n);
+                });
+            }
+        } else {
+            println!("(xla artifact not built; run `make artifacts` for the XLA rows)");
+        }
+    }
+
+    // Greedy COP planner microbench.
+    use wow::cluster::NodeId;
+    use wow::dps::Dps;
+    use wow::util::units::Bytes;
+    use wow::workflow::task::FileId;
+    let mut dps = Dps::new(7);
+    let files: Vec<FileId> = (0..64).map(FileId).collect();
+    for &f in &files {
+        for node in 0..4 {
+            dps.register_output(f, Bytes::from_gb(0.5), NodeId(node));
+        }
+    }
+    common::bench_n("dps::plan (64 files, 4 holders)", 200, || {
+        let _ = dps.plan(&files, NodeId(6));
+    });
+
+    // One full WOW scheduling-heavy simulation as the end-to-end probe.
+    use wow::exec::{run, RunConfig};
+    use wow::scheduler::Strategy;
+    common::bench_n("full sim: Group Multiple / WOW / Ceph", 5, || {
+        let _ = run(
+            &wow::workflow::patterns::group_multiple(),
+            &RunConfig { strategy: Strategy::Wow, ..Default::default() },
+        );
+    });
+    common::bench_n("full sim: Chip-Seq / WOW / Ceph", 1, || {
+        let _ = run(
+            &wow::workflow::realworld::chipseq(),
+            &RunConfig { strategy: Strategy::Wow, ..Default::default() },
+        );
+    });
+}

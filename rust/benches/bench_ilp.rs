@@ -1,0 +1,46 @@
+//! Bench: the step-1 ILP solver — exact branch-and-bound vs the greedy
+//! incumbent, over instance sizes bracketing the paper's (median step-1
+//! solve time in the paper: 11 ms; 99th percentile 112 ms).
+//!
+//! `cargo bench --bench bench_ilp`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use wow::scheduler::wow::ilp::{self, IlpNode, IlpTask};
+use wow::util::rng::Rng;
+use wow::util::units::Bytes;
+
+fn random_instance(rng: &mut Rng, n_tasks: usize, n_nodes: usize) -> (Vec<IlpTask>, Vec<IlpNode>) {
+    let nodes: Vec<IlpNode> = (0..n_nodes)
+        .map(|_| IlpNode { cores: 16, mem: Bytes::from_gb(128.0) })
+        .collect();
+    let tasks: Vec<IlpTask> = (0..n_tasks)
+        .map(|_| {
+            let cands: Vec<usize> = (0..n_nodes).filter(|_| rng.next_f64() < 0.5).collect();
+            IlpTask {
+                priority: 0.5 + rng.next_f64() * 8.0,
+                cores: 1 + rng.index(6) as u32,
+                mem: Bytes::from_gb(1.0 + rng.next_f64() * 15.0),
+                candidate_nodes: cands,
+            }
+        })
+        .collect();
+    (tasks, nodes)
+}
+
+fn main() {
+    println!("bench_ilp — step-1 assignment solver (paper: median 11 ms)\n");
+    let mut rng = Rng::new(3);
+    for &(nt, nn) in &[(16usize, 8usize), (64, 8), (128, 8), (256, 8), (512, 8)] {
+        let (tasks, nodes) = random_instance(&mut rng, nt, nn);
+        let mut objective = 0.0;
+        let mut proved = true;
+        common::bench_n(&format!("b&b    {nt:>4} tasks x {nn} nodes"), 10, || {
+            let s = ilp::solve(&tasks, &nodes);
+            objective = s.objective;
+            proved &= s.proved_optimal;
+        });
+        println!("         -> objective {objective:.1}, proved optimal: {proved}");
+    }
+}

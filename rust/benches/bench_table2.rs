@@ -1,0 +1,42 @@
+//! Bench: regenerate Table II (execution behaviour) on the pattern +
+//! synthetic set with a single seed, timing each simulated cell.
+//!
+//! `cargo bench --bench bench_table2`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use wow::dfs::DfsKind;
+use wow::exec::{run, RunConfig};
+use wow::scheduler::Strategy;
+use wow::util::stats::rel_change_pct;
+
+fn main() {
+    println!("bench_table2 — one cell per (workflow, strategy, dfs); single seed\n");
+    let mut specs = wow::workflow::synthetic::all_synthetic();
+    specs.extend(wow::workflow::patterns::all_patterns());
+    let mut total_wall = 0.0;
+    for dfs in [DfsKind::Ceph, DfsKind::Nfs] {
+        for spec in &specs {
+            let mut orig_min = 0.0;
+            for strategy in [Strategy::Orig, Strategy::Cws, Strategy::Wow] {
+                let cfg = RunConfig { dfs, strategy, ..Default::default() };
+                let (m, wall) = common::time_it(|| run(spec, &cfg));
+                total_wall += wall;
+                if strategy == Strategy::Orig {
+                    orig_min = m.makespan_min();
+                }
+                println!(
+                    "{:<16} {:<4} {:<5} makespan {:>7.1} min ({:>+6.1}%)  sim-wall {:>7.3} s",
+                    spec.name,
+                    dfs.label(),
+                    strategy.label(),
+                    m.makespan_min(),
+                    rel_change_pct(orig_min, m.makespan_min()),
+                    wall
+                );
+            }
+        }
+    }
+    println!("\ntotal simulation wall time: {total_wall:.2} s for {} cells", specs.len() * 6);
+}

@@ -1,0 +1,38 @@
+//! Bench: regenerate Table III (network dependence, 1 -> 2 Gbit) on the
+//! pattern set, timing the sweep.
+//!
+//! `cargo bench --bench bench_table3`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use wow::dfs::DfsKind;
+use wow::exec::{run, RunConfig};
+use wow::scheduler::Strategy;
+use wow::util::stats::rel_change_pct;
+
+fn main() {
+    println!("bench_table3 — makespan change 1 Gbit -> 2 Gbit\n");
+    let (mut cells, mut wall_sum) = (0, 0.0);
+    for spec in wow::workflow::patterns::all_patterns() {
+        for dfs in [DfsKind::Ceph, DfsKind::Nfs] {
+            for strategy in [Strategy::Orig, Strategy::Cws, Strategy::Wow] {
+                let c1 = RunConfig { dfs, strategy, link_gbit: 1.0, ..Default::default() };
+                let c2 = RunConfig { dfs, strategy, link_gbit: 2.0, ..Default::default() };
+                let (m1, w1) = common::time_it(|| run(&spec, &c1));
+                let (m2, w2) = common::time_it(|| run(&spec, &c2));
+                wall_sum += w1 + w2;
+                cells += 1;
+                println!(
+                    "{:<16} {:<4} {:<5} delta {:>+7.1}%   sim-wall {:>6.3} s",
+                    spec.name,
+                    dfs.label(),
+                    strategy.label(),
+                    rel_change_pct(m1.makespan_min(), m2.makespan_min()),
+                    w1 + w2
+                );
+            }
+        }
+    }
+    println!("\n{cells} sweep cells in {wall_sum:.2} s");
+}

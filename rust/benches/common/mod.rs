@@ -1,0 +1,25 @@
+//! Minimal bench harness shared by the `rust/benches/*` targets
+//! (criterion is unavailable offline; `harness = false` + wall-clock
+//! timing keeps `cargo bench` functional).
+
+use std::time::Instant;
+
+/// Time one closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Run `f` `iters` times and report min/mean seconds.
+pub fn bench_n(label: &str, iters: usize, mut f: impl FnMut()) {
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    println!("{label:<54} min {:>9.3} ms   mean {:>9.3} ms", min * 1e3, mean * 1e3);
+}

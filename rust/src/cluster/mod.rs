@@ -1,0 +1,237 @@
+//! Cluster topology: worker nodes (cores, memory, local disk, network
+//! link) plus an optional dedicated NFS server node. Mirrors the paper's
+//! testbed (§V-B): 8 worker nodes with an AMD EPYC 7282 (16 cores),
+//! 128 GB RAM, SATA SSDs (~537 MB/s read, ~402 MB/s write), a ninth node
+//! exposing an NVMe SSD via NFS, and 10 Gbit physical links shaped to
+//! 1 or 2 Gbit with `tc`.
+
+use crate::net::{FlowNet, ResourceId};
+use crate::util::units::{Bandwidth, Bytes};
+
+/// Index of a node. Workers are `0..n_workers`; the NFS server (if
+/// configured) is the last index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub usize);
+
+/// Static description of one node.
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub cores: u32,
+    pub mem: Bytes,
+    pub disk_read: Bandwidth,
+    pub disk_write: Bandwidth,
+    pub link: Bandwidth,
+    /// Whether the resource manager may place tasks here (false for the
+    /// NFS server node).
+    pub runs_tasks: bool,
+    /// Relative compute speed (1.0 = the paper's EPYC 7282 reference).
+    /// The paper's WOW "is currently limited to homogeneous clusters"
+    /// (§VIII); the simulator lifts that restriction so the limitation
+    /// can be studied (`RunConfig::speed_factors`).
+    pub speed: f64,
+}
+
+impl NodeSpec {
+    /// The paper's worker node with a link shaped to `gbit` Gbit/s.
+    pub fn paper_worker(gbit: f64) -> Self {
+        NodeSpec {
+            cores: 16,
+            mem: Bytes::from_gb(128.0),
+            disk_read: Bandwidth::from_mbps(537.0),
+            disk_write: Bandwidth::from_mbps(402.0),
+            link: Bandwidth::from_gbit(gbit),
+            runs_tasks: true,
+            speed: 1.0,
+        }
+    }
+
+    /// The paper's NFS server: PCIe-4 NVMe SSD (fast disk, single link).
+    pub fn paper_nfs_server(gbit: f64) -> Self {
+        NodeSpec {
+            cores: 16,
+            mem: Bytes::from_gb(128.0),
+            disk_read: Bandwidth::from_mbps(5000.0),
+            disk_write: Bandwidth::from_mbps(4000.0),
+            link: Bandwidth::from_gbit(gbit),
+            runs_tasks: false,
+            speed: 1.0,
+        }
+    }
+}
+
+/// Per-node live state: the flow-model resource handles and the free
+/// compute capacity tracked by the resource manager.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub spec: NodeSpec,
+    pub nic_up: ResourceId,
+    pub nic_down: ResourceId,
+    pub disk_read: ResourceId,
+    pub disk_write: ResourceId,
+    pub free_cores: u32,
+    pub free_mem: Bytes,
+}
+
+/// The cluster: all nodes plus convenience accessors. The bandwidth
+/// substrate itself lives in [`FlowNet`]; `Cluster` owns the mapping from
+/// nodes to resource ids.
+#[derive(Debug)]
+pub struct Cluster {
+    pub nodes: Vec<Node>,
+    n_workers: usize,
+    nfs_server: Option<NodeId>,
+}
+
+impl Cluster {
+    /// Build a cluster of `n_workers` identical workers (plus an NFS
+    /// server node if `nfs_server_spec` is given), registering all
+    /// resources in `net`.
+    pub fn build(
+        net: &mut FlowNet,
+        n_workers: usize,
+        worker_spec: NodeSpec,
+        nfs_server_spec: Option<NodeSpec>,
+    ) -> Self {
+        assert!(n_workers > 0, "need at least one worker");
+        let mut nodes = Vec::new();
+        let mk = |spec: NodeSpec, id: usize, net: &mut FlowNet| Node {
+            id: NodeId(id),
+            nic_up: net.add_resource(spec.link),
+            nic_down: net.add_resource(spec.link),
+            disk_read: net.add_resource(spec.disk_read),
+            disk_write: net.add_resource(spec.disk_write),
+            free_cores: spec.cores,
+            free_mem: spec.mem,
+            spec,
+        };
+        for i in 0..n_workers {
+            nodes.push(mk(worker_spec.clone(), i, net));
+        }
+        let nfs_server = nfs_server_spec.map(|spec| {
+            let id = nodes.len();
+            nodes.push(mk(spec, id, net));
+            NodeId(id)
+        });
+        Cluster { nodes, n_workers, nfs_server }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    /// Worker node ids (the nodes the RM may schedule tasks on).
+    pub fn workers(&self) -> impl Iterator<Item = NodeId> + '_ {
+        (0..self.n_workers).map(NodeId)
+    }
+
+    pub fn nfs_server(&self) -> Option<NodeId> {
+        self.nfs_server
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0]
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        &mut self.nodes[id.0]
+    }
+
+    /// Reserve `cores`/`mem` on `id`; panics (debug) on over-subscription
+    /// — the schedulers must never violate capacity.
+    pub fn reserve(&mut self, id: NodeId, cores: u32, mem: Bytes) {
+        let n = &mut self.nodes[id.0];
+        assert!(
+            n.free_cores >= cores && n.free_mem >= mem,
+            "over-subscription on node {id:?}: want {cores}c/{mem}, have {}c/{}",
+            n.free_cores,
+            n.free_mem
+        );
+        n.free_cores -= cores;
+        n.free_mem = n.free_mem.saturating_sub(mem);
+    }
+
+    /// Release previously reserved capacity.
+    pub fn release(&mut self, id: NodeId, cores: u32, mem: Bytes) {
+        let n = &mut self.nodes[id.0];
+        n.free_cores += cores;
+        n.free_mem += mem;
+        debug_assert!(n.free_cores <= n.spec.cores);
+        debug_assert!(n.free_mem <= n.spec.mem);
+    }
+
+    /// Does `id` currently fit a task needing `cores`/`mem`?
+    pub fn fits(&self, id: NodeId, cores: u32, mem: Bytes) -> bool {
+        let n = &self.nodes[id.0];
+        n.spec.runs_tasks && n.free_cores >= cores && n.free_mem >= mem
+    }
+
+    /// Total worker cores in the cluster.
+    pub fn total_cores(&self) -> u32 {
+        self.nodes[..self.n_workers].iter().map(|n| n.spec.cores).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> (FlowNet, Cluster) {
+        let mut net = FlowNet::new();
+        let c = Cluster::build(
+            &mut net,
+            4,
+            NodeSpec::paper_worker(1.0),
+            Some(NodeSpec::paper_nfs_server(1.0)),
+        );
+        (net, c)
+    }
+
+    #[test]
+    fn builds_workers_plus_server() {
+        let (_n, c) = small();
+        assert_eq!(c.n_workers(), 4);
+        assert_eq!(c.nodes.len(), 5);
+        assert_eq!(c.nfs_server(), Some(NodeId(4)));
+        assert!(!c.node(NodeId(4)).spec.runs_tasks);
+        assert_eq!(c.workers().count(), 4);
+    }
+
+    #[test]
+    fn reserve_release_roundtrip() {
+        let (_n, mut c) = small();
+        let id = NodeId(0);
+        c.reserve(id, 4, Bytes::from_gb(16.0));
+        assert_eq!(c.node(id).free_cores, 12);
+        assert!(c.fits(id, 12, Bytes::from_gb(100.0)));
+        assert!(!c.fits(id, 13, Bytes::ZERO));
+        c.release(id, 4, Bytes::from_gb(16.0));
+        assert_eq!(c.node(id).free_cores, 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "over-subscription")]
+    fn oversubscription_panics() {
+        let (_n, mut c) = small();
+        c.reserve(NodeId(0), 17, Bytes::ZERO);
+    }
+
+    #[test]
+    fn server_never_fits_tasks() {
+        let (_n, c) = small();
+        assert!(!c.fits(NodeId(4), 1, Bytes::ZERO));
+    }
+
+    #[test]
+    fn distinct_resources_per_node() {
+        let (_n, c) = small();
+        let mut all: Vec<usize> = c
+            .nodes
+            .iter()
+            .flat_map(|n| [n.nic_up.0, n.nic_down.0, n.disk_read.0, n.disk_write.0])
+            .collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 5 * 4);
+    }
+}

@@ -1,0 +1,211 @@
+//! DPS cost-matrix evaluation — the numeric hot spot of every scheduling
+//! iteration.
+//!
+//! For the current ready set the DPS needs, per (task, node) pair, the
+//! volume of input data *missing* on (and *local* to) that node:
+//!
+//! ```text
+//! missing[t,n] = Σ_f req[t,f] · size[f] · (1 − present[f,n])
+//! local[t,n]   = Σ_f req[t,f] · size[f] · present[f,n]
+//! ```
+//!
+//! Two masked matmuls over a (tasks × files × nodes) brick. This is
+//! exactly the computation Layers 1/2 implement: the Pallas kernel
+//! (`python/compile/kernels/cost_matrix.py`) tiles it for the MXU, the
+//! JAX model (`python/compile/model.py`) wraps it, and `aot.py` lowers it
+//! to `artifacts/cost_model.hlo.txt`, which [`crate::runtime`] executes
+//! via PJRT. [`NativeCost`] is the bit-comparable rust fallback (same f32
+//! accumulation order as the row-major reference), so the simulator runs
+//! with or without the artifact and the two backends are
+//! equivalence-tested in `rust/tests/runtime_xla.rs`.
+
+/// Fixed tile shape compiled into the AOT artifact. Larger problems are
+/// processed in tiles with zero padding (zero rows/columns contribute
+/// nothing to either matrix).
+pub const TILE_T: usize = 32;
+pub const TILE_F: usize = 256;
+pub const TILE_N: usize = 16;
+
+/// The cost-matrix query interface.
+pub trait CostEval: std::fmt::Debug {
+    /// Compute `missing` and `local` (both `t × n`, row-major) from
+    /// `req` (`t × f`, row-major 0/1), `present` (`f × n`, row-major
+    /// 0/1) and `sizes` (`f`, in GB to keep f32 exact enough).
+    fn missing_local(
+        &mut self,
+        req: &[f32],
+        present: &[f32],
+        sizes: &[f32],
+        t: usize,
+        f: usize,
+        n: usize,
+    ) -> (Vec<f32>, Vec<f32>);
+
+    fn backend_name(&self) -> &'static str;
+
+    /// Sparse entry point: `task_files[t]` lists each task's required
+    /// file indices in ascending order. The default densifies and calls
+    /// [`Self::missing_local`] (what the fixed-shape XLA artifact
+    /// needs); [`NativeCost`] overrides it with a direct sparse loop
+    /// whose f32 accumulation order (ascending file index) is identical
+    /// to the dense path, so both backends still agree bit-for-bit.
+    fn missing_local_sparse(
+        &mut self,
+        task_files: &[Vec<usize>],
+        present: &[f32],
+        sizes: &[f32],
+        f: usize,
+        n: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let t = task_files.len();
+        let mut req = vec![0f32; t * f];
+        for (ti, fs) in task_files.iter().enumerate() {
+            for &fi in fs {
+                req[ti * f + fi] = 1.0;
+            }
+        }
+        self.missing_local(&req, present, sizes, t, f, n)
+    }
+}
+
+/// Pure-rust reference backend.
+#[derive(Debug, Default)]
+pub struct NativeCost;
+
+impl CostEval for NativeCost {
+    fn missing_local(
+        &mut self,
+        req: &[f32],
+        present: &[f32],
+        sizes: &[f32],
+        t: usize,
+        f: usize,
+        n: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        assert_eq!(req.len(), t * f);
+        assert_eq!(present.len(), f * n);
+        assert_eq!(sizes.len(), f);
+        let mut missing = vec![0f32; t * n];
+        let mut local = vec![0f32; t * n];
+        for ti in 0..t {
+            let req_row = &req[ti * f..(ti + 1) * f];
+            let m_row = &mut missing[ti * n..(ti + 1) * n];
+            let l_row = &mut local[ti * n..(ti + 1) * n];
+            for (fi, &r) in req_row.iter().enumerate() {
+                if r == 0.0 {
+                    continue;
+                }
+                let w = r * sizes[fi];
+                let p_row = &present[fi * n..(fi + 1) * n];
+                for ni in 0..n {
+                    let p = p_row[ni];
+                    l_row[ni] += w * p;
+                    m_row[ni] += w * (1.0 - p);
+                }
+            }
+        }
+        (missing, local)
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+
+    fn missing_local_sparse(
+        &mut self,
+        task_files: &[Vec<usize>],
+        present: &[f32],
+        sizes: &[f32],
+        f: usize,
+        n: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let t = task_files.len();
+        assert_eq!(present.len(), f * n);
+        assert_eq!(sizes.len(), f);
+        let mut missing = vec![0f32; t * n];
+        let mut local = vec![0f32; t * n];
+        for (ti, fs) in task_files.iter().enumerate() {
+            debug_assert!(fs.windows(2).all(|w| w[0] < w[1]), "indices must ascend");
+            let m_row = &mut missing[ti * n..(ti + 1) * n];
+            let l_row = &mut local[ti * n..(ti + 1) * n];
+            for &fi in fs {
+                let w = sizes[fi];
+                let p_row = &present[fi * n..(fi + 1) * n];
+                for ni in 0..n {
+                    let p = p_row[ni];
+                    l_row[ni] += w * p;
+                    m_row[ni] += w * (1.0 - p);
+                }
+            }
+        }
+        (missing, local)
+    }
+}
+
+/// Helper shared by backends that process in fixed tiles: pad `src`
+/// (rows × cols) into a `tr × tc` zero matrix.
+pub fn pad_tile(src: &[f32], rows: usize, cols: usize, tr: usize, tc: usize) -> Vec<f32> {
+    debug_assert!(rows <= tr && cols <= tc);
+    let mut out = vec![0f32; tr * tc];
+    for r in 0..rows {
+        out[r * tc..r * tc + cols].copy_from_slice(&src[r * cols..(r + 1) * cols]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_example_by_hand() {
+        // 2 tasks, 3 files, 2 nodes.
+        // task0 needs files {0,1}; task1 needs {2}.
+        let req = vec![1., 1., 0., /* t0 */ 0., 0., 1. /* t1 */];
+        // file0 on node0; file1 on both; file2 nowhere.
+        let present = vec![1., 0., /* f0 */ 1., 1., /* f1 */ 0., 0. /* f2 */];
+        let sizes = vec![10., 5., 2.];
+        let (missing, local) = NativeCost.missing_local(&req, &present, &sizes, 2, 3, 2);
+        // t0/n0: all local (15); t0/n1: file0 missing (10), file1 local.
+        assert_eq!(local, vec![15., 5., 0., 0.]);
+        assert_eq!(missing, vec![0., 10., 2., 2.]);
+    }
+
+    #[test]
+    fn empty_requirements_are_zero() {
+        let (m, l) = NativeCost.missing_local(&[0.; 6], &[1.; 6], &[1., 1., 1.], 2, 3, 2);
+        assert!(m.iter().all(|&x| x == 0.0));
+        assert!(l.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn missing_plus_local_is_total() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(5);
+        let (t, f, n) = (7, 19, 5);
+        let req: Vec<f32> = (0..t * f).map(|_| (rng.next_f64() < 0.3) as u8 as f32).collect();
+        let present: Vec<f32> =
+            (0..f * n).map(|_| (rng.next_f64() < 0.5) as u8 as f32).collect();
+        let sizes: Vec<f32> = (0..f).map(|_| rng.range_f64(0.1, 4.0) as f32).collect();
+        let (m, l) = NativeCost.missing_local(&req, &present, &sizes, t, f, n);
+        for ti in 0..t {
+            let total: f32 =
+                (0..f).map(|fi| req[ti * f + fi] * sizes[fi]).sum();
+            for ni in 0..n {
+                let got = m[ti * n + ni] + l[ti * n + ni];
+                assert!((got - total).abs() < 1e-3, "t{ti} n{ni}: {got} vs {total}");
+            }
+        }
+    }
+
+    #[test]
+    fn pad_tile_zero_fills() {
+        let src = vec![1., 2., 3., 4.]; // 2x2
+        let out = pad_tile(&src, 2, 2, 3, 4);
+        assert_eq!(out.len(), 12);
+        assert_eq!(out[0..2], [1., 2.]);
+        assert_eq!(out[4..6], [3., 4.]);
+        assert_eq!(out[2], 0.);
+        assert_eq!(out[11], 0.);
+    }
+}

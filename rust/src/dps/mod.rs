@@ -1,0 +1,429 @@
+//! The Data Placement Service (§III-C).
+//!
+//! The DPS tracks every intermediate file and all its replicas, decides
+//! *from where* to copy when the scheduler requests a COP to a target
+//! node, and answers cost ("price") queries for (task, node) pairs. All
+//! replicas are created exclusively through explicit COPs; besides the
+//! initial DFS reads of workflow input data, COPs are the only network
+//! operations during a WOW run.
+//!
+//! Price (paper, §III-C): an equal-weighted sum of (a) the total bytes
+//! that must move and (b) the maximal load assigned to any single source
+//! node, with the per-file source chosen greedily — files sorted by
+//! descending size, each assigned to the replica holder with the least
+//! load already assigned for this COP (ties resolved randomly).
+
+pub mod cost;
+
+use crate::cluster::NodeId;
+use crate::util::rng::Rng;
+use crate::util::units::Bytes;
+use crate::workflow::task::{FileId, TaskId};
+use cost::CostEval;
+use crate::util::fxmap::FastMap;
+use std::collections::HashMap;
+
+/// Identifies a copy operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CopId(pub u64);
+
+/// One planned copy operation: the atomic unit preparing `task` on
+/// `dst`. Replicas become valid only when the whole COP completes
+/// (§IV-C).
+#[derive(Debug, Clone)]
+pub struct Cop {
+    pub id: CopId,
+    pub task: TaskId,
+    pub dst: NodeId,
+    /// (file, chosen source node, size) for every missing file.
+    pub parts: Vec<(FileId, NodeId, Bytes)>,
+}
+
+impl Cop {
+    pub fn total_bytes(&self) -> Bytes {
+        self.parts.iter().map(|(_, _, b)| *b).sum()
+    }
+}
+
+/// The greedy source assignment and its price components.
+#[derive(Debug, Clone)]
+pub struct CopPlan {
+    pub parts: Vec<(FileId, NodeId, Bytes)>,
+    pub total_bytes: Bytes,
+    pub max_source_load: Bytes,
+}
+
+impl CopPlan {
+    /// The paper's abstract price: equal weights on total traffic and
+    /// the maximum per-node load.
+    pub fn price(&self) -> f64 {
+        0.5 * self.total_bytes.as_f64() + 0.5 * self.max_source_load.as_f64()
+    }
+}
+
+/// The data placement service.
+#[derive(Debug)]
+pub struct Dps {
+    /// Valid replica locations per intermediate file.
+    locations: FastMap<FileId, Vec<NodeId>>,
+    sizes: FastMap<FileId, Bytes>,
+    /// In-flight COPs.
+    active: FastMap<CopId, Cop>,
+    next_cop: u64,
+    /// Per-node count of COPs *targeting* the node (dst side) for the
+    /// `c_node` constraint (§III-B: "parallel COPs for each node").
+    node_cops: FastMap<NodeId, u32>,
+    /// Per-task active COP count for `c_task`.
+    task_cops: FastMap<TaskId, u32>,
+    /// Metrics: bytes copied via COPs (replica overhead, Fig 4).
+    pub bytes_copied: Bytes,
+    pub cops_created: u64,
+    pub cops_completed: u64,
+    rng: Rng,
+}
+
+impl Dps {
+    pub fn new(seed: u64) -> Self {
+        Dps {
+            locations: FastMap::default(),
+            sizes: FastMap::default(),
+            active: FastMap::default(),
+            next_cop: 0,
+            node_cops: FastMap::default(),
+            task_cops: FastMap::default(),
+            bytes_copied: Bytes::ZERO,
+            cops_created: 0,
+            cops_completed: 0,
+            rng: Rng::new(seed ^ 0x5DEE_CE66_D1CE_5EED),
+        }
+    }
+
+    /// A task finished on `node`: its outputs are now local there
+    /// (§III-B: data stays where it was produced until the DPS moves it).
+    pub fn register_output(&mut self, file: FileId, size: Bytes, node: NodeId) {
+        self.sizes.insert(file, size);
+        let locs = self.locations.entry(file).or_default();
+        if !locs.contains(&node) {
+            locs.push(node);
+        }
+    }
+
+    /// Nodes holding a valid replica of `file` (empty for workflow
+    /// inputs, which live in the DFS and are not DPS-managed).
+    pub fn locations(&self, file: FileId) -> &[NodeId] {
+        self.locations.get(&file).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    pub fn size_of(&self, file: FileId) -> Option<Bytes> {
+        self.sizes.get(&file).copied()
+    }
+
+    /// Is `node` prepared for a task with these intermediate inputs?
+    pub fn is_prepared(&self, intermediate_inputs: &[FileId], node: NodeId) -> bool {
+        intermediate_inputs.iter().all(|f| self.locations(*f).contains(&node))
+    }
+
+    /// All nodes (from `nodes`) prepared for the given inputs — N_prep.
+    pub fn prepared_nodes(&self, intermediate_inputs: &[FileId], nodes: &[NodeId]) -> Vec<NodeId> {
+        nodes
+            .iter()
+            .copied()
+            .filter(|n| self.is_prepared(intermediate_inputs, *n))
+            .collect()
+    }
+
+    /// Bytes of the given inputs missing on `node`.
+    pub fn missing_bytes(&self, intermediate_inputs: &[FileId], node: NodeId) -> Bytes {
+        intermediate_inputs
+            .iter()
+            .filter(|f| !self.locations(**f).contains(&node))
+            .map(|f| self.sizes[f])
+            .sum()
+    }
+
+    /// Greedy source selection for preparing `inputs` on `dst` (§III-C):
+    /// files by descending size; each from the replica holder with the
+    /// least load assigned so far in this plan; ties random. Returns
+    /// `None` if some file has no replica yet (cannot be planned) or if
+    /// nothing is missing.
+    pub fn plan(&mut self, intermediate_inputs: &[FileId], dst: NodeId) -> Option<CopPlan> {
+        let mut missing: Vec<(FileId, Bytes)> = Vec::new();
+        for f in intermediate_inputs {
+            if self.locations(*f).contains(&dst) {
+                continue;
+            }
+            missing.push((*f, *self.sizes.get(f)?));
+        }
+        if missing.is_empty() {
+            return None;
+        }
+        missing.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        let mut load: HashMap<NodeId, u64> = HashMap::new();
+        let mut parts = Vec::with_capacity(missing.len());
+        for (file, size) in missing {
+            let holders = self.locations.get(&file)?;
+            if holders.is_empty() {
+                return None;
+            }
+            // Least already-assigned load; ties random.
+            let min_load = holders.iter().map(|h| *load.get(h).unwrap_or(&0)).min().unwrap();
+            let tied: Vec<NodeId> = holders
+                .iter()
+                .copied()
+                .filter(|h| *load.get(h).unwrap_or(&0) == min_load)
+                .collect();
+            let src = *self.rng.choice(&tied);
+            *load.entry(src).or_insert(0) += size.as_u64();
+            parts.push((file, src, size));
+        }
+        let total: Bytes = parts.iter().map(|(_, _, b)| *b).sum();
+        let max_load = Bytes(load.values().copied().max().unwrap_or(0));
+        Some(CopPlan { parts, total_bytes: total, max_source_load: max_load })
+    }
+
+    /// Turn a plan into an active COP for `task` → `dst`.
+    pub fn start_cop(&mut self, task: TaskId, dst: NodeId, plan: CopPlan) -> Cop {
+        let id = CopId(self.next_cop);
+        self.next_cop += 1;
+        let cop = Cop { id, task, dst, parts: plan.parts };
+        *self.node_cops.entry(dst).or_insert(0) += 1;
+        *self.task_cops.entry(task).or_insert(0) += 1;
+        self.cops_created += 1;
+        self.active.insert(id, cop.clone());
+        cop
+    }
+
+    /// COP finished: all replicas become valid atomically (§IV-C).
+    pub fn complete_cop(&mut self, id: CopId) -> Cop {
+        let cop = self.active.remove(&id).expect("unknown COP");
+        for (file, _src, size) in &cop.parts {
+            let locs = self.locations.entry(*file).or_default();
+            if !locs.contains(&cop.dst) {
+                locs.push(cop.dst);
+            }
+            self.bytes_copied += *size;
+        }
+        let c = self.node_cops.get_mut(&cop.dst).expect("dst count");
+        *c -= 1;
+        let t = self.task_cops.get_mut(&cop.task).expect("task count");
+        *t -= 1;
+        self.cops_completed += 1;
+        cop
+    }
+
+    /// Delete every replica of a dead file (replica GC, §III-A). The
+    /// executor calls this when the engine reports that no current or
+    /// future task can read the file. Returns the freed (file, node)
+    /// pairs for storage accounting. Files still being moved by an
+    /// active COP are kept until the COP completes (COPs are atomic).
+    pub fn release_file(&mut self, file: FileId) -> Vec<NodeId> {
+        if self.active.values().any(|c| c.parts.iter().any(|(f, _, _)| *f == file)) {
+            return Vec::new();
+        }
+        self.sizes.remove(&file);
+        self.locations.remove(&file).unwrap_or_default()
+    }
+
+    /// Active COPs targeting `node` — the `c_node` constraint input.
+    pub fn node_cop_count(&self, node: NodeId) -> u32 {
+        *self.node_cops.get(&node).unwrap_or(&0)
+    }
+
+    /// Active COPs preparing `task` — the `c_task` constraint input.
+    pub fn task_cop_count(&self, task: TaskId) -> u32 {
+        *self.task_cops.get(&task).unwrap_or(&0)
+    }
+
+    /// Is some active COP already preparing `task` on `dst`?
+    pub fn cop_in_flight(&self, task: TaskId, dst: NodeId) -> bool {
+        self.active.values().any(|c| c.task == task && c.dst == dst)
+    }
+
+    /// Nodes that will be prepared for `inputs` once in-flight COPs
+    /// complete (current replicas plus active COP destinations).
+    pub fn preparing_nodes(&self, task: TaskId) -> Vec<NodeId> {
+        self.active.values().filter(|c| c.task == task).map(|c| c.dst).collect()
+    }
+
+    pub fn active_cops(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Batch missing/local matrices over (tasks × nodes) via the given
+    /// backend — the XLA-accelerated hot path. `inputs_of` lists each
+    /// task's intermediate inputs.
+    pub fn cost_matrix(
+        &self,
+        inputs_of: &[&[FileId]],
+        nodes: &[NodeId],
+        backend: &mut dyn CostEval,
+    ) -> CostMatrix {
+        // Collect the active file set (deterministic first-seen order).
+        let mut file_idx: FastMap<FileId, usize> = FastMap::default();
+        let mut files: Vec<FileId> = Vec::new();
+        for ins in inputs_of {
+            for f in ins.iter() {
+                file_idx.entry(*f).or_insert_with(|| {
+                    files.push(*f);
+                    files.len() - 1
+                });
+            }
+        }
+        let (t, f, n) = (inputs_of.len(), files.len(), nodes.len());
+        // Per-task file indices, ascending (preserves the dense path's
+        // f32 accumulation order — see CostEval::missing_local_sparse).
+        let task_files: Vec<Vec<usize>> = inputs_of
+            .iter()
+            .map(|ins| {
+                let mut v: Vec<usize> = ins.iter().map(|file| file_idx[file]).collect();
+                v.sort_unstable();
+                v.dedup();
+                v
+            })
+            .collect();
+        let mut present = vec![0f32; f * n];
+        for (fi, file) in files.iter().enumerate() {
+            let locs = self.locations(*file);
+            for (ni, node) in nodes.iter().enumerate() {
+                if locs.contains(node) {
+                    present[fi * n + ni] = 1.0;
+                }
+            }
+        }
+        let sizes: Vec<f32> =
+            files.iter().map(|file| self.sizes.get(file).map(|b| b.as_gb() as f32).unwrap_or(0.0)).collect();
+        let (missing, local) = if t == 0 || f == 0 || n == 0 {
+            (vec![0f32; t * n], vec![0f32; t * n])
+        } else {
+            backend.missing_local_sparse(&task_files, &present, &sizes, f, n)
+        };
+        CostMatrix { missing_gb: missing, local_gb: local, n }
+    }
+}
+
+/// Result of a batched cost query: `t × n` matrices in GB.
+#[derive(Debug, Clone)]
+pub struct CostMatrix {
+    pub missing_gb: Vec<f32>,
+    pub local_gb: Vec<f32>,
+    n: usize,
+}
+
+impl CostMatrix {
+    pub fn missing(&self, t: usize, n: usize) -> f32 {
+        self.missing_gb[t * self.n + n]
+    }
+    pub fn local(&self, t: usize, n: usize) -> f32 {
+        self.local_gb[t * self.n + n]
+    }
+    /// Prepared = nothing missing. Exact: `present` is exactly 0/1, so
+    /// every term of a fully-present row is `w * 0.0` and the f32 sum is
+    /// exactly zero (no tolerance needed — a tolerance would misclassify
+    /// sub-KB files).
+    pub fn is_prepared(&self, t: usize, n: usize) -> bool {
+        self.missing(t, n) <= 0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dps::cost::NativeCost;
+
+    fn dps() -> Dps {
+        Dps::new(7)
+    }
+
+    #[test]
+    fn register_and_query_locations() {
+        let mut d = dps();
+        d.register_output(FileId(1), Bytes(100), NodeId(2));
+        assert_eq!(d.locations(FileId(1)), &[NodeId(2)]);
+        assert!(d.is_prepared(&[FileId(1)], NodeId(2)));
+        assert!(!d.is_prepared(&[FileId(1)], NodeId(0)));
+        assert_eq!(d.size_of(FileId(1)), Some(Bytes(100)));
+    }
+
+    #[test]
+    fn plan_none_when_nothing_missing() {
+        let mut d = dps();
+        d.register_output(FileId(1), Bytes(100), NodeId(0));
+        assert!(d.plan(&[FileId(1)], NodeId(0)).is_none());
+    }
+
+    #[test]
+    fn plan_none_when_no_replica_exists() {
+        let mut d = dps();
+        assert!(d.plan(&[FileId(9)], NodeId(0)).is_none());
+    }
+
+    #[test]
+    fn greedy_spreads_load_over_sources() {
+        let mut d = dps();
+        // Two equal files, each replicated on nodes 1 and 2.
+        for f in [1u64, 2] {
+            d.register_output(FileId(f), Bytes(1000), NodeId(1));
+            d.register_output(FileId(f), Bytes(1000), NodeId(2));
+        }
+        let plan = d.plan(&[FileId(1), FileId(2)], NodeId(0)).unwrap();
+        assert_eq!(plan.total_bytes, Bytes(2000));
+        // Greedy must split across the two holders: max load 1000.
+        assert_eq!(plan.max_source_load, Bytes(1000));
+        let srcs: Vec<NodeId> = plan.parts.iter().map(|(_, s, _)| *s).collect();
+        assert_ne!(srcs[0], srcs[1]);
+    }
+
+    #[test]
+    fn biggest_file_assigned_first() {
+        let mut d = dps();
+        d.register_output(FileId(1), Bytes(10), NodeId(1));
+        d.register_output(FileId(2), Bytes(999), NodeId(1));
+        let plan = d.plan(&[FileId(1), FileId(2)], NodeId(0)).unwrap();
+        assert_eq!(plan.parts[0].0, FileId(2));
+        assert_eq!(plan.parts[0].2, Bytes(999));
+    }
+
+    #[test]
+    fn cop_lifecycle_updates_counts_and_locations() {
+        let mut d = dps();
+        d.register_output(FileId(1), Bytes(500), NodeId(1));
+        let plan = d.plan(&[FileId(1)], NodeId(0)).unwrap();
+        let cop = d.start_cop(TaskId(42), NodeId(0), plan);
+        assert_eq!(d.node_cop_count(NodeId(0)), 1);
+        assert_eq!(d.node_cop_count(NodeId(1)), 0, "c_node counts the dst side");
+        assert_eq!(d.task_cop_count(TaskId(42)), 1);
+        assert!(d.cop_in_flight(TaskId(42), NodeId(0)));
+        assert!(!d.is_prepared(&[FileId(1)], NodeId(0)), "not valid until COP completes");
+        d.complete_cop(cop.id);
+        assert!(d.is_prepared(&[FileId(1)], NodeId(0)));
+        assert_eq!(d.node_cop_count(NodeId(0)), 0);
+        assert_eq!(d.task_cop_count(TaskId(42)), 0);
+        assert_eq!(d.bytes_copied, Bytes(500));
+    }
+
+    #[test]
+    fn cost_matrix_matches_scalar_queries() {
+        let mut d = dps();
+        d.register_output(FileId(1), Bytes::from_gb(2.0), NodeId(0));
+        d.register_output(FileId(2), Bytes::from_gb(1.0), NodeId(1));
+        let i0 = [FileId(1), FileId(2)];
+        let i1 = [FileId(2)];
+        let inputs: Vec<&[FileId]> = vec![&i0, &i1];
+        let nodes = vec![NodeId(0), NodeId(1)];
+        let m = d.cost_matrix(&inputs, &nodes, &mut NativeCost);
+        // task0 on node0: file2 missing (1 GB); on node1: file1 (2 GB).
+        assert!((m.missing(0, 0) - 1.0).abs() < 1e-5);
+        assert!((m.missing(0, 1) - 2.0).abs() < 1e-5);
+        assert!(m.is_prepared(1, 1));
+        assert!(!m.is_prepared(1, 0));
+        // Cross-check against scalar path.
+        assert_eq!(d.missing_bytes(&[FileId(1), FileId(2)], NodeId(0)), Bytes::from_gb(1.0));
+    }
+
+    #[test]
+    fn empty_cost_matrix() {
+        let d = dps();
+        let m = d.cost_matrix(&[], &[NodeId(0)], &mut NativeCost);
+        assert!(m.missing_gb.is_empty());
+    }
+}

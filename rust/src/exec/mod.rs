@@ -1,0 +1,681 @@
+//! The cluster executor: a discrete-event simulation binding the dynamic
+//! workflow engine, a scheduling strategy, the DPS/LCS, a DFS backend,
+//! and the flow-level bandwidth substrate.
+//!
+//! Task lifecycle (mirrors the Nextflow wrapper, §IV-B):
+//!
+//! ```text
+//! ready ──start──▶ stage-in ──▶ compute ──▶ stage-out ──▶ done
+//!                  (flows)      (timer)     (flows)
+//! ```
+//!
+//! Baselines stage in/out through the DFS; WOW reads intermediate inputs
+//! from the local disk (the node is *prepared*) and writes outputs
+//! locally, with COPs moving data between nodes in parallel to execution.
+//! A scheduling iteration runs whenever a task finishes, a COP finishes,
+//! or new tasks are submitted (§III-B).
+
+use crate::cluster::{Cluster, NodeId, NodeSpec};
+use crate::dfs::{Ceph, Dfs, DfsKind, Nfs};
+use crate::dps::cost::{CostEval, NativeCost};
+use crate::dps::{CopId, Dps};
+use crate::lcs::Lcs;
+use crate::metrics::RunMetrics;
+use crate::net::{FlowId, FlowNet};
+use crate::scheduler::wow::WowParams;
+use crate::scheduler::{Action, ReadyTask, SchedView, Scheduler, Strategy};
+use crate::sim::event::EventQueue;
+use crate::util::rng::Rng;
+use crate::util::units::{Bytes, SimTime};
+use crate::workflow::engine::WorkflowEngine;
+use crate::workflow::spec::WorkflowSpec;
+use crate::workflow::task::{FileId, TaskId};
+use crate::util::fxmap::FastMap;
+
+/// Configuration of one simulated run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub n_nodes: usize,
+    pub link_gbit: f64,
+    pub dfs: DfsKind,
+    pub strategy: Strategy,
+    pub seed: u64,
+    /// WOW COP limits (§V-C defaults: 1 and 2).
+    pub c_node: u32,
+    pub c_task: u32,
+    /// Per-COP setup latency in seconds (scheduler RPC + FTP session to
+    /// the LCS daemon). The paper reuses long-lived LCS daemons exactly
+    /// because per-copy service startup "could otherwise double"
+    /// short-task runtimes (§IV-D); a sub-second session cost remains.
+    pub cop_setup_s: f64,
+    /// Replica garbage collection (§III-A): delete all replicas of an
+    /// intermediate file once no current or future task can read it.
+    /// The paper's evaluation kept every replica ("we did not delete any
+    /// replicas during our experiments"), so this defaults to off; the
+    /// peak-temporary-storage metric quantifies the §VIII trade-off.
+    pub replica_gc: bool,
+    /// Per-worker relative compute speeds (empty = homogeneous at 1.0).
+    /// Lifts the paper's §VIII homogeneity limitation: task compute time
+    /// on node i is divided by `speed_factors[i]`.
+    pub speed_factors: Vec<f64>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            n_nodes: 8,
+            link_gbit: 1.0,
+            dfs: DfsKind::Ceph,
+            strategy: Strategy::Wow,
+            seed: 0,
+            c_node: 1,
+            c_task: 2,
+            cop_setup_s: 0.5,
+            replica_gc: false,
+            speed_factors: Vec::new(),
+        }
+    }
+}
+
+/// Run `spec` under `cfg` with the default (native) cost backend.
+pub fn run(spec: &WorkflowSpec, cfg: &RunConfig) -> RunMetrics {
+    run_with_backend(spec, cfg, Box::new(NativeCost))
+}
+
+/// Run with an explicit DPS cost backend (e.g. the XLA artifact).
+pub fn run_with_backend(
+    spec: &WorkflowSpec,
+    cfg: &RunConfig,
+    backend: Box<dyn CostEval>,
+) -> RunMetrics {
+    Executor::new(spec.clone(), cfg.clone(), backend).run()
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    StageIn,
+    Compute,
+    StageOut,
+}
+
+#[derive(Debug)]
+struct Running {
+    node: NodeId,
+    phase: Phase,
+    pending_flows: usize,
+    started: SimTime,
+    cores: u32,
+    mem: Bytes,
+}
+
+#[derive(Debug)]
+enum Event {
+    ComputeDone(TaskId),
+    /// COP setup latency elapsed: launch its flows.
+    CopLaunch(CopId),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum FlowOwner {
+    StageIn(TaskId),
+    StageOut(TaskId),
+}
+
+struct Executor {
+    cfg: RunConfig,
+    engine: WorkflowEngine,
+    scheduler: Box<dyn Scheduler>,
+    net: FlowNet,
+    cluster: Cluster,
+    dfs: Box<dyn Dfs>,
+    dps: Dps,
+    lcs: Lcs,
+    events: EventQueue<Event>,
+    rng: Rng,
+
+    ready: Vec<ReadyTask>,
+    running: FastMap<TaskId, Running>,
+    flow_owner: FastMap<FlowId, FlowOwner>,
+    submitted_seq: u64,
+
+    // Metrics accumulation.
+    first_start: Option<SimTime>,
+    last_finish: SimTime,
+    cpu_core_seconds: f64,
+    node_cpu_seconds: Vec<f64>,
+    cops_per_task: FastMap<TaskId, u32>,
+    completed_cops: Vec<(TaskId, NodeId, Vec<FileId>, bool)>, // task, dst, files, used
+    /// COPs in their setup-latency window, not yet flowing.
+    pending_cops: FastMap<CopId, crate::dps::Cop>,
+    tasks_done: usize,
+    /// Current / peak bytes of WOW-managed intermediate replicas per
+    /// worker (temporary-storage accounting; peak is what §VIII's
+    /// fault-tolerance trade-off is about).
+    node_replica_bytes: Vec<f64>,
+    peak_replica_bytes: f64,
+}
+
+impl Executor {
+    fn new(spec: WorkflowSpec, cfg: RunConfig, backend: Box<dyn CostEval>) -> Self {
+        let mut net = FlowNet::new();
+        let needs_server = cfg.dfs == DfsKind::Nfs;
+        let mut cluster = Cluster::build(
+            &mut net,
+            cfg.n_nodes,
+            NodeSpec::paper_worker(cfg.link_gbit),
+            needs_server.then(|| NodeSpec::paper_nfs_server(cfg.link_gbit)),
+        );
+        // Heterogeneous compute speeds (§VIII extension).
+        for (i, &f) in cfg.speed_factors.iter().enumerate().take(cfg.n_nodes) {
+            assert!(f > 0.0, "speed factor must be positive");
+            cluster.node_mut(crate::cluster::NodeId(i)).spec.speed = f;
+        }
+        let dfs: Box<dyn Dfs> = match cfg.dfs {
+            DfsKind::Ceph => Box::new(Ceph::new()),
+            DfsKind::Nfs => Box::new(Nfs::new(cluster.nfs_server().expect("server"))),
+        };
+        let params = WowParams {
+            c_node: cfg.c_node,
+            c_task: cfg.c_task,
+            backend,
+        };
+        let scheduler = cfg.strategy.build(params);
+        let engine = WorkflowEngine::new(spec, cfg.seed);
+        let n_workers = cluster.n_workers();
+        Executor {
+            engine,
+            scheduler,
+            net,
+            cluster,
+            dfs,
+            dps: Dps::new(cfg.seed),
+            lcs: Lcs::new(),
+            events: EventQueue::new(),
+            rng: Rng::new(cfg.seed ^ 0xEC5E_C0DE),
+            ready: Vec::new(),
+            running: FastMap::default(),
+            flow_owner: FastMap::default(),
+            submitted_seq: 0,
+            first_start: None,
+            last_finish: SimTime::ZERO,
+            cpu_core_seconds: 0.0,
+            node_cpu_seconds: vec![0.0; n_workers],
+            cops_per_task: FastMap::default(),
+            completed_cops: Vec::new(),
+            pending_cops: FastMap::default(),
+            tasks_done: 0,
+            node_replica_bytes: vec![0.0; n_workers],
+            peak_replica_bytes: 0.0,
+            cfg,
+        }
+    }
+
+    fn run(mut self) -> RunMetrics {
+        // Register workflow inputs in the DFS (pre-fetched per §V-A).
+        for &f in self.engine.input_files().to_vec().iter() {
+            let size = self.engine.file(f).size;
+            self.dfs.register_input(f, size, &self.cluster, &mut self.rng);
+        }
+        // Materialize source tasks and run the first iteration.
+        let initial = self.engine.start();
+        self.submit(initial);
+        self.schedule();
+
+        // Main DES loop.
+        loop {
+            if self.engine.all_done() {
+                break;
+            }
+            let t_flow = self.net.next_completion().unwrap_or(SimTime::FAR_FUTURE);
+            let t_event = self.events.peek_time().unwrap_or(SimTime::FAR_FUTURE);
+            let t = t_flow.min(t_event);
+            assert!(
+                t != SimTime::FAR_FUTURE,
+                "deadlock: no pending events; ready={} running={} done={}/{}",
+                self.ready.len(),
+                self.running.len(),
+                self.engine.n_tasks_completed(),
+                self.engine.n_tasks_materialized()
+            );
+            self.net.advance_to(t);
+
+            let mut need_schedule = false;
+
+            // Flow completions.
+            for flow in self.net.take_completed() {
+                if let Some(owner) = self.flow_owner.remove(&flow) {
+                    need_schedule |= self.flow_finished(owner, t);
+                } else if let Some(cop_id) = self.lcs.flow_done(flow) {
+                    self.cop_finished(cop_id);
+                    need_schedule = true;
+                }
+            }
+            // Timed events.
+            while self.events.peek_time() == Some(t) {
+                let (_, ev) = self.events.pop().unwrap();
+                match ev {
+                    Event::ComputeDone(task) => {
+                        self.start_stage_out(task, t);
+                    }
+                    Event::CopLaunch(id) => {
+                        let cop = self.pending_cops.remove(&id).expect("pending COP");
+                        self.lcs.start_cop(&cop, &self.cluster, &mut self.net);
+                    }
+                }
+            }
+            if need_schedule {
+                self.schedule();
+            }
+        }
+
+        self.finish_metrics()
+    }
+
+    /// Queue newly materialized tasks.
+    fn submit(&mut self, tasks: Vec<TaskId>) {
+        for id in tasks {
+            let t = self.engine.task(id);
+            let intermediate: Vec<FileId> = t
+                .inputs
+                .iter()
+                .copied()
+                .filter(|f| !self.engine.file(*f).is_workflow_input())
+                .collect();
+            let rt = ReadyTask {
+                id,
+                cores: t.cores,
+                mem: t.mem,
+                rank: self.engine.rank_of(id),
+                input_bytes: t.input_bytes(self.engine.files()),
+                intermediate_inputs: intermediate,
+                submitted_seq: self.submitted_seq,
+            };
+            self.submitted_seq += 1;
+            self.ready.push(rt);
+        }
+    }
+
+    /// One scheduling iteration: ask the strategy, apply its actions.
+    fn schedule(&mut self) {
+        loop {
+            let view = SchedView {
+                now: self.net.now(),
+                cluster: &self.cluster,
+                ready: &self.ready,
+            };
+            let actions = self.scheduler.iterate(&view, &mut self.dps);
+            if actions.is_empty() {
+                return;
+            }
+            let mut progressed = false;
+            for action in actions {
+                match action {
+                    Action::Start { task, node } => {
+                        progressed |= self.start_task(task, node);
+                    }
+                    Action::StartCop { task, dst } => {
+                        progressed |= self.start_cop(task, dst);
+                    }
+                }
+            }
+            if !progressed {
+                return;
+            }
+            // Starting tasks freed queue slots / changed DPS state; the
+            // strategies are written to be idempotent, so loop until
+            // quiescent. (Single extra pass in practice.)
+            return;
+        }
+    }
+
+    fn start_task(&mut self, task: TaskId, node: NodeId) -> bool {
+        let idx = match self.ready.iter().position(|r| r.id == task) {
+            Some(i) => i,
+            None => return false, // already started (stale action)
+        };
+        let rt = self.ready.remove(idx);
+        assert!(
+            self.cluster.fits(node, rt.cores, rt.mem),
+            "scheduler over-subscribed node {node:?} for task {task:?}"
+        );
+        self.cluster.reserve(node, rt.cores, rt.mem);
+        let now = self.net.now();
+        self.first_start.get_or_insert(now);
+
+        // Mark used COPs: any completed COP for this task targeting this
+        // node whose files intersect the inputs.
+        let inputs = &self.engine.task(task).inputs;
+        for (ct, dst, files, used) in self.completed_cops.iter_mut() {
+            if *used || *dst != node {
+                continue;
+            }
+            let _ = ct;
+            if files.iter().any(|f| inputs.contains(f)) {
+                *used = true;
+            }
+        }
+
+        // Stage-in flows.
+        let local_mode = self.scheduler.uses_local_data();
+        let mut n_flows = 0;
+        let input_list: Vec<FileId> = inputs.clone();
+        for f in input_list {
+            let size = self.engine.file(f).size;
+            let is_input = self.engine.file(f).is_workflow_input();
+            if local_mode && !is_input {
+                // Intermediate input: must be local (node is prepared).
+                debug_assert!(
+                    self.dps.is_prepared(&[f], node),
+                    "task {task:?} started on unprepared node {node:?} (file {f:?})"
+                );
+                let n = self.cluster.node(node);
+                let id = self.net.add_flow(size, vec![n.disk_read]);
+                self.flow_owner.insert(id, FlowOwner::StageIn(task));
+                n_flows += 1;
+            } else {
+                for part in self.dfs.read(f, size, node, &self.cluster, &mut self.rng) {
+                    let id = self.net.add_flow(part.bytes, part.resources);
+                    self.flow_owner.insert(id, FlowOwner::StageIn(task));
+                    n_flows += 1;
+                }
+            }
+        }
+
+        self.running.insert(
+            task,
+            Running {
+                node,
+                phase: Phase::StageIn,
+                pending_flows: n_flows,
+                started: now,
+                cores: rt.cores,
+                mem: rt.mem,
+            },
+        );
+        if n_flows == 0 {
+            self.begin_compute(task, now);
+        }
+        true
+    }
+
+    fn begin_compute(&mut self, task: TaskId, now: SimTime) {
+        let r = self.running.get_mut(&task).expect("running");
+        r.phase = Phase::Compute;
+        let node = r.node;
+        // Heterogeneous speeds: slower nodes stretch compute (§VIII).
+        let speed = self.cluster.node(node).spec.speed;
+        let base = self.engine.task(task).compute;
+        let dur = if speed == 1.0 {
+            base
+        } else {
+            SimTime::from_secs_f64(base.as_secs_f64() / speed)
+        };
+        self.events.push(now + dur, Event::ComputeDone(task));
+    }
+
+    fn start_stage_out(&mut self, task: TaskId, now: SimTime) {
+        let local_mode = self.scheduler.uses_local_data();
+        let node = self.running[&task].node;
+        let outputs = self.engine.task(task).outputs.clone();
+        let mut n_flows = 0;
+        for (f, size) in outputs {
+            if local_mode {
+                let n = self.cluster.node(node);
+                let id = self.net.add_flow(size, vec![n.disk_write]);
+                self.flow_owner.insert(id, FlowOwner::StageOut(task));
+                n_flows += 1;
+            } else {
+                for part in self.dfs.write(f, size, node, &self.cluster, &mut self.rng) {
+                    let id = self.net.add_flow(part.bytes, part.resources);
+                    self.flow_owner.insert(id, FlowOwner::StageOut(task));
+                    n_flows += 1;
+                }
+            }
+        }
+        let r = self.running.get_mut(&task).expect("running");
+        r.phase = Phase::StageOut;
+        r.pending_flows = n_flows;
+        if n_flows == 0 {
+            self.complete_task(task, now);
+        }
+    }
+
+    /// Returns true if the completion should trigger a scheduling
+    /// iteration.
+    fn flow_finished(&mut self, owner: FlowOwner, now: SimTime) -> bool {
+        match owner {
+            FlowOwner::StageIn(task) => {
+                let r = self.running.get_mut(&task).expect("running task");
+                debug_assert_eq!(r.phase, Phase::StageIn);
+                r.pending_flows -= 1;
+                if r.pending_flows == 0 {
+                    self.begin_compute(task, now);
+                }
+                false
+            }
+            FlowOwner::StageOut(task) => {
+                let r = self.running.get_mut(&task).expect("running task");
+                debug_assert_eq!(r.phase, Phase::StageOut);
+                r.pending_flows -= 1;
+                if r.pending_flows == 0 {
+                    self.complete_task(task, now);
+                    return true;
+                }
+                false
+            }
+        }
+    }
+
+    fn complete_task(&mut self, task: TaskId, now: SimTime) {
+        let r = self.running.remove(&task).expect("running");
+        self.cluster.release(r.node, r.cores, r.mem);
+        let wall = (now - r.started).as_secs_f64();
+        self.cpu_core_seconds += wall * r.cores as f64;
+        self.node_cpu_seconds[r.node.0] += wall * r.cores as f64;
+        self.last_finish = now;
+        self.tasks_done += 1;
+
+        // Outputs become visible; in WOW mode they are DPS-managed local
+        // files.
+        if self.scheduler.uses_local_data() {
+            for (f, size) in self.engine.task(task).outputs.clone() {
+                self.dps.register_output(f, size, r.node);
+                self.node_replica_bytes[r.node.0] += size.as_f64();
+            }
+            self.update_peak();
+        }
+        let newly_ready = self.engine.complete_task(task);
+        // Replica GC (§III-A): free intermediate files no task can read
+        // any more.
+        if self.cfg.replica_gc && self.scheduler.uses_local_data() {
+            for f in self.engine.take_dead_files() {
+                let size = self.engine.file(f).size.as_f64();
+                for node in self.dps.release_file(f) {
+                    self.node_replica_bytes[node.0] -= size;
+                }
+            }
+        } else {
+            self.engine.take_dead_files();
+        }
+        self.submit(newly_ready);
+    }
+
+    fn update_peak(&mut self) {
+        let total: f64 = self.node_replica_bytes.iter().sum();
+        if total > self.peak_replica_bytes {
+            self.peak_replica_bytes = total;
+        }
+    }
+
+    fn start_cop(&mut self, task: TaskId, dst: NodeId) -> bool {
+        // The scheduler checked feasibility; re-plan for fresh sources.
+        let inputs = match self.ready.iter().find(|r| r.id == task) {
+            Some(r) => r.intermediate_inputs.clone(),
+            None => return false, // task started in the same batch
+        };
+        let plan = match self.dps.plan(&inputs, dst) {
+            Some(p) => p,
+            None => return false,
+        };
+        let cop = self.dps.start_cop(task, dst, plan);
+        *self.cops_per_task.entry(task).or_insert(0) += 1;
+        // Setup latency before bytes move; the COP occupies its c_node /
+        // c_task slots for the whole window (reserved at creation).
+        let launch_at = self.net.now() + SimTime::from_secs_f64(self.cfg.cop_setup_s);
+        self.pending_cops.insert(cop.id, cop.clone());
+        self.events.push(launch_at, Event::CopLaunch(cop.id));
+        true
+    }
+
+    fn cop_finished(&mut self, id: CopId) {
+        let cop = self.dps.complete_cop(id);
+        for (_, _, size) in &cop.parts {
+            self.node_replica_bytes[cop.dst.0] += size.as_f64();
+        }
+        self.update_peak();
+        let files = cop.parts.iter().map(|(f, _, _)| *f).collect();
+        self.completed_cops.push((cop.task, cop.dst, files, false));
+    }
+
+    fn finish_metrics(self) -> RunMetrics {
+        let unique_generated: Bytes = self
+            .engine
+            .files()
+            .iter()
+            .filter(|f| !f.is_workflow_input())
+            .map(|f| f.size)
+            .sum();
+        let tasks_total = self.engine.n_tasks_materialized();
+        let tasks_no_cop = (0..tasks_total)
+            .filter(|i| !self.cops_per_task.contains_key(&TaskId(*i as u64)))
+            .count();
+        let cops_used = self.completed_cops.iter().filter(|(_, _, _, used)| *used).count() as u64;
+
+        // Per-node storage: total bytes written to each worker's disk.
+        let node_storage_bytes: Vec<f64> = self
+            .cluster
+            .workers()
+            .map(|n| self.net.bytes_through[self.cluster.node(n).disk_write.0])
+            .collect();
+
+        let makespan = self
+            .last_finish
+            .saturating_sub(self.first_start.unwrap_or(SimTime::ZERO));
+        RunMetrics {
+            workflow: self.engine.name().to_string(),
+            strategy: self.scheduler.name().to_string(),
+            dfs: self.dfs.name().to_string(),
+            n_nodes: self.cfg.n_nodes,
+            link_gbit: self.cfg.link_gbit,
+            seed: self.cfg.seed,
+            makespan,
+            cpu_alloc_hours: self.cpu_core_seconds / 3600.0,
+            tasks_total,
+            tasks_no_cop,
+            cops_created: self.dps.cops_created,
+            cops_used,
+            cop_bytes: self.dps.bytes_copied,
+            unique_generated,
+            node_storage_bytes,
+            node_cpu_seconds: self.node_cpu_seconds.clone(),
+            peak_replica_bytes: self.peak_replica_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::patterns;
+    use crate::workflow::spec::{ComputeModel, OutputSize, Rule, StageSpec, WorkflowSpec};
+    use crate::workflow::task::StageId;
+
+    fn tiny_chain(n_links: usize) -> WorkflowSpec {
+        WorkflowSpec {
+            name: "tiny-chain".into(),
+            stages: vec![
+                StageSpec {
+                    name: "a".into(),
+                    rule: Rule::Source { count: n_links, inputs_per_task: 0 },
+                    cores: 1,
+                    mem: Bytes::from_gb(1.0),
+                    compute: ComputeModel::fixed(5.0),
+                    out_count: 1,
+                    out_size: OutputSize::FixedGb(0.5),
+                },
+                StageSpec {
+                    name: "b".into(),
+                    rule: Rule::PerTask { from: StageId(0) },
+                    cores: 1,
+                    mem: Bytes::from_gb(1.0),
+                    compute: ComputeModel::fixed(2.0),
+                    out_count: 1,
+                    out_size: OutputSize::RatioOfInput(1.0),
+                },
+            ],
+            input_files_gb: vec![],
+        }
+    }
+
+    fn cfg(strategy: Strategy, dfs: DfsKind) -> RunConfig {
+        RunConfig { n_nodes: 4, strategy, dfs, ..Default::default() }
+    }
+
+    #[test]
+    fn all_strategies_complete_tiny_chain() {
+        for strat in [Strategy::Orig, Strategy::Cws, Strategy::Wow] {
+            for dfs in [DfsKind::Ceph, DfsKind::Nfs] {
+                let m = run(&tiny_chain(6), &cfg(strat, dfs));
+                assert_eq!(m.tasks_total, 12, "{strat:?}/{dfs:?}");
+                assert!(m.makespan > SimTime::ZERO);
+                assert!(m.cpu_alloc_hours > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn wow_beats_orig_on_chain_pattern() {
+        // The Chain pattern is WOW's optimal case (§VI-A: −86 % on Ceph).
+        let spec = patterns::chain();
+        let orig = run(&spec, &cfg(Strategy::Orig, DfsKind::Ceph));
+        let wow = run(&spec, &cfg(Strategy::Wow, DfsKind::Ceph));
+        assert!(
+            wow.makespan.as_secs_f64() < 0.6 * orig.makespan.as_secs_f64(),
+            "wow {} vs orig {}",
+            wow.makespan,
+            orig.makespan
+        );
+    }
+
+    #[test]
+    fn wow_chain_needs_no_cops() {
+        // Every chain successor can run where its producer ran: ≥98 % of
+        // tasks without COPs (Table II: 98.5 %).
+        let m = run(&patterns::chain(), &cfg(Strategy::Wow, DfsKind::Ceph));
+        assert!(m.pct_tasks_no_cop() > 90.0, "{}", m.pct_tasks_no_cop());
+    }
+
+    #[test]
+    fn baselines_create_no_cops() {
+        let m = run(&tiny_chain(4), &cfg(Strategy::Cws, DfsKind::Ceph));
+        assert_eq!(m.cops_created, 0);
+        assert_eq!(m.tasks_no_cop, m.tasks_total);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run(&tiny_chain(5), &cfg(Strategy::Wow, DfsKind::Ceph));
+        let b = run(&tiny_chain(5), &cfg(Strategy::Wow, DfsKind::Ceph));
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.cops_created, b.cops_created);
+    }
+
+    #[test]
+    fn single_node_runs_everything_locally() {
+        let mut c = cfg(Strategy::Wow, DfsKind::Ceph);
+        c.n_nodes = 1;
+        let m = run(&tiny_chain(3), &c);
+        assert_eq!(m.cops_created, 0, "one node → nothing to copy");
+        assert_eq!(m.tasks_total, 6);
+    }
+}

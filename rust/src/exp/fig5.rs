@@ -1,0 +1,106 @@
+//! Fig 5: scalability — makespan and efficiency over 1, 2, 4, 6, 8
+//! nodes for Chip-Seq, Chain (WOW's best case) and All-in-One (the
+//! hardest), comparing WOW against CWS.
+//!
+//! efficiency(n) = makespan(1) / (makespan(n) · n)  (§VI-C).
+
+use super::{median_run, paper_cfg, ExpOpts};
+use crate::dfs::DfsKind;
+use crate::report::Table;
+use crate::scheduler::Strategy;
+use crate::workflow::spec::WorkflowSpec;
+
+pub const NODE_COUNTS: [usize; 5] = [1, 2, 4, 6, 8];
+
+pub fn workflows(opts: &ExpOpts) -> Vec<WorkflowSpec> {
+    let mut v = vec![
+        crate::workflow::patterns::chain(),
+        crate::workflow::patterns::all_in_one(),
+    ];
+    if !opts.quick {
+        v.insert(0, crate::workflow::realworld::chipseq());
+    }
+    v
+}
+
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub workflow: String,
+    pub strategy: Strategy,
+    pub dfs: DfsKind,
+    /// (nodes, makespan minutes, efficiency %)
+    pub points: Vec<(usize, f64, f64)>,
+}
+
+pub fn collect(opts: &ExpOpts) -> Vec<Series> {
+    let mut out = Vec::new();
+    for spec in workflows(opts) {
+        for dfs in [DfsKind::Ceph, DfsKind::Nfs] {
+            for strat in [Strategy::Cws, Strategy::Wow] {
+                eprintln!("fig5: {} / {} / {} ...", spec.name, strat.label(), dfs.label());
+                let mut points = Vec::new();
+                let mut single_node = f64::NAN;
+                for &n in &NODE_COUNTS {
+                    let mut cfg = paper_cfg(strat, dfs);
+                    cfg.n_nodes = n;
+                    let m = median_run(&spec, &cfg, opts);
+                    let mk = m.makespan_min();
+                    if n == 1 {
+                        single_node = mk;
+                    }
+                    let eff = single_node / (mk * n as f64) * 100.0;
+                    points.push((n, mk, eff));
+                }
+                out.push(Series { workflow: spec.name.clone(), strategy: strat, dfs, points });
+            }
+        }
+    }
+    out
+}
+
+pub fn render(series: &[Series]) -> Table {
+    let mut t = Table::new(
+        "Fig 5 — scalability: makespan [min] (efficiency %)",
+        &["Workflow", "Strategy", "DFS", "n=1", "n=2", "n=4", "n=6", "n=8"],
+    );
+    for s in series {
+        let mut row = vec![s.workflow.clone(), s.strategy.label().into(), s.dfs.label().into()];
+        for (_, mk, eff) in &s.points {
+            row.push(format!("{mk:.1} ({eff:.0}%)"));
+        }
+        t.row(row);
+    }
+    t
+}
+
+pub fn run(opts: &ExpOpts) -> (Vec<Series>, String) {
+    let s = collect(opts);
+    let table = render(&s).render();
+    (s, table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Chain: WOW must scale much better than CWS (Fig 5: 90.3 % vs
+    /// 32.0 % efficiency at 8 nodes on Ceph).
+    #[test]
+    fn chain_wow_scales_better_than_cws() {
+        let opts = ExpOpts { seeds: vec![0], quick: true, ..Default::default() };
+        let spec = crate::workflow::patterns::chain();
+        let eff8 = |strat: Strategy| {
+            let mut cfg1 = paper_cfg(strat, DfsKind::Ceph);
+            cfg1.n_nodes = 1;
+            let m1 = median_run(&spec, &cfg1, &opts).makespan_min();
+            let mut cfg8 = paper_cfg(strat, DfsKind::Ceph);
+            cfg8.n_nodes = 8;
+            let m8 = median_run(&spec, &cfg8, &opts).makespan_min();
+            m1 / (m8 * 8.0) * 100.0
+        };
+        let wow = eff8(Strategy::Wow);
+        let cws = eff8(Strategy::Cws);
+        assert!(wow > cws + 15.0, "WOW eff {wow:.1}% vs CWS {cws:.1}%");
+        assert!(wow > 60.0, "WOW should keep high efficiency: {wow:.1}%");
+    }
+}

@@ -1,0 +1,70 @@
+//! Load-distribution analysis (§VI-A): Gini coefficients of local
+//! storage usage and allocated CPU time across the worker nodes under
+//! WOW. Values near 0 = balanced (the paper reports e.g. Rangeland 0.07
+//! storage, Chip-Seq 0.01 storage / 0.00 CPU).
+
+use super::{median_run, paper_cfg, ExpOpts};
+use crate::dfs::DfsKind;
+use crate::report::Table;
+use crate::scheduler::Strategy;
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub workflow: String,
+    pub gini_storage: f64,
+    pub gini_cpu: f64,
+}
+
+pub fn collect(opts: &ExpOpts) -> Vec<Row> {
+    let mut rows = Vec::new();
+    for spec in super::workflows(opts) {
+        eprintln!("gini: {} ...", spec.name);
+        let m = median_run(&spec, &paper_cfg(Strategy::Wow, DfsKind::Ceph), opts);
+        rows.push(Row {
+            workflow: spec.name.clone(),
+            gini_storage: m.gini_storage(),
+            gini_cpu: m.gini_cpu(),
+        });
+    }
+    rows
+}
+
+pub fn render(rows: &[Row]) -> Table {
+    let mut t = Table::new(
+        "Load distribution — Gini coefficients under WOW (Ceph, 8 nodes, 1 Gbit)",
+        &["Workflow", "Gini storage", "Gini CPU"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.workflow.clone(),
+            format!("{:.2}", r.gini_storage),
+            format!("{:.2}", r.gini_cpu),
+        ]);
+    }
+    t
+}
+
+pub fn run(opts: &ExpOpts) -> (Vec<Row>, String) {
+    let rows = collect(opts);
+    let s = render(&rows).render();
+    (rows, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's balance claim: Gini close to zero on average for the
+    /// pattern workflows with many parallel tasks.
+    #[test]
+    fn patterns_are_balanced() {
+        let opts = ExpOpts { seeds: vec![0], quick: true, ..Default::default() };
+        let m = median_run(
+            &crate::workflow::patterns::group(),
+            &paper_cfg(Strategy::Wow, DfsKind::Ceph),
+            &opts,
+        );
+        assert!(m.gini_cpu() < 0.35, "gini cpu {:.2}", m.gini_cpu());
+        assert!(m.gini_storage() < 0.35, "gini storage {:.2}", m.gini_storage());
+    }
+}

@@ -1,0 +1,106 @@
+//! Experiment drivers regenerating every table and figure of the paper's
+//! evaluation (§V–§VI). See DESIGN.md §5 for the experiment index.
+//!
+//! Protocol (§V-C): every configuration is run three times (three seeds)
+//! and the run with the *median makespan* is reported.
+
+pub mod fig4;
+pub mod fig5;
+pub mod gini;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+use crate::dfs::DfsKind;
+use crate::exec::{run_with_backend, RunConfig};
+use crate::metrics::RunMetrics;
+use crate::scheduler::Strategy;
+use crate::workflow::spec::WorkflowSpec;
+
+/// Shared experiment options.
+#[derive(Debug, Clone)]
+pub struct ExpOpts {
+    /// Seeds for the repetition protocol (default 0,1,2 → median).
+    pub seeds: Vec<u64>,
+    /// Quick mode: patterns + synthetic only (drops the four real-world
+    /// workflows) — used by smoke runs and benches.
+    pub quick: bool,
+    /// Use the AOT XLA cost backend when the artifact is available.
+    pub xla: bool,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        ExpOpts { seeds: vec![0, 1, 2], quick: false, xla: false }
+    }
+}
+
+/// Build the configured cost backend.
+pub fn make_backend(xla: bool) -> Box<dyn crate::dps::cost::CostEval> {
+    #[cfg(feature = "xla-runtime")]
+    if xla {
+        match crate::runtime::XlaCostModel::load_default() {
+            Ok(m) => return Box::new(m),
+            Err(e) => eprintln!("warn: XLA backend unavailable ({e}); using native"),
+        }
+    }
+    let _ = xla;
+    Box::new(crate::dps::cost::NativeCost)
+}
+
+/// Run one configuration per seed and return the run with the median
+/// makespan (§V-C).
+pub fn median_run(spec: &WorkflowSpec, cfg: &RunConfig, opts: &ExpOpts) -> RunMetrics {
+    let mut runs: Vec<RunMetrics> = opts
+        .seeds
+        .iter()
+        .map(|&seed| {
+            let mut c = cfg.clone();
+            c.seed = seed;
+            run_with_backend(spec, &c, make_backend(opts.xla))
+        })
+        .collect();
+    runs.sort_by(|a, b| a.makespan.cmp(&b.makespan));
+    runs.remove(runs.len() / 2)
+}
+
+/// The standard Table II configuration for a strategy × DFS cell.
+pub fn paper_cfg(strategy: Strategy, dfs: DfsKind) -> RunConfig {
+    RunConfig { n_nodes: 8, link_gbit: 1.0, dfs, strategy, ..Default::default() }
+}
+
+/// The workflow list for an option set, in Table I order.
+pub fn workflows(opts: &ExpOpts) -> Vec<WorkflowSpec> {
+    if opts.quick {
+        let mut v = crate::workflow::synthetic::all_synthetic();
+        v.extend(crate::workflow::patterns::all_patterns());
+        v
+    } else {
+        crate::workflow::all_workflows()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::patterns;
+
+    #[test]
+    fn median_of_three_is_deterministic() {
+        let spec = patterns::fork();
+        let cfg = paper_cfg(Strategy::Cws, DfsKind::Ceph);
+        let opts = ExpOpts { seeds: vec![0, 1, 2], ..Default::default() };
+        let a = median_run(&spec, &cfg, &opts);
+        let b = median_run(&spec, &cfg, &opts);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.seed, b.seed);
+    }
+
+    #[test]
+    fn quick_mode_drops_realworld() {
+        let q = workflows(&ExpOpts { quick: true, ..Default::default() });
+        assert_eq!(q.len(), 12);
+        let full = workflows(&ExpOpts::default());
+        assert_eq!(full.len(), 16);
+    }
+}

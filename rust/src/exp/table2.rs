@@ -1,0 +1,120 @@
+//! Table II: execution behaviour — all 16 workflows × {Orig, CWS, WOW}
+//! × {Ceph, NFS} on 8 nodes at 1 Gbit. Reports the original makespan
+//! (minutes) and CPU-hours plus the relative change for CWS/WOW, and
+//! WOW's COP statistics ("none" = tasks needing no COP, "used" = COPs
+//! whose data a task consumed).
+
+use super::{median_run, paper_cfg, ExpOpts};
+use crate::dfs::DfsKind;
+use crate::metrics::RunMetrics;
+use crate::report::{pct, Table};
+use crate::scheduler::Strategy;
+use crate::util::stats::rel_change_pct;
+
+/// One workflow × DFS cell (all three strategies).
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub workflow: String,
+    pub dfs: DfsKind,
+    pub orig: RunMetrics,
+    pub cws: RunMetrics,
+    pub wow: RunMetrics,
+}
+
+impl Cell {
+    pub fn makespan_delta_cws(&self) -> f64 {
+        rel_change_pct(self.orig.makespan_min(), self.cws.makespan_min())
+    }
+    pub fn makespan_delta_wow(&self) -> f64 {
+        rel_change_pct(self.orig.makespan_min(), self.wow.makespan_min())
+    }
+    pub fn cpu_delta_cws(&self) -> f64 {
+        rel_change_pct(self.orig.cpu_alloc_hours, self.cws.cpu_alloc_hours)
+    }
+    pub fn cpu_delta_wow(&self) -> f64 {
+        rel_change_pct(self.orig.cpu_alloc_hours, self.wow.cpu_alloc_hours)
+    }
+}
+
+/// Run the full Table II grid.
+pub fn collect(opts: &ExpOpts) -> Vec<Cell> {
+    let mut cells = Vec::new();
+    for spec in super::workflows(opts) {
+        for dfs in [DfsKind::Ceph, DfsKind::Nfs] {
+            eprintln!("table2: {} / {} ...", spec.name, dfs.label());
+            let orig = median_run(&spec, &paper_cfg(Strategy::Orig, dfs), opts);
+            let cws = median_run(&spec, &paper_cfg(Strategy::Cws, dfs), opts);
+            let wow = median_run(&spec, &paper_cfg(Strategy::Wow, dfs), opts);
+            cells.push(Cell { workflow: spec.name.clone(), dfs, orig, cws, wow });
+        }
+    }
+    cells
+}
+
+/// Render one DFS half of Table II, paper layout.
+pub fn render(cells: &[Cell], dfs: DfsKind) -> Table {
+    let mut t = Table::new(
+        &format!("Table II — execution behaviour ({}, 8 nodes, 1 Gbit)", dfs.label()),
+        &[
+            "Workflow",
+            "Makespan Orig [min]",
+            "CWS",
+            "WOW",
+            "CPU Orig [h]",
+            "CWS ",
+            "WOW ",
+            "none",
+            "used",
+        ],
+    );
+    for c in cells.iter().filter(|c| c.dfs == dfs) {
+        t.row(vec![
+            c.workflow.clone(),
+            format!("{:.1}", c.orig.makespan_min()),
+            pct(c.makespan_delta_cws()),
+            pct(c.makespan_delta_wow()),
+            format!("{:.1}", c.orig.cpu_alloc_hours),
+            pct(c.cpu_delta_cws()),
+            pct(c.cpu_delta_wow()),
+            format!("{:.1}%", c.wow.pct_tasks_no_cop()),
+            format!("{:.1}%", c.wow.pct_cops_used()),
+        ]);
+    }
+    t
+}
+
+pub fn run(opts: &ExpOpts) -> (Vec<Cell>, String) {
+    let cells = collect(opts);
+    let mut out = String::new();
+    out.push_str(&render(&cells, DfsKind::Ceph).render());
+    out.push('\n');
+    out.push_str(&render(&cells, DfsKind::Nfs).render());
+    (cells, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A smoke Table II on the pattern set with one seed: WOW must beat
+    /// the baselines everywhere (the paper's headline claim).
+    #[test]
+    fn wow_improves_all_patterns_single_seed() {
+        let opts = ExpOpts { seeds: vec![0], quick: true, ..Default::default() };
+        let specs = crate::workflow::patterns::all_patterns();
+        for spec in specs {
+            for dfs in [DfsKind::Ceph, DfsKind::Nfs] {
+                let orig = median_run(&spec, &paper_cfg(Strategy::Orig, dfs), &opts);
+                let wow = median_run(&spec, &paper_cfg(Strategy::Wow, dfs), &opts);
+                assert!(
+                    wow.makespan < orig.makespan,
+                    "{} on {}: WOW {} vs Orig {}",
+                    spec.name,
+                    dfs.label(),
+                    wow.makespan,
+                    orig.makespan
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! Table III: network dependence — relative makespan change when the
+//! link speed doubles from 1 Gbit to 2 Gbit, for Chip-Seq and the five
+//! patterns, per strategy × DFS. Strategies that already removed the
+//! network bottleneck (WOW) should barely improve.
+
+use super::{median_run, paper_cfg, ExpOpts};
+use crate::dfs::DfsKind;
+use crate::report::{pct, Table};
+use crate::scheduler::Strategy;
+use crate::util::stats::rel_change_pct;
+use crate::workflow::spec::WorkflowSpec;
+
+/// Workflows in this experiment (§V-C experiment 2).
+pub fn workflows(opts: &ExpOpts) -> Vec<WorkflowSpec> {
+    let mut v = crate::workflow::patterns::all_patterns();
+    if !opts.quick {
+        v.push(crate::workflow::realworld::chipseq());
+    }
+    v.sort_by(|a, b| a.name.cmp(&b.name));
+    v
+}
+
+/// One row: workflow × (strategy × dfs) → Δ makespan 1→2 Gbit in %.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub workflow: String,
+    /// [(strategy, dfs, delta_pct)]
+    pub deltas: Vec<(Strategy, DfsKind, f64)>,
+}
+
+pub fn collect(opts: &ExpOpts) -> Vec<Row> {
+    let mut rows = Vec::new();
+    for spec in workflows(opts) {
+        let mut deltas = Vec::new();
+        for dfs in [DfsKind::Ceph, DfsKind::Nfs] {
+            for strat in [Strategy::Orig, Strategy::Cws, Strategy::Wow] {
+                eprintln!("table3: {} / {} / {} ...", spec.name, strat.label(), dfs.label());
+                let m1 = median_run(&spec, &paper_cfg(strat, dfs), opts);
+                let mut cfg2 = paper_cfg(strat, dfs);
+                cfg2.link_gbit = 2.0;
+                let m2 = median_run(&spec, &cfg2, opts);
+                deltas.push((
+                    strat,
+                    dfs,
+                    rel_change_pct(m1.makespan_min(), m2.makespan_min()),
+                ));
+            }
+        }
+        rows.push(Row { workflow: spec.name.clone(), deltas });
+    }
+    rows
+}
+
+pub fn render(rows: &[Row]) -> Table {
+    let mut t = Table::new(
+        "Table III — makespan change 1 Gbit → 2 Gbit",
+        &[
+            "Workflow",
+            "Ceph Orig",
+            "Ceph CWS",
+            "Ceph WOW",
+            "NFS Orig",
+            "NFS CWS",
+            "NFS WOW",
+        ],
+    );
+    for r in rows {
+        let find = |s: Strategy, d: DfsKind| {
+            r.deltas
+                .iter()
+                .find(|(st, df, _)| *st == s && *df == d)
+                .map(|(_, _, v)| pct(*v))
+                .unwrap_or_default()
+        };
+        t.row(vec![
+            r.workflow.clone(),
+            find(Strategy::Orig, DfsKind::Ceph),
+            find(Strategy::Cws, DfsKind::Ceph),
+            find(Strategy::Wow, DfsKind::Ceph),
+            find(Strategy::Orig, DfsKind::Nfs),
+            find(Strategy::Cws, DfsKind::Nfs),
+            find(Strategy::Wow, DfsKind::Nfs),
+        ]);
+    }
+    t
+}
+
+pub fn run(opts: &ExpOpts) -> (Vec<Row>, String) {
+    let rows = collect(opts);
+    let table = render(&rows).render();
+    (rows, table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Doubling bandwidth must help the network-bound baseline much more
+    /// than WOW on the Chain pattern (Table III: −27.5 % vs −2.0 %).
+    #[test]
+    fn chain_orig_gains_more_than_wow_from_bandwidth() {
+        let opts = ExpOpts { seeds: vec![0], quick: true, ..Default::default() };
+        let spec = crate::workflow::patterns::chain();
+        let dfs = DfsKind::Ceph;
+        let gain = |strat: Strategy| {
+            let m1 = median_run(&spec, &paper_cfg(strat, dfs), &opts);
+            let mut cfg2 = paper_cfg(strat, dfs);
+            cfg2.link_gbit = 2.0;
+            let m2 = median_run(&spec, &cfg2, &opts);
+            rel_change_pct(m1.makespan_min(), m2.makespan_min())
+        };
+        let orig_gain = gain(Strategy::Orig);
+        let wow_gain = gain(Strategy::Wow);
+        assert!(orig_gain < -10.0, "orig should gain substantially: {orig_gain:.1}%");
+        assert!(
+            wow_gain > orig_gain + 5.0,
+            "WOW ({wow_gain:.1}%) must be less network-dependent than Orig ({orig_gain:.1}%)"
+        );
+    }
+}

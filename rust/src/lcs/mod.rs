@@ -1,0 +1,127 @@
+//! The Local Copy Service (§III-A, §IV-D).
+//!
+//! In the paper, an LCS daemon on every node exposes local storage via
+//! FTP and executes the COPs the DPS hands it, moving intermediate data
+//! directly node-to-node and bypassing the DFS. In the simulator the LCS
+//! maps each COP part onto a network flow: source disk read → source NIC
+//! up → destination NIC down → destination disk write. The COP-level
+//! barrier (a COP is atomic, §IV-C) is tracked here.
+
+use crate::cluster::Cluster;
+use crate::dps::{Cop, CopId};
+use crate::net::{FlowId, FlowNet};
+use crate::util::fxmap::FastMap;
+
+/// Tracks in-flight COP flows and their COP-level barrier.
+#[derive(Debug, Default)]
+pub struct Lcs {
+    /// flow → owning COP.
+    flow_cop: FastMap<FlowId, CopId>,
+    /// COP → number of unfinished flows.
+    pending: FastMap<CopId, usize>,
+}
+
+impl Lcs {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Launch all flows of `cop`. One flow per file part, direct
+    /// node-to-node (never touching the DFS).
+    pub fn start_cop(&mut self, cop: &Cop, cluster: &Cluster, net: &mut FlowNet) {
+        assert!(!cop.parts.is_empty(), "empty COP");
+        let mut n = 0;
+        for (_, src, size) in &cop.parts {
+            let s = cluster.node(*src);
+            let d = cluster.node(cop.dst);
+            debug_assert_ne!(*src, cop.dst, "COP to the node that already holds the file");
+            let fid = net.add_flow(
+                *size,
+                vec![s.disk_read, s.nic_up, d.nic_down, d.disk_write],
+            );
+            self.flow_cop.insert(fid, cop.id);
+            n += 1;
+        }
+        self.pending.insert(cop.id, n);
+    }
+
+    /// A flow completed. Returns `Some(cop)` when this was the last
+    /// pending flow of its COP (the COP barrier).
+    pub fn flow_done(&mut self, flow: FlowId) -> Option<CopId> {
+        let cop = self.flow_cop.remove(&flow)?;
+        let left = self.pending.get_mut(&cop).expect("cop pending");
+        *left -= 1;
+        if *left == 0 {
+            self.pending.remove(&cop);
+            Some(cop)
+        } else {
+            None
+        }
+    }
+
+    /// Is this flow part of a COP?
+    pub fn owns_flow(&self, flow: FlowId) -> bool {
+        self.flow_cop.contains_key(&flow)
+    }
+
+    pub fn active_cops(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{NodeId, NodeSpec};
+    use crate::dps::Cop;
+    use crate::util::units::Bytes;
+    use crate::workflow::task::{FileId, TaskId};
+
+    fn setup() -> (FlowNet, Cluster) {
+        let mut net = FlowNet::new();
+        let c = Cluster::build(&mut net, 3, NodeSpec::paper_worker(1.0), None);
+        (net, c)
+    }
+
+    #[test]
+    fn cop_barrier_waits_for_all_flows() {
+        let (mut net, c) = setup();
+        let mut lcs = Lcs::new();
+        let cop = Cop {
+            id: CopId(0),
+            task: TaskId(0),
+            dst: NodeId(0),
+            parts: vec![
+                (FileId(1), NodeId(1), Bytes::from_gb(1.0)),
+                (FileId(2), NodeId(2), Bytes::from_gb(2.0)),
+            ],
+        };
+        lcs.start_cop(&cop, &c, &mut net);
+        assert_eq!(lcs.active_cops(), 1);
+        // Run until both flows complete.
+        let mut done_cop = None;
+        while net.active_flows() > 0 {
+            let t = net.next_completion().unwrap();
+            net.advance_to(t);
+            for f in net.take_completed() {
+                assert!(lcs.owns_flow(f) || done_cop.is_some());
+                if let Some(cid) = lcs.flow_done(f) {
+                    assert!(done_cop.is_none(), "barrier fired twice");
+                    done_cop = Some(cid);
+                }
+            }
+        }
+        assert_eq!(done_cop, Some(CopId(0)));
+        assert_eq!(lcs.active_cops(), 0);
+    }
+
+    #[test]
+    fn unrelated_flows_ignored() {
+        let (mut net, c) = setup();
+        let mut lcs = Lcs::new();
+        let n0 = c.node(NodeId(0));
+        let f = net.add_flow(Bytes(10), vec![n0.disk_read]);
+        assert!(!lcs.owns_flow(f));
+        assert!(lcs.flow_done(f).is_none());
+    }
+}

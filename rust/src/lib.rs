@@ -1,0 +1,41 @@
+//! # wow — Workflow-Aware Data Movement and Task Scheduling
+//!
+//! A full reproduction of *"WOW: Workflow-Aware Data Movement and Task
+//! Scheduling for Dynamic Scientific Workflows"* (Lehmann et al., CCGRID
+//! 2025) as a three-layer rust + JAX + Pallas system:
+//!
+//! - **Layer 3 (this crate)**: the WOW coordinator — a three-step
+//!   scheduler intertwining data placement and task assignment, a data
+//!   placement service (DPS), local copy services (LCS), plus the entire
+//!   substrate the paper evaluates on: a discrete-event cluster with a
+//!   max-min fair-share network, Ceph/NFS distributed file-system models,
+//!   a dynamic (Nextflow-style) workflow engine, the Orig and CWS
+//!   baseline schedulers, and all 16 evaluation workflows.
+//! - **Layer 2 (python/compile/model.py)**: the DPS cost model as a JAX
+//!   graph, AOT-lowered to HLO text.
+//! - **Layer 1 (python/compile/kernels/)**: the masked-matmul core of the
+//!   cost model as a Pallas kernel.
+//!
+//! The [`runtime`] module loads the AOT artifact via PJRT and serves the
+//! DPS on the scheduling hot path; a numerically identical Native backend
+//! keeps the crate fully functional without artifacts.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod cluster;
+pub mod dfs;
+pub mod dps;
+pub mod exec;
+pub mod exp;
+pub mod lcs;
+pub mod metrics;
+pub mod net;
+pub mod report;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod util;
+pub mod workflow;
+
+pub use util::units::{Bandwidth, Bytes, SimTime};

@@ -1,0 +1,233 @@
+//! `wow` — CLI for the WOW reproduction.
+//!
+//! ```text
+//! wow run --workflow chain --strategy wow --dfs ceph [--nodes 8]
+//!         [--gbit 1.0] [--seed 0] [--c-node 1] [--c-task 2] [--xla]
+//! wow table1 | table2 | table3 | fig4 | fig5 | gini | all
+//!         [--seeds 0,1,2] [--quick] [--xla]
+//! wow ablate            # c_node / c_task sweep on the pattern set
+//! ```
+//!
+//! Table/figure commands regenerate the corresponding paper artifact
+//! (DESIGN.md §5); results print to stdout, progress to stderr.
+
+use anyhow::{bail, Context, Result};
+use wow::dfs::DfsKind;
+use wow::exec::{run_with_backend, RunConfig};
+use wow::exp::{self, ExpOpts};
+use wow::report::Table;
+use wow::scheduler::Strategy;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    cmd: String,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Result<Self> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".into());
+        let mut flags = std::collections::HashMap::new();
+        while let Some(k) = it.next() {
+            let key = k
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got '{k}'"))?
+                .to_string();
+            // Boolean flags.
+            if ["quick", "xla", "gc"].contains(&key.as_str()) {
+                flags.insert(key, "true".into());
+                continue;
+            }
+            let v = it.next().with_context(|| format!("--{key} needs a value"))?;
+            flags.insert(key, v);
+        }
+        Ok(Args { cmd, flags })
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key} '{v}': {e}")),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    fn opts(&self) -> Result<ExpOpts> {
+        let seeds: Vec<u64> = self
+            .flags
+            .get("seeds")
+            .map(|s| {
+                s.split(',')
+                    .map(|x| x.trim().parse::<u64>())
+                    .collect::<Result<Vec<_>, _>>()
+            })
+            .transpose()
+            .context("--seeds wants a comma list like 0,1,2")?
+            .unwrap_or_else(|| vec![0, 1, 2]);
+        Ok(ExpOpts { seeds, quick: self.has("quick"), xla: self.has("xla") })
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::parse()?;
+    match args.cmd.as_str() {
+        "run" => cmd_run(&args),
+        "table1" => {
+            println!("{}", exp::table1::run(&args.opts()?).render());
+            Ok(())
+        }
+        "table2" => {
+            let (_, out) = exp::table2::run(&args.opts()?);
+            println!("{out}");
+            Ok(())
+        }
+        "table3" => {
+            let (_, out) = exp::table3::run(&args.opts()?);
+            println!("{out}");
+            Ok(())
+        }
+        "fig4" => {
+            let (_, out) = exp::fig4::run(&args.opts()?);
+            println!("{out}");
+            Ok(())
+        }
+        "fig5" => {
+            let (_, out) = exp::fig5::run(&args.opts()?);
+            println!("{out}");
+            Ok(())
+        }
+        "gini" => {
+            let (_, out) = exp::gini::run(&args.opts()?);
+            println!("{out}");
+            Ok(())
+        }
+        "ablate" => cmd_ablate(&args),
+        "all" => {
+            let opts = args.opts()?;
+            println!("{}", exp::table1::run(&opts).render());
+            let (_, t2) = exp::table2::run(&opts);
+            println!("{t2}");
+            let (_, t3) = exp::table3::run(&opts);
+            println!("{t3}");
+            let (_, f4) = exp::fig4::run(&opts);
+            println!("{f4}");
+            let (_, f5) = exp::fig5::run(&opts);
+            println!("{f5}");
+            let (_, g) = exp::gini::run(&opts);
+            println!("{g}");
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            println!(
+                "wow — WOW scheduler reproduction (CCGRID 2025)\n\n\
+                 subcommands:\n  \
+                 run     --workflow NAME [--strategy orig|cws|wow] [--dfs ceph|nfs]\n          \
+                 [--nodes N] [--gbit F] [--seed S] [--c-node N] [--c-task N] [--xla]\n  \
+                 table1 | table2 | table3 | fig4 | fig5 | gini | all\n          \
+                 [--seeds 0,1,2] [--quick] [--xla]\n  \
+                 ablate  c_node/c_task sweep over the pattern workflows"
+            );
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try `wow help`)"),
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let name: String = args.get("workflow", String::from("chain"))?;
+    let spec = wow::workflow::by_name(&name)
+        .with_context(|| format!("unknown workflow '{name}'"))?;
+    let cfg = RunConfig {
+        n_nodes: args.get("nodes", 8usize)?,
+        link_gbit: args.get("gbit", 1.0f64)?,
+        dfs: args.get("dfs", DfsKind::Ceph)?,
+        strategy: args.get("strategy", Strategy::Wow)?,
+        seed: args.get("seed", 0u64)?,
+        c_node: args.get("c-node", 1u32)?,
+        c_task: args.get("c-task", 2u32)?,
+        cop_setup_s: args.get("cop-setup", 0.5f64)?,
+        replica_gc: args.has("gc"),
+        speed_factors: args
+            .flags
+            .get("speeds")
+            .map(|v| {
+                v.split(',')
+                    .map(|x| x.trim().parse::<f64>())
+                    .collect::<Result<Vec<_>, _>>()
+            })
+            .transpose()
+            .context("--speeds wants a comma list like 1.0,0.5,1.0")?
+            .unwrap_or_default(),
+    };
+    let backend = exp::make_backend(args.has("xla"));
+    eprintln!(
+        "running {} with {} on {} ({} nodes, {} Gbit, backend={})",
+        spec.name,
+        cfg.strategy.label(),
+        cfg.dfs.label(),
+        cfg.n_nodes,
+        cfg.link_gbit,
+        backend.backend_name(),
+    );
+    let t0 = std::time::Instant::now();
+    let m = run_with_backend(&spec, &cfg, backend);
+    let mut t = Table::new(
+        &format!("{} / {} / {}", m.workflow, m.strategy, m.dfs),
+        &["metric", "value"],
+    );
+    t.row(vec!["makespan".into(), format!("{:.1} min", m.makespan_min())]);
+    t.row(vec!["CPU allocated".into(), format!("{:.1} h", m.cpu_alloc_hours)]);
+    t.row(vec!["tasks".into(), m.tasks_total.to_string()]);
+    t.row(vec!["tasks w/o COP".into(), format!("{:.1}%", m.pct_tasks_no_cop())]);
+    t.row(vec!["COPs created".into(), m.cops_created.to_string()]);
+    t.row(vec!["COPs used".into(), format!("{:.1}%", m.pct_cops_used())]);
+    t.row(vec!["data overhead".into(), format!("{:.1}%", m.data_overhead_pct())]);
+    t.row(vec!["peak replicas".into(), format!("{:.1} GB", m.peak_replica_gb())]);
+    t.row(vec!["Gini storage".into(), format!("{:.2}", m.gini_storage())]);
+    t.row(vec!["Gini CPU".into(), format!("{:.2}", m.gini_cpu())]);
+    t.row(vec!["sim wallclock".into(), format!("{:.2} s", t0.elapsed().as_secs_f64())]);
+    println!("{}", t.render());
+    Ok(())
+}
+
+/// Ablation: sweep the COP throttles over the pattern workflows
+/// (DESIGN.md §6 — the paper fixes c_node=1, c_task=2).
+fn cmd_ablate(args: &Args) -> Result<()> {
+    let opts = args.opts()?;
+    let mut t = Table::new(
+        "Ablation — WOW COP limits (patterns, Ceph, 8 nodes, 1 Gbit)",
+        &["Workflow", "c_node", "c_task", "Makespan [min]", "Overhead", "COPs"],
+    );
+    for spec in wow::workflow::patterns::all_patterns() {
+        for (c_node, c_task) in [(1u32, 1u32), (1, 2), (2, 2), (2, 4), (4, 4)] {
+            let mut cfg = exp::paper_cfg(Strategy::Wow, DfsKind::Ceph);
+            cfg.c_node = c_node;
+            cfg.c_task = c_task;
+            let m = exp::median_run(&spec, &cfg, &opts);
+            t.row(vec![
+                spec.name.clone(),
+                c_node.to_string(),
+                c_task.to_string(),
+                format!("{:.1}", m.makespan_min()),
+                format!("{:.1}%", m.data_overhead_pct()),
+                m.cops_created.to_string(),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    Ok(())
+}

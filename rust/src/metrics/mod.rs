@@ -1,0 +1,131 @@
+//! Run metrics: everything Tables II/III and Figures 4/5 report.
+
+use crate::util::stats;
+use crate::util::units::{Bytes, SimTime};
+
+/// Metrics of one simulated workflow execution.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub workflow: String,
+    pub strategy: String,
+    pub dfs: String,
+    pub n_nodes: usize,
+    pub link_gbit: f64,
+    pub seed: u64,
+
+    /// Time from the start of the first task to the end of the last
+    /// (§V-C).
+    pub makespan: SimTime,
+    /// Σ task wallclock (pod lifetime) × allocated cores (§VI-A), hours.
+    pub cpu_alloc_hours: f64,
+
+    pub tasks_total: usize,
+    /// Tasks that ran without any COP ever created for them ("none"
+    /// column of Table II).
+    pub tasks_no_cop: usize,
+    pub cops_created: u64,
+    /// COPs whose transferred data was read by a task on the target node
+    /// ("used" column of Table II).
+    pub cops_used: u64,
+    /// Bytes moved by COPs (WOW's replica overhead, Fig 4).
+    pub cop_bytes: Bytes,
+    /// Σ sizes of unique generated (non-input) files.
+    pub unique_generated: Bytes,
+
+    /// Per-worker totals for the load-distribution analysis (§VI-A).
+    pub node_storage_bytes: Vec<f64>,
+    pub node_cpu_seconds: Vec<f64>,
+    /// Peak bytes of simultaneously live WOW-managed replicas across the
+    /// cluster (temporary-storage footprint; with replica GC enabled
+    /// this is what the paper's "moderate increase of temporary storage"
+    /// claim is about).
+    pub peak_replica_bytes: f64,
+}
+
+impl RunMetrics {
+    /// Share of tasks that needed no COP, in percent.
+    pub fn pct_tasks_no_cop(&self) -> f64 {
+        if self.tasks_total == 0 {
+            return 0.0;
+        }
+        self.tasks_no_cop as f64 / self.tasks_total as f64 * 100.0
+    }
+
+    /// Share of COPs whose data was used, in percent.
+    pub fn pct_cops_used(&self) -> f64 {
+        if self.cops_created == 0 {
+            return 0.0;
+        }
+        self.cops_used as f64 / self.cops_created as f64 * 100.0
+    }
+
+    /// Fig 4: additional replica bytes relative to unique file bytes, in
+    /// percent (0 when no COPs ran).
+    pub fn data_overhead_pct(&self) -> f64 {
+        if self.unique_generated.as_u64() == 0 {
+            return 0.0;
+        }
+        self.cop_bytes.as_f64() / self.unique_generated.as_f64() * 100.0
+    }
+
+    /// Gini coefficient of local storage usage across workers.
+    pub fn gini_storage(&self) -> f64 {
+        stats::gini(&self.node_storage_bytes)
+    }
+
+    /// Gini coefficient of allocated CPU time across workers.
+    pub fn gini_cpu(&self) -> f64 {
+        stats::gini(&self.node_cpu_seconds)
+    }
+
+    pub fn makespan_min(&self) -> f64 {
+        self.makespan.as_minutes_f64()
+    }
+
+    /// Peak temporary storage in GB.
+    pub fn peak_replica_gb(&self) -> f64 {
+        self.peak_replica_bytes / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> RunMetrics {
+        RunMetrics {
+            tasks_total: 200,
+            tasks_no_cop: 150,
+            cops_created: 40,
+            cops_used: 10,
+            cop_bytes: Bytes::from_gb(50.0),
+            unique_generated: Bytes::from_gb(200.0),
+            node_storage_bytes: vec![1.0, 1.0, 1.0, 1.0],
+            node_cpu_seconds: vec![0.0, 0.0, 0.0, 100.0],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn percentages() {
+        let m = m();
+        assert!((m.pct_tasks_no_cop() - 75.0).abs() < 1e-9);
+        assert!((m.pct_cops_used() - 25.0).abs() < 1e-9);
+        assert!((m.data_overhead_pct() - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gini_extremes() {
+        let m = m();
+        assert!(m.gini_storage() < 1e-9);
+        assert!((m.gini_cpu() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_division_guards() {
+        let m = RunMetrics::default();
+        assert_eq!(m.pct_tasks_no_cop(), 0.0);
+        assert_eq!(m.pct_cops_used(), 0.0);
+        assert_eq!(m.data_overhead_pct(), 0.0);
+    }
+}

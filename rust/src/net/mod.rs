@@ -1,0 +1,413 @@
+//! Flow-level bandwidth model with max-min fair sharing.
+//!
+//! Every data movement in the simulated cluster — DFS reads/writes, local
+//! disk I/O, and WOW's COPs — is a **flow** that occupies a set of
+//! **resources** (a node's NIC-up, NIC-down, disk-read, disk-write
+//! channels). Concurrent flows share resource capacity max-min fairly,
+//! computed with the classic *progressive filling* algorithm: repeatedly
+//! find the most-contended resource, freeze all its flows at the equal
+//! share, subtract, and continue. This fluid model is the standard
+//! abstraction for TCP-like fair sharing on commodity Ethernet — exactly
+//! the regime the paper targets (§I, §V-B: 1–2 Gbit links, SATA SSDs).
+//!
+//! The model is event-driven: rates stay constant between flow
+//! arrivals/departures; [`FlowNet::advance_to`] integrates progress and
+//! [`FlowNet::next_completion`] yields the next departure time.
+
+use crate::util::units::{Bandwidth, Bytes, SimTime};
+
+/// Identifies a capacity-limited channel (e.g. "node 3 disk read").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ResourceId(pub usize);
+
+/// Identifies an active transfer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FlowId(pub u64);
+
+#[derive(Debug, Clone)]
+struct Flow {
+    id: FlowId,
+    remaining: f64, // bytes
+    resources: Vec<ResourceId>,
+    rate: f64, // bytes/s, set by recompute()
+}
+
+/// The shared bandwidth substrate.
+#[derive(Debug)]
+pub struct FlowNet {
+    capacities: Vec<f64>, // bytes/s per ResourceId
+    flows: Vec<Flow>,     // active flows (dense; order = arrival, deterministic)
+    next_id: u64,
+    now: SimTime,
+    completed: Vec<FlowId>,
+    dirty: bool,
+    /// Statistics: total bytes moved through each resource.
+    pub bytes_through: Vec<f64>,
+}
+
+impl FlowNet {
+    pub fn new() -> Self {
+        FlowNet {
+            capacities: Vec::new(),
+            flows: Vec::new(),
+            next_id: 0,
+            now: SimTime::ZERO,
+            completed: Vec::new(),
+            dirty: false,
+            bytes_through: Vec::new(),
+        }
+    }
+
+    /// Register a resource with the given capacity; returns its id.
+    pub fn add_resource(&mut self, cap: Bandwidth) -> ResourceId {
+        let id = ResourceId(self.capacities.len());
+        self.capacities.push(cap.bytes_per_sec());
+        self.bytes_through.push(0.0);
+        id
+    }
+
+    /// Change a resource's capacity (used by the network-bandwidth sweep,
+    /// Table III). Takes effect at the next recompute.
+    pub fn set_capacity(&mut self, r: ResourceId, cap: Bandwidth) {
+        self.capacities[r.0] = cap.bytes_per_sec();
+        self.dirty = true;
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    pub fn active_flows(&self) -> usize {
+        self.flows.len()
+    }
+
+    /// Number of active flows that traverse resource `r`.
+    pub fn flows_through(&self, r: ResourceId) -> usize {
+        self.flows.iter().filter(|f| f.resources.contains(&r)).count()
+    }
+
+    /// Start a transfer of `bytes` through `resources`. A zero-byte flow
+    /// (or one with no resources) completes at the next `advance_to`.
+    pub fn add_flow(&mut self, bytes: Bytes, resources: Vec<ResourceId>) -> FlowId {
+        for r in &resources {
+            debug_assert!(r.0 < self.capacities.len(), "unknown resource {r:?}");
+        }
+        let id = FlowId(self.next_id);
+        self.next_id += 1;
+        self.flows.push(Flow {
+            id,
+            remaining: bytes.as_f64(),
+            resources,
+            rate: 0.0,
+        });
+        self.dirty = true;
+        id
+    }
+
+    /// Cancel a flow (e.g. a COP made obsolete). Returns true if it was
+    /// still active.
+    pub fn cancel(&mut self, id: FlowId) -> bool {
+        let before = self.flows.len();
+        self.flows.retain(|f| f.id != id);
+        let removed = self.flows.len() != before;
+        if removed {
+            self.dirty = true;
+        }
+        removed
+    }
+
+    /// Remaining bytes of an active flow, if any.
+    pub fn remaining(&self, id: FlowId) -> Option<Bytes> {
+        self.flows
+            .iter()
+            .find(|f| f.id == id)
+            .map(|f| Bytes(f.remaining.max(0.0).round() as u64))
+    }
+
+    /// Recompute max-min fair rates via progressive filling.
+    pub fn recompute(&mut self) {
+        self.dirty = false;
+        let n_res = self.capacities.len();
+        let mut remaining_cap = self.capacities.clone();
+        let mut res_users: Vec<u32> = vec![0; n_res];
+        let mut frozen: Vec<bool> = vec![false; self.flows.len()];
+
+        // Flows without resources (pure-latency / zero-cost) get infinite rate.
+        for (i, f) in self.flows.iter_mut().enumerate() {
+            if f.resources.is_empty() {
+                f.rate = f64::INFINITY;
+                frozen[i] = true;
+            } else {
+                f.rate = 0.0;
+            }
+        }
+        for (i, f) in self.flows.iter().enumerate() {
+            if frozen[i] {
+                continue;
+            }
+            for r in &f.resources {
+                res_users[r.0] += 1;
+            }
+        }
+
+        let mut unfrozen = frozen.iter().filter(|&&z| !z).count();
+        while unfrozen > 0 {
+            // Find the bottleneck resource: min share = cap / users.
+            let mut best_share = f64::INFINITY;
+            let mut best_res = usize::MAX;
+            for r in 0..n_res {
+                if res_users[r] > 0 {
+                    let share = remaining_cap[r] / res_users[r] as f64;
+                    if share < best_share {
+                        best_share = share;
+                        best_res = r;
+                    }
+                }
+            }
+            debug_assert!(best_res != usize::MAX);
+            // Freeze every unfrozen flow through the bottleneck.
+            for i in 0..self.flows.len() {
+                if frozen[i] || !self.flows[i].resources.contains(&ResourceId(best_res)) {
+                    continue;
+                }
+                frozen[i] = true;
+                unfrozen -= 1;
+                self.flows[i].rate = best_share;
+                for r in &self.flows[i].resources {
+                    remaining_cap[r.0] = (remaining_cap[r.0] - best_share).max(0.0);
+                    res_users[r.0] -= 1;
+                }
+            }
+        }
+    }
+
+    /// Earliest completion time among active flows under current rates.
+    /// `None` if there are no active flows.
+    pub fn next_completion(&mut self) -> Option<SimTime> {
+        if self.dirty {
+            self.recompute();
+        }
+        self.flows
+            .iter()
+            .map(|f| {
+                if f.rate.is_infinite() || f.remaining <= 0.0 {
+                    self.now
+                } else {
+                    // Round up to 1 µs so time always advances.
+                    let dt = (f.remaining / f.rate * 1e6).ceil().max(1.0) as u64;
+                    SimTime(self.now.0 + dt)
+                }
+            })
+            .min()
+    }
+
+    /// Advance simulated time to `t`, integrating flow progress. Flows
+    /// that finish are moved to the completed list (drain with
+    /// [`Self::take_completed`]). `t` must be ≥ the current time.
+    pub fn advance_to(&mut self, t: SimTime) {
+        if self.dirty {
+            self.recompute();
+        }
+        assert!(t >= self.now, "time went backwards: {t:?} < {:?}", self.now);
+        let dt = (t - self.now).as_secs_f64();
+        self.now = t;
+        if self.flows.is_empty() {
+            return;
+        }
+        let mut any_done = false;
+        for f in &mut self.flows {
+            let moved = if f.rate.is_infinite() { f.remaining } else { f.rate * dt };
+            let moved = moved.min(f.remaining);
+            f.remaining -= moved;
+            for r in &f.resources {
+                self.bytes_through[r.0] += moved;
+            }
+            // Completion tolerance: less than one byte left, or would
+            // finish within 1 µs (the event-queue resolution).
+            if f.remaining < 1.0 || (f.rate.is_finite() && f.remaining <= f.rate * 1e-6) {
+                any_done = true;
+            }
+        }
+        if any_done {
+            let completed = &mut self.completed;
+            self.flows.retain(|f| {
+                let done = f.remaining < 1.0 || (f.rate.is_finite() && f.remaining <= f.rate * 1e-6);
+                if done {
+                    completed.push(f.id);
+                }
+                !done
+            });
+            self.dirty = true;
+        }
+    }
+
+    /// Drain the set of flows that completed since the last call.
+    pub fn take_completed(&mut self) -> Vec<FlowId> {
+        std::mem::take(&mut self.completed)
+    }
+}
+
+impl Default for FlowNet {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::{Bandwidth, Bytes};
+
+    fn net_with(caps: &[f64]) -> (FlowNet, Vec<ResourceId>) {
+        let mut net = FlowNet::new();
+        let ids = caps
+            .iter()
+            .map(|&c| net.add_resource(Bandwidth(c)))
+            .collect();
+        (net, ids)
+    }
+
+    /// Run until a specific flow completes; returns the completion time.
+    /// Remembers completions across calls (simultaneous finishes).
+    fn run_until_done(net: &mut FlowNet, id: FlowId) -> SimTime {
+        use std::cell::RefCell;
+        thread_local! {
+            static SEEN: RefCell<std::collections::HashMap<FlowId, SimTime>> =
+                RefCell::new(std::collections::HashMap::new());
+        }
+        if let Some(t) = SEEN.with(|s| s.borrow().get(&id).copied()) {
+            return t;
+        }
+        loop {
+            let t = net.next_completion().expect("flows active");
+            net.advance_to(t);
+            let done = net.take_completed();
+            SEEN.with(|s| {
+                for f in &done {
+                    s.borrow_mut().insert(*f, t);
+                }
+            });
+            if done.contains(&id) {
+                return t;
+            }
+        }
+    }
+
+    #[test]
+    fn single_flow_full_capacity() {
+        let (mut net, r) = net_with(&[100.0]);
+        let f = net.add_flow(Bytes(1000), vec![r[0]]);
+        let t = run_until_done(&mut net, f);
+        assert!((t.as_secs_f64() - 10.0).abs() < 1e-3, "t={t}");
+    }
+
+    #[test]
+    fn two_flows_share_fairly() {
+        let (mut net, r) = net_with(&[100.0]);
+        let a = net.add_flow(Bytes(1000), vec![r[0]]);
+        let b = net.add_flow(Bytes(1000), vec![r[0]]);
+        let ta = run_until_done(&mut net, a);
+        // Both at 50 B/s → both finish at t=20.
+        assert!((ta.as_secs_f64() - 20.0).abs() < 1e-3);
+        let tb = run_until_done(&mut net, b);
+        assert!((tb.as_secs_f64() - 20.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn short_flow_releases_bandwidth() {
+        let (mut net, r) = net_with(&[100.0]);
+        let a = net.add_flow(Bytes(2000), vec![r[0]]);
+        let b = net.add_flow(Bytes(500), vec![r[0]]);
+        // Phase 1: both at 50 B/s. b finishes at t=10 with a at 1500 left.
+        let tb = run_until_done(&mut net, b);
+        assert!((tb.as_secs_f64() - 10.0).abs() < 1e-3);
+        // Phase 2: a alone at 100 B/s → 15 more seconds.
+        let ta = run_until_done(&mut net, a);
+        assert!((ta.as_secs_f64() - 25.0).abs() < 1e-3, "ta={ta}");
+    }
+
+    #[test]
+    fn bottleneck_is_min_resource() {
+        // Flow crosses a 100 B/s and a 40 B/s resource → rate 40.
+        let (mut net, r) = net_with(&[100.0, 40.0]);
+        let f = net.add_flow(Bytes(400), vec![r[0], r[1]]);
+        let t = run_until_done(&mut net, f);
+        assert!((t.as_secs_f64() - 10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn max_min_unbalanced_shares() {
+        // r0 cap 100 shared by f1 and f2; f2 also crosses r1 cap 20.
+        // Max-min: f2 limited to 20, f1 gets the remaining 80.
+        let (mut net, r) = net_with(&[100.0, 20.0]);
+        let f1 = net.add_flow(Bytes(800), vec![r[0]]);
+        let _f2 = net.add_flow(Bytes(10_000), vec![r[0], r[1]]);
+        let t1 = run_until_done(&mut net, f1);
+        assert!((t1.as_secs_f64() - 10.0).abs() < 1e-2, "t1={t1}");
+    }
+
+    #[test]
+    fn zero_byte_flow_completes_immediately() {
+        let (mut net, r) = net_with(&[10.0]);
+        let f = net.add_flow(Bytes(0), vec![r[0]]);
+        let t = net.next_completion().unwrap();
+        net.advance_to(t);
+        assert!(net.take_completed().contains(&f));
+        assert_eq!(t, SimTime::ZERO);
+    }
+
+    #[test]
+    fn resourceless_flow_completes_immediately() {
+        let (mut net, _r) = net_with(&[10.0]);
+        let f = net.add_flow(Bytes(1_000_000), vec![]);
+        let t = net.next_completion().unwrap();
+        net.advance_to(t);
+        assert!(net.take_completed().contains(&f));
+    }
+
+    #[test]
+    fn cancel_removes_flow() {
+        let (mut net, r) = net_with(&[100.0]);
+        let a = net.add_flow(Bytes(1000), vec![r[0]]);
+        let b = net.add_flow(Bytes(1000), vec![r[0]]);
+        assert!(net.cancel(a));
+        assert!(!net.cancel(a));
+        let t = run_until_done(&mut net, b);
+        // b alone at full rate.
+        assert!((t.as_secs_f64() - 10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn bytes_through_accounts_traffic() {
+        let (mut net, r) = net_with(&[100.0]);
+        let f = net.add_flow(Bytes(1000), vec![r[0]]);
+        run_until_done(&mut net, f);
+        assert!((net.bytes_through[r[0].0] - 1000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn capacity_change_takes_effect() {
+        let (mut net, r) = net_with(&[100.0]);
+        let f = net.add_flow(Bytes(1000), vec![r[0]]);
+        // Halve capacity right away.
+        net.set_capacity(r[0], Bandwidth(50.0));
+        let t = run_until_done(&mut net, f);
+        assert!((t.as_secs_f64() - 20.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn many_flows_conserve_capacity() {
+        let (mut net, r) = net_with(&[100.0]);
+        for _ in 0..10 {
+            net.add_flow(Bytes(100), vec![r[0]]);
+        }
+        net.recompute();
+        let total_rate: f64 = net.flows.iter().map(|f| f.rate).sum();
+        assert!((total_rate - 100.0).abs() < 1e-9);
+        // All equal → all complete at t=10.
+        let t = net.next_completion().unwrap();
+        net.advance_to(t);
+        assert_eq!(net.take_completed().len(), 10);
+        assert!((t.as_secs_f64() - 10.0).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,194 @@
+//! PJRT runtime: load the AOT-compiled cost model and serve the DPS on
+//! the scheduling hot path.
+//!
+//! The artifact (`artifacts/cost_model.hlo.txt`) is HLO text produced by
+//! `python/compile/aot.py` from the Layer-2 JAX graph wrapping the
+//! Layer-1 Pallas kernel. It is compiled **once** per process via the
+//! PJRT CPU client (`xla` crate) and then executed per scheduling
+//! iteration; Python never runs at simulation time.
+//!
+//! The compiled entry point has the fixed tile shape
+//! `(T, F, N) = (32, 256, 16)`. [`XlaCostModel::missing_local`] zero-pads
+//! arbitrary query shapes into tiles, loops task tiles, and accumulates
+//! partial sums across file tiles (exact: padded files have size zero,
+//! padded tasks request nothing).
+//!
+//! Build with `--no-default-features` to drop the XLA dependency
+//! entirely; the DPS then uses [`crate::dps::cost::NativeCost`], which is
+//! equivalence-tested against this backend in
+//! `rust/tests/runtime_xla.rs`.
+
+use std::path::{Path, PathBuf};
+
+/// Default artifact location relative to the repo root.
+pub const DEFAULT_ARTIFACT: &str = "artifacts/cost_model.hlo.txt";
+
+/// Locate the artifact: `$WOW_ARTIFACTS/cost_model.hlo.txt`, or
+/// `artifacts/` under the current directory / crate root.
+pub fn find_artifact() -> Option<PathBuf> {
+    if let Ok(dir) = std::env::var("WOW_ARTIFACTS") {
+        let p = Path::new(&dir).join("cost_model.hlo.txt");
+        if p.exists() {
+            return Some(p);
+        }
+    }
+    for base in [".", env!("CARGO_MANIFEST_DIR")] {
+        let p = Path::new(base).join(DEFAULT_ARTIFACT);
+        if p.exists() {
+            return Some(p);
+        }
+    }
+    None
+}
+
+#[cfg(feature = "xla-runtime")]
+pub use enabled::XlaCostModel;
+
+#[cfg(feature = "xla-runtime")]
+mod enabled {
+    use super::*;
+    use crate::dps::cost::{pad_tile, CostEval, TILE_F, TILE_N, TILE_T};
+    use anyhow::{Context, Result};
+
+    /// The XLA-backed cost evaluator.
+    pub struct XlaCostModel {
+        exe: xla::PjRtLoadedExecutable,
+        /// Executions performed (for benchmarking / reporting).
+        pub calls: u64,
+    }
+
+    impl std::fmt::Debug for XlaCostModel {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(f, "XlaCostModel {{ calls: {} }}", self.calls)
+        }
+    }
+
+    impl XlaCostModel {
+        /// Load and compile the artifact (once; reuse the instance).
+        pub fn load(path: &Path) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not UTF-8")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).context("PJRT compile")?;
+            Ok(XlaCostModel { exe, calls: 0 })
+        }
+
+        /// Load from the default artifact location.
+        pub fn load_default() -> Result<Self> {
+            let path = find_artifact()
+                .context("cost_model.hlo.txt not found (run `make artifacts`)")?;
+            Self::load(&path)
+        }
+
+        /// Is an artifact available without loading it?
+        pub fn available() -> bool {
+            find_artifact().is_some()
+        }
+
+        /// Execute one fixed-shape tile. Returns (missing, local), each
+        /// TILE_T × TILE_N row-major.
+        fn run_tile(
+            &mut self,
+            req: &[f32],
+            present: &[f32],
+            sizes: &[f32],
+        ) -> Result<(Vec<f32>, Vec<f32>)> {
+            debug_assert_eq!(req.len(), TILE_T * TILE_F);
+            debug_assert_eq!(present.len(), TILE_F * TILE_N);
+            debug_assert_eq!(sizes.len(), TILE_F);
+            let req_l =
+                xla::Literal::vec1(req).reshape(&[TILE_T as i64, TILE_F as i64])?;
+            let present_l =
+                xla::Literal::vec1(present).reshape(&[TILE_F as i64, TILE_N as i64])?;
+            let sizes_l = xla::Literal::vec1(sizes);
+            let result = self.exe.execute::<xla::Literal>(&[req_l, present_l, sizes_l])?
+                [0][0]
+                .to_literal_sync()?;
+            self.calls += 1;
+            // Outputs: (missing, local, prepared, best_node); rust
+            // consumes the first two (prepared/best_node are derived
+            // views exposed for L2 completeness).
+            let parts = result.to_tuple()?;
+            anyhow::ensure!(parts.len() == 4, "expected 4 outputs, got {}", parts.len());
+            let mut it = parts.into_iter();
+            let missing = it.next().unwrap().to_vec::<f32>()?;
+            let local = it.next().unwrap().to_vec::<f32>()?;
+            Ok((missing, local))
+        }
+    }
+
+    impl CostEval for XlaCostModel {
+        fn missing_local(
+            &mut self,
+            req: &[f32],
+            present: &[f32],
+            sizes: &[f32],
+            t: usize,
+            f: usize,
+            n: usize,
+        ) -> (Vec<f32>, Vec<f32>) {
+            assert!(
+                n <= TILE_N,
+                "cluster larger than the compiled tile ({n} > {TILE_N} nodes)"
+            );
+            let mut missing = vec![0f32; t * n];
+            let mut local = vec![0f32; t * n];
+            let t_tiles = t.div_ceil(TILE_T);
+            let f_tiles = f.div_ceil(TILE_F);
+            for ti in 0..t_tiles {
+                let t0 = ti * TILE_T;
+                let t_rows = (t - t0).min(TILE_T);
+                for fi in 0..f_tiles {
+                    let f0 = fi * TILE_F;
+                    let f_cols = (f - f0).min(TILE_F);
+                    // Slice tasks [t0..t0+rows) × files [f0..f0+cols) and
+                    // zero-pad to the tile shape.
+                    let mut req_tile: Vec<f32> = Vec::with_capacity(t_rows * f_cols);
+                    for r in 0..t_rows {
+                        let row = &req[(t0 + r) * f + f0..(t0 + r) * f + f0 + f_cols];
+                        req_tile.extend_from_slice(row);
+                    }
+                    let req_p = pad_tile(&req_tile, t_rows, f_cols, TILE_T, TILE_F);
+                    let mut pres_tile: Vec<f32> = Vec::with_capacity(f_cols * n);
+                    for r in 0..f_cols {
+                        pres_tile
+                            .extend_from_slice(&present[(f0 + r) * n..(f0 + r) * n + n]);
+                    }
+                    let pres_p = pad_tile(&pres_tile, f_cols, n, TILE_F, TILE_N);
+                    let mut sizes_p = vec![0f32; TILE_F];
+                    sizes_p[..f_cols].copy_from_slice(&sizes[f0..f0 + f_cols]);
+
+                    let (m, l) = self
+                        .run_tile(&req_p, &pres_p, &sizes_p)
+                        .expect("XLA cost-model execution failed");
+                    // Accumulate the partial contraction over this file
+                    // tile.
+                    for r in 0..t_rows {
+                        for c in 0..n {
+                            missing[(t0 + r) * n + c] += m[r * TILE_N + c];
+                            local[(t0 + r) * n + c] += l[r * TILE_N + c];
+                        }
+                    }
+                }
+            }
+            (missing, local)
+        }
+
+        fn backend_name(&self) -> &'static str {
+            "xla"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_discovery_does_not_panic() {
+        let _ = find_artifact();
+    }
+}

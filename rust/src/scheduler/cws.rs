@@ -1,0 +1,139 @@
+//! The CWS baseline (§V-C): the Common Workflow Scheduler prioritizes
+//! tasks by rank (longest path to sink in the abstract DAG) and input
+//! size, but its placement is still oblivious to data locations — tasks
+//! read and write through the DFS exactly like the Orig baseline.
+
+use super::{Action, SchedView, Scheduler};
+use crate::dps::Dps;
+
+/// Rank + input-size prioritized, data-location-oblivious scheduler.
+#[derive(Debug, Default)]
+pub struct CwsScheduler;
+
+impl CwsScheduler {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl Scheduler for CwsScheduler {
+    fn name(&self) -> &'static str {
+        "cws"
+    }
+
+    fn iterate(&mut self, view: &SchedView<'_>, _dps: &mut Dps) -> Vec<Action> {
+        let mut actions = Vec::new();
+        // Priority: rank first, input size second (descending), FIFO as
+        // the final deterministic tie-break.
+        let mut queue: Vec<&super::ReadyTask> = view.ready.iter().collect();
+        queue.sort_by(|a, b| {
+            b.rank
+                .cmp(&a.rank)
+                .then(b.input_bytes.cmp(&a.input_bytes))
+                .then(a.submitted_seq.cmp(&b.submitted_seq))
+        });
+
+        let workers: Vec<_> = view.cluster.workers().collect();
+        let mut free: Vec<(u32, crate::util::units::Bytes)> = workers
+            .iter()
+            .map(|&n| {
+                let node = view.cluster.node(n);
+                (node.free_cores, node.free_mem)
+            })
+            .collect();
+
+        for t in queue {
+            // Spread placement: node with the most free cores (ties →
+            // most free memory → lowest id), kube-scheduler's
+            // least-allocated strategy.
+            let best = (0..workers.len())
+                .filter(|&i| free[i].0 >= t.cores && free[i].1 >= t.mem)
+                .max_by(|&a, &b| {
+                    free[a]
+                        .0
+                        .cmp(&free[b].0)
+                        .then(free[a].1.cmp(&free[b].1))
+                        .then(workers[b].0.cmp(&workers[a].0))
+                });
+            if let Some(i) = best {
+                free[i].0 -= t.cores;
+                free[i].1 = free[i].1.saturating_sub(t.mem);
+                actions.push(Action::Start { task: t.id, node: workers[i] });
+            }
+        }
+        actions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, NodeSpec};
+    use crate::net::FlowNet;
+    use crate::scheduler::ReadyTask;
+    use crate::util::units::{Bytes, SimTime};
+    use crate::workflow::task::TaskId;
+
+    fn fixture(n: usize) -> (FlowNet, Cluster) {
+        let mut net = FlowNet::new();
+        let c = Cluster::build(&mut net, n, NodeSpec::paper_worker(1.0), None);
+        (net, c)
+    }
+
+    fn rt(seq: u64, rank: u32, gb: f64) -> ReadyTask {
+        ReadyTask {
+            id: TaskId(seq),
+            cores: 8,
+            mem: Bytes::from_gb(1.0),
+            rank,
+            input_bytes: Bytes::from_gb(gb),
+            intermediate_inputs: vec![],
+            submitted_seq: seq,
+        }
+    }
+
+    #[test]
+    fn higher_rank_scheduled_first_when_capacity_tight() {
+        let (_n, c) = fixture(1); // 16 cores, each task takes 8 → 2 fit
+        let ready = vec![rt(0, 0, 0.0), rt(1, 3, 0.0), rt(2, 1, 0.0)];
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let actions = CwsScheduler::new().iterate(&view, &mut Dps::new(0));
+        let ids: Vec<u64> = actions
+            .iter()
+            .map(|a| match a {
+                Action::Start { task, .. } => task.0,
+                _ => panic!(),
+            })
+            .collect();
+        assert_eq!(ids, vec![1, 2], "rank 3 then rank 1; rank 0 left out");
+    }
+
+    #[test]
+    fn input_size_breaks_rank_ties() {
+        let (_n, c) = fixture(1);
+        let ready = vec![rt(0, 1, 0.5), rt(1, 1, 50.0), rt(2, 1, 5.0)];
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let actions = CwsScheduler::new().iterate(&view, &mut Dps::new(0));
+        let first = match actions[0] {
+            Action::Start { task, .. } => task.0,
+            _ => panic!(),
+        };
+        assert_eq!(first, 1, "largest input first within equal rank");
+    }
+
+    #[test]
+    fn spreads_across_nodes() {
+        let (_n, c) = fixture(2);
+        let ready = vec![rt(0, 0, 0.0), rt(1, 0, 0.0)];
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let actions = CwsScheduler::new().iterate(&view, &mut Dps::new(0));
+        let nodes: Vec<usize> = actions
+            .iter()
+            .map(|a| match a {
+                Action::Start { node, .. } => node.0,
+                _ => panic!(),
+            })
+            .collect();
+        assert_ne!(nodes[0], nodes[1], "least-allocated spread");
+    }
+}

@@ -1,0 +1,155 @@
+//! Scheduling strategies: the paper's WOW approach and the two
+//! baselines it is compared against (§V-C).
+//!
+//! - [`orig`]: Nextflow's original behaviour — FIFO task priority,
+//!   round-robin node assignment, all data through the DFS.
+//! - [`cws`]: the Common Workflow Scheduler — rank + input-size
+//!   prioritization, placement still data-oblivious, data through the
+//!   DFS.
+//! - [`wow`]: the paper's contribution — three-step scheduling
+//!   intertwined with the DPS, intermediate data kept node-local.
+
+pub mod cws;
+pub mod orig;
+pub mod wow;
+
+use crate::cluster::{Cluster, NodeId};
+use crate::dps::Dps;
+use crate::util::units::{Bytes, SimTime};
+use crate::workflow::task::{FileId, TaskId};
+
+/// A ready task as the scheduler sees it (inputs exist; sizes known —
+/// §III-B: "these sizes are known" once a task is ready).
+#[derive(Debug, Clone)]
+pub struct ReadyTask {
+    pub id: TaskId,
+    pub cores: u32,
+    pub mem: Bytes,
+    /// Rank in the abstract DAG (longest path to sink).
+    pub rank: u32,
+    /// Total input volume.
+    pub input_bytes: Bytes,
+    /// The DPS-managed (intermediate) inputs; workflow inputs are read
+    /// from the DFS and do not constrain placement.
+    pub intermediate_inputs: Vec<FileId>,
+    /// Submission order (FIFO key for the Orig baseline).
+    pub submitted_seq: u64,
+}
+
+impl ReadyTask {
+    /// The paper's priority: rank first, input size second. Encoded as a
+    /// single float: rank dominates, the size term breaks ties within a
+    /// rank (normalized into (0,1)).
+    pub fn priority(&self) -> f64 {
+        let size_tiebreak = {
+            let gb = self.input_bytes.as_gb();
+            gb / (gb + 1.0) // monotone, bounded below 1
+        };
+        self.rank as f64 + size_tiebreak
+    }
+}
+
+/// What the scheduler can decide in one iteration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Action {
+    /// Start `task` on `node` immediately (the RM reserves resources).
+    Start { task: TaskId, node: NodeId },
+    /// Create a COP preparing `task` on `dst` (WOW only). The DPS plans
+    /// the sources.
+    StartCop { task: TaskId, dst: NodeId },
+}
+
+/// Read-only cluster/queue view passed to schedulers each iteration.
+pub struct SchedView<'a> {
+    pub now: SimTime,
+    pub cluster: &'a Cluster,
+    pub ready: &'a [ReadyTask],
+}
+
+/// A scheduling strategy.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+
+    /// Whether tasks exchange intermediate data via node-local storage
+    /// (WOW) instead of the DFS (baselines). Controls the task lifecycle
+    /// in the executor.
+    fn uses_local_data(&self) -> bool {
+        false
+    }
+
+    /// One scheduling iteration (§III-B: runs whenever a task finishes,
+    /// a COP finishes, or a new task is submitted).
+    fn iterate(&mut self, view: &SchedView<'_>, dps: &mut Dps) -> Vec<Action>;
+}
+
+/// Which strategy to instantiate (CLI/experiments).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    Orig,
+    Cws,
+    Wow,
+}
+
+impl Strategy {
+    pub fn label(self) -> &'static str {
+        match self {
+            Strategy::Orig => "Orig",
+            Strategy::Cws => "CWS",
+            Strategy::Wow => "WOW",
+        }
+    }
+
+    pub fn build(self, params: wow::WowParams) -> Box<dyn Scheduler> {
+        match self {
+            Strategy::Orig => Box::new(orig::OrigScheduler::new()),
+            Strategy::Cws => Box::new(cws::CwsScheduler::new()),
+            Strategy::Wow => Box::new(wow::WowScheduler::new(params)),
+        }
+    }
+}
+
+impl std::str::FromStr for Strategy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "orig" | "original" | "nextflow" => Ok(Strategy::Orig),
+            "cws" => Ok(Strategy::Cws),
+            "wow" => Ok(Strategy::Wow),
+            other => anyhow::bail!("unknown strategy '{other}' (expected orig|cws|wow)"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt(rank: u32, gb: f64, seq: u64) -> ReadyTask {
+        ReadyTask {
+            id: TaskId(seq),
+            cores: 1,
+            mem: Bytes::ZERO,
+            rank,
+            input_bytes: Bytes::from_gb(gb),
+            intermediate_inputs: vec![],
+            submitted_seq: seq,
+        }
+    }
+
+    #[test]
+    fn rank_dominates_priority() {
+        assert!(rt(2, 0.0, 0).priority() > rt(1, 1000.0, 1).priority());
+    }
+
+    #[test]
+    fn size_breaks_ties_within_rank() {
+        assert!(rt(1, 10.0, 0).priority() > rt(1, 1.0, 1).priority());
+    }
+
+    #[test]
+    fn strategy_parses() {
+        assert_eq!("wow".parse::<Strategy>().unwrap(), Strategy::Wow);
+        assert_eq!("Orig".parse::<Strategy>().unwrap(), Strategy::Orig);
+        assert!("heft".parse::<Strategy>().is_err());
+    }
+}

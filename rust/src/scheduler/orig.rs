@@ -1,0 +1,154 @@
+//! The "Orig" baseline: Nextflow's stock behaviour on Kubernetes
+//! (§V-C): tasks are prioritized first-in-first-out and assigned to
+//! nodes in a round-robin fashion, entirely ignoring data locations.
+//! All data exchange goes through the DFS.
+
+use super::{Action, SchedView, Scheduler};
+use crate::dps::Dps;
+
+/// FIFO + round-robin scheduler.
+#[derive(Debug, Default)]
+pub struct OrigScheduler {
+    /// Round-robin cursor, persisted across iterations.
+    rr_cursor: usize,
+}
+
+impl OrigScheduler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Scheduler for OrigScheduler {
+    fn name(&self) -> &'static str {
+        "orig"
+    }
+
+    fn iterate(&mut self, view: &SchedView<'_>, _dps: &mut Dps) -> Vec<Action> {
+        let mut actions = Vec::new();
+        // FIFO order = submission order.
+        let mut queue: Vec<&super::ReadyTask> = view.ready.iter().collect();
+        queue.sort_by_key(|t| t.submitted_seq);
+
+        let workers: Vec<_> = view.cluster.workers().collect();
+        if workers.is_empty() {
+            return actions;
+        }
+        // Track capacity we hand out within this iteration.
+        let mut free: Vec<(u32, crate::util::units::Bytes)> = workers
+            .iter()
+            .map(|&n| {
+                let node = view.cluster.node(n);
+                (node.free_cores, node.free_mem)
+            })
+            .collect();
+
+        for t in queue {
+            // Round-robin: start probing at the cursor; take the first
+            // node that fits (like kube-scheduler's default spreading,
+            // which the paper describes as RoundRobin).
+            let mut placed = false;
+            for probe in 0..workers.len() {
+                let i = (self.rr_cursor + probe) % workers.len();
+                if free[i].0 >= t.cores && free[i].1 >= t.mem {
+                    free[i].0 -= t.cores;
+                    free[i].1 = free[i].1.saturating_sub(t.mem);
+                    actions.push(Action::Start { task: t.id, node: workers[i] });
+                    self.rr_cursor = (i + 1) % workers.len();
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                // Unschedulable right now; later tasks may still fit
+                // (smaller requests), so keep scanning.
+                continue;
+            }
+        }
+        actions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, NodeId, NodeSpec};
+    use crate::net::FlowNet;
+    use crate::scheduler::ReadyTask;
+    use crate::util::units::{Bytes, SimTime};
+    use crate::workflow::task::TaskId;
+
+    fn view_fixture(n_nodes: usize) -> (FlowNet, Cluster) {
+        let mut net = FlowNet::new();
+        let c = Cluster::build(&mut net, n_nodes, NodeSpec::paper_worker(1.0), None);
+        (net, c)
+    }
+
+    fn rt(seq: u64, cores: u32) -> ReadyTask {
+        ReadyTask {
+            id: TaskId(seq),
+            cores,
+            mem: Bytes::from_gb(1.0),
+            rank: 0,
+            input_bytes: Bytes::ZERO,
+            intermediate_inputs: vec![],
+            submitted_seq: seq,
+        }
+    }
+
+    #[test]
+    fn round_robin_rotates_nodes() {
+        let (_n, c) = view_fixture(3);
+        let ready = vec![rt(0, 1), rt(1, 1), rt(2, 1), rt(3, 1)];
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let mut s = OrigScheduler::new();
+        let actions = s.iterate(&view, &mut Dps::new(0));
+        let nodes: Vec<NodeId> = actions
+            .iter()
+            .map(|a| match a {
+                Action::Start { node, .. } => *node,
+                _ => panic!(),
+            })
+            .collect();
+        assert_eq!(nodes, vec![NodeId(0), NodeId(1), NodeId(2), NodeId(0)]);
+    }
+
+    #[test]
+    fn fifo_order_respected() {
+        let (_n, c) = view_fixture(1);
+        // Submitted out of order in the vec; FIFO must sort by seq.
+        let ready = vec![rt(5, 1), rt(1, 1), rt(3, 1)];
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let mut s = OrigScheduler::new();
+        let actions = s.iterate(&view, &mut Dps::new(0));
+        let ids: Vec<u64> = actions
+            .iter()
+            .map(|a| match a {
+                Action::Start { task, .. } => task.0,
+                _ => panic!(),
+            })
+            .collect();
+        assert_eq!(ids, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn capacity_respected_within_iteration() {
+        let (_n, c) = view_fixture(1); // 16 cores
+        let ready: Vec<ReadyTask> = (0..20).map(|i| rt(i, 2)).collect();
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let mut s = OrigScheduler::new();
+        let actions = s.iterate(&view, &mut Dps::new(0));
+        assert_eq!(actions.len(), 8, "16 cores / 2 per task");
+    }
+
+    #[test]
+    fn big_task_skipped_small_task_fits() {
+        let (_n, c) = view_fixture(1);
+        let ready = vec![rt(0, 32), rt(1, 4)]; // first can never fit
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let mut s = OrigScheduler::new();
+        let actions = s.iterate(&view, &mut Dps::new(0));
+        assert_eq!(actions.len(), 1);
+        assert!(matches!(actions[0], Action::Start { task: TaskId(1), .. }));
+    }
+}

@@ -1,0 +1,437 @@
+//! The WOW scheduler — the paper's contribution (§III).
+//!
+//! Each iteration runs three steps:
+//!
+//! 1. **Start ready tasks on prepared nodes** — a linear integer program
+//!    over tasks prepared on at least one node with free capacity,
+//!    maximizing the summed priorities ([`ilp`]).
+//! 2. **Prepare ready tasks to fill available compute resources** —
+//!    unassigned ready tasks, sorted by |N_prep| ascending (ties by
+//!    running COP count), get COPs to nodes with remaining compute
+//!    capacity; the DPS approximates the start delay by bytes to copy.
+//! 3. **Prepare high-priority tasks to use network capacity** — tasks
+//!    that are prepared *nowhere* (they cannot start without data
+//!    movement) and below the `c_task` COP limit get speculative COPs to
+//!    the lowest-price node, even if that node is currently
+//!    compute-saturated. Tasks already prepared on some (busy) node are
+//!    left alone — their data already sits where resources will free;
+//!    this is what keeps the paper's "none" column at 61–100 % and COP
+//!    usefulness high (Table II).
+//!
+//! COP throttles (§III-B): at most `c_node` parallel COPs targeting a
+//! node, at most `c_task` parallel COPs per task (paper defaults: 1, 2).
+//! The batched missing/local-bytes matrix behind preparedness and
+//! transfer estimates is the Layer-1/2 cost kernel, invoked through a
+//! pluggable [`CostEval`] backend (XLA artifact or native rust).
+
+pub mod ilp;
+
+use super::{Action, SchedView, Scheduler};
+use crate::cluster::NodeId;
+use crate::dps::cost::{CostEval, NativeCost};
+use crate::dps::Dps;
+use crate::util::units::Bytes;
+
+/// Tunable WOW parameters.
+#[derive(Debug)]
+pub struct WowParams {
+    /// Max parallel COPs targeting one node (paper: 1).
+    pub c_node: u32,
+    /// Max parallel COPs preparing one task (paper: 2).
+    pub c_task: u32,
+    /// Cost-matrix backend (native rust or the AOT XLA artifact).
+    pub backend: Box<dyn CostEval>,
+}
+
+impl Default for WowParams {
+    fn default() -> Self {
+        WowParams { c_node: 1, c_task: 2, backend: Box::new(NativeCost) }
+    }
+}
+
+impl WowParams {
+    pub fn with_limits(c_node: u32, c_task: u32) -> Self {
+        WowParams { c_node, c_task, ..Default::default() }
+    }
+}
+
+/// The three-step WOW scheduler.
+#[derive(Debug)]
+pub struct WowScheduler {
+    params: WowParams,
+}
+
+impl WowScheduler {
+    pub fn new(params: WowParams) -> Self {
+        WowScheduler { params }
+    }
+}
+
+impl Scheduler for WowScheduler {
+    fn name(&self) -> &'static str {
+        "wow"
+    }
+
+    fn uses_local_data(&self) -> bool {
+        true
+    }
+
+    fn iterate(&mut self, view: &SchedView<'_>, dps: &mut Dps) -> Vec<Action> {
+        let mut actions = Vec::new();
+        let workers: Vec<NodeId> = view.cluster.workers().collect();
+        if workers.is_empty() || view.ready.is_empty() {
+            return actions;
+        }
+
+        // Batched cost matrix (tasks × nodes) — the XLA/Pallas hot path.
+        let inputs_of: Vec<&[crate::workflow::task::FileId]> =
+            view.ready.iter().map(|t| t.intermediate_inputs.as_slice()).collect();
+        let costs = dps.cost_matrix(&inputs_of, &workers, self.params.backend.as_mut());
+
+        // Free capacity ledger for this iteration (step 1 reservations
+        // and step 2 notional reservations both come out of it).
+        let mut free: Vec<(u32, Bytes)> = workers
+            .iter()
+            .map(|&n| {
+                let node = view.cluster.node(n);
+                (node.free_cores, node.free_mem)
+            })
+            .collect();
+
+        // ---- Step 1: start ready tasks on prepared nodes (ILP). ----
+        let mut started = vec![false; view.ready.len()];
+        let ilp_tasks: Vec<ilp::IlpTask> = view
+            .ready
+            .iter()
+            .enumerate()
+            .map(|(ti, t)| ilp::IlpTask {
+                priority: t.priority(),
+                cores: t.cores,
+                mem: t.mem,
+                candidate_nodes: (0..workers.len())
+                    .filter(|&ni| {
+                        costs.is_prepared(ti, ni)
+                            && free[ni].0 >= t.cores
+                            && free[ni].1 >= t.mem
+                    })
+                    .collect(),
+            })
+            .collect();
+        let ilp_nodes: Vec<ilp::IlpNode> =
+            free.iter().map(|&(c, m)| ilp::IlpNode { cores: c, mem: m }).collect();
+        let sol = ilp::solve(&ilp_tasks, &ilp_nodes);
+        for (ti, a) in sol.assignment.iter().enumerate() {
+            if let Some(ni) = *a {
+                started[ti] = true;
+                free[ni].0 -= view.ready[ti].cores;
+                free[ni].1 = free[ni].1.saturating_sub(view.ready[ti].mem);
+                actions.push(Action::Start { task: view.ready[ti].id, node: workers[ni] });
+            }
+        }
+
+        // COPs queued in *this* iteration (not yet in the DPS), counted
+        // against c_node / c_task by both step 2 and step 3.
+        let mut queued_node: crate::util::fxmap::FastMap<NodeId, u32> = Default::default();
+        let mut queued_task: crate::util::fxmap::FastMap<crate::workflow::task::TaskId, u32> =
+            Default::default();
+
+        // ---- Step 2: prepare unassigned ready tasks on nodes with free
+        // compute capacity. ----
+        let mut unassigned: Vec<usize> = (0..view.ready.len()).filter(|&i| !started[i]).collect();
+        // Sort by |N_prep| ascending, ties by running COP count.
+        // Precomputed once — evaluating it inside the comparator was an
+        // O(T·N·log T) hotspot.
+        let n_prep_of: Vec<usize> = (0..view.ready.len())
+            .map(|ti| (0..workers.len()).filter(|&ni| costs.is_prepared(ti, ni)).count())
+            .collect();
+        let n_prep = |ti: usize| -> usize { n_prep_of[ti] };
+        unassigned.sort_by(|&a, &b| {
+            n_prep(a)
+                .cmp(&n_prep(b))
+                .then(dps.task_cop_count(view.ready[a].id).cmp(&dps.task_cop_count(view.ready[b].id)))
+                .then(view.ready[a].submitted_seq.cmp(&view.ready[b].submitted_seq))
+        });
+        for &ti in &unassigned {
+            let t = &view.ready[ti];
+            if t.intermediate_inputs.is_empty() {
+                continue; // prepared everywhere; step 1 handles it
+            }
+            if dps.task_cop_count(t.id) + queued_task.get(&t.id).copied().unwrap_or(0)
+                >= self.params.c_task
+            {
+                continue;
+            }
+            // Candidate: node with free capacity, not already prepared,
+            // under the c_node limit, no COP for this task in flight
+            // there. Earliest start ≈ least missing bytes (§IV-C step 2).
+            let cand = (0..workers.len())
+                .filter(|&ni| {
+                    free[ni].0 >= t.cores
+                        && free[ni].1 >= t.mem
+                        && !costs.is_prepared(ti, ni)
+                        && dps.node_cop_count(workers[ni])
+                            + queued_node.get(&workers[ni]).copied().unwrap_or(0)
+                            < self.params.c_node
+                        && !dps.cop_in_flight(t.id, workers[ni])
+                })
+                .min_by(|&a, &b| {
+                    costs
+                        .missing(ti, a)
+                        .partial_cmp(&costs.missing(ti, b))
+                        .unwrap()
+                        .then(a.cmp(&b))
+                });
+            if let Some(ni) = cand {
+                if dps.plan(&t.intermediate_inputs, workers[ni]).is_some() {
+                    // Notionally reserve the capacity so step 2 spreads
+                    // preparations instead of stacking one node.
+                    free[ni].0 -= t.cores;
+                    free[ni].1 = free[ni].1.saturating_sub(t.mem);
+                    *queued_node.entry(workers[ni]).or_insert(0) += 1;
+                    *queued_task.entry(t.id).or_insert(0) += 1;
+                    actions.push(Action::StartCop { task: t.id, dst: workers[ni] });
+                }
+            }
+        }
+
+        // ---- Step 3: speculative preparation of high-priority tasks on
+        // compute-busy nodes using spare network capacity. ----
+        let mut spec: Vec<usize> = (0..view.ready.len())
+            .filter(|&ti| {
+                !started[ti]
+                    && !view.ready[ti].intermediate_inputs.is_empty()
+                    // Prepared nowhere: the task cannot start on any node
+                    // without a COP. Tasks prepared on a busy node are
+                    // not replicated speculatively (see module docs).
+                    && n_prep(ti) == 0
+                    && dps.task_cop_count(view.ready[ti].id)
+                        + queued_task.get(&view.ready[ti].id).copied().unwrap_or(0)
+                        < self.params.c_task
+            })
+            .collect();
+        spec.sort_by(|&a, &b| {
+            view.ready[b]
+                .priority()
+                .partial_cmp(&view.ready[a].priority())
+                .unwrap()
+                .then(view.ready[a].submitted_seq.cmp(&view.ready[b].submitted_seq))
+        });
+        for &ti in &spec {
+            let t = &view.ready[ti];
+            // Lowest-price node among those not prepared, under c_node,
+            // without an in-flight or just-queued COP for this task.
+            let mut best: Option<(f64, usize)> = None;
+            for ni in 0..workers.len() {
+                let node = workers[ni];
+                if costs.is_prepared(ti, ni)
+                    || dps.cop_in_flight(t.id, node)
+                    || dps.node_cop_count(node) + queued_node.get(&node).copied().unwrap_or(0)
+                        >= self.params.c_node
+                {
+                    continue;
+                }
+                if let Some(plan) = dps.plan(&t.intermediate_inputs, node) {
+                    let price = plan.price();
+                    if best.map_or(true, |(bp, _)| price < bp) {
+                        best = Some((price, ni));
+                    }
+                }
+            }
+            if let Some((_, ni)) = best {
+                let node = workers[ni];
+                *queued_node.entry(node).or_insert(0) += 1;
+                *queued_task.entry(t.id).or_insert(0) += 1;
+                actions.push(Action::StartCop { task: t.id, dst: node });
+            }
+        }
+
+        actions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, NodeSpec};
+    use crate::net::FlowNet;
+    use crate::scheduler::ReadyTask;
+    use crate::util::units::SimTime;
+    use crate::workflow::task::{FileId, TaskId};
+
+    fn fixture(n: usize) -> (FlowNet, Cluster) {
+        let mut net = FlowNet::new();
+        let c = Cluster::build(&mut net, n, NodeSpec::paper_worker(1.0), None);
+        (net, c)
+    }
+
+    fn rt(seq: u64, rank: u32, inputs: Vec<FileId>) -> ReadyTask {
+        ReadyTask {
+            id: TaskId(seq),
+            cores: 1,
+            mem: Bytes::from_gb(1.0),
+            rank,
+            input_bytes: Bytes::from_gb(1.0),
+            intermediate_inputs: inputs,
+            submitted_seq: seq,
+        }
+    }
+
+    fn starts(actions: &[Action]) -> Vec<(u64, usize)> {
+        actions
+            .iter()
+            .filter_map(|a| match a {
+                Action::Start { task, node } => Some((task.0, node.0)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    fn cops(actions: &[Action]) -> Vec<(u64, usize)> {
+        actions
+            .iter()
+            .filter_map(|a| match a {
+                Action::StartCop { task, dst } => Some((task.0, dst.0)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn step1_starts_task_on_prepared_node() {
+        let (_n, c) = fixture(2);
+        let mut dps = Dps::new(1);
+        dps.register_output(FileId(0), Bytes::from_gb(1.0), NodeId(1));
+        let ready = vec![rt(0, 1, vec![FileId(0)])];
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let mut s = WowScheduler::new(WowParams::default());
+        let actions = s.iterate(&view, &mut dps);
+        assert_eq!(starts(&actions), vec![(0, 1)], "must start on the data-holding node");
+    }
+
+    #[test]
+    fn source_tasks_prepared_everywhere() {
+        let (_n, c) = fixture(4);
+        let mut dps = Dps::new(1);
+        let ready: Vec<ReadyTask> = (0..8).map(|i| rt(i, 1, vec![])).collect();
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let mut s = WowScheduler::new(WowParams::default());
+        let actions = s.iterate(&view, &mut dps);
+        assert_eq!(starts(&actions).len(), 8, "all source tasks start somewhere");
+        assert!(cops(&actions).is_empty(), "no COPs for tasks without intermediate inputs");
+    }
+
+    #[test]
+    fn step2_creates_cop_toward_free_node() {
+        let (mut net, mut c) = fixture(2);
+        let _ = &mut net;
+        // Node 1 holds the data but is fully busy; node 0 is free.
+        c.reserve(NodeId(1), 16, Bytes::ZERO);
+        let mut dps = Dps::new(1);
+        dps.register_output(FileId(0), Bytes::from_gb(1.0), NodeId(1));
+        let ready = vec![rt(0, 1, vec![FileId(0)])];
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let mut s = WowScheduler::new(WowParams::default());
+        let actions = s.iterate(&view, &mut dps);
+        assert!(starts(&actions).is_empty(), "holder is full, cannot start");
+        assert_eq!(cops(&actions), vec![(0, 0)], "prepare the free node");
+    }
+
+    #[test]
+    fn c_node_limits_cops_per_target() {
+        let (_n, mut c) = fixture(2);
+        // Node 1 holds data for both tasks and is busy; node 0 free.
+        c.reserve(NodeId(1), 16, Bytes::ZERO);
+        let mut dps = Dps::new(1);
+        dps.register_output(FileId(0), Bytes::from_gb(1.0), NodeId(1));
+        dps.register_output(FileId(1), Bytes::from_gb(1.0), NodeId(1));
+        let ready = vec![rt(0, 1, vec![FileId(0)]), rt(1, 1, vec![FileId(1)])];
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let mut s = WowScheduler::new(WowParams::with_limits(1, 2));
+        let actions = s.iterate(&view, &mut dps);
+        // Only one COP may target node 0 (c_node = 1). Step 2 reserves
+        // capacity notionally but c_node is the binding limit here.
+        assert_eq!(cops(&actions).len(), 1, "{actions:?}");
+    }
+
+    #[test]
+    fn c_task_limits_parallel_preparations() {
+        let (_n, mut c) = fixture(4);
+        for n in 1..4 {
+            c.reserve(NodeId(n), 16, Bytes::ZERO);
+        }
+        c.reserve(NodeId(0), 16, Bytes::ZERO); // everything busy
+        let mut dps = Dps::new(1);
+        // Two inputs on different nodes: the task is prepared nowhere.
+        dps.register_output(FileId(0), Bytes::from_gb(1.0), NodeId(1));
+        dps.register_output(FileId(1), Bytes::from_gb(1.0), NodeId(2));
+        let ready = vec![rt(0, 5, vec![FileId(0), FileId(1)])];
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let mut s = WowScheduler::new(WowParams::with_limits(4, 2));
+        let actions = s.iterate(&view, &mut dps);
+        // Step 3 may speculatively prepare, but at most c_task = 2 COPs.
+        assert!(cops(&actions).len() <= 2, "{actions:?}");
+        assert!(!cops(&actions).is_empty(), "speculation should happen");
+    }
+
+    #[test]
+    fn step3_skips_tasks_prepared_on_a_busy_node() {
+        // A task whose data is complete on one (busy) node must not be
+        // replicated speculatively — it keeps the Chain pattern at 100%
+        // "no COP" (Table II).
+        let (_n, mut c) = fixture(2);
+        c.reserve(NodeId(0), 16, Bytes::ZERO);
+        c.reserve(NodeId(1), 16, Bytes::ZERO);
+        let mut dps = Dps::new(1);
+        dps.register_output(FileId(0), Bytes::from_gb(1.0), NodeId(1));
+        let ready = vec![rt(0, 3, vec![FileId(0)])];
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let mut s = WowScheduler::new(WowParams::default());
+        let actions = s.iterate(&view, &mut dps);
+        assert!(actions.is_empty(), "{actions:?}");
+    }
+
+    #[test]
+    fn step3_prefers_high_priority() {
+        let (_n, mut c) = fixture(2);
+        c.reserve(NodeId(0), 16, Bytes::ZERO);
+        c.reserve(NodeId(1), 16, Bytes::ZERO);
+        let mut dps = Dps::new(1);
+        // Each task needs two files living on different nodes → both are
+        // prepared nowhere, both eligible for speculation.
+        dps.register_output(FileId(0), Bytes::from_gb(1.0), NodeId(1));
+        dps.register_output(FileId(1), Bytes::from_gb(1.0), NodeId(0));
+        dps.register_output(FileId(2), Bytes::from_gb(1.0), NodeId(1));
+        dps.register_output(FileId(3), Bytes::from_gb(1.0), NodeId(0));
+        // Task 1 has the higher rank.
+        let ready = vec![
+            rt(0, 1, vec![FileId(0), FileId(1)]),
+            rt(1, 9, vec![FileId(2), FileId(3)]),
+        ];
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let mut s = WowScheduler::new(WowParams::with_limits(1, 1));
+        let actions = s.iterate(&view, &mut dps);
+        // c_node=1 allows one COP per target node; the high-rank task is
+        // served first and takes the cheaper destination.
+        let cs = cops(&actions);
+        assert!(cs.iter().any(|&(task, _)| task == 1), "high-priority first: {cs:?}");
+    }
+
+    #[test]
+    fn no_duplicate_cop_for_same_task_and_node() {
+        let (_n, mut c) = fixture(2);
+        c.reserve(NodeId(1), 16, Bytes::ZERO);
+        let mut dps = Dps::new(1);
+        dps.register_output(FileId(0), Bytes::from_gb(1.0), NodeId(1));
+        let ready = vec![rt(0, 1, vec![FileId(0)])];
+        // First iteration creates the COP...
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let mut s = WowScheduler::new(WowParams::default());
+        let a1 = s.iterate(&view, &mut dps);
+        assert_eq!(cops(&a1).len(), 1);
+        let plan = dps.plan(&[FileId(0)], NodeId(0)).unwrap();
+        let _ = dps.start_cop(TaskId(0), NodeId(0), plan);
+        // ...second iteration must not duplicate it.
+        let a2 = s.iterate(&view, &mut dps);
+        assert!(cops(&a2).is_empty(), "{a2:?}");
+    }
+}

@@ -1,0 +1,3 @@
+//! Discrete-event simulation primitives.
+
+pub mod event;

@@ -1,0 +1,68 @@
+//! A fast, deterministic hasher for the simulator's hot maps.
+//!
+//! `std`'s SipHash is DoS-resistant but slow for the tiny integer keys
+//! (FileId, TaskId, CopId, NodeId) dominating the DPS hot path; the
+//! random seed would also make map *iteration order* vary between runs.
+//! This Fx-style multiply hasher is deterministic and ~5× faster. Only
+//! order-insensitive lookups rely on these maps (asserted by the
+//! determinism tests).
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Multiply-rotate hasher (FxHash-style).
+#[derive(Default)]
+pub struct FxHasher {
+    state: u64,
+}
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+impl Hasher for FxHasher {
+    fn finish(&self) -> u64 {
+        self.state
+    }
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state = (self.state.rotate_left(5) ^ b as u64).wrapping_mul(SEED);
+        }
+    }
+    fn write_u64(&mut self, x: u64) {
+        self.state = (self.state.rotate_left(5) ^ x).wrapping_mul(SEED);
+    }
+    fn write_u32(&mut self, x: u32) {
+        self.write_u64(x as u64);
+    }
+    fn write_usize(&mut self, x: usize) {
+        self.write_u64(x as u64);
+    }
+}
+
+pub type FastMap<K, V> = HashMap<K, V, BuildHasherDefault<FxHasher>>;
+pub type FastSet<K> = HashSet<K, BuildHasherDefault<FxHasher>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = FastMap::default();
+        let mut b = FastMap::default();
+        for i in 0..100u64 {
+            a.insert(i, i * 2);
+            b.insert(i, i * 2);
+        }
+        let ka: Vec<_> = a.keys().copied().collect();
+        let kb: Vec<_> = b.keys().copied().collect();
+        assert_eq!(ka, kb, "iteration order must be reproducible");
+    }
+
+    #[test]
+    fn basic_map_ops() {
+        let mut m: FastMap<u64, &str> = FastMap::default();
+        m.insert(7, "x");
+        assert_eq!(m.get(&7), Some(&"x"));
+        assert_eq!(m.get(&8), None);
+    }
+}

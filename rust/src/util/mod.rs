@@ -1,0 +1,6 @@
+//! Shared utilities: deterministic PRNG, units, statistics.
+
+pub mod fxmap;
+pub mod rng;
+pub mod stats;
+pub mod units;

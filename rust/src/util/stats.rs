@@ -1,0 +1,127 @@
+//! Small statistics helpers used by the metrics and experiment layers:
+//! median / percentiles (the paper reports median-of-three makespans) and
+//! the Gini coefficient (the paper's load-balance measure, §VI-A).
+
+/// Median of a slice (average of the two middle elements for even n).
+/// Returns `f64::NAN` for an empty slice.
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Linear-interpolated percentile `p` in `[0, 100]`.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// Arithmetic mean; NAN for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Gini coefficient of a non-negative distribution, in `[0, 1)`.
+///
+/// 0 = perfectly equal (the paper's ideal load balance), values near 1 =
+/// everything concentrated on one node. Uses the standard sorted
+/// formulation: G = (2·Σ i·x_(i) / (n·Σ x)) − (n+1)/n.
+pub fn gini(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    debug_assert!(xs.iter().all(|&x| x >= 0.0), "gini needs non-negative values");
+    let total: f64 = xs.iter().sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len() as f64;
+    let weighted: f64 = v
+        .iter()
+        .enumerate()
+        .map(|(i, &x)| (i as f64 + 1.0) * x)
+        .sum();
+    (2.0 * weighted) / (n * total) - (n + 1.0) / n
+}
+
+/// Relative change `(new - old) / old` in percent, the form used all over
+/// Table II/III ("-18.3%" = new is 18.3% below old).
+pub fn rel_change_pct(old: f64, new: f64) -> f64 {
+    if old == 0.0 {
+        return 0.0;
+    }
+    (new - old) / old * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn median_single() {
+        assert_eq!(median(&[7.0]), 7.0);
+    }
+
+    #[test]
+    fn percentile_bounds() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 25.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gini_equal_is_zero() {
+        assert!(gini(&[5.0, 5.0, 5.0, 5.0]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gini_concentrated_is_high() {
+        let g = gini(&[0.0, 0.0, 0.0, 100.0]);
+        assert!((g - 0.75).abs() < 1e-12, "g={g}");
+    }
+
+    #[test]
+    fn gini_empty_and_zero() {
+        assert_eq!(gini(&[]), 0.0);
+        assert_eq!(gini(&[0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn gini_in_unit_interval() {
+        let g = gini(&[1.0, 2.0, 3.0, 10.0]);
+        assert!((0.0..1.0).contains(&g));
+    }
+
+    #[test]
+    fn rel_change() {
+        assert!((rel_change_pct(200.0, 100.0) + 50.0).abs() < 1e-12);
+        assert!((rel_change_pct(100.0, 153.2) - 53.2).abs() < 1e-9);
+    }
+}

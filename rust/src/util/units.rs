@@ -1,0 +1,211 @@
+//! Units used throughout the simulator: simulated time, byte counts and
+//! bandwidths. Keeping these as newtypes catches an entire class of
+//! unit-confusion bugs (seconds vs microseconds, bits vs bytes) at compile
+//! time.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// Simulated time in integer microseconds since run start.
+///
+/// Microsecond resolution keeps every event time exactly representable
+/// (no float drift in the event queue) while being far below the
+/// granularity of anything the paper measures (seconds to hours).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+    /// A practically-infinite time used as "no next event".
+    pub const FAR_FUTURE: SimTime = SimTime(u64::MAX);
+
+    pub fn from_micros(us: u64) -> Self {
+        SimTime(us)
+    }
+    pub fn from_secs_f64(s: f64) -> Self {
+        debug_assert!(s >= 0.0, "negative sim time: {s}");
+        SimTime((s * 1e6).round() as u64)
+    }
+    pub fn as_micros(self) -> u64 {
+        self.0
+    }
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+    pub fn as_minutes_f64(self) -> f64 {
+        self.as_secs_f64() / 60.0
+    }
+    pub fn saturating_sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl Add for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 + rhs.0)
+    }
+}
+impl AddAssign for SimTime {
+    fn add_assign(&mut self, rhs: SimTime) {
+        self.0 += rhs.0;
+    }
+}
+impl Sub for SimTime {
+    type Output = SimTime;
+    fn sub(self, rhs: SimTime) -> SimTime {
+        debug_assert!(self.0 >= rhs.0, "SimTime underflow");
+        SimTime(self.0 - rhs.0)
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = self.as_secs_f64();
+        if s < 120.0 {
+            write!(f, "{s:.2}s")
+        } else {
+            write!(f, "{:.1}min", s / 60.0)
+        }
+    }
+}
+
+/// Byte count. Stored as u64; file sizes in this domain are well below
+/// 2^64.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Bytes(pub u64);
+
+pub const KB: u64 = 1_000;
+pub const MB: u64 = 1_000_000;
+pub const GB: u64 = 1_000_000_000;
+
+impl Bytes {
+    pub const ZERO: Bytes = Bytes(0);
+
+    pub fn from_gb(gb: f64) -> Self {
+        Bytes((gb * GB as f64).round() as u64)
+    }
+    pub fn from_mb(mb: f64) -> Self {
+        Bytes((mb * MB as f64).round() as u64)
+    }
+    pub fn as_u64(self) -> u64 {
+        self.0
+    }
+    pub fn as_f64(self) -> f64 {
+        self.0 as f64
+    }
+    pub fn as_gb(self) -> f64 {
+        self.0 as f64 / GB as f64
+    }
+    pub fn as_mb(self) -> f64 {
+        self.0 as f64 / MB as f64
+    }
+    pub fn saturating_sub(self, rhs: Bytes) -> Bytes {
+        Bytes(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl Add for Bytes {
+    type Output = Bytes;
+    fn add(self, rhs: Bytes) -> Bytes {
+        Bytes(self.0 + rhs.0)
+    }
+}
+impl AddAssign for Bytes {
+    fn add_assign(&mut self, rhs: Bytes) {
+        self.0 += rhs.0;
+    }
+}
+impl std::iter::Sum for Bytes {
+    fn sum<I: Iterator<Item = Bytes>>(iter: I) -> Bytes {
+        Bytes(iter.map(|b| b.0).sum())
+    }
+}
+
+impl fmt::Display for Bytes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let b = self.0 as f64;
+        if b >= GB as f64 {
+            write!(f, "{:.2}GB", b / GB as f64)
+        } else if b >= MB as f64 {
+            write!(f, "{:.1}MB", b / MB as f64)
+        } else {
+            write!(f, "{}B", self.0)
+        }
+    }
+}
+
+/// Bandwidth in bytes per second (f64: rates are fair-share fractions).
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
+pub struct Bandwidth(pub f64);
+
+impl Bandwidth {
+    /// From a link speed quoted in Gbit/s (network convention: 1 Gbit/s =
+    /// 125 MB/s).
+    pub fn from_gbit(gbit: f64) -> Self {
+        Bandwidth(gbit * 1e9 / 8.0)
+    }
+    /// From MB/s (storage convention, 1 MB = 10^6 B — matches how vendors
+    /// quote the paper's SSDs: 537 MB/s read, 402 MB/s write).
+    pub fn from_mbps(mbps: f64) -> Self {
+        Bandwidth(mbps * 1e6)
+    }
+    pub fn bytes_per_sec(self) -> f64 {
+        self.0
+    }
+    /// Time to move `bytes` at this (constant) rate.
+    pub fn time_for(self, bytes: Bytes) -> SimTime {
+        SimTime::from_secs_f64(bytes.as_f64() / self.0.max(1.0))
+    }
+}
+
+impl fmt::Display for Bandwidth {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.1}MB/s", self.0 / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simtime_roundtrip() {
+        let t = SimTime::from_secs_f64(1.5);
+        assert_eq!(t.as_micros(), 1_500_000);
+        assert!((t.as_secs_f64() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn simtime_arithmetic() {
+        let a = SimTime(100) + SimTime(50);
+        assert_eq!(a, SimTime(150));
+        assert_eq!(a - SimTime(30), SimTime(120));
+    }
+
+    #[test]
+    fn bytes_from_gb() {
+        assert_eq!(Bytes::from_gb(1.0).as_u64(), 1_000_000_000);
+        assert!((Bytes::from_gb(0.9).as_gb() - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gbit_link_is_125_mbps() {
+        let bw = Bandwidth::from_gbit(1.0);
+        assert!((bw.bytes_per_sec() - 125e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn transfer_time() {
+        // 1 GB over 1 Gbit/s = 8 s.
+        let t = Bandwidth::from_gbit(1.0).time_for(Bytes::from_gb(1.0));
+        assert!((t.as_secs_f64() - 8.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(format!("{}", Bytes::from_gb(2.0)), "2.00GB");
+        assert_eq!(format!("{}", SimTime::from_secs_f64(30.0)), "30.00s");
+        assert_eq!(format!("{}", SimTime::from_secs_f64(600.0)), "10.0min");
+    }
+}

@@ -1,0 +1,167 @@
+//! The abstract workflow DAG: stages (abstract tasks) and their
+//! dependency edges.
+//!
+//! This is the structure the Common Workflow Scheduler interface passes
+//! from the workflow engine to the scheduler (§IV-A), enabling the
+//! rank-based prioritization of §III-B. The *physical* tasks are only
+//! materialized dynamically; the abstract DAG is known upfront.
+
+use super::task::StageId;
+
+/// Abstract DAG over stages.
+#[derive(Debug, Clone)]
+pub struct AbstractDag {
+    pub names: Vec<String>,
+    /// edges[s] = stages that consume output of stage s.
+    pub successors: Vec<Vec<StageId>>,
+    /// precomputed: longest path (in edges) from each stage to a sink.
+    ranks: Vec<u32>,
+}
+
+impl AbstractDag {
+    /// Build a DAG from stage names and dependency edges
+    /// `(producer, consumer)`. Panics on cycles (workflow DAGs are
+    /// acyclic by definition; Nextflow rejects iteration, §V-A).
+    pub fn new(names: Vec<String>, edges: &[(StageId, StageId)]) -> Self {
+        let n = names.len();
+        let mut successors = vec![Vec::new(); n];
+        for &(from, to) in edges {
+            assert!(from.0 < n && to.0 < n, "edge out of range");
+            successors[from.0].push(to);
+        }
+        let ranks = compute_ranks(&successors);
+        AbstractDag { names, successors, ranks }
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.names.len()
+    }
+
+    /// The paper's task rank: length of the longest path from the stage
+    /// to a sink in the abstract graph (§III-B "Task prioritization").
+    pub fn rank(&self, s: StageId) -> u32 {
+        self.ranks[s.0]
+    }
+
+    /// Stages with no predecessors (workflow entry points).
+    pub fn sources(&self) -> Vec<StageId> {
+        let n = self.names.len();
+        let mut has_pred = vec![false; n];
+        for succs in &self.successors {
+            for s in succs {
+                has_pred[s.0] = true;
+            }
+        }
+        (0..n).filter(|&i| !has_pred[i]).map(StageId).collect()
+    }
+
+    /// Direct predecessors of a stage.
+    pub fn predecessors(&self, s: StageId) -> Vec<StageId> {
+        (0..self.names.len())
+            .filter(|&i| self.successors[i].contains(&s))
+            .map(StageId)
+            .collect()
+    }
+}
+
+/// Longest path to sink via reverse topological order (memoized DFS).
+fn compute_ranks(successors: &[Vec<StageId>]) -> Vec<u32> {
+    let n = successors.len();
+    let mut ranks = vec![u32::MAX; n];
+    // 0 = unvisited marker via MAX; use explicit DFS with cycle check.
+    fn dfs(
+        v: usize,
+        successors: &[Vec<StageId>],
+        ranks: &mut [u32],
+        on_stack: &mut [bool],
+    ) -> u32 {
+        if ranks[v] != u32::MAX {
+            return ranks[v];
+        }
+        assert!(!on_stack[v], "cycle in abstract DAG at stage {v}");
+        on_stack[v] = true;
+        let r = successors[v]
+            .iter()
+            .map(|s| dfs(s.0, successors, ranks, on_stack) + 1)
+            .max()
+            .unwrap_or(0);
+        on_stack[v] = false;
+        ranks[v] = r;
+        r
+    }
+    let mut on_stack = vec![false; n];
+    for v in 0..n {
+        dfs(v, successors, &mut ranks, &mut on_stack);
+    }
+    ranks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sid(i: usize) -> StageId {
+        StageId(i)
+    }
+
+    #[test]
+    fn chain_ranks() {
+        // 0 -> 1 -> 2
+        let dag = AbstractDag::new(
+            vec!["a".into(), "b".into(), "c".into()],
+            &[(sid(0), sid(1)), (sid(1), sid(2))],
+        );
+        assert_eq!(dag.rank(sid(0)), 2);
+        assert_eq!(dag.rank(sid(1)), 1);
+        assert_eq!(dag.rank(sid(2)), 0);
+        assert_eq!(dag.sources(), vec![sid(0)]);
+    }
+
+    #[test]
+    fn diamond_ranks() {
+        // 0 -> {1,2} -> 3
+        let dag = AbstractDag::new(
+            vec!["s".into(), "l".into(), "r".into(), "t".into()],
+            &[(sid(0), sid(1)), (sid(0), sid(2)), (sid(1), sid(3)), (sid(2), sid(3))],
+        );
+        assert_eq!(dag.rank(sid(0)), 2);
+        assert_eq!(dag.rank(sid(1)), 1);
+        assert_eq!(dag.rank(sid(3)), 0);
+        assert_eq!(dag.predecessors(sid(3)), vec![sid(1), sid(2)]);
+    }
+
+    #[test]
+    fn longest_path_wins() {
+        // 0 -> 1 -> 2 -> 4 ; 0 -> 3 -> 4: rank(0) must follow the long arm.
+        let dag = AbstractDag::new(
+            (0..5).map(|i| format!("s{i}")).collect(),
+            &[
+                (sid(0), sid(1)),
+                (sid(1), sid(2)),
+                (sid(2), sid(4)),
+                (sid(0), sid(3)),
+                (sid(3), sid(4)),
+            ],
+        );
+        assert_eq!(dag.rank(sid(0)), 3);
+        assert_eq!(dag.rank(sid(3)), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "cycle")]
+    fn cycle_panics() {
+        let _ = AbstractDag::new(
+            vec!["a".into(), "b".into()],
+            &[(sid(0), sid(1)), (sid(1), sid(0))],
+        );
+    }
+
+    #[test]
+    fn multiple_sources() {
+        let dag = AbstractDag::new(
+            vec!["a".into(), "b".into(), "c".into()],
+            &[(sid(0), sid(2)), (sid(1), sid(2))],
+        );
+        assert_eq!(dag.sources(), vec![sid(0), sid(1)]);
+    }
+}

@@ -1,0 +1,632 @@
+//! The dynamic workflow engine.
+//!
+//! Physical tasks are **materialized only when their inputs exist**,
+//! mirroring Nextflow's data-dependent execution (§II-A): the engine
+//! interprets the spec iteratively, and schedulers never see a task
+//! before it is ready. The abstract DAG (stage graph) *is* available
+//! upfront — that is exactly the information split the Common Workflow
+//! Scheduler interface provides (§IV-A).
+
+use super::dag::AbstractDag;
+use super::spec::{Rule, WorkflowSpec};
+use super::task::{File, FileId, StageId, Task, TaskId};
+use crate::util::rng::Rng;
+use crate::util::units::{Bytes, SimTime};
+
+/// Dynamic state of one workflow execution.
+pub struct WorkflowEngine {
+    spec: WorkflowSpec,
+    dag: AbstractDag,
+    rng: Rng,
+    files: Vec<File>,
+    tasks: Vec<Task>,
+    /// Per stage: ids of materialized tasks, in creation order.
+    stage_tasks: Vec<Vec<TaskId>>,
+    /// Per stage: number of completed tasks.
+    stage_completed: Vec<usize>,
+    /// Per stage: whether all of its tasks have been materialized
+    /// ("closed" — no further instances can appear).
+    stage_closed: Vec<bool>,
+    /// Per stage: has the one-shot gather fired yet?
+    gather_fired: Vec<bool>,
+    /// GroupBy bookkeeping: per stage, per group index, fired flag.
+    group_fired: Vec<Vec<bool>>,
+    completed_tasks: usize,
+    task_done: Vec<bool>,
+    /// Workflow input files (subset of `files`).
+    input_files: Vec<FileId>,
+    /// Precomputed: per stage, the consumer stages referencing it
+    /// (immediate rules only — PerTask/PerFile/Fanout).
+    consumers: Vec<Vec<StageId>>,
+    /// Indices of GroupBy/GatherAll stages (deferred-fire scan set).
+    aggregate_stages: Vec<usize>,
+    /// Per stage: the stages consuming its outputs (any rule kind) —
+    /// used for file-liveness (replica GC, §III-A).
+    all_consumers: Vec<Vec<StageId>>,
+    /// Per file: consumers materialized so far / completed so far.
+    file_refs: Vec<(u32, u32)>,
+    /// Files whose replicas can be deleted (all consumer stages closed
+    /// and all materialized consumers completed), drained by the
+    /// executor after each completion.
+    dead_files: Vec<FileId>,
+}
+
+impl WorkflowEngine {
+    pub fn new(spec: WorkflowSpec, seed: u64) -> Self {
+        spec.validate().expect("invalid workflow spec");
+        let dag = spec.abstract_dag();
+        let n = spec.stages.len();
+        let mut consumers: Vec<Vec<StageId>> = vec![Vec::new(); n];
+        let mut all_consumers: Vec<Vec<StageId>> = vec![Vec::new(); n];
+        let mut aggregate_stages = Vec::new();
+        for (i, st) in spec.stages.iter().enumerate() {
+            match &st.rule {
+                Rule::PerTask { from } | Rule::PerFile { from } | Rule::Fanout { from, .. } => {
+                    consumers[from.0].push(StageId(i));
+                    all_consumers[from.0].push(StageId(i));
+                }
+                Rule::GroupBy { from, .. } => {
+                    all_consumers[from.0].push(StageId(i));
+                    aggregate_stages.push(i);
+                }
+                Rule::GatherAll { from } => {
+                    for f in from {
+                        all_consumers[f.0].push(StageId(i));
+                    }
+                    aggregate_stages.push(i);
+                }
+                Rule::Source { .. } => {}
+            }
+        }
+        let mut eng = WorkflowEngine {
+            dag,
+            rng: Rng::new(seed ^ 0xD1B5_4A32_D192_ED03),
+            files: Vec::new(),
+            tasks: Vec::new(),
+            stage_tasks: vec![Vec::new(); n],
+            stage_completed: vec![0; n],
+            stage_closed: vec![false; n],
+            gather_fired: vec![false; n],
+            group_fired: vec![Vec::new(); n],
+            completed_tasks: 0,
+            task_done: Vec::new(),
+            input_files: Vec::new(),
+            consumers,
+            aggregate_stages,
+            all_consumers,
+            file_refs: Vec::new(),
+            dead_files: Vec::new(),
+            spec,
+        };
+        // Workflow input data: lives in the DFS; created before the run.
+        let sizes: Vec<f64> = eng.spec.input_files_gb.clone();
+        for gb in sizes {
+            let id = FileId(eng.files.len() as u64);
+            eng.files.push(File { id, size: Bytes::from_gb(gb), producer: None });
+            eng.file_refs.push((0, 0));
+            eng.input_files.push(id);
+        }
+        eng
+    }
+
+    pub fn name(&self) -> &str {
+        &self.spec.name
+    }
+
+    pub fn dag(&self) -> &AbstractDag {
+        &self.dag
+    }
+
+    pub fn files(&self) -> &[File] {
+        &self.files
+    }
+
+    pub fn file(&self, id: FileId) -> &File {
+        &self.files[id.0 as usize]
+    }
+
+    pub fn task(&self, id: TaskId) -> &Task {
+        &self.tasks[id.0 as usize]
+    }
+
+    pub fn n_tasks_materialized(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn n_tasks_completed(&self) -> usize {
+        self.completed_tasks
+    }
+
+    pub fn input_files(&self) -> &[FileId] {
+        &self.input_files
+    }
+
+    /// The paper's rank prioritization input: rank of a physical task =
+    /// rank of its stage in the abstract DAG.
+    pub fn rank_of(&self, t: TaskId) -> u32 {
+        self.dag.rank(self.task(t).stage)
+    }
+
+    /// Materialize the initial (source-stage) tasks. Returns the ready
+    /// set. Input files are handed out in order from a cursor shared
+    /// across all source stages: a stage with `inputs_per_task = k`
+    /// consumes the next `count * k` files.
+    pub fn start(&mut self) -> Vec<TaskId> {
+        let mut ready = Vec::new();
+        let mut cursor = 0usize;
+        let all_inputs = self.input_files.clone();
+        for s in 0..self.spec.stages.len() {
+            if let Rule::Source { count, inputs_per_task } = self.spec.stages[s].rule {
+                for _ in 0..count {
+                    let end = (cursor + inputs_per_task).min(all_inputs.len());
+                    let ins: Vec<FileId> = all_inputs[cursor..end].to_vec();
+                    debug_assert_eq!(
+                        ins.len(),
+                        inputs_per_task,
+                        "workflow {} stage {}: not enough input files",
+                        self.spec.name,
+                        self.spec.stages[s].name
+                    );
+                    cursor = end;
+                    let id = self.materialize(StageId(s), ins);
+                    ready.push(id);
+                }
+                self.stage_closed[s] = true;
+            }
+        }
+        ready
+    }
+
+    /// Record task completion; returns newly-ready tasks materialized as
+    /// a consequence. This is the "new scheduling iteration" trigger of
+    /// §III-B.
+    pub fn complete_task(&mut self, t: TaskId) -> Vec<TaskId> {
+        assert!(!self.task_done[t.0 as usize], "task completed twice: {t:?}");
+        self.task_done[t.0 as usize] = true;
+        self.completed_tasks += 1;
+        let stage = self.task(t).stage;
+        self.stage_completed[stage.0] += 1;
+
+        let mut newly_ready = Vec::new();
+        // Walk only the stages that consume `stage` (precomputed index).
+        // GroupBy / GatherAll fire on *aggregate* conditions and are
+        // handled by the deferred scan below, after closure propagation —
+        // firing here would race with upstream stages whose closure is
+        // only established later in this very completion.
+        for ci in 0..self.consumers[stage.0].len() {
+            let s_idx = self.consumers[stage.0][ci].0;
+            match self.spec.stages[s_idx].rule {
+                Rule::PerTask { from } if from == stage => {
+                    let outs: Vec<FileId> =
+                        self.task(t).outputs.iter().map(|(f, _)| *f).collect();
+                    let id = self.materialize(StageId(s_idx), outs);
+                    newly_ready.push(id);
+                }
+                Rule::PerFile { from } if from == stage => {
+                    let outs: Vec<FileId> =
+                        self.task(t).outputs.iter().map(|(f, _)| *f).collect();
+                    for f in outs {
+                        let id = self.materialize(StageId(s_idx), vec![f]);
+                        newly_ready.push(id);
+                    }
+                }
+                Rule::Fanout { from, count } if from == stage => {
+                    let outs: Vec<FileId> =
+                        self.task(t).outputs.iter().map(|(f, _)| *f).collect();
+                    for _ in 0..count {
+                        let id = self.materialize(StageId(s_idx), outs.clone());
+                        newly_ready.push(id);
+                    }
+                }
+                _ => {}
+            }
+        }
+
+        // Closure propagation: a consumer stage closes when its upstream
+        // closed and fully completed (no more instances can appear).
+        self.propagate_closure();
+        // Deferred aggregate fires (GroupBy groups, GatherAll barriers).
+        self.fire_aggregates(&mut newly_ready);
+        // File liveness (§III-A): an intermediate file is dead once every
+        // consumer stage of its producer is closed (no further readers
+        // can materialize) and all materialized readers completed.
+        let input_list = self.task(t).inputs.clone();
+        for f in input_list {
+            self.file_refs[f.0 as usize].1 += 1;
+            let file = &self.files[f.0 as usize];
+            let Some(prod) = file.producer else { continue }; // workflow inputs stay in the DFS
+            let prod_stage = self.tasks[prod.0 as usize].stage;
+            let no_future = self.all_consumers[prod_stage.0]
+                .iter()
+                .all(|c| self.stage_closed[c.0]);
+            let (mat, done) = self.file_refs[f.0 as usize];
+            if no_future && mat == done {
+                self.dead_files.push(f);
+            }
+        }
+        newly_ready
+    }
+
+    /// Drain intermediate files that can no longer be read by any
+    /// current or future task (replica GC input, §III-A).
+    pub fn take_dead_files(&mut self) -> Vec<FileId> {
+        std::mem::take(&mut self.dead_files)
+    }
+
+    /// Scan GroupBy/GatherAll stages for satisfied, not-yet-fired
+    /// aggregation conditions and materialize their tasks. Correct
+    /// regardless of the order in which upstream completions and stage
+    /// closures interleave.
+    fn fire_aggregates(&mut self, newly_ready: &mut Vec<TaskId>) {
+        for ai in 0..self.aggregate_stages.len() {
+            let s_idx = self.aggregate_stages[ai];
+            // Cheap discrimination without cloning the rule (GatherAll
+            // holds a Vec; cloning it per completion showed up in the
+            // profile).
+            let group_info = match &self.spec.stages[s_idx].rule {
+                Rule::GroupBy { from, div } => Some((*from, *div)),
+                _ => None,
+            };
+            match group_info {
+                Some((from, div)) => {
+                    // Membership is only known once the upstream stage is
+                    // closed (its task list is final). The paper indexes
+                    // tasks from 1 and groups by floor(i/div) (Fig 3), so
+                    // 100 tasks with div=3 form 34 groups, div=4 forms 26.
+                    if !self.stage_closed[from.0] {
+                        continue;
+                    }
+                    let total = self.stage_tasks[from.0].len();
+                    let n_groups = if total == 0 { 0 } else { total / div + 1 };
+                    if self.group_fired[s_idx].len() < n_groups {
+                        self.group_fired[s_idx].resize(n_groups, false);
+                    }
+                    for group in 0..n_groups {
+                        if self.group_fired[s_idx][group] {
+                            continue;
+                        }
+                        let member_idx: Vec<usize> =
+                            (0..total).filter(|p| (p + 1) / div == group).collect();
+                        if member_idx.is_empty() {
+                            self.group_fired[s_idx][group] = true;
+                            continue;
+                        }
+                        let all_done = member_idx.iter().all(|&p| {
+                            self.task_done[self.stage_tasks[from.0][p].0 as usize]
+                        });
+                        if !all_done {
+                            continue;
+                        }
+                        self.group_fired[s_idx][group] = true;
+                        let ins: Vec<FileId> = member_idx
+                            .iter()
+                            .map(|&p| self.stage_tasks[from.0][p])
+                            .flat_map(|mt| {
+                                self.tasks[mt.0 as usize]
+                                    .outputs
+                                    .iter()
+                                    .map(|(f, _)| *f)
+                                    .collect::<Vec<_>>()
+                            })
+                            .collect();
+                        let id = self.materialize(StageId(s_idx), ins);
+                        newly_ready.push(id);
+                    }
+                }
+                None => {
+                    // GatherAll.
+                    if self.gather_fired[s_idx] {
+                        continue;
+                    }
+                    let ins: Vec<FileId> = {
+                        let Rule::GatherAll { from } = &self.spec.stages[s_idx].rule else {
+                            unreachable!("aggregate_stages holds only GroupBy/GatherAll")
+                        };
+                        let all_done = from.iter().all(|f| {
+                            self.stage_closed[f.0]
+                                && self.stage_completed[f.0] == self.stage_tasks[f.0].len()
+                        });
+                        if !all_done {
+                            continue;
+                        }
+                        from.iter()
+                            .flat_map(|f| self.stage_tasks[f.0].iter())
+                            .flat_map(|mt| self.tasks[mt.0 as usize].outputs.iter().map(|(f, _)| *f))
+                            .collect()
+                    };
+                    self.gather_fired[s_idx] = true;
+                    let id = self.materialize(StageId(s_idx), ins);
+                    newly_ready.push(id);
+                }
+            }
+        }
+    }
+
+    fn propagate_closure(&mut self) {
+        let n = self.spec.stages.len();
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for s in 0..n {
+                if self.stage_closed[s] {
+                    continue;
+                }
+                let closed = match &self.spec.stages[s].rule {
+                    Rule::Source { .. } => true,
+                    Rule::PerTask { from }
+                    | Rule::PerFile { from }
+                    | Rule::Fanout { from, .. }
+                    | Rule::GroupBy { from, .. } => {
+                        self.stage_closed[from.0]
+                            && self.stage_completed[from.0] == self.stage_tasks[from.0].len()
+                    }
+                    Rule::GatherAll { from } => from.iter().all(|f| {
+                        self.stage_closed[f.0]
+                            && self.stage_completed[f.0] == self.stage_tasks[f.0].len()
+                    }),
+                };
+                if closed {
+                    self.stage_closed[s] = true;
+                    changed = true;
+                }
+            }
+        }
+    }
+
+    /// All stages closed and all materialized tasks completed.
+    pub fn all_done(&self) -> bool {
+        self.stage_closed.iter().all(|&c| c) && self.completed_tasks == self.tasks.len()
+    }
+
+    fn materialize(&mut self, stage: StageId, inputs: Vec<FileId>) -> TaskId {
+        for f in &inputs {
+            self.file_refs[f.0 as usize].0 += 1;
+        }
+        let st = self.spec.stages[stage.0].clone();
+        let id = TaskId(self.tasks.len() as u64);
+        let input_bytes: Bytes = inputs.iter().map(|f| self.files[f.0 as usize].size).sum();
+        // Sample outputs now (they become visible on completion).
+        let mut outputs = Vec::with_capacity(st.out_count);
+        for _ in 0..st.out_count {
+            let fid = FileId(self.files.len() as u64);
+            let size = st.out_size.sample(input_bytes, &mut self.rng);
+            self.files.push(File { id: fid, size, producer: Some(id) });
+            self.file_refs.push((0, 0));
+            outputs.push((fid, size));
+        }
+        let compute = SimTime::from_secs_f64(st.compute.sample(input_bytes, &mut self.rng));
+        let task = Task {
+            id,
+            stage,
+            cores: st.cores,
+            mem: st.mem,
+            inputs,
+            outputs,
+            compute,
+        };
+        self.tasks.push(task);
+        self.task_done.push(false);
+        self.stage_tasks[stage.0].push(id);
+        id
+    }
+
+    /// Drive the whole workflow assuming instant execution — used by
+    /// generators' self-tests and Table I to count physical tasks and
+    /// generated bytes without running the cluster simulation.
+    pub fn dry_run_counts(spec: &WorkflowSpec, seed: u64) -> DryRunStats {
+        let mut eng = WorkflowEngine::new(spec.clone(), seed);
+        let mut queue = eng.start();
+        while let Some(t) = queue.pop() {
+            let more = eng.complete_task(t);
+            queue.extend(more);
+        }
+        assert!(eng.all_done(), "workflow did not terminate");
+        let generated: Bytes = eng
+            .files
+            .iter()
+            .filter(|f| !f.is_workflow_input())
+            .map(|f| f.size)
+            .sum();
+        DryRunStats {
+            physical_tasks: eng.tasks.len(),
+            abstract_tasks: eng.spec.stages.len(),
+            input_gb: eng.spec.total_input_gb(),
+            generated_gb: generated.as_gb(),
+        }
+    }
+}
+
+/// Statistics from an instant-execution dry run (Table I columns).
+#[derive(Debug, Clone)]
+pub struct DryRunStats {
+    pub physical_tasks: usize,
+    pub abstract_tasks: usize,
+    pub input_gb: f64,
+    pub generated_gb: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::spec::{ComputeModel, OutputSize, StageSpec};
+
+    fn st(name: &str, rule: Rule, out_count: usize) -> StageSpec {
+        StageSpec {
+            name: name.into(),
+            rule,
+            cores: 1,
+            mem: Bytes::from_gb(1.0),
+            compute: ComputeModel::fixed(1.0),
+            out_count,
+            out_size: OutputSize::FixedGb(0.1),
+        }
+    }
+
+    fn drive(spec: WorkflowSpec) -> DryRunStats {
+        WorkflowEngine::dry_run_counts(&spec, 1)
+    }
+
+    #[test]
+    fn chain_materializes_dynamically() {
+        let spec = WorkflowSpec {
+            name: "chain".into(),
+            stages: vec![
+                st("a", Rule::Source { count: 3, inputs_per_task: 0 }, 1),
+                st("b", Rule::PerTask { from: StageId(0) }, 1),
+            ],
+            input_files_gb: vec![],
+        };
+        let mut eng = WorkflowEngine::new(spec, 7);
+        let ready = eng.start();
+        assert_eq!(ready.len(), 3);
+        assert_eq!(eng.n_tasks_materialized(), 3); // b's not yet visible
+        let new = eng.complete_task(ready[0]);
+        assert_eq!(new.len(), 1);
+        assert_eq!(eng.task(new[0]).stage, StageId(1));
+        assert_eq!(eng.task(new[0]).inputs.len(), 1);
+    }
+
+    #[test]
+    fn gather_fires_once_after_all() {
+        let spec = WorkflowSpec {
+            name: "allinone".into(),
+            stages: vec![
+                st("a", Rule::Source { count: 4, inputs_per_task: 0 }, 1),
+                st("b", Rule::GatherAll { from: vec![StageId(0)] }, 1),
+            ],
+            input_files_gb: vec![],
+        };
+        let mut eng = WorkflowEngine::new(spec, 7);
+        let ready = eng.start();
+        let mut new = Vec::new();
+        for (i, t) in ready.iter().enumerate() {
+            let n = eng.complete_task(*t);
+            if i < 3 {
+                assert!(n.is_empty(), "gather fired early");
+            }
+            new.extend(n);
+        }
+        assert_eq!(new.len(), 1);
+        assert_eq!(eng.task(new[0]).inputs.len(), 4);
+        assert!(!eng.all_done());
+        assert!(eng.complete_task(new[0]).is_empty());
+        assert!(eng.all_done());
+    }
+
+    #[test]
+    fn per_file_fans_out() {
+        let spec = WorkflowSpec {
+            name: "fork".into(),
+            stages: vec![
+                st("a", Rule::Source { count: 1, inputs_per_task: 0 }, 5),
+                st("b", Rule::PerFile { from: StageId(0) }, 1),
+            ],
+            input_files_gb: vec![],
+        };
+        let s = drive(spec);
+        assert_eq!(s.physical_tasks, 1 + 5);
+    }
+
+    #[test]
+    fn groupby_div3_counts() {
+        // 100 tasks grouped by floor(i/3) -> 34 groups (paper: Group has
+        // 134 physical tasks).
+        let spec = WorkflowSpec {
+            name: "group".into(),
+            stages: vec![
+                st("a", Rule::Source { count: 100, inputs_per_task: 0 }, 1),
+                st("b", Rule::GroupBy { from: StageId(0), div: 3 }, 1),
+            ],
+            input_files_gb: vec![],
+        };
+        let s = drive(spec);
+        assert_eq!(s.physical_tasks, 134);
+    }
+
+    #[test]
+    fn groupby_waits_for_members() {
+        let spec = WorkflowSpec {
+            name: "g".into(),
+            stages: vec![
+                st("a", Rule::Source { count: 6, inputs_per_task: 0 }, 1),
+                st("b", Rule::GroupBy { from: StageId(0), div: 3 }, 1),
+            ],
+            input_files_gb: vec![],
+        };
+        let mut eng = WorkflowEngine::new(spec, 3);
+        let ready = eng.start();
+        // 1-based grouping: positions 0,1 (i=1,2) form group 0.
+        assert!(eng.complete_task(ready[0]).is_empty());
+        let g0 = eng.complete_task(ready[1]);
+        assert_eq!(g0.len(), 1, "group 0 fires after its 2 members");
+        assert_eq!(eng.task(g0[0]).inputs.len(), 2);
+        // Positions 2,3,4 (i=3,4,5) form group 1.
+        assert!(eng.complete_task(ready[2]).is_empty());
+        assert!(eng.complete_task(ready[3]).is_empty());
+        let g1 = eng.complete_task(ready[4]);
+        assert_eq!(g1.len(), 1);
+        assert_eq!(eng.task(g1[0]).inputs.len(), 3);
+    }
+
+    #[test]
+    fn input_files_assigned_from_shared_cursor() {
+        let spec = WorkflowSpec {
+            name: "in".into(),
+            stages: vec![
+                st("a", Rule::Source { count: 2, inputs_per_task: 1 }, 1),
+                st("b", Rule::Source { count: 1, inputs_per_task: 2 }, 1),
+            ],
+            input_files_gb: vec![1.0, 2.0, 3.0, 4.0],
+        };
+        let mut eng = WorkflowEngine::new(spec, 3);
+        let ready = eng.start();
+        assert_eq!(eng.input_files().len(), 4);
+        // a0 gets file 0, a1 gets file 1, b0 gets files 2 and 3.
+        assert_eq!(eng.task(ready[0]).inputs.len(), 1);
+        assert_eq!(eng.task(ready[1]).inputs.len(), 1);
+        assert_eq!(eng.task(ready[2]).inputs.len(), 2);
+        assert!((eng.task(ready[2]).input_bytes(eng.files()).as_gb() - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn outputs_hidden_until_completion_have_sizes() {
+        let spec = WorkflowSpec {
+            name: "o".into(),
+            stages: vec![st("a", Rule::Source { count: 1, inputs_per_task: 0 }, 2)],
+            input_files_gb: vec![],
+        };
+        let mut eng = WorkflowEngine::new(spec, 3);
+        let ready = eng.start();
+        let t = eng.task(ready[0]);
+        assert_eq!(t.outputs.len(), 2);
+        for (f, s) in &t.outputs {
+            assert_eq!(eng.file(*f).size, *s);
+            assert!(s.as_u64() > 0);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = WorkflowSpec {
+            name: "d".into(),
+            stages: vec![
+                StageSpec {
+                    name: "a".into(),
+                    rule: Rule::Source { count: 10, inputs_per_task: 0 },
+                    cores: 1,
+                    mem: Bytes::from_gb(1.0),
+                    compute: ComputeModel::fixed(5.0),
+                    out_count: 1,
+                    out_size: OutputSize::UniformGb(0.8, 1.0),
+                },
+                st("b", Rule::GatherAll { from: vec![StageId(0)] }, 1),
+            ],
+            input_files_gb: vec![],
+        };
+        let a = WorkflowEngine::dry_run_counts(&spec, 42);
+        let b = WorkflowEngine::dry_run_counts(&spec, 42);
+        assert_eq!(a.generated_gb, b.generated_gb);
+        let c = WorkflowEngine::dry_run_counts(&spec, 43);
+        assert!((a.generated_gb - c.generated_gb).abs() > 1e-12);
+    }
+}

@@ -1,0 +1,34 @@
+//! Workflows: data model, abstract DAG, the dynamic engine, and the 16
+//! evaluation workload generators (Table I).
+
+pub mod dag;
+pub mod engine;
+pub mod patterns;
+pub mod realworld;
+pub mod spec;
+pub mod synthetic;
+pub mod task;
+
+use spec::WorkflowSpec;
+
+/// All 16 evaluation workflows in Table I order (real-world, synthetic,
+/// patterns).
+pub fn all_workflows() -> Vec<WorkflowSpec> {
+    let mut v = realworld::all_realworld();
+    v.extend(synthetic::all_synthetic());
+    v.extend(patterns::all_patterns());
+    v
+}
+
+/// Look a workflow up by (case-insensitive, punctuation-insensitive)
+/// name, e.g. "chain", "rna-seq", "syn-bwa".
+pub fn by_name(name: &str) -> Option<WorkflowSpec> {
+    let norm = |s: &str| -> String {
+        s.chars()
+            .filter(|c| c.is_ascii_alphanumeric())
+            .map(|c| c.to_ascii_lowercase())
+            .collect()
+    };
+    let want = norm(name);
+    all_workflows().into_iter().find(|w| norm(&w.name) == want || norm(&w.name).contains(&want))
+}

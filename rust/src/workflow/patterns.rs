@@ -1,0 +1,172 @@
+//! The five workflow patterns of Fig. 3 / Table I, built exactly as the
+//! paper describes (§V-A): task A writes a random file of 0.8–1 GB; B and
+//! C tasks read all their inputs and merge them into a single file.
+//!
+//! | Pattern        | Abstract | Physical | Generated GB (≈) |
+//! |----------------|----------|----------|------------------|
+//! | All in One     | 2        | 101      | 180.3            |
+//! | Chain          | 2        | 200      | 180.3            |
+//! | Fork           | 2        | 101      | 99.4             |
+//! | Group          | 2        | 134      | 180.3            |
+//! | Group Multiple | 3        | 160      | 270.5            |
+
+use super::spec::{ComputeModel, OutputSize, Rule, StageSpec, WorkflowSpec};
+use super::task::StageId;
+use crate::util::units::Bytes;
+
+/// Compute model for the data-generating task A. The paper's pattern
+/// tasks are I/O-bound micro-benchmarks; writing ~0.9 GB plus a bit of
+/// CPU work.
+fn a_compute() -> ComputeModel {
+    ComputeModel { base_s: 30.0, per_input_gb_s: 0.0, jitter: 0.1 }
+}
+
+/// Compute model for merge tasks (B/C): proportional to data merged.
+fn merge_compute() -> ComputeModel {
+    ComputeModel { base_s: 5.0, per_input_gb_s: 1.0, jitter: 0.1 }
+}
+
+fn stage_a(count: usize) -> StageSpec {
+    StageSpec {
+        name: "A".into(),
+        rule: Rule::Source { count, inputs_per_task: 0 },
+        cores: 1,
+        mem: Bytes::from_gb(2.0),
+        compute: a_compute(),
+        out_count: 1,
+        out_size: OutputSize::UniformGb(0.8, 1.0),
+    }
+}
+
+fn merge_stage(name: &str, rule: Rule) -> StageSpec {
+    StageSpec {
+        name: name.into(),
+        rule,
+        cores: 1,
+        mem: Bytes::from_gb(4.0),
+        compute: merge_compute(),
+        out_count: 1,
+        out_size: OutputSize::RatioOfInput(1.0),
+    }
+}
+
+/// "All in One": 100 A tasks, one B task gathers everything.
+pub fn all_in_one() -> WorkflowSpec {
+    WorkflowSpec {
+        name: "All in One".into(),
+        stages: vec![
+            stage_a(100),
+            merge_stage("B", Rule::GatherAll { from: vec![StageId(0)] }),
+        ],
+        input_files_gb: vec![],
+    }
+}
+
+/// "Chain": 100 A tasks, each followed by its own B task.
+pub fn chain() -> WorkflowSpec {
+    WorkflowSpec {
+        name: "Chain".into(),
+        stages: vec![
+            stage_a(100),
+            merge_stage("B", Rule::PerTask { from: StageId(0) }),
+        ],
+        input_files_gb: vec![],
+    }
+}
+
+/// "Fork": one A task with 100 successors, each reading A's output.
+/// Successors consume the (single) shared file and write a merged copy —
+/// generated data ≈ 1×0.9 + 100×~0.97 ≈ 99 GB (Table I: 99.4).
+pub fn fork() -> WorkflowSpec {
+    // One A task writes a single ~0.9 GB file; 100 B tasks each read that
+    // same file (Rule::Fanout) and write a merged copy.
+    let b = merge_stage("B", Rule::Fanout { from: StageId(0), count: 100 });
+    WorkflowSpec {
+        name: "Fork".into(),
+        stages: vec![stage_a(1), b],
+        input_files_gb: vec![],
+    }
+}
+
+/// "Group": 100 A tasks, grouped by floor(i/3) → 34 merge tasks.
+pub fn group() -> WorkflowSpec {
+    WorkflowSpec {
+        name: "Group".into(),
+        stages: vec![
+            stage_a(100),
+            merge_stage("B", Rule::GroupBy { from: StageId(0), div: 3 }),
+        ],
+        input_files_gb: vec![],
+    }
+}
+
+/// "Group Multiple": Group plus a second grouping floor(i/4) → 26 more.
+pub fn group_multiple() -> WorkflowSpec {
+    WorkflowSpec {
+        name: "Group Multiple".into(),
+        stages: vec![
+            stage_a(100),
+            merge_stage("B", Rule::GroupBy { from: StageId(0), div: 3 }),
+            merge_stage("C", Rule::GroupBy { from: StageId(0), div: 4 }),
+        ],
+        input_files_gb: vec![],
+    }
+}
+
+/// All five patterns in Table I order.
+pub fn all_patterns() -> Vec<WorkflowSpec> {
+    vec![all_in_one(), chain(), fork(), group(), group_multiple()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::engine::WorkflowEngine;
+
+    #[test]
+    fn physical_task_counts_match_table1() {
+        let cases = [
+            (all_in_one(), 101),
+            (chain(), 200),
+            (fork(), 101),
+            (group(), 134),
+            (group_multiple(), 160),
+        ];
+        for (spec, expect) in cases {
+            let s = WorkflowEngine::dry_run_counts(&spec, 1);
+            assert_eq!(s.physical_tasks, expect, "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn generated_volumes_match_table1() {
+        // Table I: All-in-One 180.3, Chain 180.3, Fork 99.4, Group 180.3,
+        // Group-Multiple 270.5 (GB). Random sizes → ±7% tolerance.
+        let cases = [
+            (all_in_one(), 180.3),
+            (chain(), 180.3),
+            (fork(), 99.4),
+            (group(), 180.3),
+            (group_multiple(), 270.5),
+        ];
+        for (spec, expect) in cases {
+            let s = WorkflowEngine::dry_run_counts(&spec, 2);
+            let rel = (s.generated_gb - expect).abs() / expect;
+            assert!(rel < 0.07, "{}: got {:.1} want {:.1}", spec.name, s.generated_gb, expect);
+        }
+    }
+
+    #[test]
+    fn patterns_have_no_input_data() {
+        for spec in all_patterns() {
+            assert_eq!(spec.total_input_gb(), 0.0, "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn ranks_follow_topology() {
+        let dag = chain().abstract_dag();
+        assert_eq!(dag.rank(StageId(0)), 1);
+        assert_eq!(dag.rank(StageId(1)), 0);
+    }
+}

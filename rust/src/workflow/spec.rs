@@ -1,0 +1,242 @@
+//! Data-driven workflow specifications interpreted by the dynamic engine.
+//!
+//! A [`WorkflowSpec`] describes each stage's *instantiation rule* (how
+//! physical tasks materialize from upstream results), its resource
+//! requests, a compute-time model, and an output model. All 16 evaluation
+//! workflows (patterns, WfChef-style synthetics, real-world trace shapes)
+//! are expressed in this vocabulary — see [`super::patterns`],
+//! [`super::synthetic`], [`super::realworld`].
+
+use super::dag::AbstractDag;
+use super::task::StageId;
+use crate::util::rng::Rng;
+use crate::util::units::Bytes;
+
+/// How physical tasks of a stage are created during execution.
+#[derive(Debug, Clone)]
+pub enum Rule {
+    /// `count` tasks exist from the start. Each consumes
+    /// `inputs_per_task` workflow input files taken in order from the
+    /// spec's input list (0 = reads nothing; the file cursor is shared
+    /// across all source stages in stage order).
+    Source { count: usize, inputs_per_task: usize },
+    /// One task per completed task of the upstream stage, consuming all
+    /// of that task's outputs (1:1 pipeline step).
+    PerTask { from: StageId },
+    /// One task per *output file* of the upstream stage (fan-out on
+    /// scatter outputs).
+    PerFile { from: StageId },
+    /// `count` tasks per completed upstream task, all consuming that
+    /// task's outputs (the Fork pattern: one producer, many readers of
+    /// the same data).
+    Fanout { from: StageId, count: usize },
+    /// One task per group of `div` consecutive upstream tasks
+    /// (group = floor(index / div), the paper's Fig 3 grouping). Fires
+    /// when all members of the group completed.
+    GroupBy { from: StageId, div: usize },
+    /// A single task consuming all outputs of all listed stages; fires
+    /// when they all completed.
+    GatherAll { from: Vec<StageId> },
+}
+
+/// Compute-time model: `base + per_gb * input_GB`, each sample jittered
+/// by a multiplicative factor `1 ± jitter`.
+#[derive(Debug, Clone)]
+pub struct ComputeModel {
+    pub base_s: f64,
+    pub per_input_gb_s: f64,
+    pub jitter: f64,
+}
+
+impl ComputeModel {
+    pub fn fixed(s: f64) -> Self {
+        ComputeModel { base_s: s, per_input_gb_s: 0.0, jitter: 0.1 }
+    }
+    pub fn sample(&self, input: Bytes, rng: &mut Rng) -> f64 {
+        let base = self.base_s + self.per_input_gb_s * input.as_gb();
+        let j = 1.0 + self.jitter * (2.0 * rng.next_f64() - 1.0);
+        (base * j).max(0.05)
+    }
+}
+
+/// Output-size model for one produced file.
+#[derive(Debug, Clone)]
+pub enum OutputSize {
+    /// Uniform in `[lo, hi]` GB (the patterns' 0.8–1 GB random file).
+    UniformGb(f64, f64),
+    /// A fixed fraction of the task's total input size.
+    RatioOfInput(f64),
+    /// Fixed size.
+    FixedGb(f64),
+}
+
+impl OutputSize {
+    pub fn sample(&self, input: Bytes, rng: &mut Rng) -> Bytes {
+        let gb = match self {
+            OutputSize::UniformGb(lo, hi) => rng.range_f64(*lo, *hi),
+            OutputSize::RatioOfInput(r) => input.as_gb() * r,
+            OutputSize::FixedGb(gb) => *gb,
+        };
+        Bytes::from_gb(gb.max(1e-6))
+    }
+}
+
+/// One abstract stage.
+#[derive(Debug, Clone)]
+pub struct StageSpec {
+    pub name: String,
+    pub rule: Rule,
+    pub cores: u32,
+    pub mem: Bytes,
+    pub compute: ComputeModel,
+    /// Number of output files per task and their size model.
+    pub out_count: usize,
+    pub out_size: OutputSize,
+}
+
+/// A complete workflow: stages plus the initial input data set.
+#[derive(Debug, Clone)]
+pub struct WorkflowSpec {
+    pub name: String,
+    pub stages: Vec<StageSpec>,
+    /// Workflow input files (GB each), stored in the DFS for the whole
+    /// run (§IV-D: only intermediate data is WOW-managed).
+    pub input_files_gb: Vec<f64>,
+}
+
+impl WorkflowSpec {
+    /// Derive the abstract DAG (for CWS/WOW rank prioritization) from the
+    /// stage rules.
+    pub fn abstract_dag(&self) -> AbstractDag {
+        let mut edges = Vec::new();
+        for (i, st) in self.stages.iter().enumerate() {
+            let to = StageId(i);
+            match &st.rule {
+                Rule::Source { .. } => {}
+                Rule::PerTask { from }
+                | Rule::PerFile { from }
+                | Rule::Fanout { from, .. }
+                | Rule::GroupBy { from, .. } => {
+                    edges.push((*from, to));
+                }
+                Rule::GatherAll { from } => {
+                    for f in from {
+                        edges.push((*f, to));
+                    }
+                }
+            }
+        }
+        AbstractDag::new(self.stages.iter().map(|s| s.name.clone()).collect(), &edges)
+    }
+
+    /// Sanity-check stage references.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (i, st) in self.stages.iter().enumerate() {
+            let check = |f: &StageId| -> anyhow::Result<()> {
+                if f.0 >= i {
+                    anyhow::bail!(
+                        "stage {} ({}) references stage {} which is not earlier",
+                        i,
+                        st.name,
+                        f.0
+                    );
+                }
+                Ok(())
+            };
+            match &st.rule {
+                Rule::Source { count, .. } => {
+                    if *count == 0 {
+                        anyhow::bail!("stage {} has zero source tasks", st.name);
+                    }
+                }
+                Rule::PerTask { from } | Rule::PerFile { from } => check(from)?,
+                Rule::Fanout { from, count } => {
+                    check(from)?;
+                    if *count == 0 {
+                        anyhow::bail!("Fanout count must be > 0");
+                    }
+                }
+                Rule::GroupBy { from, div } => {
+                    check(from)?;
+                    if *div == 0 {
+                        anyhow::bail!("GroupBy div must be > 0");
+                    }
+                }
+                Rule::GatherAll { from } => {
+                    if from.is_empty() {
+                        anyhow::bail!("GatherAll with no upstream stages");
+                    }
+                    for f in from {
+                        check(f)?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn total_input_gb(&self) -> f64 {
+        self.input_files_gb.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stage(name: &str, rule: Rule) -> StageSpec {
+        StageSpec {
+            name: name.into(),
+            rule,
+            cores: 1,
+            mem: Bytes::from_gb(1.0),
+            compute: ComputeModel::fixed(1.0),
+            out_count: 1,
+            out_size: OutputSize::FixedGb(0.1),
+        }
+    }
+
+    #[test]
+    fn dag_from_rules() {
+        let spec = WorkflowSpec {
+            name: "t".into(),
+            stages: vec![
+                stage("a", Rule::Source { count: 3, inputs_per_task: 0 }),
+                stage("b", Rule::PerTask { from: StageId(0) }),
+                stage("c", Rule::GatherAll { from: vec![StageId(1)] }),
+            ],
+            input_files_gb: vec![],
+        };
+        spec.validate().unwrap();
+        let dag = spec.abstract_dag();
+        assert_eq!(dag.rank(StageId(0)), 2);
+        assert_eq!(dag.rank(StageId(2)), 0);
+    }
+
+    #[test]
+    fn validate_rejects_forward_reference() {
+        let spec = WorkflowSpec {
+            name: "bad".into(),
+            stages: vec![stage("a", Rule::PerTask { from: StageId(0) })],
+            input_files_gb: vec![],
+        };
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn compute_model_scales_with_input() {
+        let mut rng = Rng::new(1);
+        let m = ComputeModel { base_s: 10.0, per_input_gb_s: 2.0, jitter: 0.0 };
+        let s = m.sample(Bytes::from_gb(5.0), &mut rng);
+        assert!((s - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn output_size_models() {
+        let mut rng = Rng::new(2);
+        let u = OutputSize::UniformGb(0.8, 1.0).sample(Bytes::ZERO, &mut rng);
+        assert!(u.as_gb() >= 0.8 && u.as_gb() <= 1.0);
+        let r = OutputSize::RatioOfInput(0.5).sample(Bytes::from_gb(4.0), &mut rng);
+        assert!((r.as_gb() - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,104 @@
+//! Physical tasks and intermediate files — the units the schedulers and
+//! the DPS reason about.
+//!
+//! A *physical* task is a concrete instance of an *abstract* task (a
+//! stage of the workflow, see [`super::dag`]). Physical tasks are only
+//! materialized during execution by the dynamic engine, matching the
+//! Nextflow model the paper targets (§II-A).
+
+use crate::util::units::{Bytes, SimTime};
+
+/// Identifier of a physical task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId(pub u64);
+
+/// Identifier of a file (workflow input or intermediate).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FileId(pub u64);
+
+/// Identifier of an abstract task (stage) in the abstract DAG.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct StageId(pub usize);
+
+/// A file in the simulated run.
+#[derive(Debug, Clone)]
+pub struct File {
+    pub id: FileId,
+    pub size: Bytes,
+    /// Producing task; `None` for workflow input data, which lives in the
+    /// DFS for the entire run (§III-A: WOW manages only intermediate
+    /// data).
+    pub producer: Option<TaskId>,
+}
+
+impl File {
+    pub fn is_workflow_input(&self) -> bool {
+        self.producer.is_none()
+    }
+}
+
+/// A physical task instance.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub id: TaskId,
+    pub stage: StageId,
+    /// Requested CPU cores (the user-declared requirement handed to the
+    /// RM, §II-A).
+    pub cores: u32,
+    /// Requested memory.
+    pub mem: Bytes,
+    /// Input files. All exist by the time the task is *ready*.
+    pub inputs: Vec<FileId>,
+    /// Output files with sizes. Sampled at materialization time but
+    /// revealed to the rest of the system only upon completion — the
+    /// schedulers treat tasks as black boxes (§I).
+    pub outputs: Vec<(FileId, Bytes)>,
+    /// Pure compute duration (excludes stage-in/stage-out, which the
+    /// simulator derives from data movement).
+    pub compute: SimTime,
+}
+
+impl Task {
+    /// Total input volume — known when the task is ready, used for
+    /// prioritization (§III-B).
+    pub fn input_bytes(&self, files: &[File]) -> Bytes {
+        self.inputs.iter().map(|f| files[f.0 as usize].size).sum()
+    }
+
+    /// Total output volume (simulator-internal).
+    pub fn output_bytes(&self) -> Bytes {
+        self.outputs.iter().map(|(_, s)| *s).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn input_bytes_sums_sizes() {
+        let files = vec![
+            File { id: FileId(0), size: Bytes(100), producer: None },
+            File { id: FileId(1), size: Bytes(250), producer: Some(TaskId(0)) },
+        ];
+        let t = Task {
+            id: TaskId(1),
+            stage: StageId(0),
+            cores: 1,
+            mem: Bytes(0),
+            inputs: vec![FileId(0), FileId(1)],
+            outputs: vec![(FileId(2), Bytes(7))],
+            compute: SimTime(0),
+        };
+        assert_eq!(t.input_bytes(&files), Bytes(350));
+        assert_eq!(t.output_bytes(), Bytes(7));
+    }
+
+    #[test]
+    fn workflow_input_detection() {
+        let f = File { id: FileId(0), size: Bytes(1), producer: None };
+        assert!(f.is_workflow_input());
+        let g = File { id: FileId(1), size: Bytes(1), producer: Some(TaskId(3)) };
+        assert!(!g.is_workflow_input());
+    }
+}

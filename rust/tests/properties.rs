@@ -1,0 +1,277 @@
+//! Property-based tests (hand-rolled: no proptest offline) over
+//! randomized workflow DAGs and coordinator state: generate hundreds of
+//! random workflow specs, execute them under every strategy, and check
+//! structural invariants that must hold for *any* workflow.
+
+use wow::dfs::DfsKind;
+use wow::exec::{run, RunConfig};
+use wow::scheduler::wow::ilp::{self, IlpNode, IlpTask};
+use wow::scheduler::Strategy;
+use wow::util::rng::Rng;
+use wow::util::units::Bytes;
+use wow::workflow::engine::WorkflowEngine;
+use wow::workflow::spec::{ComputeModel, OutputSize, Rule, StageSpec, WorkflowSpec};
+use wow::workflow::task::StageId;
+
+/// Generate a random but valid workflow spec: a DAG of 2..=6 stages with
+/// random instantiation rules, sizes and compute models.
+fn random_spec(rng: &mut Rng) -> WorkflowSpec {
+    let n_stages = 2 + rng.index(5);
+    let mut stages: Vec<StageSpec> = Vec::new();
+    // First stage is always a source.
+    let src_count = 1 + rng.index(20);
+    for i in 0..n_stages {
+        let rule = if i == 0 {
+            Rule::Source { count: src_count, inputs_per_task: 0 }
+        } else {
+            let from = StageId(rng.index(i));
+            match rng.index(5) {
+                0 => Rule::PerTask { from },
+                1 => Rule::PerFile { from },
+                2 => Rule::Fanout { from, count: 1 + rng.index(4) },
+                3 => Rule::GroupBy { from, div: 1 + rng.index(4) },
+                _ => Rule::GatherAll { from: vec![from] },
+            }
+        };
+        stages.push(StageSpec {
+            name: format!("s{i}"),
+            rule,
+            cores: 1 + rng.index(4) as u32,
+            mem: Bytes::from_gb(1.0 + rng.next_f64() * 4.0),
+            compute: ComputeModel {
+                base_s: 1.0 + rng.next_f64() * 30.0,
+                per_input_gb_s: rng.next_f64() * 4.0,
+                jitter: 0.2,
+            },
+            out_count: 1 + rng.index(3),
+            out_size: match rng.index(3) {
+                0 => OutputSize::UniformGb(0.05, 0.4),
+                1 => OutputSize::RatioOfInput(0.2 + rng.next_f64()),
+                _ => OutputSize::FixedGb(0.05 + rng.next_f64() * 0.4),
+            },
+        });
+    }
+    WorkflowSpec { name: "random".into(), stages, input_files_gb: vec![] }
+}
+
+/// Cap on instance size so the sweep stays fast.
+fn small_enough(spec: &WorkflowSpec) -> bool {
+    let s = WorkflowEngine::dry_run_counts(spec, 0);
+    s.physical_tasks <= 400 && s.generated_gb < 100.0
+}
+
+#[test]
+fn random_workflows_complete_under_all_strategies() {
+    let mut rng = Rng::new(2024);
+    let mut tested = 0;
+    let mut attempts = 0;
+    while tested < 40 && attempts < 400 {
+        attempts += 1;
+        let spec = random_spec(&mut rng);
+        if spec.validate().is_err() || !small_enough(&spec) {
+            continue;
+        }
+        tested += 1;
+        let expect = WorkflowEngine::dry_run_counts(&spec, 3).physical_tasks;
+        for strategy in [Strategy::Orig, Strategy::Cws, Strategy::Wow] {
+            let cfg = RunConfig {
+                n_nodes: 1 + (tested % 8),
+                strategy,
+                dfs: if tested % 2 == 0 { DfsKind::Ceph } else { DfsKind::Nfs },
+                seed: 3,
+                ..Default::default()
+            };
+            let m = run(&spec, &cfg);
+            // Invariant 1: every materialized task completes.
+            assert_eq!(m.tasks_total, expect, "{strategy:?} attempt {attempts}");
+            // Invariant 2: accounting sanity.
+            assert!(m.cops_used <= m.cops_created);
+            assert!(m.tasks_no_cop <= m.tasks_total);
+            assert!(m.cpu_alloc_hours >= 0.0);
+            // Invariant 3: Gini in [0, 1).
+            assert!((0.0..1.0).contains(&m.gini_cpu()));
+            assert!((0.0..1.0).contains(&m.gini_storage()));
+            // Invariant 4: baselines never copy.
+            if strategy != Strategy::Wow {
+                assert_eq!(m.cops_created, 0);
+            }
+        }
+    }
+    assert!(tested >= 40, "only {tested} specs generated in {attempts} attempts");
+}
+
+#[test]
+fn random_dags_rank_is_longest_path() {
+    // Property: rank(source along a pure chain) == chain length - 1.
+    for len in 2..=8 {
+        let mut stages = vec![StageSpec {
+            name: "s0".into(),
+            rule: Rule::Source { count: 1, inputs_per_task: 0 },
+            cores: 1,
+            mem: Bytes::from_gb(1.0),
+            compute: ComputeModel::fixed(1.0),
+            out_count: 1,
+            out_size: OutputSize::FixedGb(0.1),
+        }];
+        for i in 1..len {
+            let mut s = stages[0].clone();
+            s.name = format!("s{i}");
+            s.rule = Rule::PerTask { from: StageId(i - 1) };
+            stages.push(s);
+        }
+        let spec = WorkflowSpec { name: "chain".into(), stages, input_files_gb: vec![] };
+        let dag = spec.abstract_dag();
+        assert_eq!(dag.rank(StageId(0)), (len - 1) as u32);
+        assert_eq!(dag.rank(StageId(len - 1)), 0);
+    }
+}
+
+/// Brute-force optimal assignment for tiny ILP instances.
+fn brute_force(tasks: &[IlpTask], nodes: &[IlpNode]) -> f64 {
+    fn rec(i: usize, tasks: &[IlpTask], free: &mut Vec<(u32, u64)>) -> f64 {
+        if i == tasks.len() {
+            return 0.0;
+        }
+        // Skip branch.
+        let mut best = rec(i + 1, tasks, free);
+        for &n in &tasks[i].candidate_nodes {
+            if free[n].0 >= tasks[i].cores && free[n].1 >= tasks[i].mem.as_u64() {
+                free[n].0 -= tasks[i].cores;
+                free[n].1 -= tasks[i].mem.as_u64();
+                best = best.max(tasks[i].priority + rec(i + 1, tasks, free));
+                free[n].0 += tasks[i].cores;
+                free[n].1 += tasks[i].mem.as_u64();
+            }
+        }
+        best
+    }
+    let mut free: Vec<(u32, u64)> = nodes.iter().map(|n| (n.cores, n.mem.as_u64())).collect();
+    rec(0, tasks, &mut free)
+}
+
+#[test]
+fn ilp_matches_brute_force_on_random_instances() {
+    let mut rng = Rng::new(77);
+    for _ in 0..150 {
+        let n_nodes = 1 + rng.index(3);
+        let n_tasks = 1 + rng.index(8);
+        let nodes: Vec<IlpNode> = (0..n_nodes)
+            .map(|_| IlpNode {
+                cores: 2 + rng.index(6) as u32,
+                mem: Bytes::from_gb(4.0 + rng.next_f64() * 12.0),
+            })
+            .collect();
+        let tasks: Vec<IlpTask> = (0..n_tasks)
+            .map(|_| {
+                let cands: Vec<usize> =
+                    (0..n_nodes).filter(|_| rng.next_f64() < 0.7).collect();
+                IlpTask {
+                    priority: 0.5 + rng.next_f64() * 5.0,
+                    cores: 1 + rng.index(4) as u32,
+                    mem: Bytes::from_gb(1.0 + rng.next_f64() * 6.0),
+                    candidate_nodes: cands,
+                }
+            })
+            .collect();
+        let sol = ilp::solve(&tasks, &nodes);
+        let opt = brute_force(&tasks, &nodes);
+        assert!(
+            (sol.objective - opt).abs() < 1e-9,
+            "ILP {} vs brute force {opt}",
+            sol.objective
+        );
+        assert!(sol.proved_optimal);
+        // Feasibility: capacities respected.
+        let mut used: Vec<(u32, u64)> = nodes.iter().map(|_| (0, 0)).collect();
+        for (k, a) in sol.assignment.iter().enumerate() {
+            if let Some(n) = a {
+                assert!(tasks[k].candidate_nodes.contains(n));
+                used[*n].0 += tasks[k].cores;
+                used[*n].1 += tasks[k].mem.as_u64();
+            }
+        }
+        for (n, &(c, m)) in used.iter().enumerate() {
+            assert!(c <= nodes[n].cores && m <= nodes[n].mem.as_u64());
+        }
+    }
+}
+
+#[test]
+fn flownet_conserves_bytes_under_random_load() {
+    use wow::net::FlowNet;
+    use wow::util::units::Bandwidth;
+    let mut rng = Rng::new(55);
+    for _ in 0..30 {
+        let mut net = FlowNet::new();
+        let n_res = 2 + rng.index(6);
+        let res: Vec<_> = (0..n_res)
+            .map(|_| net.add_resource(Bandwidth(10.0 + rng.next_f64() * 200.0)))
+            .collect();
+        let n_flows = 1 + rng.index(20);
+        let mut total = 0u64;
+        for _ in 0..n_flows {
+            let k = 1 + rng.index(3.min(n_res));
+            let mut rs = Vec::new();
+            for _ in 0..k {
+                let r = *rng.choice(&res);
+                if !rs.contains(&r) {
+                    rs.push(r);
+                }
+            }
+            let bytes = 100 + rng.below(100_000);
+            total += bytes * rs.len() as u64;
+            net.add_flow(Bytes(bytes), rs);
+        }
+        let mut done = 0;
+        while let Some(t) = net.next_completion() {
+            net.advance_to(t);
+            done += net.take_completed().len();
+        }
+        assert_eq!(done, n_flows);
+        let through: f64 = net.bytes_through.iter().sum();
+        let rel = (through - total as f64).abs() / total as f64;
+        assert!(rel < 1e-3, "byte conservation violated: {through} vs {total}");
+    }
+}
+
+#[test]
+fn dps_plan_never_overshoots_and_covers_missing() {
+    use wow::cluster::NodeId;
+    use wow::dps::Dps;
+    use wow::workflow::task::FileId;
+    let mut rng = Rng::new(31);
+    for _ in 0..100 {
+        let mut dps = Dps::new(rng.next_u64());
+        let n_files = 1 + rng.index(12);
+        let n_nodes = 2 + rng.index(6);
+        let mut inputs = Vec::new();
+        for f in 0..n_files {
+            let holders = 1 + rng.index(n_nodes);
+            for _ in 0..holders {
+                dps.register_output(
+                    FileId(f as u64),
+                    Bytes(1 + rng.below(1_000_000)),
+                    NodeId(rng.index(n_nodes)),
+                );
+            }
+            inputs.push(FileId(f as u64));
+        }
+        let dst = NodeId(rng.index(n_nodes));
+        let missing = dps.missing_bytes(&inputs, dst);
+        match dps.plan(&inputs, dst) {
+            None => assert_eq!(missing, Bytes::ZERO),
+            Some(plan) => {
+                // Plan covers exactly the missing bytes.
+                assert_eq!(plan.total_bytes, missing);
+                // Sources actually hold their files and are not dst.
+                for (file, src, _) in &plan.parts {
+                    assert!(dps.locations(*file).contains(src));
+                    assert_ne!(*src, dst);
+                }
+                // Max load is a real max.
+                assert!(plan.max_source_load <= plan.total_bytes);
+                assert!(plan.max_source_load.as_u64() > 0);
+            }
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! Equivalence of the XLA (AOT Pallas/JAX artifact) and Native cost
+//! backends — the end-to-end check that Layers 1/2/3 agree numerically.
+//!
+//! Skipped gracefully when the artifact has not been built yet
+//! (`make artifacts`).
+
+#![cfg(feature = "xla-runtime")]
+
+use wow::dps::cost::{CostEval, NativeCost};
+use wow::runtime::XlaCostModel;
+use wow::util::rng::Rng;
+
+fn random_instance(
+    rng: &mut Rng,
+    t: usize,
+    f: usize,
+    n: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let req: Vec<f32> = (0..t * f).map(|_| (rng.next_f64() < 0.25) as u8 as f32).collect();
+    let present: Vec<f32> = (0..f * n).map(|_| (rng.next_f64() < 0.4) as u8 as f32).collect();
+    let sizes: Vec<f32> = (0..f).map(|_| rng.range_f64(0.01, 8.0) as f32).collect();
+    (req, present, sizes)
+}
+
+fn assert_close(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what} length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let tol = 1e-4_f32.max(x.abs() * 1e-5);
+        assert!((x - y).abs() <= tol, "{what}[{i}]: xla={x} native={y}");
+    }
+}
+
+#[test]
+fn xla_matches_native_on_tile_shape() {
+    if !XlaCostModel::available() {
+        eprintln!("skipping: artifact not built");
+        return;
+    }
+    let mut xla = XlaCostModel::load_default().expect("load artifact");
+    let mut rng = Rng::new(42);
+    let (t, f, n) = (32, 256, 16);
+    let (req, present, sizes) = random_instance(&mut rng, t, f, n);
+    let (mx, lx) = xla.missing_local(&req, &present, &sizes, t, f, n);
+    let (mn, ln) = NativeCost.missing_local(&req, &present, &sizes, t, f, n);
+    assert_close(&mx, &mn, "missing");
+    assert_close(&lx, &ln, "local");
+}
+
+#[test]
+fn xla_matches_native_on_awkward_shapes() {
+    if !XlaCostModel::available() {
+        eprintln!("skipping: artifact not built");
+        return;
+    }
+    let mut xla = XlaCostModel::load_default().expect("load artifact");
+    let mut rng = Rng::new(7);
+    // Shapes that exercise padding and multi-tile accumulation.
+    for &(t, f, n) in &[(1, 1, 1), (5, 300, 8), (40, 520, 3), (33, 257, 16), (64, 1024, 8)] {
+        let (req, present, sizes) = random_instance(&mut rng, t, f, n);
+        let (mx, lx) = xla.missing_local(&req, &present, &sizes, t, f, n);
+        let (mn, ln) = NativeCost.missing_local(&req, &present, &sizes, t, f, n);
+        assert_close(&mx, &mn, &format!("missing ({t},{f},{n})"));
+        assert_close(&lx, &ln, &format!("local ({t},{f},{n})"));
+    }
+}
+
+#[test]
+fn full_simulation_identical_under_both_backends() {
+    if !XlaCostModel::available() {
+        eprintln!("skipping: artifact not built");
+        return;
+    }
+    use wow::exec::{run_with_backend, RunConfig};
+    use wow::workflow::patterns;
+    let spec = patterns::group();
+    let cfg = RunConfig { n_nodes: 4, ..Default::default() };
+    let xla = Box::new(XlaCostModel::load_default().unwrap());
+    let a = run_with_backend(&spec, &cfg, xla);
+    let b = run_with_backend(&spec, &cfg, Box::new(NativeCost));
+    assert_eq!(a.makespan, b.makespan, "same schedule under both backends");
+    assert_eq!(a.cops_created, b.cops_created);
+    assert_eq!(a.cop_bytes, b.cop_bytes);
+}

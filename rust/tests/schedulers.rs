@@ -1,0 +1,107 @@
+//! Focused behavioural tests for the three strategies at the
+//! whole-simulation level (unit tests live in each module).
+
+use wow::dfs::DfsKind;
+use wow::exec::{run, RunConfig};
+use wow::scheduler::Strategy;
+use wow::workflow::patterns;
+
+fn cfg(strategy: Strategy, dfs: DfsKind) -> RunConfig {
+    RunConfig { strategy, dfs, ..Default::default() }
+}
+
+#[test]
+fn wow_chain_runs_without_any_network_cops() {
+    // Every chain successor is started where its producer ran.
+    let m = run(&patterns::chain(), &cfg(Strategy::Wow, DfsKind::Ceph));
+    assert_eq!(m.cops_created, 0, "chain must colocate, not copy");
+    assert_eq!(m.pct_tasks_no_cop(), 100.0);
+}
+
+#[test]
+fn wow_fork_copies_the_shared_file_to_other_nodes() {
+    // Fork: the single A output must be replicated to the other 7 nodes
+    // for the 100 B tasks (paper: Fork copies the same file everywhere).
+    let m = run(&patterns::fork(), &cfg(Strategy::Wow, DfsKind::Ceph));
+    assert!(m.cops_created >= 7, "got {}", m.cops_created);
+    // All 7 replicas are consumed by B tasks.
+    assert!(m.pct_cops_used() > 90.0, "{:.1}%", m.pct_cops_used());
+}
+
+#[test]
+fn wow_all_in_one_uses_at_most_c_task_parallel_preparations() {
+    // Paper sec. VI-B: All-in-One makes two copies in parallel (c_task=2)
+    // for the single gather task; total COPs stays tiny.
+    let m = run(&patterns::all_in_one(), &cfg(Strategy::Wow, DfsKind::Ceph));
+    assert!(m.cops_created <= 4, "got {}", m.cops_created);
+}
+
+#[test]
+fn c_task_1_reduces_overhead_vs_c_task_4() {
+    // Ablation direction (sec. III-B): higher c_task => more replicas =>
+    // more copied bytes.
+    let spec = patterns::group_multiple();
+    let mut c1 = cfg(Strategy::Wow, DfsKind::Ceph);
+    c1.c_task = 1;
+    let mut c4 = cfg(Strategy::Wow, DfsKind::Ceph);
+    c4.c_task = 4;
+    c4.c_node = 4;
+    let m1 = run(&spec, &c1);
+    let m4 = run(&spec, &c4);
+    assert!(
+        m1.cop_bytes <= m4.cop_bytes,
+        "c_task=1 copied {} vs c_task=4 {}",
+        m1.cop_bytes,
+        m4.cop_bytes
+    );
+}
+
+#[test]
+fn cws_and_orig_have_similar_makespans() {
+    // Table II: CWS changes makespan by <14% in either direction on the
+    // patterns — prioritization alone cannot fix data movement.
+    for spec in patterns::all_patterns() {
+        let orig = run(&spec, &cfg(Strategy::Orig, DfsKind::Ceph));
+        let cws = run(&spec, &cfg(Strategy::Cws, DfsKind::Ceph));
+        let rel = (cws.makespan_min() - orig.makespan_min()).abs() / orig.makespan_min();
+        assert!(rel < 0.25, "{}: CWS deviates {:.0}%", spec.name, rel * 100.0);
+    }
+}
+
+#[test]
+fn wow_reduces_cpu_allocation_dramatically_on_patterns() {
+    // Table II: pattern CPU-hour reductions of -69% .. -99%.
+    for spec in patterns::all_patterns() {
+        let orig = run(&spec, &cfg(Strategy::Orig, DfsKind::Nfs));
+        let wow_ = run(&spec, &cfg(Strategy::Wow, DfsKind::Nfs));
+        let delta = (wow_.cpu_alloc_hours - orig.cpu_alloc_hours) / orig.cpu_alloc_hours;
+        assert!(
+            delta < -0.5,
+            "{}: CPU delta {:+.0}% (paper: -71%..-99%)",
+            spec.name,
+            delta * 100.0
+        );
+    }
+}
+
+#[test]
+fn node_count_sweep_is_monotone_for_wow_chain() {
+    // More nodes must never slow the chain down under WOW.
+    let spec = patterns::chain();
+    let mut last = f64::INFINITY;
+    for n in [1usize, 2, 4, 8] {
+        let mut c = cfg(Strategy::Wow, DfsKind::Ceph);
+        c.n_nodes = n;
+        let m = run(&spec, &c).makespan_min();
+        assert!(m <= last * 1.05, "{n} nodes: {m:.1} vs previous {last:.1}");
+        last = m;
+    }
+}
+
+#[test]
+fn gini_balanced_for_wide_patterns_under_wow() {
+    for spec in [patterns::chain(), patterns::group()] {
+        let m = run(&spec, &cfg(Strategy::Wow, DfsKind::Ceph));
+        assert!(m.gini_cpu() < 0.3, "{}: gini cpu {:.2}", spec.name, m.gini_cpu());
+    }
+}
