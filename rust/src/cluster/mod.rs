@@ -32,6 +32,12 @@ pub struct NodeSpec {
 }
 
 impl NodeSpec {
+    /// All four flow-model channels of a node built from this spec, in
+    /// registration order (NIC up, NIC down, disk read, disk write).
+    pub fn channel_caps(&self) -> [Bandwidth; 4] {
+        [self.link, self.link, self.disk_read, self.disk_write]
+    }
+
     /// The paper's worker node with a link shaped to `gbit` Gbit/s.
     pub fn paper_worker(gbit: f64) -> Self {
         NodeSpec {
@@ -71,6 +77,9 @@ pub struct Node {
     pub disk_write: ResourceId,
     pub free_cores: u32,
     pub free_mem: Bytes,
+    /// False while the node is crashed (fault injection). Dead nodes
+    /// never fit tasks; a recovering node rejoins empty.
+    pub alive: bool,
 }
 
 /// The cluster: all nodes plus convenience accessors. The bandwidth
@@ -103,6 +112,7 @@ impl Cluster {
             disk_write: net.add_resource(spec.disk_write),
             free_cores: spec.cores,
             free_mem: spec.mem,
+            alive: true,
             spec,
         };
         for i in 0..n_workers {
@@ -120,9 +130,36 @@ impl Cluster {
         self.n_workers
     }
 
-    /// Worker node ids (the nodes the RM may schedule tasks on).
+    /// Worker node ids (the nodes the RM may schedule tasks on),
+    /// including crashed ones — use for per-node metrics.
     pub fn workers(&self) -> impl Iterator<Item = NodeId> + '_ {
         (0..self.n_workers).map(NodeId)
+    }
+
+    /// Worker node ids currently alive — the set schedulers may place
+    /// tasks and COPs on. Identical to [`Self::workers`] on a healthy
+    /// cluster.
+    pub fn alive_workers(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.nodes[..self.n_workers].iter().filter(|n| n.alive).map(|n| n.id)
+    }
+
+    /// Crash or recover a node. A recovering worker rejoins *empty*:
+    /// full free capacity (everything it ran was killed at crash time)
+    /// and, in WOW mode, no replicas (the DPS invalidated them).
+    pub fn set_alive(&mut self, id: NodeId, alive: bool) {
+        let n = &mut self.nodes[id.0];
+        n.alive = alive;
+        if alive {
+            n.free_cores = n.spec.cores;
+            n.free_mem = n.spec.mem;
+        }
+    }
+
+    /// The four flow-model channels of a node (NIC up, NIC down, disk
+    /// read, disk write) — the blast radius of a node crash.
+    pub fn resources_of(&self, id: NodeId) -> [ResourceId; 4] {
+        let n = &self.nodes[id.0];
+        [n.nic_up, n.nic_down, n.disk_read, n.disk_write]
     }
 
     pub fn nfs_server(&self) -> Option<NodeId> {
@@ -163,7 +200,7 @@ impl Cluster {
     /// Does `id` currently fit a task needing `cores`/`mem`?
     pub fn fits(&self, id: NodeId, cores: u32, mem: Bytes) -> bool {
         let n = &self.nodes[id.0];
-        n.spec.runs_tasks && n.free_cores >= cores && n.free_mem >= mem
+        n.alive && n.spec.runs_tasks && n.free_cores >= cores && n.free_mem >= mem
     }
 
     /// Total worker cores in the cluster.
@@ -220,6 +257,28 @@ mod tests {
     fn server_never_fits_tasks() {
         let (_n, c) = small();
         assert!(!c.fits(NodeId(4), 1, Bytes::ZERO));
+    }
+
+    #[test]
+    fn crashed_node_never_fits_and_rejoins_empty() {
+        let (_n, mut c) = small();
+        c.reserve(NodeId(1), 10, Bytes::from_gb(32.0));
+        c.set_alive(NodeId(1), false);
+        assert!(!c.fits(NodeId(1), 1, Bytes::ZERO));
+        assert_eq!(c.alive_workers().collect::<Vec<_>>(), vec![NodeId(0), NodeId(2), NodeId(3)]);
+        c.set_alive(NodeId(1), true);
+        assert!(c.fits(NodeId(1), 16, Bytes::from_gb(128.0)), "rejoins with full capacity");
+        assert_eq!(c.alive_workers().count(), 4);
+    }
+
+    #[test]
+    fn resources_of_matches_registration() {
+        let (_n, c) = small();
+        let node = c.node(NodeId(2));
+        assert_eq!(
+            c.resources_of(NodeId(2)),
+            [node.nic_up, node.nic_down, node.disk_read, node.disk_write]
+        );
     }
 
     #[test]

@@ -80,6 +80,21 @@ pub trait Dfs: std::fmt::Debug {
     /// Storage-replica overhead of the backend in percent of unique
     /// bytes (Fig 4 reference lines: Ceph = 100, NFS = 0).
     fn storage_overhead_pct(&self) -> f64;
+
+    /// A storage node crashed. The backend repairs its placement
+    /// immediately (reads after this call must not touch the dead node)
+    /// and returns the re-replication flows modelling the recovery
+    /// *traffic*. Default: the backend kept nothing there (NFS data
+    /// lives on the server; a server outage is modelled as stalled
+    /// channels, not data loss).
+    fn fail_node(
+        &mut self,
+        _node: NodeId,
+        _cluster: &Cluster,
+        _rng: &mut Rng,
+    ) -> Vec<TransferPart> {
+        Vec::new()
+    }
 }
 
 /// Ceph-like DFS: per-worker OSDs, replica factor 2.
@@ -87,12 +102,14 @@ pub trait Dfs: std::fmt::Debug {
 pub struct Ceph {
     /// file → the two replica-holding workers.
     placement: HashMap<FileId, [NodeId; 2]>,
+    /// file → logical size (pre-inflation), for re-replication traffic.
+    sizes: HashMap<FileId, Bytes>,
     replica_factor: usize,
 }
 
 impl Ceph {
     pub fn new() -> Self {
-        Ceph { placement: HashMap::new(), replica_factor: 2 }
+        Ceph { placement: HashMap::new(), sizes: HashMap::new(), replica_factor: 2 }
     }
 
     fn place(&mut self, file: FileId, cluster: &Cluster, rng: &mut Rng) -> [NodeId; 2] {
@@ -108,7 +125,29 @@ impl Ceph {
             } else {
                 a
             };
-            [NodeId(a), NodeId(b)]
+            let mut reps = [NodeId(a), NodeId(b)];
+            // Redirect picks that landed on crashed OSDs, keeping the
+            // replicas on distinct nodes whenever enough alive OSDs
+            // exist. On a healthy cluster this path draws nothing,
+            // preserving the exact fault-free placement stream.
+            if !cluster.node(reps[0]).alive || !cluster.node(reps[1]).alive {
+                for i in 0..2 {
+                    if cluster.node(reps[i]).alive {
+                        continue;
+                    }
+                    let other = reps[1 - i];
+                    let pool: Vec<NodeId> =
+                        cluster.alive_workers().filter(|w| *w != other).collect();
+                    if pool.is_empty() {
+                        if let Some(any) = cluster.alive_workers().next() {
+                            reps[i] = any; // single alive OSD left
+                        }
+                    } else {
+                        reps[i] = pool[rng.index(pool.len())];
+                    }
+                }
+            }
+            reps
         })
     }
 }
@@ -124,7 +163,8 @@ impl Dfs for Ceph {
         "ceph"
     }
 
-    fn register_input(&mut self, file: FileId, _size: Bytes, cluster: &Cluster, rng: &mut Rng) {
+    fn register_input(&mut self, file: FileId, size: Bytes, cluster: &Cluster, rng: &mut Rng) {
+        self.sizes.insert(file, size);
         self.place(file, cluster, rng);
     }
 
@@ -164,6 +204,7 @@ impl Dfs for Ceph {
         cluster: &Cluster,
         rng: &mut Rng,
     ) -> Vec<TransferPart> {
+        self.sizes.insert(file, size);
         let replicas = self.place(file, cluster, rng);
         let [primary, secondary] = replicas;
         let mut parts = Vec::with_capacity(2);
@@ -195,6 +236,62 @@ impl Dfs for Ceph {
 
     fn storage_overhead_pct(&self) -> f64 {
         100.0
+    }
+
+    /// An OSD died: every object it held drops to one replica. Ceph
+    /// restores the replica factor by copying each affected object from
+    /// its surviving holder to a fresh alive OSD. Placement is repaired
+    /// synchronously (reads after the crash go to live holders); the
+    /// returned flows model the re-replication traffic.
+    fn fail_node(&mut self, node: NodeId, cluster: &Cluster, rng: &mut Rng) -> Vec<TransferPart> {
+        // HashMap iteration order is not deterministic across instances;
+        // sort so the rng consumption sequence is seed-stable.
+        let mut affected: Vec<FileId> = self
+            .placement
+            .iter()
+            .filter(|(_, reps)| reps.contains(&node))
+            .map(|(f, _)| *f)
+            .collect();
+        affected.sort();
+        let mut parts = Vec::new();
+        for file in affected {
+            let reps = *self.placement.get(&file).expect("affected file placed");
+            let survivor = reps.iter().copied().find(|r| *r != node && cluster.node(*r).alive);
+            let candidates: Vec<NodeId> =
+                cluster.alive_workers().filter(|w| !reps.contains(w)).collect();
+            let Some(survivor) = survivor else {
+                // Cascading crashes outran recovery: both holders are
+                // down. Re-place on alive OSDs (restore from cold
+                // storage; not modelled as cluster traffic).
+                if let Some(&a) = candidates.first() {
+                    let b = *candidates.get(1).unwrap_or(&a);
+                    self.placement.insert(file, [a, b]);
+                }
+                continue;
+            };
+            let new_holder = if candidates.is_empty() {
+                survivor // degenerate tiny cluster: collapse to one holder
+            } else {
+                candidates[rng.index(candidates.len())]
+            };
+            let healed = self.placement.get_mut(&file).expect("affected file placed");
+            for r in healed.iter_mut() {
+                if *r == node {
+                    *r = new_holder;
+                }
+            }
+            if new_holder == survivor {
+                continue;
+            }
+            let size = self.sizes.get(&file).copied().unwrap_or(Bytes::ZERO);
+            let s = cluster.node(survivor);
+            let d = cluster.node(new_holder);
+            parts.push(TransferPart {
+                bytes: inflate(size, CEPH_EFFICIENCY),
+                resources: vec![s.disk_read, s.nic_up, d.nic_down, d.disk_write],
+            });
+        }
+        parts
     }
 }
 
@@ -352,6 +449,59 @@ mod tests {
         }
         let parts = ceph.read(FileId(f), Bytes(10), NodeId(3), &c, &mut rng);
         assert_eq!(parts[0].resources.len(), 4);
+    }
+
+    #[test]
+    fn ceph_fail_node_heals_placement_and_emits_recovery_traffic() {
+        let (_n, mut c, mut rng) = setup();
+        let mut ceph = Ceph::new();
+        for f in 0..32u64 {
+            ceph.register_input(FileId(f), Bytes::from_gb(1.0), &c, &mut rng);
+        }
+        let dead = NodeId(1);
+        let affected =
+            ceph.placement.values().filter(|reps| reps.contains(&dead)).count();
+        c.set_alive(dead, false);
+        let parts = ceph.fail_node(dead, &c, &mut rng);
+        // One re-replication stream per object the dead OSD held.
+        assert_eq!(parts.len(), affected);
+        for p in &parts {
+            assert_eq!(p.resources.len(), 4, "survivor → new holder crosses the network");
+            assert_eq!(p.bytes, Bytes((1e9 / CEPH_EFFICIENCY).round() as u64));
+        }
+        // Placement no longer references the dead node; reads stay clear.
+        assert!(ceph.placement.values().all(|reps| !reps.contains(&dead)));
+        for f in 0..32u64 {
+            let r = ceph.read(FileId(f), Bytes::from_gb(1.0), NodeId(0), &c, &mut rng);
+            let dead_res = [c.node(dead).disk_read, c.node(dead).nic_up];
+            assert!(r
+                .iter()
+                .all(|p| p.resources.iter().all(|x| !dead_res.contains(x))));
+        }
+    }
+
+    #[test]
+    fn ceph_places_new_files_on_alive_nodes_only() {
+        let (_n, mut c, mut rng) = setup();
+        let mut ceph = Ceph::new();
+        c.set_alive(NodeId(0), false);
+        c.set_alive(NodeId(2), false);
+        for f in 0..64u64 {
+            let parts = ceph.write(FileId(f), Bytes(100), NodeId(1), &c, &mut rng);
+            assert!(!parts.is_empty());
+            let reps = ceph.placement[&FileId(f)];
+            for r in reps {
+                assert!(c.node(r).alive, "file {f} placed on dead node {r:?}");
+            }
+            assert_ne!(reps[0], reps[1], "two alive OSDs left → replicas stay distinct");
+        }
+    }
+
+    #[test]
+    fn nfs_fail_node_is_a_noop() {
+        let (_n, c, mut rng) = setup();
+        let mut nfs = Nfs::new(c.nfs_server().unwrap());
+        assert!(nfs.fail_node(NodeId(0), &c, &mut rng).is_empty());
     }
 
     #[test]

@@ -79,6 +79,8 @@ pub struct Dps {
     pub bytes_copied: Bytes,
     pub cops_created: u64,
     pub cops_completed: u64,
+    /// COPs aborted mid-flight by node crashes (fault injection).
+    pub cops_aborted: u64,
     rng: Rng,
 }
 
@@ -94,6 +96,7 @@ impl Dps {
             bytes_copied: Bytes::ZERO,
             cops_created: 0,
             cops_completed: 0,
+            cops_aborted: 0,
             rng: Rng::new(seed ^ 0x5DEE_CE66_D1CE_5EED),
         }
     }
@@ -222,6 +225,52 @@ impl Dps {
         }
         self.sizes.remove(&file);
         self.locations.remove(&file).unwrap_or_default()
+    }
+
+    /// A node crashed: every replica it held becomes invalid. Returns
+    /// the `(file, size)` pairs that lost a replica there, sorted by
+    /// file id (deterministic). Sizes are retained — a file with zero
+    /// surviving locations can be re-produced by re-running its
+    /// producer (lineage healing), recreating the same file ids.
+    pub fn invalidate_node(&mut self, node: NodeId) -> Vec<(FileId, Bytes)> {
+        let mut affected: Vec<FileId> = self
+            .locations
+            .iter()
+            .filter(|(_, locs)| locs.contains(&node))
+            .map(|(f, _)| *f)
+            .collect();
+        affected.sort();
+        let mut lost = Vec::with_capacity(affected.len());
+        for f in affected {
+            self.locations.get_mut(&f).expect("affected file").retain(|n| *n != node);
+            lost.push((f, self.sizes.get(&f).copied().unwrap_or(Bytes::ZERO)));
+        }
+        lost
+    }
+
+    /// Abort an in-flight COP (crash recovery): its `c_node`/`c_task`
+    /// slots free up, no replica becomes valid, and the bytes already
+    /// moved are wasted. Idempotent: returns `None` if the COP is no
+    /// longer active.
+    pub fn abort_cop(&mut self, id: CopId) -> Option<Cop> {
+        let cop = self.active.remove(&id)?;
+        *self.node_cops.get_mut(&cop.dst).expect("dst count") -= 1;
+        *self.task_cops.get_mut(&cop.task).expect("task count") -= 1;
+        self.cops_aborted += 1;
+        Some(cop)
+    }
+
+    /// Active COPs whose destination or any chosen source is `node` —
+    /// the COPs a crash of `node` dooms. Sorted by id (deterministic).
+    pub fn cops_touching(&self, node: NodeId) -> Vec<CopId> {
+        let mut v: Vec<CopId> = self
+            .active
+            .values()
+            .filter(|c| c.dst == node || c.parts.iter().any(|(_, src, _)| *src == node))
+            .map(|c| c.id)
+            .collect();
+        v.sort();
+        v
     }
 
     /// Active COPs targeting `node` — the `c_node` constraint input.
@@ -399,6 +448,39 @@ mod tests {
         assert_eq!(d.node_cop_count(NodeId(0)), 0);
         assert_eq!(d.task_cop_count(TaskId(42)), 0);
         assert_eq!(d.bytes_copied, Bytes(500));
+    }
+
+    #[test]
+    fn invalidate_node_drops_replicas_and_reports_losses() {
+        let mut d = dps();
+        d.register_output(FileId(1), Bytes(100), NodeId(0));
+        d.register_output(FileId(1), Bytes(100), NodeId(2));
+        d.register_output(FileId(2), Bytes(50), NodeId(2));
+        let lost = d.invalidate_node(NodeId(2));
+        assert_eq!(lost, vec![(FileId(1), Bytes(100)), (FileId(2), Bytes(50))]);
+        assert_eq!(d.locations(FileId(1)), &[NodeId(0)]);
+        assert!(d.locations(FileId(2)).is_empty(), "sole replica lost");
+        assert_eq!(d.size_of(FileId(2)), Some(Bytes(50)), "sizes survive for lineage healing");
+        assert!(d.invalidate_node(NodeId(2)).is_empty(), "idempotent");
+    }
+
+    #[test]
+    fn abort_cop_frees_slots_without_registering_replicas() {
+        let mut d = dps();
+        d.register_output(FileId(1), Bytes(500), NodeId(1));
+        let plan = d.plan(&[FileId(1)], NodeId(0)).unwrap();
+        let cop = d.start_cop(TaskId(9), NodeId(0), plan);
+        assert_eq!(d.cops_touching(NodeId(0)), vec![cop.id], "dst side");
+        assert_eq!(d.cops_touching(NodeId(1)), vec![cop.id], "src side");
+        assert!(d.cops_touching(NodeId(3)).is_empty());
+        let aborted = d.abort_cop(cop.id).expect("active");
+        assert_eq!(aborted.id, cop.id);
+        assert!(d.abort_cop(cop.id).is_none(), "idempotent");
+        assert_eq!(d.node_cop_count(NodeId(0)), 0);
+        assert_eq!(d.task_cop_count(TaskId(9)), 0);
+        assert!(!d.is_prepared(&[FileId(1)], NodeId(0)), "no replica registered");
+        assert_eq!(d.bytes_copied, Bytes::ZERO);
+        assert_eq!(d.cops_aborted, 1);
     }
 
     #[test]

@@ -19,6 +19,7 @@ use crate::cluster::{Cluster, NodeId, NodeSpec};
 use crate::dfs::{Ceph, Dfs, DfsKind, Nfs};
 use crate::dps::cost::{CostEval, NativeCost};
 use crate::dps::{CopId, Dps};
+use crate::fault::{FaultConfig, FaultEvent, FaultPlan};
 use crate::lcs::Lcs;
 use crate::metrics::RunMetrics;
 use crate::net::{FlowId, FlowNet};
@@ -26,7 +27,7 @@ use crate::scheduler::wow::WowParams;
 use crate::scheduler::{Action, ReadyTask, SchedView, Scheduler, Strategy};
 use crate::sim::event::EventQueue;
 use crate::util::rng::Rng;
-use crate::util::units::{Bytes, SimTime};
+use crate::util::units::{Bandwidth, Bytes, SimTime};
 use crate::workflow::engine::WorkflowEngine;
 use crate::workflow::spec::WorkflowSpec;
 use crate::workflow::task::{FileId, TaskId};
@@ -58,6 +59,10 @@ pub struct RunConfig {
     /// Lifts the paper's §VIII homogeneity limitation: task compute time
     /// on node i is divided by `speed_factors[i]`.
     pub speed_factors: Vec<f64>,
+    /// Fault injection (crashes, brownouts, task failures). The default
+    /// injects nothing, and a disabled config takes exactly the
+    /// fault-free code path (no extra events, no extra RNG draws).
+    pub fault: FaultConfig,
 }
 
 impl Default for RunConfig {
@@ -73,6 +78,7 @@ impl Default for RunConfig {
             cop_setup_s: 0.5,
             replica_gc: false,
             speed_factors: Vec::new(),
+            fault: FaultConfig::default(),
         }
     }
 }
@@ -104,21 +110,33 @@ struct Running {
     phase: Phase,
     pending_flows: usize,
     started: SimTime,
+    /// When the current compute attempt began (wasted-work accounting
+    /// for injected task failures).
+    compute_started: SimTime,
+    /// Execution attempt id: a `ComputeDone` from an execution that a
+    /// crash killed must not touch the task's next incarnation.
+    attempt: u64,
     cores: u32,
     mem: Bytes,
 }
 
 #[derive(Debug)]
 enum Event {
-    ComputeDone(TaskId),
+    /// Compute finished for the given execution attempt (stale attempts
+    /// are ignored — the task was killed and restarted meanwhile).
+    ComputeDone(TaskId, u64),
     /// COP setup latency elapsed: launch its flows.
     CopLaunch(CopId),
+    /// Injected fault from the compiled `FaultPlan`.
+    Fault(FaultEvent),
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 enum FlowOwner {
     StageIn(TaskId),
     StageOut(TaskId),
+    /// DFS re-replication after a crash (fire-and-forget; traffic only).
+    Recovery,
 }
 
 struct Executor {
@@ -153,6 +171,24 @@ struct Executor {
     /// fault-tolerance trade-off is about).
     node_replica_bytes: Vec<f64>,
     peak_replica_bytes: f64,
+
+    // Fault injection & recovery state (inert on fault-free runs).
+    /// Independent RNG stream for failure sampling so injection never
+    /// perturbs workload or placement randomness.
+    fault_rng: Rng,
+    /// Monotone execution-attempt counter (see `Running::attempt`).
+    exec_seq: u64,
+    /// Injected failures per task so far (the retry bound input).
+    retries: FastMap<TaskId, u32>,
+    /// Active brownouts per node: capacity is restored only when the
+    /// last overlapping brownout ends.
+    degraded: FastMap<NodeId, u32>,
+    wasted_core_seconds: f64,
+    recovery_bytes: Bytes,
+    n_crashes: u64,
+    n_degrades: u64,
+    task_failures: u64,
+    tasks_rerun: u64,
 }
 
 impl Executor {
@@ -206,6 +242,16 @@ impl Executor {
             tasks_done: 0,
             node_replica_bytes: vec![0.0; n_workers],
             peak_replica_bytes: 0.0,
+            fault_rng: Rng::new(cfg.seed ^ 0xFA01_7CA5_0BAD_C0DE),
+            exec_seq: 0,
+            retries: FastMap::default(),
+            degraded: FastMap::default(),
+            wasted_core_seconds: 0.0,
+            recovery_bytes: Bytes::ZERO,
+            n_crashes: 0,
+            n_degrades: 0,
+            task_failures: 0,
+            tasks_rerun: 0,
             cfg,
         }
     }
@@ -215,6 +261,18 @@ impl Executor {
         for &f in self.engine.input_files().to_vec().iter() {
             let size = self.engine.file(f).size;
             self.dfs.register_input(f, size, &self.cluster, &mut self.rng);
+        }
+        // Compile and enqueue the fault schedule. A disabled config
+        // yields an empty plan: no events, no RNG draws, zero drift from
+        // the fault-free path.
+        let plan = FaultPlan::compile(
+            &self.cfg.fault,
+            self.cluster.n_workers(),
+            self.cluster.nfs_server(),
+            self.cfg.seed,
+        );
+        for (t, ev) in plan.events {
+            self.events.push(t, Event::Fault(ev));
         }
         // Materialize source tasks and run the first iteration.
         let initial = self.engine.start();
@@ -254,12 +312,40 @@ impl Executor {
             while self.events.peek_time() == Some(t) {
                 let (_, ev) = self.events.pop().unwrap();
                 match ev {
-                    Event::ComputeDone(task) => {
-                        self.start_stage_out(task, t);
+                    Event::ComputeDone(task, attempt) => {
+                        // Ignore completions from executions a crash
+                        // killed; the task runs again elsewhere.
+                        let valid = self
+                            .running
+                            .get(&task)
+                            .map_or(false, |r| r.attempt == attempt && r.phase == Phase::Compute);
+                        if !valid {
+                            continue;
+                        }
+                        if self.compute_attempt_fails(task) {
+                            self.retry_compute(task, t);
+                        } else {
+                            self.start_stage_out(task, t);
+                        }
                     }
                     Event::CopLaunch(id) => {
-                        let cop = self.pending_cops.remove(&id).expect("pending COP");
-                        self.lcs.start_cop(&cop, &self.cluster, &mut self.net);
+                        // The COP may have been aborted by a crash during
+                        // its setup window, or its sources invalidated.
+                        if let Some(cop) = self.pending_cops.remove(&id) {
+                            let sources_ok = cop
+                                .parts
+                                .iter()
+                                .all(|(f, src, _)| self.dps.locations(*f).contains(src));
+                            if sources_ok && self.cluster.node(cop.dst).alive {
+                                self.lcs.start_cop(&cop, &self.cluster, &mut self.net);
+                            } else {
+                                self.dps.abort_cop(id);
+                                need_schedule = true;
+                            }
+                        }
+                    }
+                    Event::Fault(fe) => {
+                        need_schedule |= self.apply_fault(fe, t);
                     }
                 }
             }
@@ -296,35 +382,24 @@ impl Executor {
     }
 
     /// One scheduling iteration: ask the strategy, apply its actions.
+    /// (Single pass — the strategies are idempotent and every applied
+    /// action triggers a fresh iteration through its completion event.)
     fn schedule(&mut self) {
-        loop {
-            let view = SchedView {
-                now: self.net.now(),
-                cluster: &self.cluster,
-                ready: &self.ready,
-            };
-            let actions = self.scheduler.iterate(&view, &mut self.dps);
-            if actions.is_empty() {
-                return;
-            }
-            let mut progressed = false;
-            for action in actions {
-                match action {
-                    Action::Start { task, node } => {
-                        progressed |= self.start_task(task, node);
-                    }
-                    Action::StartCop { task, dst } => {
-                        progressed |= self.start_cop(task, dst);
-                    }
+        let view = SchedView {
+            now: self.net.now(),
+            cluster: &self.cluster,
+            ready: &self.ready,
+        };
+        let actions = self.scheduler.iterate(&view, &mut self.dps);
+        for action in actions {
+            match action {
+                Action::Start { task, node } => {
+                    self.start_task(task, node);
+                }
+                Action::StartCop { task, dst } => {
+                    self.start_cop(task, dst);
                 }
             }
-            if !progressed {
-                return;
-            }
-            // Starting tasks freed queue slots / changed DPS state; the
-            // strategies are written to be idempotent, so loop until
-            // quiescent. (Single extra pass in practice.)
-            return;
         }
     }
 
@@ -381,6 +456,7 @@ impl Executor {
             }
         }
 
+        self.exec_seq += 1;
         self.running.insert(
             task,
             Running {
@@ -388,6 +464,8 @@ impl Executor {
                 phase: Phase::StageIn,
                 pending_flows: n_flows,
                 started: now,
+                compute_started: now,
+                attempt: self.exec_seq,
                 cores: rt.cores,
                 mem: rt.mem,
             },
@@ -401,16 +479,47 @@ impl Executor {
     fn begin_compute(&mut self, task: TaskId, now: SimTime) {
         let r = self.running.get_mut(&task).expect("running");
         r.phase = Phase::Compute;
-        let node = r.node;
+        r.compute_started = now;
+        let (node, attempt) = (r.node, r.attempt);
         // Heterogeneous speeds: slower nodes stretch compute (§VIII).
         let speed = self.cluster.node(node).spec.speed;
+        // Retried attempts run inflated (DynamicCloudSim's runtime
+        // variation on re-execution).
+        let tries = self.retries.get(&task).copied().unwrap_or(0);
+        let infl =
+            if tries > 0 { self.cfg.fault.retry_inflation.powi(tries as i32) } else { 1.0 };
         let base = self.engine.task(task).compute;
-        let dur = if speed == 1.0 {
+        let dur = if speed == 1.0 && infl == 1.0 {
             base
         } else {
-            SimTime::from_secs_f64(base.as_secs_f64() / speed)
+            SimTime::from_secs_f64(base.as_secs_f64() / speed * infl)
         };
-        self.events.push(now + dur, Event::ComputeDone(task));
+        self.events.push(now + dur, Event::ComputeDone(task, attempt));
+    }
+
+    /// Sample whether the compute attempt that just ended was an
+    /// injected transient failure. Bounded: after `max_task_retries`
+    /// failures the task runs clean, so workflows always terminate.
+    fn compute_attempt_fails(&mut self, task: TaskId) -> bool {
+        let p = self.cfg.fault.task_fail_prob;
+        if p <= 0.0 {
+            return false;
+        }
+        let tries = self.retries.get(&task).copied().unwrap_or(0);
+        tries < self.cfg.fault.max_task_retries && self.fault_rng.next_f64() < p
+    }
+
+    /// The attempt failed: account the wasted cycles and rerun compute
+    /// on the same node (inputs are still staged there).
+    fn retry_compute(&mut self, task: TaskId, now: SimTime) {
+        *self.retries.entry(task).or_insert(0) += 1;
+        self.task_failures += 1;
+        let (cores, wasted_s) = {
+            let r = &self.running[&task];
+            (r.cores, (now - r.compute_started).as_secs_f64())
+        };
+        self.wasted_core_seconds += wasted_s * cores as f64;
+        self.begin_compute(task, now);
     }
 
     fn start_stage_out(&mut self, task: TaskId, now: SimTime) {
@@ -463,12 +572,15 @@ impl Executor {
                 }
                 false
             }
+            // Re-replication finished; nothing waits on it.
+            FlowOwner::Recovery => false,
         }
     }
 
     fn complete_task(&mut self, task: TaskId, now: SimTime) {
         let r = self.running.remove(&task).expect("running");
         self.cluster.release(r.node, r.cores, r.mem);
+        self.retries.remove(&task);
         let wall = (now - r.started).as_secs_f64();
         self.cpu_core_seconds += wall * r.cores as f64;
         self.node_cpu_seconds[r.node.0] += wall * r.cores as f64;
@@ -537,6 +649,264 @@ impl Executor {
         self.completed_cops.push((cop.task, cop.dst, files, false));
     }
 
+    // ---- fault injection & recovery --------------------------------
+
+    /// Apply one injected fault. Returns true if a scheduling iteration
+    /// should follow.
+    fn apply_fault(&mut self, ev: FaultEvent, now: SimTime) -> bool {
+        match ev {
+            FaultEvent::NodeCrash(node) => {
+                self.on_node_crash(node, now);
+                true
+            }
+            FaultEvent::NodeRecover(node) => {
+                self.on_node_recover(node);
+                true
+            }
+            FaultEvent::LinkDegrade(node) => {
+                self.n_degrades += 1;
+                *self.degraded.entry(node).or_insert(0) += 1;
+                let factor = self.cfg.fault.degrade_factor.max(1e-6);
+                let n = self.cluster.node(node);
+                let cap = Bandwidth(n.spec.link.bytes_per_sec() * factor);
+                let (up, down) = (n.nic_up, n.nic_down);
+                self.net.set_capacity(up, cap);
+                self.net.set_capacity(down, cap);
+                false
+            }
+            FaultEvent::LinkRestore(node) => {
+                // Overlapping brownouts on one node: only the last
+                // restore brings the link back to spec.
+                let left = self.degraded.get_mut(&node).expect("restore without degrade");
+                *left -= 1;
+                if *left > 0 {
+                    return false;
+                }
+                self.degraded.remove(&node);
+                let n = self.cluster.node(node);
+                let (link, up, down) = (n.spec.link, n.nic_up, n.nic_down);
+                self.net.set_capacity(up, link);
+                self.net.set_capacity(down, link);
+                true
+            }
+        }
+    }
+
+    /// A node dies. For the NFS server this is an outage: its channels
+    /// stall to ~zero and every DFS flow through them freezes until
+    /// recovery. For a worker the full recovery cascade runs: running
+    /// tasks are killed and resubmitted, its flows cancelled, doomed
+    /// COPs aborted, DPS replicas invalidated, the DFS re-replicates
+    /// lost objects, and lost-but-needed intermediates trigger lineage
+    /// re-execution.
+    fn on_node_crash(&mut self, node: NodeId, now: SimTime) {
+        self.n_crashes += 1;
+        self.cluster.set_alive(node, false);
+        if Some(node) == self.cluster.nfs_server() {
+            for r in self.cluster.resources_of(node) {
+                self.net.set_capacity(r, Bandwidth(1.0));
+            }
+            return;
+        }
+
+        // 1. Kill everything running on the node; the work is lost.
+        let mut victims: Vec<TaskId> =
+            self.running.iter().filter(|(_, r)| r.node == node).map(|(t, _)| *t).collect();
+        victims.sort();
+        for t in victims {
+            self.kill_running(t, now);
+        }
+
+        // 2. COPs reading from or writing to the node are doomed —
+        //    including those still in their setup window.
+        for id in self.dps.cops_touching(node) {
+            self.lcs.cancel_cop(id, &mut self.net);
+            self.pending_cops.remove(&id);
+            self.dps.abort_cop(id);
+        }
+
+        // 3. Find foreign tasks whose stage-in/out crossed the node
+        //    (e.g. a Ceph read from an OSD it hosted) and orphaned
+        //    recovery flows; the tasks restart their phase after the
+        //    placement heals below.
+        let res = self.cluster.resources_of(node);
+        let mut affected: Vec<TaskId> = Vec::new();
+        for f in self.net.flows_using_any(&res) {
+            match self.flow_owner.get(&f).copied() {
+                Some(FlowOwner::StageIn(t)) | Some(FlowOwner::StageOut(t)) => {
+                    if !affected.contains(&t) {
+                        affected.push(t);
+                    }
+                }
+                Some(FlowOwner::Recovery) => {
+                    self.flow_owner.remove(&f);
+                    self.net.cancel(f);
+                }
+                None => {}
+            }
+        }
+        affected.sort();
+
+        // 4. WOW replicas on the node are gone.
+        let lost = self.dps.invalidate_node(node);
+        self.node_replica_bytes[node.0] = 0.0;
+
+        // 5. DFS self-healing: Ceph re-replicates the lost objects
+        //    (recovery traffic; placement is repaired synchronously).
+        for part in self.dfs.fail_node(node, &self.cluster, &mut self.rng) {
+            self.recovery_bytes += part.bytes;
+            let id = self.net.add_flow(part.bytes, part.resources);
+            self.flow_owner.insert(id, FlowOwner::Recovery);
+        }
+
+        // 6. Restart interrupted phases against the healed placement.
+        for t in affected {
+            if self.running.contains_key(&t) {
+                self.restart_phase_flows(t, now);
+            }
+        }
+
+        // 7. Lineage healing: re-run producers of lost intermediates
+        //    that someone still needs (WOW mode only — baselines keep
+        //    intermediates in the DFS, which just self-healed).
+        self.heal_lost_files(lost);
+    }
+
+    /// The node rejoins, empty. The NFS server's channels come back to
+    /// spec; a worker returns with full capacity and no data.
+    fn on_node_recover(&mut self, node: NodeId) {
+        self.cluster.set_alive(node, true);
+        if Some(node) == self.cluster.nfs_server() {
+            let caps = self.cluster.node(node).spec.channel_caps();
+            let res = self.cluster.resources_of(node);
+            for (r, cap) in res.into_iter().zip(caps) {
+                self.net.set_capacity(r, cap);
+            }
+        }
+    }
+
+    /// Stage-in/out flows currently owned by `task`, sorted.
+    fn flows_of_task(&self, task: TaskId) -> Vec<FlowId> {
+        let mut flows: Vec<FlowId> = self
+            .flow_owner
+            .iter()
+            .filter(|(_, o)| {
+                matches!(**o, FlowOwner::StageIn(t) | FlowOwner::StageOut(t) if t == task)
+            })
+            .map(|(f, _)| *f)
+            .collect();
+        flows.sort();
+        flows
+    }
+
+    /// Kill a task running on a crashed node: cancel its flows, write
+    /// off the partial work, resubmit it to the ready queue. The node's
+    /// capacity ledger is not released — it resets wholesale when (if)
+    /// the node recovers.
+    fn kill_running(&mut self, task: TaskId, now: SimTime) {
+        let r = self.running.remove(&task).expect("running victim");
+        let flows = self.flows_of_task(task);
+        for f in flows {
+            self.flow_owner.remove(&f);
+            self.net.cancel(f);
+        }
+        let wall = (now - r.started).as_secs_f64();
+        self.cpu_core_seconds += wall * r.cores as f64;
+        self.node_cpu_seconds[r.node.0] += wall * r.cores as f64;
+        self.wasted_core_seconds += wall * r.cores as f64;
+        self.tasks_rerun += 1;
+        self.retries.remove(&task);
+        self.submit(vec![task]);
+    }
+
+    /// A task's current stage-in/out lost flows to a crash elsewhere
+    /// (it was reading/writing a replica the dead node held). Cancel
+    /// the remnants and re-issue the whole phase against the healed
+    /// placement — re-reading already-finished parts is the crash's
+    /// collateral damage.
+    fn restart_phase_flows(&mut self, task: TaskId, now: SimTime) {
+        let (node, phase) = {
+            let r = &self.running[&task];
+            (r.node, r.phase)
+        };
+        if phase == Phase::Compute {
+            return;
+        }
+        let flows = self.flows_of_task(task);
+        for f in flows {
+            self.flow_owner.remove(&f);
+            self.net.cancel(f);
+        }
+        match phase {
+            Phase::StageIn => {
+                let local_mode = self.scheduler.uses_local_data();
+                let mut n_flows = 0;
+                for file in self.engine.task(task).inputs.clone() {
+                    let size = self.engine.file(file).size;
+                    let is_input = self.engine.file(file).is_workflow_input();
+                    if local_mode && !is_input {
+                        let n = self.cluster.node(node);
+                        let id = self.net.add_flow(size, vec![n.disk_read]);
+                        self.flow_owner.insert(id, FlowOwner::StageIn(task));
+                        n_flows += 1;
+                    } else {
+                        for part in self.dfs.read(file, size, node, &self.cluster, &mut self.rng)
+                        {
+                            let id = self.net.add_flow(part.bytes, part.resources);
+                            self.flow_owner.insert(id, FlowOwner::StageIn(task));
+                            n_flows += 1;
+                        }
+                    }
+                }
+                let r = self.running.get_mut(&task).expect("running");
+                r.pending_flows = n_flows;
+                if n_flows == 0 {
+                    self.begin_compute(task, now);
+                }
+            }
+            Phase::StageOut => {
+                // start_stage_out re-issues every output flow and resets
+                // the barrier.
+                self.start_stage_out(task, now);
+            }
+            Phase::Compute => unreachable!(),
+        }
+    }
+
+    /// Re-run producers of lost files that current or future tasks
+    /// still need, recursively (a producer's own inputs may be gone
+    /// too). Only meaningful in WOW mode — baseline intermediates live
+    /// in the self-healing DFS.
+    fn heal_lost_files(&mut self, lost: Vec<(FileId, Bytes)>) {
+        if !self.scheduler.uses_local_data() {
+            return;
+        }
+        let mut stack: Vec<FileId> = lost.into_iter().map(|(f, _)| f).collect();
+        let mut revived: Vec<TaskId> = Vec::new();
+        while let Some(f) = stack.pop() {
+            if !self.dps.locations(f).is_empty() {
+                continue; // a surviving replica exists elsewhere
+            }
+            if !self.engine.file_needed(f) {
+                continue; // nobody will ever read it
+            }
+            let Some(prod) = self.engine.file(f).producer else { continue };
+            if !self.engine.is_done(prod) {
+                continue; // already queued, running, or revived
+            }
+            self.engine.revive_task(prod);
+            self.tasks_rerun += 1;
+            revived.push(prod);
+            for inp in self.engine.task(prod).inputs.clone() {
+                if !self.engine.file(inp).is_workflow_input() {
+                    stack.push(inp);
+                }
+            }
+        }
+        revived.sort();
+        self.submit(revived);
+    }
+
     fn finish_metrics(self) -> RunMetrics {
         let unique_generated: Bytes = self
             .engine
@@ -579,6 +949,13 @@ impl Executor {
             node_storage_bytes,
             node_cpu_seconds: self.node_cpu_seconds.clone(),
             peak_replica_bytes: self.peak_replica_bytes,
+            node_crashes: self.n_crashes,
+            link_degrades: self.n_degrades,
+            task_failures: self.task_failures,
+            tasks_rerun: self.tasks_rerun,
+            cops_aborted: self.dps.cops_aborted,
+            wasted_compute_hours: self.wasted_core_seconds / 3600.0,
+            recovery_bytes: self.recovery_bytes,
         }
     }
 }
@@ -677,5 +1054,127 @@ mod tests {
         let m = run(&tiny_chain(3), &c);
         assert_eq!(m.cops_created, 0, "one node → nothing to copy");
         assert_eq!(m.tasks_total, 6);
+    }
+
+    // ---- fault injection ----
+
+    use crate::fault::FaultConfig;
+
+    /// Crashes early enough to always land inside the run.
+    fn crashes(n: usize) -> FaultConfig {
+        FaultConfig {
+            node_crashes: n,
+            crash_window_s: (1.0, 8.0),
+            recovery_s: Some(20.0),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn node_crashes_complete_under_every_strategy() {
+        for strat in [Strategy::Orig, Strategy::Cws, Strategy::Wow] {
+            for dfs in [DfsKind::Ceph, DfsKind::Nfs] {
+                let mut c = cfg(strat, dfs);
+                c.fault = crashes(2);
+                let m = run(&tiny_chain(6), &c);
+                assert_eq!(m.tasks_total, 12, "{strat:?}/{dfs:?}");
+                assert_eq!(m.node_crashes, 2, "{strat:?}/{dfs:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn crash_without_recovery_still_completes() {
+        for strat in [Strategy::Orig, Strategy::Wow] {
+            let mut c = cfg(strat, DfsKind::Ceph);
+            c.fault = crashes(2);
+            c.fault.recovery_s = None;
+            let m = run(&tiny_chain(6), &c);
+            assert_eq!(m.tasks_total, 12, "{strat:?}");
+        }
+    }
+
+    #[test]
+    fn task_failures_are_retried_to_completion() {
+        let mut c = cfg(Strategy::Wow, DfsKind::Ceph);
+        c.fault.task_fail_prob = 0.5;
+        c.fault.max_task_retries = 5;
+        let m = run(&tiny_chain(6), &c);
+        assert_eq!(m.tasks_total, 12, "every task must finish despite failures");
+        assert!(m.task_failures > 0, "p=0.5 over 12 tasks: some attempt must fail");
+        assert!(m.task_failures <= 12 * 5, "the retry bound caps injections");
+        assert!(m.wasted_compute_hours > 0.0);
+    }
+
+    #[test]
+    fn ceph_crash_produces_recovery_traffic() {
+        // Baselines keep all data in Ceph, so an OSD crash must trigger
+        // re-replication of everything it held.
+        let mut c = cfg(Strategy::Orig, DfsKind::Ceph);
+        c.fault = crashes(1);
+        // Late enough that the dead OSD already holds written objects.
+        c.fault.crash_window_s = (60.0, 120.0);
+        let m = run(&patterns::chain(), &c);
+        assert_eq!(m.node_crashes, 1);
+        assert!(m.recovery_bytes.as_u64() > 0, "OSD held objects → healing traffic");
+    }
+
+    #[test]
+    fn nfs_outage_stalls_and_recovers() {
+        let mut c = cfg(Strategy::Orig, DfsKind::Nfs);
+        c.fault.nfs_outage = true;
+        c.fault.crash_window_s = (5.0, 10.0);
+        c.fault.recovery_s = Some(60.0);
+        let m = run(&tiny_chain(6), &c);
+        let base = run(&tiny_chain(6), &cfg(Strategy::Orig, DfsKind::Nfs));
+        assert_eq!(m.tasks_total, 12);
+        assert_eq!(m.node_crashes, 1);
+        assert!(
+            m.makespan.as_secs_f64() > base.makespan.as_secs_f64() + 30.0,
+            "a 60 s outage must stall the DFS-bound run: {} vs {}",
+            m.makespan,
+            base.makespan
+        );
+    }
+
+    #[test]
+    fn link_brownout_completes_and_is_counted() {
+        let mut c = cfg(Strategy::Wow, DfsKind::Ceph);
+        c.fault.link_degrades = 2;
+        c.fault.crash_window_s = (1.0, 15.0);
+        c.fault.degrade_duration_s = 30.0;
+        let m = run(&patterns::fork(), &c);
+        assert_eq!(m.link_degrades, 2);
+        assert_eq!(
+            m.tasks_total,
+            crate::workflow::engine::WorkflowEngine::dry_run_counts(&patterns::fork(), 0)
+                .physical_tasks
+        );
+    }
+
+    #[test]
+    fn disabled_fault_config_reports_zero_fault_metrics() {
+        let m = run(&tiny_chain(4), &cfg(Strategy::Wow, DfsKind::Ceph));
+        assert_eq!(m.node_crashes, 0);
+        assert_eq!(m.link_degrades, 0);
+        assert_eq!(m.task_failures, 0);
+        assert_eq!(m.tasks_rerun, 0);
+        assert_eq!(m.cops_aborted, 0);
+        assert_eq!(m.wasted_compute_hours, 0.0);
+        assert_eq!(m.recovery_bytes, Bytes::ZERO);
+    }
+
+    #[test]
+    fn wow_crash_forces_lineage_or_cop_recovery() {
+        // Chain under WOW keeps every intermediate on exactly one node;
+        // crashing nodes mid-run must lose replicas and still finish all
+        // tasks via resubmission / lineage healing.
+        let mut c = cfg(Strategy::Wow, DfsKind::Ceph);
+        c.fault = crashes(2);
+        c.fault.crash_window_s = (30.0, 120.0);
+        let m = run(&patterns::chain(), &c);
+        assert_eq!(m.tasks_total, 200);
+        assert_eq!(m.node_crashes, 2);
+        assert!(m.tasks_rerun > 0, "crashing mid-chain must discard some work");
     }
 }

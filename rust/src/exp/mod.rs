@@ -4,6 +4,7 @@
 //! Protocol (§V-C): every configuration is run three times (three seeds)
 //! and the run with the *median makespan* is reported.
 
+pub mod chaos;
 pub mod fig4;
 pub mod fig5;
 pub mod gini;

@@ -1,0 +1,301 @@
+//! Fault injection and resilience (§VIII forward-looking work).
+//!
+//! The paper defers fault tolerance to future work even though WOW's
+//! node-local replicas change the failure story fundamentally: losing a
+//! worker no longer loses just a task slot, it loses every intermediate
+//! replica the DPS parked there. This module makes that trade-off
+//! measurable. It owns a deterministic, seed-driven [`FaultPlan`] — a
+//! schedule of injected events compiled from a [`FaultConfig`] — which
+//! the executor delivers through its ordinary event queue:
+//!
+//! - **`NodeCrash` / `NodeRecover`**: a worker dies (running tasks are
+//!   killed and resubmitted, its flows are cancelled, its DPS replicas
+//!   are invalidated, Ceph re-replicates its lost objects) and later
+//!   rejoins empty. Crashing the NFS server instead models an outage
+//!   that stalls every DFS flow until recovery.
+//! - **`LinkDegrade` / `LinkRestore`**: a link brownout rescales a
+//!   node's NIC capacities; the max-min allocation re-converges.
+//! - **probabilistic task failure** (à la DynamicCloudSim): each compute
+//!   attempt fails with `task_fail_prob`, bounded by
+//!   `max_task_retries` injected failures per task, with a per-retry
+//!   runtime inflation.
+//!
+//! Recovery spans every layer — see `DESIGN.md` §7 — and the
+//! `wow chaos` experiment ([`crate::exp::chaos`]) sweeps crash counts
+//! and failure rates over the evaluation workflows.
+//!
+//! Determinism contract: the plan is a pure function of
+//! `(FaultConfig, cluster shape, seed)`, drawn from an RNG stream
+//! independent of workload generation, so enabling faults never perturbs
+//! file sizes or DFS placement, and `FaultConfig::default()` (everything
+//! off) compiles to an empty plan — the executor then takes exactly the
+//! pre-fault code path.
+
+use crate::cluster::NodeId;
+use crate::util::rng::Rng;
+use crate::util::units::SimTime;
+
+/// What to inject into a run. The default injects nothing.
+#[derive(Debug, Clone)]
+pub struct FaultConfig {
+    /// Number of worker-node crashes to inject (distinct victims; capped
+    /// at `n_workers - 1` so the cluster never loses its last worker).
+    pub node_crashes: usize,
+    /// Window (seconds) crash and brownout times are drawn from.
+    pub crash_window_s: (f64, f64),
+    /// Downtime before a crashed node rejoins, empty. `None` = it stays
+    /// down for the rest of the run.
+    pub recovery_s: Option<f64>,
+    /// Crash the NFS server (meaningful with `DfsKind::Nfs`): models an
+    /// outage stalling all DFS traffic until recovery.
+    pub nfs_outage: bool,
+    /// Per-compute-attempt failure probability (DynamicCloudSim's
+    /// per-task failure likelihood).
+    pub task_fail_prob: f64,
+    /// Maximum *injected* failures per task — the retry bound. After
+    /// this many transient failures the task's next attempt runs clean,
+    /// so workflows always terminate.
+    pub max_task_retries: u32,
+    /// Multiplicative compute-time inflation per retry attempt
+    /// (DynamicCloudSim models straggler re-executions as slower).
+    pub retry_inflation: f64,
+    /// Number of link brownouts to inject.
+    pub link_degrades: usize,
+    /// NIC capacity multiplier during a brownout.
+    pub degrade_factor: f64,
+    /// Brownout duration in seconds.
+    pub degrade_duration_s: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            node_crashes: 0,
+            crash_window_s: (60.0, 600.0),
+            recovery_s: Some(120.0),
+            nfs_outage: false,
+            task_fail_prob: 0.0,
+            max_task_retries: 3,
+            retry_inflation: 1.1,
+            link_degrades: 0,
+            degrade_factor: 0.1,
+            degrade_duration_s: 120.0,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Does this configuration inject anything at all?
+    pub fn enabled(&self) -> bool {
+        self.node_crashes > 0
+            || self.nfs_outage
+            || self.task_fail_prob > 0.0
+            || self.link_degrades > 0
+    }
+}
+
+/// One scheduled injection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// A node dies. For a worker: tasks, flows and replicas are lost.
+    /// For the NFS server: its channels stall (outage).
+    NodeCrash(NodeId),
+    /// The node rejoins, empty (full capacity, no data).
+    NodeRecover(NodeId),
+    /// A link brownout starts on this node's NICs.
+    LinkDegrade(NodeId),
+    /// The brownout ends; NIC capacities return to spec.
+    LinkRestore(NodeId),
+}
+
+/// The compiled schedule of injections, sorted by time (ties keep
+/// insertion order, matching the executor's event queue).
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    pub events: Vec<(SimTime, FaultEvent)>,
+}
+
+impl FaultPlan {
+    /// Compile `cfg` into a concrete schedule for a cluster of
+    /// `n_workers` workers (plus `nfs_server` if present). Pure in
+    /// `(cfg, shape, seed)`; an all-default config yields an empty plan
+    /// without consuming any randomness.
+    pub fn compile(
+        cfg: &FaultConfig,
+        n_workers: usize,
+        nfs_server: Option<NodeId>,
+        seed: u64,
+    ) -> FaultPlan {
+        if !cfg.enabled() {
+            return FaultPlan::default();
+        }
+        let mut rng = Rng::new(seed ^ 0xFA17_FA17_FA17_FA17);
+        let mut events: Vec<(SimTime, FaultEvent)> = Vec::new();
+        let (lo, hi) = cfg.crash_window_s;
+        debug_assert!(lo <= hi, "crash window inverted");
+
+        // Worker crashes: distinct victims, never the whole cluster.
+        let n_crash = cfg.node_crashes.min(n_workers.saturating_sub(1));
+        let mut victims: Vec<usize> = (0..n_workers).collect();
+        rng.shuffle(&mut victims);
+        victims.truncate(n_crash);
+        for v in victims {
+            let t = SimTime::from_secs_f64(rng.range_f64(lo, hi));
+            events.push((t, FaultEvent::NodeCrash(NodeId(v))));
+            if let Some(rec) = cfg.recovery_s {
+                let back = t + SimTime::from_secs_f64(rec);
+                events.push((back, FaultEvent::NodeRecover(NodeId(v))));
+            }
+        }
+
+        // NFS outage (only when the cluster actually has a server).
+        if cfg.nfs_outage {
+            if let Some(srv) = nfs_server {
+                let t = SimTime::from_secs_f64(rng.range_f64(lo, hi));
+                events.push((t, FaultEvent::NodeCrash(srv)));
+                if let Some(rec) = cfg.recovery_s {
+                    let back = t + SimTime::from_secs_f64(rec);
+                    events.push((back, FaultEvent::NodeRecover(srv)));
+                }
+            }
+        }
+
+        // Link brownouts.
+        for _ in 0..cfg.link_degrades {
+            let node = NodeId(rng.index(n_workers));
+            let t = SimTime::from_secs_f64(rng.range_f64(lo, hi));
+            events.push((t, FaultEvent::LinkDegrade(node)));
+            let end = t + SimTime::from_secs_f64(cfg.degrade_duration_s);
+            events.push((end, FaultEvent::LinkRestore(node)));
+        }
+
+        // Stable sort: simultaneous events keep insertion order, so the
+        // plan (and hence the run) is fully deterministic.
+        events.sort_by_key(|(t, _)| *t);
+        FaultPlan { events }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn crashy(n: usize) -> FaultConfig {
+        FaultConfig { node_crashes: n, ..Default::default() }
+    }
+
+    #[test]
+    fn default_config_is_disabled_and_empty() {
+        let cfg = FaultConfig::default();
+        assert!(!cfg.enabled());
+        assert!(FaultPlan::compile(&cfg, 8, None, 0).is_empty());
+    }
+
+    #[test]
+    fn plan_is_deterministic_per_seed() {
+        let cfg = FaultConfig { node_crashes: 3, link_degrades: 2, ..Default::default() };
+        let a = FaultPlan::compile(&cfg, 8, None, 42);
+        let b = FaultPlan::compile(&cfg, 8, None, 42);
+        assert_eq!(a.events, b.events);
+        let c = FaultPlan::compile(&cfg, 8, None, 43);
+        assert_ne!(a.events, c.events, "different seeds, different schedule");
+    }
+
+    #[test]
+    fn crash_victims_are_distinct_workers() {
+        let plan = FaultPlan::compile(&crashy(5), 8, None, 7);
+        let mut victims: Vec<NodeId> = plan
+            .events
+            .iter()
+            .filter_map(|(_, e)| match e {
+                FaultEvent::NodeCrash(n) => Some(*n),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(victims.len(), 5);
+        victims.sort();
+        victims.dedup();
+        assert_eq!(victims.len(), 5, "victims must be distinct");
+        assert!(victims.iter().all(|n| n.0 < 8));
+    }
+
+    #[test]
+    fn never_crashes_the_whole_cluster() {
+        let plan = FaultPlan::compile(&crashy(100), 4, None, 1);
+        let crashes = plan
+            .events
+            .iter()
+            .filter(|(_, e)| matches!(e, FaultEvent::NodeCrash(_)))
+            .count();
+        assert_eq!(crashes, 3, "at least one worker must survive");
+    }
+
+    #[test]
+    fn recovery_follows_each_crash() {
+        let cfg = FaultConfig {
+            node_crashes: 2,
+            recovery_s: Some(50.0),
+            ..Default::default()
+        };
+        let plan = FaultPlan::compile(&cfg, 8, None, 9);
+        let crashes: Vec<(SimTime, NodeId)> = plan
+            .events
+            .iter()
+            .filter_map(|(t, e)| match e {
+                FaultEvent::NodeCrash(n) => Some((*t, *n)),
+                _ => None,
+            })
+            .collect();
+        for (t, n) in crashes {
+            let rec = plan
+                .events
+                .iter()
+                .find(|(_, e)| *e == FaultEvent::NodeRecover(n))
+                .expect("matching recovery");
+            assert_eq!(rec.0, t + SimTime::from_secs_f64(50.0));
+        }
+    }
+
+    #[test]
+    fn no_recovery_when_disabled() {
+        let cfg = FaultConfig { node_crashes: 2, recovery_s: None, ..Default::default() };
+        let plan = FaultPlan::compile(&cfg, 8, None, 3);
+        assert!(plan.events.iter().all(|(_, e)| !matches!(e, FaultEvent::NodeRecover(_))));
+    }
+
+    #[test]
+    fn events_sorted_by_time() {
+        let cfg = FaultConfig { node_crashes: 4, link_degrades: 3, ..Default::default() };
+        let plan = FaultPlan::compile(&cfg, 8, None, 11);
+        assert!(plan.events.windows(2).all(|w| w[0].0 <= w[1].0));
+    }
+
+    #[test]
+    fn nfs_outage_targets_the_server() {
+        let cfg = FaultConfig { nfs_outage: true, ..Default::default() };
+        let plan = FaultPlan::compile(&cfg, 8, Some(NodeId(8)), 5);
+        assert!(plan
+            .events
+            .iter()
+            .any(|(_, e)| *e == FaultEvent::NodeCrash(NodeId(8))));
+        // Without a server the outage is a no-op.
+        assert!(FaultPlan::compile(&cfg, 8, None, 5).is_empty());
+    }
+
+    #[test]
+    fn brownouts_are_paired() {
+        let cfg = FaultConfig { link_degrades: 3, ..Default::default() };
+        let plan = FaultPlan::compile(&cfg, 8, None, 2);
+        let d = plan.events.iter().filter(|(_, e)| matches!(e, FaultEvent::LinkDegrade(_))).count();
+        let r = plan.events.iter().filter(|(_, e)| matches!(e, FaultEvent::LinkRestore(_))).count();
+        assert_eq!((d, r), (3, 3));
+    }
+}

@@ -59,6 +59,25 @@ impl Lcs {
         }
     }
 
+    /// Cancel every in-flight flow of `cop` (a node crash doomed it) and
+    /// drop its barrier. Returns the number of flows cancelled (0 if the
+    /// COP had none in flight, e.g. still in its setup window).
+    pub fn cancel_cop(&mut self, cop: CopId, net: &mut FlowNet) -> usize {
+        let mut flows: Vec<FlowId> = self
+            .flow_cop
+            .iter()
+            .filter(|(_, c)| **c == cop)
+            .map(|(f, _)| *f)
+            .collect();
+        flows.sort();
+        for f in &flows {
+            self.flow_cop.remove(f);
+            net.cancel(*f);
+        }
+        self.pending.remove(&cop);
+        flows.len()
+    }
+
     /// Is this flow part of a COP?
     pub fn owns_flow(&self, flow: FlowId) -> bool {
         self.flow_cop.contains_key(&flow)
@@ -113,6 +132,27 @@ mod tests {
         }
         assert_eq!(done_cop, Some(CopId(0)));
         assert_eq!(lcs.active_cops(), 0);
+    }
+
+    #[test]
+    fn cancel_cop_removes_its_flows_and_barrier() {
+        let (mut net, c) = setup();
+        let mut lcs = Lcs::new();
+        let cop = Cop {
+            id: CopId(3),
+            task: TaskId(1),
+            dst: NodeId(0),
+            parts: vec![
+                (FileId(1), NodeId(1), Bytes::from_gb(1.0)),
+                (FileId(2), NodeId(2), Bytes::from_gb(1.0)),
+            ],
+        };
+        lcs.start_cop(&cop, &c, &mut net);
+        assert_eq!(net.active_flows(), 2);
+        assert_eq!(lcs.cancel_cop(CopId(3), &mut net), 2);
+        assert_eq!(net.active_flows(), 0);
+        assert_eq!(lcs.active_cops(), 0);
+        assert_eq!(lcs.cancel_cop(CopId(3), &mut net), 0, "idempotent");
     }
 
     #[test]

@@ -28,6 +28,7 @@ pub mod dfs;
 pub mod dps;
 pub mod exec;
 pub mod exp;
+pub mod fault;
 pub mod lcs;
 pub mod metrics;
 pub mod net;

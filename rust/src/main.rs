@@ -3,8 +3,11 @@
 //! ```text
 //! wow run --workflow chain --strategy wow --dfs ceph [--nodes 8]
 //!         [--gbit 1.0] [--seed 0] [--c-node 1] [--c-task 2] [--xla]
+//!         [--crashes N] [--fail-prob P] [--recovery S] [--degrades N]
+//!         [--nfs-outage]
 //! wow table1 | table2 | table3 | fig4 | fig5 | gini | all
 //!         [--seeds 0,1,2] [--quick] [--xla]
+//! wow chaos             # fault-injection sweep (crashes × fail rates)
 //! wow ablate            # c_node / c_task sweep on the pattern set
 //! ```
 //!
@@ -42,7 +45,7 @@ impl Args {
                 .with_context(|| format!("expected --flag, got '{k}'"))?
                 .to_string();
             // Boolean flags.
-            if ["quick", "xla", "gc"].contains(&key.as_str()) {
+            if ["quick", "xla", "gc", "nfs-outage"].contains(&key.as_str()) {
                 flags.insert(key, "true".into());
                 continue;
             }
@@ -115,6 +118,11 @@ fn real_main() -> Result<()> {
             println!("{out}");
             Ok(())
         }
+        "chaos" => {
+            let (_, out) = exp::chaos::run(&args.opts()?);
+            println!("{out}");
+            Ok(())
+        }
         "ablate" => cmd_ablate(&args),
         "all" => {
             let opts = args.opts()?;
@@ -136,9 +144,11 @@ fn real_main() -> Result<()> {
                 "wow — WOW scheduler reproduction (CCGRID 2025)\n\n\
                  subcommands:\n  \
                  run     --workflow NAME [--strategy orig|cws|wow] [--dfs ceph|nfs]\n          \
-                 [--nodes N] [--gbit F] [--seed S] [--c-node N] [--c-task N] [--xla]\n  \
+                 [--nodes N] [--gbit F] [--seed S] [--c-node N] [--c-task N] [--xla]\n          \
+                 [--crashes N] [--fail-prob P] [--recovery S] [--degrades N] [--nfs-outage]\n  \
                  table1 | table2 | table3 | fig4 | fig5 | gini | all\n          \
                  [--seeds 0,1,2] [--quick] [--xla]\n  \
+                 chaos   fault-injection sweep: crashes x failure rates (see DESIGN.md \u{a7}7)\n  \
                  ablate  c_node/c_task sweep over the pattern workflows"
             );
             Ok(())
@@ -172,6 +182,17 @@ fn cmd_run(args: &Args) -> Result<()> {
             .transpose()
             .context("--speeds wants a comma list like 1.0,0.5,1.0")?
             .unwrap_or_default(),
+        fault: wow::fault::FaultConfig {
+            node_crashes: args.get("crashes", 0usize)?,
+            task_fail_prob: args.get("fail-prob", 0.0f64)?,
+            link_degrades: args.get("degrades", 0usize)?,
+            nfs_outage: args.has("nfs-outage"),
+            recovery_s: {
+                let rec = args.get("recovery", 120.0f64)?;
+                (rec > 0.0).then_some(rec)
+            },
+            ..Default::default()
+        },
     };
     let backend = exp::make_backend(args.has("xla"));
     eprintln!(
@@ -199,6 +220,18 @@ fn cmd_run(args: &Args) -> Result<()> {
     t.row(vec!["peak replicas".into(), format!("{:.1} GB", m.peak_replica_gb())]);
     t.row(vec!["Gini storage".into(), format!("{:.2}", m.gini_storage())]);
     t.row(vec!["Gini CPU".into(), format!("{:.2}", m.gini_cpu())]);
+    if cfg.fault.enabled() {
+        t.row(vec!["node crashes".into(), m.node_crashes.to_string()]);
+        t.row(vec!["link brownouts".into(), m.link_degrades.to_string()]);
+        t.row(vec!["task failures".into(), m.task_failures.to_string()]);
+        t.row(vec!["tasks rerun".into(), m.tasks_rerun.to_string()]);
+        t.row(vec!["COPs aborted".into(), m.cops_aborted.to_string()]);
+        t.row(vec!["recovery traffic".into(), format!("{:.2} GB", m.recovery_gb())]);
+        t.row(vec![
+            "wasted compute".into(),
+            format!("{:.2} h ({:.1}%)", m.wasted_compute_hours, m.wasted_compute_pct()),
+        ]);
+    }
     t.row(vec!["sim wallclock".into(), format!("{:.2} s", t0.elapsed().as_secs_f64())]);
     println!("{}", t.render());
     Ok(())

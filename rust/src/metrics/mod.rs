@@ -4,7 +4,11 @@ use crate::util::stats;
 use crate::util::units::{Bytes, SimTime};
 
 /// Metrics of one simulated workflow execution.
-#[derive(Debug, Clone, Default)]
+///
+/// `PartialEq` compares every field bit-for-bit — the determinism
+/// regression tests rely on this (same config + seed ⇒ identical
+/// metrics, with and without an active fault plan).
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct RunMetrics {
     pub workflow: String,
     pub strategy: String,
@@ -40,6 +44,25 @@ pub struct RunMetrics {
     /// this is what the paper's "moderate increase of temporary storage"
     /// claim is about).
     pub peak_replica_bytes: f64,
+
+    // --- fault injection & resilience (all zero on fault-free runs) ---
+    /// Worker-node crashes (and NFS outages) that fired during the run.
+    pub node_crashes: u64,
+    /// Link brownouts that fired during the run.
+    pub link_degrades: u64,
+    /// Injected transient task failures (DynamicCloudSim-style).
+    pub task_failures: u64,
+    /// Task executions discarded and re-queued: killed by a crash or
+    /// re-run to regenerate lost output replicas (lineage healing).
+    pub tasks_rerun: u64,
+    /// COPs aborted mid-flight by crashes (their moved bytes are waste).
+    pub cops_aborted: u64,
+    /// Core-hours spent on work later discarded (killed executions and
+    /// failed attempts) — the chaos experiment's wasted-compute column.
+    pub wasted_compute_hours: f64,
+    /// DFS re-replication traffic triggered by crashes (recovery
+    /// traffic; Ceph object healing).
+    pub recovery_bytes: Bytes,
 }
 
 impl RunMetrics {
@@ -85,6 +108,19 @@ impl RunMetrics {
     /// Peak temporary storage in GB.
     pub fn peak_replica_gb(&self) -> f64 {
         self.peak_replica_bytes / 1e9
+    }
+
+    /// Crash-recovery traffic in GB.
+    pub fn recovery_gb(&self) -> f64 {
+        self.recovery_bytes.as_gb()
+    }
+
+    /// Wasted compute as a share of all allocated compute, in percent.
+    pub fn wasted_compute_pct(&self) -> f64 {
+        if self.cpu_alloc_hours <= 0.0 {
+            return 0.0;
+        }
+        self.wasted_compute_hours / self.cpu_alloc_hours * 100.0
     }
 }
 

@@ -124,6 +124,41 @@ impl FlowNet {
             .map(|f| Bytes(f.remaining.max(0.0).round() as u64))
     }
 
+    /// The resources an active flow occupies, if it is still active.
+    pub fn flow_resources(&self, id: FlowId) -> Option<&[ResourceId]> {
+        self.flows.iter().find(|f| f.id == id).map(|f| f.resources.as_slice())
+    }
+
+    /// Active flows crossing any of the given resources, in arrival
+    /// order (deterministic). Used by fault handling to find the blast
+    /// radius of a node crash.
+    pub fn flows_using_any(&self, rs: &[ResourceId]) -> Vec<FlowId> {
+        self.flows
+            .iter()
+            .filter(|f| f.resources.iter().any(|r| rs.contains(r)))
+            .map(|f| f.id)
+            .collect()
+    }
+
+    /// All active flow ids in arrival order.
+    pub fn active_flow_ids(&self) -> Vec<FlowId> {
+        self.flows.iter().map(|f| f.id).collect()
+    }
+
+    /// Current max-min fair rate of an active flow in bytes/s
+    /// (recomputes the allocation if stale).
+    pub fn rate_of(&mut self, id: FlowId) -> Option<f64> {
+        if self.dirty {
+            self.recompute();
+        }
+        self.flows.iter().find(|f| f.id == id).map(|f| f.rate)
+    }
+
+    /// Registered capacity of a resource in bytes/s.
+    pub fn capacity_of(&self, r: ResourceId) -> f64 {
+        self.capacities[r.0]
+    }
+
     /// Recompute max-min fair rates via progressive filling.
     pub fn recompute(&mut self) {
         self.dirty = false;
@@ -375,6 +410,24 @@ mod tests {
         let t = run_until_done(&mut net, b);
         // b alone at full rate.
         assert!((t.as_secs_f64() - 10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn flow_introspection_accessors() {
+        let (mut net, r) = net_with(&[100.0, 50.0]);
+        let a = net.add_flow(Bytes(1000), vec![r[0]]);
+        let b = net.add_flow(Bytes(1000), vec![r[0], r[1]]);
+        assert_eq!(net.flow_resources(a), Some(&[r[0]][..]));
+        assert_eq!(net.flows_using_any(&[r[1]]), vec![b]);
+        assert_eq!(net.flows_using_any(&[r[0]]), vec![a, b]);
+        assert_eq!(net.active_flow_ids(), vec![a, b]);
+        assert_eq!(net.capacity_of(r[1]), 50.0);
+        // Max-min: b bottlenecked at r1 (50), a takes the rest of r0.
+        assert!((net.rate_of(b).unwrap() - 50.0).abs() < 1e-9);
+        assert!((net.rate_of(a).unwrap() - 50.0).abs() < 1e-9);
+        net.cancel(a);
+        assert_eq!(net.flow_resources(a), None);
+        assert_eq!(net.rate_of(a), None);
     }
 
     #[test]

@@ -33,7 +33,9 @@ impl Scheduler for CwsScheduler {
                 .then(a.submitted_seq.cmp(&b.submitted_seq))
         });
 
-        let workers: Vec<_> = view.cluster.workers().collect();
+        // Only alive nodes are placement targets; the set may shrink and
+        // grow mid-run under fault injection.
+        let workers: Vec<_> = view.cluster.alive_workers().collect();
         let mut free: Vec<(u32, crate::util::units::Bytes)> = workers
             .iter()
             .map(|&n| {

@@ -30,7 +30,9 @@ impl Scheduler for OrigScheduler {
         let mut queue: Vec<&super::ReadyTask> = view.ready.iter().collect();
         queue.sort_by_key(|t| t.submitted_seq);
 
-        let workers: Vec<_> = view.cluster.workers().collect();
+        // Only alive nodes are placement targets; the set may shrink and
+        // grow mid-run under fault injection.
+        let workers: Vec<_> = view.cluster.alive_workers().collect();
         if workers.is_empty() {
             return actions;
         }
@@ -111,6 +113,21 @@ mod tests {
             })
             .collect();
         assert_eq!(nodes, vec![NodeId(0), NodeId(1), NodeId(2), NodeId(0)]);
+    }
+
+    #[test]
+    fn dead_nodes_are_skipped() {
+        let (_n, mut c) = view_fixture(3);
+        c.set_alive(NodeId(1), false);
+        let ready = vec![rt(0, 1), rt(1, 1), rt(2, 1)];
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let mut s = OrigScheduler::new();
+        let actions = s.iterate(&view, &mut Dps::new(0));
+        assert_eq!(actions.len(), 3);
+        for a in &actions {
+            let Action::Start { node, .. } = a else { panic!() };
+            assert_ne!(*node, NodeId(1), "dead node must not receive tasks");
+        }
     }
 
     #[test]

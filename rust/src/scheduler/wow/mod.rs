@@ -78,7 +78,10 @@ impl Scheduler for WowScheduler {
 
     fn iterate(&mut self, view: &SchedView<'_>, dps: &mut Dps) -> Vec<Action> {
         let mut actions = Vec::new();
-        let workers: Vec<NodeId> = view.cluster.workers().collect();
+        // Only alive nodes may start tasks or receive COPs; a crashed
+        // node's replicas were already invalidated by the DPS, so the
+        // cost matrix below never reports it as prepared either.
+        let workers: Vec<NodeId> = view.cluster.alive_workers().collect();
         if workers.is_empty() || view.ready.is_empty() {
             return actions;
         }
@@ -334,6 +337,28 @@ mod tests {
         let actions = s.iterate(&view, &mut dps);
         assert!(starts(&actions).is_empty(), "holder is full, cannot start");
         assert_eq!(cops(&actions), vec![(0, 0)], "prepare the free node");
+    }
+
+    #[test]
+    fn dead_nodes_get_neither_tasks_nor_cops() {
+        let (_n, mut c) = fixture(3);
+        // Node 1 holds the data but is busy; node 2 is free but dead.
+        c.reserve(NodeId(1), 16, Bytes::ZERO);
+        c.set_alive(NodeId(2), false);
+        let mut dps = Dps::new(1);
+        dps.register_output(FileId(0), Bytes::from_gb(1.0), NodeId(1));
+        let ready = vec![rt(0, 1, vec![FileId(0)])];
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let mut s = WowScheduler::new(WowParams::default());
+        let actions = s.iterate(&view, &mut dps);
+        for a in &actions {
+            match a {
+                Action::Start { node, .. } => assert_ne!(*node, NodeId(2)),
+                Action::StartCop { dst, .. } => assert_ne!(*dst, NodeId(2)),
+            }
+        }
+        // The only legal move is a COP toward the free alive node 0.
+        assert_eq!(cops(&actions), vec![(0, 0)]);
     }
 
     #[test]

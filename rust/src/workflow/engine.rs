@@ -33,6 +33,11 @@ pub struct WorkflowEngine {
     group_fired: Vec<Vec<bool>>,
     completed_tasks: usize,
     task_done: Vec<bool>,
+    /// Per task: completed once, then marked runnable again because its
+    /// outputs were lost to a crash (lineage re-execution). A replayed
+    /// completion redoes the bookkeeping but must not re-materialize
+    /// consumers — they already exist.
+    revived: Vec<bool>,
     /// Workflow input files (subset of `files`).
     input_files: Vec<FileId>,
     /// Precomputed: per stage, the consumer stages referencing it
@@ -90,6 +95,7 @@ impl WorkflowEngine {
             group_fired: vec![Vec::new(); n],
             completed_tasks: 0,
             task_done: Vec::new(),
+            revived: Vec::new(),
             input_files: Vec::new(),
             consumers,
             aggregate_stages,
@@ -184,6 +190,7 @@ impl WorkflowEngine {
         assert!(!self.task_done[t.0 as usize], "task completed twice: {t:?}");
         self.task_done[t.0 as usize] = true;
         self.completed_tasks += 1;
+        let replay = std::mem::replace(&mut self.revived[t.0 as usize], false);
         let stage = self.task(t).stage;
         self.stage_completed[stage.0] += 1;
 
@@ -193,7 +200,10 @@ impl WorkflowEngine {
         // handled by the deferred scan below, after closure propagation —
         // firing here would race with upstream stages whose closure is
         // only established later in this very completion.
-        for ci in 0..self.consumers[stage.0].len() {
+        // A replayed completion (lineage re-execution after a crash)
+        // skips this: its consumers were materialized the first time.
+        let n_consumers = if replay { 0 } else { self.consumers[stage.0].len() };
+        for ci in 0..n_consumers {
             let s_idx = self.consumers[stage.0][ci].0;
             match self.spec.stages[s_idx].rule {
                 Rule::PerTask { from } if from == stage => {
@@ -251,6 +261,45 @@ impl WorkflowEngine {
     /// current or future task (replica GC input, §III-A).
     pub fn take_dead_files(&mut self) -> Vec<FileId> {
         std::mem::take(&mut self.dead_files)
+    }
+
+    /// Has this materialized task completed (and not been revived)?
+    pub fn is_done(&self, t: TaskId) -> bool {
+        self.task_done[t.0 as usize]
+    }
+
+    /// Crash recovery (lineage re-execution): mark a *completed* task as
+    /// runnable again because every replica of one of its outputs was
+    /// lost. Its consumers stay materialized; re-running regenerates the
+    /// same file ids with the same pre-sampled sizes, and the replayed
+    /// completion only redoes the bookkeeping (see `complete_task`).
+    pub fn revive_task(&mut self, t: TaskId) {
+        assert!(self.task_done[t.0 as usize], "revive of unfinished task {t:?}");
+        self.task_done[t.0 as usize] = false;
+        self.revived[t.0 as usize] = true;
+        self.completed_tasks -= 1;
+        let stage = self.tasks[t.0 as usize].stage;
+        self.stage_completed[stage.0] -= 1;
+        // Its input reads will be repeated; rebalance the liveness
+        // counters so dead-file detection stays exact.
+        let inputs = self.tasks[t.0 as usize].inputs.clone();
+        for f in inputs {
+            self.file_refs[f.0 as usize].1 -= 1;
+        }
+    }
+
+    /// Can any current or future task still read `f`? The inverse of
+    /// the dead-file condition — used by crash recovery to decide which
+    /// lost replicas force a lineage re-execution. Workflow inputs are
+    /// never "needed" here: they live in the DFS, not on workers.
+    pub fn file_needed(&self, f: FileId) -> bool {
+        let file = &self.files[f.0 as usize];
+        let Some(prod) = file.producer else { return false };
+        let prod_stage = self.tasks[prod.0 as usize].stage;
+        let future_readers =
+            self.all_consumers[prod_stage.0].iter().any(|c| !self.stage_closed[c.0]);
+        let (mat, done) = self.file_refs[f.0 as usize];
+        future_readers || mat > done
     }
 
     /// Scan GroupBy/GatherAll stages for satisfied, not-yet-fired
@@ -406,6 +455,7 @@ impl WorkflowEngine {
         };
         self.tasks.push(task);
         self.task_done.push(false);
+        self.revived.push(false);
         self.stage_tasks[stage.0].push(id);
         id
     }
@@ -603,6 +653,56 @@ mod tests {
             assert_eq!(eng.file(*f).size, *s);
             assert!(s.as_u64() > 0);
         }
+    }
+
+    #[test]
+    fn revive_replays_completion_without_rematerializing() {
+        let spec = WorkflowSpec {
+            name: "rv".into(),
+            stages: vec![
+                st("a", Rule::Source { count: 2, inputs_per_task: 0 }, 1),
+                st("b", Rule::PerTask { from: StageId(0) }, 1),
+            ],
+            input_files_gb: vec![],
+        };
+        let mut eng = WorkflowEngine::new(spec, 5);
+        let ready = eng.start();
+        let b0 = eng.complete_task(ready[0]);
+        assert_eq!(b0.len(), 1);
+        let n_before = eng.n_tasks_materialized();
+        // Crash lost a0's output: revive and re-complete.
+        assert!(eng.is_done(ready[0]));
+        eng.revive_task(ready[0]);
+        assert!(!eng.is_done(ready[0]));
+        assert!(!eng.all_done());
+        let replay = eng.complete_task(ready[0]);
+        assert!(replay.is_empty(), "consumers must not re-materialize");
+        assert_eq!(eng.n_tasks_materialized(), n_before);
+        // The rest of the workflow still terminates.
+        let b1 = eng.complete_task(ready[1]);
+        assert_eq!(b1.len(), 1);
+        assert!(eng.complete_task(b0[0]).is_empty());
+        assert!(eng.complete_task(b1[0]).is_empty());
+        assert!(eng.all_done());
+    }
+
+    #[test]
+    fn file_needed_tracks_liveness() {
+        let spec = WorkflowSpec {
+            name: "fn".into(),
+            stages: vec![
+                st("a", Rule::Source { count: 1, inputs_per_task: 0 }, 1),
+                st("b", Rule::PerTask { from: StageId(0) }, 1),
+            ],
+            input_files_gb: vec![],
+        };
+        let mut eng = WorkflowEngine::new(spec, 5);
+        let ready = eng.start();
+        let b = eng.complete_task(ready[0]);
+        let a_out = eng.task(ready[0]).outputs[0].0;
+        assert!(eng.file_needed(a_out), "b is materialized but not done");
+        let _ = eng.complete_task(b[0]);
+        assert!(!eng.file_needed(a_out), "all readers finished, stages closed");
     }
 
     #[test]

@@ -1,0 +1,84 @@
+//! Determinism regression tests: a run is a pure function of
+//! `(workload, config, seed)`. Same `RunConfig` + seed must produce a
+//! bit-identical `RunMetrics` across repeated runs for every strategy —
+//! with and without an active fault plan. These protect the
+//! event-ordering invariants (stable event queue, deterministic hashing,
+//! sorted crash-recovery scans) that the fault subsystem stresses.
+
+use wow::dfs::DfsKind;
+use wow::exec::{run, RunConfig};
+use wow::fault::FaultConfig;
+use wow::scheduler::Strategy;
+use wow::workflow::patterns;
+
+fn base_cfg(strategy: Strategy, dfs: DfsKind) -> RunConfig {
+    RunConfig { strategy, dfs, seed: 7, ..Default::default() }
+}
+
+fn chaos() -> FaultConfig {
+    FaultConfig {
+        node_crashes: 2,
+        crash_window_s: (30.0, 300.0),
+        recovery_s: Some(90.0),
+        task_fail_prob: 0.1,
+        link_degrades: 1,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn metrics_bit_identical_across_reruns_all_strategies() {
+    let spec = patterns::group();
+    for strategy in [Strategy::Orig, Strategy::Cws, Strategy::Wow] {
+        for faulted in [false, true] {
+            let mut cfg = base_cfg(strategy, DfsKind::Ceph);
+            if faulted {
+                cfg.fault = chaos();
+            }
+            let a = run(&spec, &cfg);
+            let b = run(&spec, &cfg);
+            assert_eq!(a, b, "{strategy:?} faulted={faulted}: runs must be bit-identical");
+        }
+    }
+}
+
+#[test]
+fn metrics_bit_identical_on_nfs_under_faults() {
+    let spec = patterns::fork();
+    let mut cfg = base_cfg(Strategy::Wow, DfsKind::Nfs);
+    cfg.fault = chaos();
+    let a = run(&spec, &cfg);
+    let b = run(&spec, &cfg);
+    assert_eq!(a, b);
+}
+
+#[test]
+fn default_fault_config_is_inert() {
+    // Zero behavioral drift: a config that spells out
+    // `FaultConfig::default()` is the same run as one that never
+    // mentions faults, and reports all-zero fault metrics.
+    let spec = patterns::fork();
+    let plain = run(&spec, &base_cfg(Strategy::Wow, DfsKind::Ceph));
+    let mut cfg = base_cfg(Strategy::Wow, DfsKind::Ceph);
+    cfg.fault = FaultConfig::default();
+    let explicit = run(&spec, &cfg);
+    assert_eq!(plain, explicit);
+    assert_eq!(plain.node_crashes, 0);
+    assert_eq!(plain.task_failures, 0);
+    assert_eq!(plain.tasks_rerun, 0);
+    assert_eq!(plain.wasted_compute_hours, 0.0);
+}
+
+#[test]
+fn fault_schedule_varies_with_seed_but_not_within_it() {
+    let spec = patterns::group();
+    let mut cfg = base_cfg(Strategy::Wow, DfsKind::Ceph);
+    cfg.fault = chaos();
+    let a = run(&spec, &cfg);
+    let mut cfg2 = cfg.clone();
+    cfg2.seed = 8;
+    let b = run(&spec, &cfg2);
+    assert_ne!(a.makespan, b.makespan, "different seed, different crash schedule");
+    let b2 = run(&spec, &cfg2);
+    assert_eq!(b, b2);
+}

@@ -234,6 +234,170 @@ fn flownet_conserves_bytes_under_random_load() {
     }
 }
 
+/// Check that the current rate allocation is a valid max-min fair
+/// share: feasible on every resource, every flow gets a positive rate,
+/// and every flow is bottlenecked at some saturated resource.
+fn assert_valid_max_min(
+    net: &mut wow::net::FlowNet,
+    flow_res: &[(wow::net::FlowId, Vec<wow::net::ResourceId>)],
+) {
+    use wow::net::ResourceId;
+    let active: Vec<_> = net.active_flow_ids();
+    if active.is_empty() {
+        return;
+    }
+    // Per-resource rate sums.
+    let mut sums: std::collections::HashMap<ResourceId, f64> = std::collections::HashMap::new();
+    for (id, rs) in flow_res {
+        let Some(rate) = net.rate_of(*id) else { continue };
+        assert!(rate > 0.0, "active flow {id:?} starved (rate {rate})");
+        for r in rs {
+            *sums.entry(*r).or_insert(0.0) += rate;
+        }
+    }
+    for (r, sum) in &sums {
+        let cap = net.capacity_of(*r);
+        assert!(
+            *sum <= cap * (1.0 + 1e-6),
+            "resource {r:?} oversubscribed: {sum} > {cap}"
+        );
+    }
+    // Bottleneck property: each active flow crosses a saturated resource.
+    for (id, rs) in flow_res {
+        if net.rate_of(*id).is_none() {
+            continue;
+        }
+        let saturated = rs.iter().any(|r| {
+            let cap = net.capacity_of(*r);
+            sums.get(r).copied().unwrap_or(0.0) >= cap * (1.0 - 1e-6)
+        });
+        assert!(saturated, "flow {id:?} has no saturated bottleneck");
+    }
+}
+
+#[test]
+fn flownet_cancellation_conserves_bytes_and_reconverges() {
+    use wow::net::{FlowNet, ResourceId};
+    use wow::util::units::{Bandwidth, SimTime};
+    let mut rng = Rng::new(91);
+    for round in 0..25 {
+        let mut net = FlowNet::new();
+        let n_res = 2 + rng.index(5);
+        let res: Vec<ResourceId> = (0..n_res)
+            .map(|_| net.add_resource(Bandwidth(20.0 + rng.next_f64() * 300.0)))
+            .collect();
+        // Our own ledger: per flow (size, resources, bytes moved).
+        struct Ledger {
+            id: wow::net::FlowId,
+            size: u64,
+            res: Vec<ResourceId>,
+            moved: f64,
+        }
+        let n_flows = 3 + rng.index(15);
+        let mut flows: Vec<Ledger> = (0..n_flows)
+            .map(|_| {
+                let mut rs: Vec<ResourceId> = Vec::new();
+                for _ in 0..(1 + rng.index(3)) {
+                    let r = *rng.choice(&res);
+                    if !rs.contains(&r) {
+                        rs.push(r);
+                    }
+                }
+                let size = 1_000 + rng.below(500_000);
+                let id = net.add_flow(Bytes(size), rs.clone());
+                Ledger { id, size, res: rs, moved: 0.0 }
+            })
+            .collect();
+        let flow_res: Vec<(wow::net::FlowId, Vec<ResourceId>)> =
+            flows.iter().map(|f| (f.id, f.res.clone())).collect();
+
+        let mut cancelled = 0;
+        while let Some(t_next) = net.next_completion() {
+            let now = net.now();
+            // Half the steps stop mid-transfer and cancel a random
+            // still-active flow; the rest run to the next completion.
+            let mid_cancel = rng.next_f64() < 0.5 && t_next > now;
+            let target = if mid_cancel { SimTime((now.0 + t_next.0) / 2) } else { t_next };
+            net.advance_to(target);
+            // Update the ledger from the authoritative remaining().
+            for f in flows.iter_mut() {
+                if let Some(rem) = net.remaining(f.id) {
+                    assert!(
+                        rem.as_u64() <= f.size,
+                        "remaining grew: {} > {}",
+                        rem.as_u64(),
+                        f.size
+                    );
+                    f.moved = f.size as f64 - rem.as_f64();
+                }
+            }
+            for done in net.take_completed() {
+                let f = flows.iter_mut().find(|f| f.id == done).unwrap();
+                f.moved = f.size as f64;
+            }
+            if mid_cancel {
+                let live: Vec<wow::net::FlowId> = net.active_flow_ids();
+                if !live.is_empty() {
+                    // Snapshot progress, then cancel mid-transfer.
+                    let victim = live[rng.index(live.len())];
+                    let f = flows.iter_mut().find(|f| f.id == victim).unwrap();
+                    f.moved = f.size as f64 - net.remaining(victim).unwrap().as_f64();
+                    assert!(net.cancel(victim));
+                    cancelled += 1;
+                    // The allocation must re-converge to a valid
+                    // max-min fair share without the cancelled flow.
+                    assert_valid_max_min(&mut net, &flow_res);
+                }
+            }
+        }
+        // Conservation: bytes_through per resource equals the sum of
+        // what our ledger saw each flow move across it — cancelling
+        // must neither lose nor invent traffic.
+        for (ri, r) in res.iter().enumerate() {
+            let expected: f64 = flows
+                .iter()
+                .filter(|f| f.res.contains(r))
+                .map(|f| f.moved)
+                .sum();
+            let got = net.bytes_through[r.0];
+            let tol = flows.len() as f64 + 1.0; // remaining() rounds to whole bytes
+            assert!(
+                (got - expected).abs() <= tol,
+                "round {round} resource {ri}: through {got} vs ledger {expected} ({cancelled} cancelled)"
+            );
+        }
+    }
+}
+
+#[test]
+fn flownet_cancel_never_leaves_negative_remaining() {
+    use wow::net::FlowNet;
+    use wow::util::units::Bandwidth;
+    let mut rng = Rng::new(17);
+    for _ in 0..50 {
+        let mut net = FlowNet::new();
+        let r = net.add_resource(Bandwidth(100.0));
+        let a = net.add_flow(Bytes(1_000 + rng.below(10_000)), vec![r]);
+        let b = net.add_flow(Bytes(1_000 + rng.below(10_000)), vec![r]);
+        // Advance halfway to the first completion, then cancel.
+        let t = net.next_completion().unwrap();
+        net.advance_to(wow::util::units::SimTime(t.0 / 2));
+        for id in [a, b] {
+            let rem = net.remaining(id).expect("mid-transfer, still active");
+            assert!(rem.as_u64() > 0, "not yet complete");
+        }
+        net.cancel(a);
+        assert_eq!(net.remaining(a), None, "cancelled flow is gone");
+        // The survivor finishes alone at full rate with sane accounting.
+        while let Some(t) = net.next_completion() {
+            net.advance_to(t);
+            net.take_completed();
+        }
+        assert!(net.bytes_through[r.0] > 0.0);
+        assert_eq!(net.active_flows(), 0);
+    }
+}
+
 #[test]
 fn dps_plan_never_overshoots_and_covers_missing() {
     use wow::cluster::NodeId;
