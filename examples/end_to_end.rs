@@ -44,7 +44,16 @@ fn main() {
 
     let mut t = Table::new(
         "End-to-end: Chip-Seq, 8 nodes, 1 Gbit",
-        &["DFS", "Strategy", "Makespan [min]", "vs Orig", "CPU [h]", "no-COP", "COPs used", "wall [s]"],
+        &[
+            "DFS",
+            "Strategy",
+            "Makespan [min]",
+            "vs Orig",
+            "CPU [h]",
+            "no-COP",
+            "COPs used",
+            "wall [s]",
+        ],
     );
     let mut summary = Vec::new();
     for (dfs, paper_delta) in paper {

@@ -20,14 +20,20 @@ fn main() {
     for spec in patterns::all_patterns() {
         let mut row = vec![spec.name.clone()];
         for strat in [Strategy::Orig, Strategy::Cws, Strategy::Wow] {
-            let m1 = run(
-                &spec,
-                &RunConfig { dfs: DfsKind::Ceph, strategy: strat, link_gbit: 1.0, ..Default::default() },
-            );
-            let m2 = run(
-                &spec,
-                &RunConfig { dfs: DfsKind::Ceph, strategy: strat, link_gbit: 2.0, ..Default::default() },
-            );
+            let cfg1 = RunConfig {
+                dfs: DfsKind::Ceph,
+                strategy: strat,
+                link_gbit: 1.0,
+                ..Default::default()
+            };
+            let m1 = run(&spec, &cfg1);
+            let cfg2 = RunConfig {
+                dfs: DfsKind::Ceph,
+                strategy: strat,
+                link_gbit: 2.0,
+                ..Default::default()
+            };
+            let m2 = run(&spec, &cfg2);
             row.push(format!(
                 "{:+.1}%",
                 rel_change_pct(m1.makespan_min(), m2.makespan_min())

@@ -15,7 +15,10 @@ fn main() {
     let spec = patterns::chain();
     for dfs in [DfsKind::Ceph, DfsKind::Nfs] {
         let mut t = Table::new(
-            &format!("Chain scalability on {} (efficiency = makespan(1)/(makespan(n)*n))", dfs.label()),
+            &format!(
+                "Chain scalability on {} (efficiency = makespan(1)/(makespan(n)*n))",
+                dfs.label()
+            ),
             &["Nodes", "CWS [min]", "CWS eff", "WOW [min]", "WOW eff"],
         );
         let mut base = [f64::NAN; 2];

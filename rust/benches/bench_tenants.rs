@@ -1,0 +1,104 @@
+//! Bench: the multi-workflow scheduling iteration hot path — one WOW
+//! iteration over the union of ready tasks of 8–32 concurrent tenants
+//! (cost-matrix build + ILP + COP planning/price queries), plus
+//! end-to-end multi-tenant simulations. The per-iteration cost is what
+//! bounds scheduler responsiveness on a shared cluster.
+//!
+//! `cargo bench --bench bench_tenants`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use wow::cluster::{Cluster, NodeId, NodeSpec};
+use wow::dps::Dps;
+use wow::net::FlowNet;
+use wow::scheduler::wow::{WowParams, WowScheduler};
+use wow::scheduler::{ReadyTask, SchedView, Scheduler};
+use wow::util::rng::Rng;
+use wow::util::units::{Bytes, SimTime};
+use wow::workflow::task::{FileId, TaskId};
+use wow::workload::{ns_file, ns_task};
+
+/// A contended multi-tenant instance: every tenant has `tasks_per`
+/// ready tasks, each with two intermediate inputs replicated on random
+/// nodes — so preparedness checks, COP planning, and price queries all
+/// exercise the shared DPS.
+fn instance(
+    n_tenants: usize,
+    tasks_per: usize,
+    n_nodes: usize,
+    rng: &mut Rng,
+) -> (Dps, Vec<ReadyTask>, Vec<u64>) {
+    let mut dps = Dps::new(42);
+    let mut ready = Vec::new();
+    let mut seq = 0u64;
+    for tenant in 0..n_tenants {
+        for k in 0..tasks_per {
+            let f0 = ns_file(tenant, FileId(2 * k as u64));
+            let f1 = ns_file(tenant, FileId(2 * k as u64 + 1));
+            for &f in &[f0, f1] {
+                let holder = NodeId(rng.index(n_nodes));
+                dps.register_output(f, Bytes::from_gb(rng.range_f64(0.1, 2.0)), holder);
+            }
+            ready.push(ReadyTask {
+                id: ns_task(tenant, TaskId(k as u64)),
+                cores: 2,
+                mem: Bytes::from_gb(4.0),
+                rank: rng.index(20) as u32,
+                input_bytes: Bytes::from_gb(1.0),
+                intermediate_inputs: vec![f0, f1],
+                submitted_seq: seq,
+                tenant,
+            });
+            seq += 1;
+        }
+    }
+    let prec: Vec<u64> = (0..n_tenants as u64).collect();
+    (dps, ready, prec)
+}
+
+fn main() {
+    println!("bench_tenants — multi-workflow scheduling iteration\n");
+    let n_nodes = 8;
+    let mut net = FlowNet::new();
+    let cluster = Cluster::build(&mut net, n_nodes, NodeSpec::paper_worker(1.0), None);
+
+    for &tenants in &[8usize, 16, 32] {
+        let mut rng = Rng::new(7);
+        let (mut dps, ready, prec) = instance(tenants, 8, n_nodes, &mut rng);
+        let mut sched = WowScheduler::new(WowParams::default());
+        common::bench_n(
+            &format!("wow iterate ({tenants:>2} tenants x 8 ready = {:>3} tasks)", ready.len()),
+            50,
+            || {
+                let view = SchedView {
+                    now: SimTime::ZERO,
+                    cluster: &cluster,
+                    ready: &ready,
+                    tenant_prec: &prec,
+                };
+                let _ = sched.iterate(&view, &mut dps);
+            },
+        );
+    }
+
+    // End-to-end probe: an 8-tenant Poisson ensemble of the pattern
+    // workflows under each strategy.
+    use wow::exec::{run_workload, RunConfig};
+    use wow::scheduler::Strategy;
+    use wow::workflow::patterns;
+    use wow::workload::{Arrival, WorkloadSpec};
+    let mix = vec![patterns::chain(), patterns::fork(), patterns::group()];
+    let wl = WorkloadSpec::from_mix(
+        "bench-8",
+        &mix,
+        8,
+        &Arrival::Poisson { mean_gap_s: 60.0 },
+        0,
+    );
+    for strategy in [Strategy::Orig, Strategy::Cws, Strategy::Wow] {
+        common::bench_n(&format!("full sim: 8-tenant poisson / {strategy:?} / Ceph"), 3, || {
+            let _ = run_workload(&wl, &RunConfig { strategy, ..Default::default() });
+        });
+    }
+}

@@ -459,8 +459,7 @@ mod tests {
             ceph.register_input(FileId(f), Bytes::from_gb(1.0), &c, &mut rng);
         }
         let dead = NodeId(1);
-        let affected =
-            ceph.placement.values().filter(|reps| reps.contains(&dead)).count();
+        let affected = ceph.placement.values().filter(|reps| reps.contains(&dead)).count();
         c.set_alive(dead, false);
         let parts = ceph.fail_node(dead, &c, &mut rng);
         // One re-replication stream per object the dead OSD held.
@@ -474,9 +473,7 @@ mod tests {
         for f in 0..32u64 {
             let r = ceph.read(FileId(f), Bytes::from_gb(1.0), NodeId(0), &c, &mut rng);
             let dead_res = [c.node(dead).disk_read, c.node(dead).nic_up];
-            assert!(r
-                .iter()
-                .all(|p| p.resources.iter().all(|x| !dead_res.contains(x))));
+            assert!(r.iter().all(|p| p.resources.iter().all(|x| !dead_res.contains(x))));
         }
     }
 

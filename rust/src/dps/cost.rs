@@ -184,13 +184,11 @@ mod tests {
         let mut rng = Rng::new(5);
         let (t, f, n) = (7, 19, 5);
         let req: Vec<f32> = (0..t * f).map(|_| (rng.next_f64() < 0.3) as u8 as f32).collect();
-        let present: Vec<f32> =
-            (0..f * n).map(|_| (rng.next_f64() < 0.5) as u8 as f32).collect();
+        let present: Vec<f32> = (0..f * n).map(|_| (rng.next_f64() < 0.5) as u8 as f32).collect();
         let sizes: Vec<f32> = (0..f).map(|_| rng.range_f64(0.1, 4.0) as f32).collect();
         let (m, l) = NativeCost.missing_local(&req, &present, &sizes, t, f, n);
         for ti in 0..t {
-            let total: f32 =
-                (0..f).map(|fi| req[ti * f + fi] * sizes[fi]).sum();
+            let total: f32 = (0..f).map(|fi| req[ti * f + fi] * sizes[fi]).sum();
             for ni in 0..n {
                 let got = m[ti * n + ni] + l[ti * n + ni];
                 assert!((got - total).abs() < 1e-3, "t{ti} n{ni}: {got} vs {total}");

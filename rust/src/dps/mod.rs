@@ -339,8 +339,10 @@ impl Dps {
                 }
             }
         }
-        let sizes: Vec<f32> =
-            files.iter().map(|file| self.sizes.get(file).map(|b| b.as_gb() as f32).unwrap_or(0.0)).collect();
+        let sizes: Vec<f32> = files
+            .iter()
+            .map(|file| self.sizes.get(file).map(|b| b.as_gb() as f32).unwrap_or(0.0))
+            .collect();
         let (missing, local) = if t == 0 || f == 0 || n == 0 {
             (vec![0f32; t * n], vec![0f32; t * n])
         } else {

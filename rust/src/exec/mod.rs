@@ -14,6 +14,16 @@
 //! locally, with COPs moving data between nodes in parallel to execution.
 //! A scheduling iteration runs whenever a task finishes, a COP finishes,
 //! or new tasks are submitted (§III-B).
+//!
+//! The executor drives a [`WorkloadSpec`]: N tenant workflows, each with
+//! its own [`WorkflowEngine`], sharing one cluster / network / DFS / DPS.
+//! Engine-local task and file ids are namespaced per tenant (see
+//! [`crate::workload`]); each tenant is submitted at its arrival time and
+//! every scheduling iteration runs over the union of ready tasks, ordered
+//! across tenants by the configured [`TenantPolicy`]. A single-tenant
+//! workload (what [`run`] builds) takes exactly the pre-workload code
+//! path: tenant 0's namespace is the identity and an empty precedence
+//! vector leaves every strategy on its single-workflow behaviour.
 
 use crate::cluster::{Cluster, NodeId, NodeSpec};
 use crate::dfs::{Ceph, Dfs, DfsKind, Nfs};
@@ -21,17 +31,18 @@ use crate::dps::cost::{CostEval, NativeCost};
 use crate::dps::{CopId, Dps};
 use crate::fault::{FaultConfig, FaultEvent, FaultPlan};
 use crate::lcs::Lcs;
-use crate::metrics::RunMetrics;
+use crate::metrics::{RunMetrics, TenantMetrics};
 use crate::net::{FlowId, FlowNet};
 use crate::scheduler::wow::WowParams;
-use crate::scheduler::{Action, ReadyTask, SchedView, Scheduler, Strategy};
+use crate::scheduler::{Action, ReadyTask, SchedView, Scheduler, Strategy, TenantPolicy};
 use crate::sim::event::EventQueue;
+use crate::util::fxmap::FastMap;
 use crate::util::rng::Rng;
 use crate::util::units::{Bandwidth, Bytes, SimTime};
 use crate::workflow::engine::WorkflowEngine;
 use crate::workflow::spec::WorkflowSpec;
 use crate::workflow::task::{FileId, TaskId};
-use crate::util::fxmap::FastMap;
+use crate::workload::{self, WorkloadSpec};
 
 /// Configuration of one simulated run.
 #[derive(Debug, Clone)]
@@ -63,6 +74,10 @@ pub struct RunConfig {
     /// injects nothing, and a disabled config takes exactly the
     /// fault-free code path (no extra events, no extra RNG draws).
     pub fault: FaultConfig,
+    /// Inter-tenant ordering on multi-tenant workloads. Irrelevant on
+    /// single-tenant runs (the executor passes an empty precedence
+    /// vector, so both policies take the identical code path).
+    pub tenant_policy: TenantPolicy,
 }
 
 impl Default for RunConfig {
@@ -79,6 +94,7 @@ impl Default for RunConfig {
             replica_gc: false,
             speed_factors: Vec::new(),
             fault: FaultConfig::default(),
+            tenant_policy: TenantPolicy::Fifo,
         }
     }
 }
@@ -94,7 +110,21 @@ pub fn run_with_backend(
     cfg: &RunConfig,
     backend: Box<dyn CostEval>,
 ) -> RunMetrics {
-    Executor::new(spec.clone(), cfg.clone(), backend).run()
+    run_workload_with_backend(&WorkloadSpec::solo(spec.clone()), cfg, backend)
+}
+
+/// Run a multi-tenant workload with the default (native) cost backend.
+pub fn run_workload(workload: &WorkloadSpec, cfg: &RunConfig) -> RunMetrics {
+    run_workload_with_backend(workload, cfg, Box::new(NativeCost))
+}
+
+/// Run a multi-tenant workload with an explicit DPS cost backend.
+pub fn run_workload_with_backend(
+    workload: &WorkloadSpec,
+    cfg: &RunConfig,
+    backend: Box<dyn CostEval>,
+) -> RunMetrics {
+    Executor::new(workload.clone(), cfg.clone(), backend).run()
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -129,6 +159,9 @@ enum Event {
     CopLaunch(CopId),
     /// Injected fault from the compiled `FaultPlan`.
     Fault(FaultEvent),
+    /// A tenant's workflow arrives: its inputs register in the DFS and
+    /// its source tasks materialize.
+    TenantArrive(usize),
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -139,9 +172,26 @@ enum FlowOwner {
     Recovery,
 }
 
+/// Runtime state of one tenant: its dynamic engine plus per-tenant
+/// accounting. Engine-local ids are namespaced via [`crate::workload`]
+/// before they touch any shared structure.
+struct TenantRt {
+    name: String,
+    engine: WorkflowEngine,
+    arrival: SimTime,
+    weight: f64,
+    arrived: bool,
+    first_start: Option<SimTime>,
+    last_finish: SimTime,
+    /// Cores currently allocated to this tenant's running tasks — the
+    /// fair-share policy's usage signal.
+    running_cores: u64,
+}
+
 struct Executor {
     cfg: RunConfig,
-    engine: WorkflowEngine,
+    workload_name: String,
+    tenants: Vec<TenantRt>,
     scheduler: Box<dyn Scheduler>,
     net: FlowNet,
     cluster: Cluster,
@@ -192,7 +242,8 @@ struct Executor {
 }
 
 impl Executor {
-    fn new(spec: WorkflowSpec, cfg: RunConfig, backend: Box<dyn CostEval>) -> Self {
+    fn new(workload: WorkloadSpec, cfg: RunConfig, backend: Box<dyn CostEval>) -> Self {
+        assert!(!workload.tenants.is_empty(), "workload needs at least one tenant");
         let mut net = FlowNet::new();
         let needs_server = cfg.dfs == DfsKind::Nfs;
         let mut cluster = Cluster::build(
@@ -216,10 +267,26 @@ impl Executor {
             backend,
         };
         let scheduler = cfg.strategy.build(params);
-        let engine = WorkflowEngine::new(spec, cfg.seed);
+        let workload_name = workload.name;
+        let tenants: Vec<TenantRt> = workload
+            .tenants
+            .into_iter()
+            .enumerate()
+            .map(|(i, ts)| TenantRt {
+                engine: WorkflowEngine::new(ts.workflow, workload::tenant_seed(cfg.seed, i)),
+                name: ts.name,
+                arrival: ts.arrival,
+                weight: ts.weight,
+                arrived: false,
+                first_start: None,
+                last_finish: SimTime::ZERO,
+                running_cores: 0,
+            })
+            .collect();
         let n_workers = cluster.n_workers();
         Executor {
-            engine,
+            workload_name,
+            tenants,
             scheduler,
             net,
             cluster,
@@ -257,11 +324,6 @@ impl Executor {
     }
 
     fn run(mut self) -> RunMetrics {
-        // Register workflow inputs in the DFS (pre-fetched per §V-A).
-        for &f in self.engine.input_files().to_vec().iter() {
-            let size = self.engine.file(f).size;
-            self.dfs.register_input(f, size, &self.cluster, &mut self.rng);
-        }
         // Compile and enqueue the fault schedule. A disabled config
         // yields an empty plan: no events, no RNG draws, zero drift from
         // the fault-free path.
@@ -274,14 +336,22 @@ impl Executor {
         for (t, ev) in plan.events {
             self.events.push(t, Event::Fault(ev));
         }
-        // Materialize source tasks and run the first iteration.
-        let initial = self.engine.start();
-        self.submit(initial);
+        // Tenants arriving at t = 0 submit immediately (register inputs
+        // in the DFS — pre-fetched per §V-A — and materialize source
+        // tasks); later arrivals go through the event queue.
+        for i in 0..self.tenants.len() {
+            let at = self.tenants[i].arrival;
+            if at == SimTime::ZERO {
+                self.arrive_tenant(i);
+            } else {
+                self.events.push(at, Event::TenantArrive(i));
+            }
+        }
         self.schedule();
 
         // Main DES loop.
         loop {
-            if self.engine.all_done() {
+            if self.workload_done() {
                 break;
             }
             let t_flow = self.net.next_completion().unwrap_or(SimTime::FAR_FUTURE);
@@ -289,11 +359,13 @@ impl Executor {
             let t = t_flow.min(t_event);
             assert!(
                 t != SimTime::FAR_FUTURE,
-                "deadlock: no pending events; ready={} running={} done={}/{}",
+                "deadlock: no pending events; ready={} running={} arrived={}/{} done={}/{}",
                 self.ready.len(),
                 self.running.len(),
-                self.engine.n_tasks_completed(),
-                self.engine.n_tasks_materialized()
+                self.tenants.iter().filter(|t| t.arrived).count(),
+                self.tenants.len(),
+                self.tenants.iter().map(|t| t.engine.n_tasks_completed()).sum::<usize>(),
+                self.tenants.iter().map(|t| t.engine.n_tasks_materialized()).sum::<usize>()
             );
             self.net.advance_to(t);
 
@@ -315,10 +387,10 @@ impl Executor {
                     Event::ComputeDone(task, attempt) => {
                         // Ignore completions from executions a crash
                         // killed; the task runs again elsewhere.
-                        let valid = self
-                            .running
-                            .get(&task)
-                            .map_or(false, |r| r.attempt == attempt && r.phase == Phase::Compute);
+                        let valid = matches!(
+                            self.running.get(&task),
+                            Some(r) if r.attempt == attempt && r.phase == Phase::Compute
+                        );
                         if !valid {
                             continue;
                         }
@@ -347,6 +419,10 @@ impl Executor {
                     Event::Fault(fe) => {
                         need_schedule |= self.apply_fault(fe, t);
                     }
+                    Event::TenantArrive(i) => {
+                        self.arrive_tenant(i);
+                        need_schedule = true;
+                    }
                 }
             }
             if need_schedule {
@@ -357,38 +433,121 @@ impl Executor {
         self.finish_metrics()
     }
 
-    /// Queue newly materialized tasks.
-    fn submit(&mut self, tasks: Vec<TaskId>) {
-        for id in tasks {
-            let t = self.engine.task(id);
-            let intermediate: Vec<FileId> = t
-                .inputs
-                .iter()
-                .copied()
-                .filter(|f| !self.engine.file(*f).is_workflow_input())
-                .collect();
-            let rt = ReadyTask {
-                id,
-                cores: t.cores,
-                mem: t.mem,
-                rank: self.engine.rank_of(id),
-                input_bytes: t.input_bytes(self.engine.files()),
-                intermediate_inputs: intermediate,
-                submitted_seq: self.submitted_seq,
-            };
-            self.submitted_seq += 1;
-            self.ready.push(rt);
+    /// All tenants have arrived and finished every task.
+    fn workload_done(&self) -> bool {
+        self.tenants.iter().all(|t| t.arrived && t.engine.all_done())
+    }
+
+    /// A tenant's workflow is submitted: its input files register in the
+    /// DFS and its source tasks materialize and queue.
+    fn arrive_tenant(&mut self, tenant: usize) {
+        debug_assert!(!self.tenants[tenant].arrived, "tenant arrived twice");
+        self.tenants[tenant].arrived = true;
+        let inputs: Vec<(FileId, Bytes)> = self.tenants[tenant]
+            .engine
+            .input_files()
+            .iter()
+            .map(|&f| (f, self.tenants[tenant].engine.file(f).size))
+            .collect();
+        for (f, size) in inputs {
+            self.dfs.register_input(
+                workload::ns_file(tenant, f),
+                size,
+                &self.cluster,
+                &mut self.rng,
+            );
         }
+        let initial = self.tenants[tenant].engine.start();
+        self.submit_local(tenant, initial);
+    }
+
+    /// Queue newly materialized tasks of one tenant (engine-local ids).
+    fn submit_local(&mut self, tenant: usize, tasks: Vec<TaskId>) {
+        for id in tasks {
+            self.submit_one(tenant, id);
+        }
+    }
+
+    /// Queue already-namespaced tasks (crash resubmission paths).
+    fn submit_global(&mut self, tasks: Vec<TaskId>) {
+        for id in tasks {
+            self.submit_one(workload::task_tenant(id), workload::local_task(id));
+        }
+    }
+
+    /// Queue one task of `tenant`, given by its engine-local id.
+    fn submit_one(&mut self, tenant: usize, lid: TaskId) {
+        let eng = &self.tenants[tenant].engine;
+        let t = eng.task(lid);
+        let intermediate: Vec<FileId> = t
+            .inputs
+            .iter()
+            .copied()
+            .filter(|f| !eng.file(*f).is_workflow_input())
+            .map(|f| workload::ns_file(tenant, f))
+            .collect();
+        let rt = ReadyTask {
+            id: workload::ns_task(tenant, lid),
+            cores: t.cores,
+            mem: t.mem,
+            rank: eng.rank_of(lid),
+            input_bytes: t.input_bytes(eng.files()),
+            intermediate_inputs: intermediate,
+            submitted_seq: self.submitted_seq,
+            tenant,
+        };
+        // `tenant` and the id's namespace are two encodings of the same
+        // fact; policy code reads the field, id-keyed maps the high bits.
+        debug_assert_eq!(workload::task_tenant(rt.id), rt.tenant);
+        self.submitted_seq += 1;
+        self.ready.push(rt);
+    }
+
+    /// Inter-tenant precedence ranks for this iteration (empty on
+    /// single-tenant runs — the strategies then behave exactly as on a
+    /// single workflow).
+    fn tenant_precedence(&self) -> Vec<u64> {
+        if self.tenants.len() <= 1 {
+            return Vec::new();
+        }
+        let n = self.tenants.len();
+        let mut order: Vec<usize> = (0..n).collect();
+        match self.cfg.tenant_policy {
+            TenantPolicy::Fifo => {
+                order.sort_by(|&a, &b| {
+                    self.tenants[a].arrival.cmp(&self.tenants[b].arrival).then(a.cmp(&b))
+                });
+            }
+            TenantPolicy::FairShare => {
+                let usage = |i: usize| -> f64 {
+                    self.tenants[i].running_cores as f64 / self.tenants[i].weight.max(1e-9)
+                };
+                order.sort_by(|&a, &b| {
+                    usage(a)
+                        .partial_cmp(&usage(b))
+                        .unwrap()
+                        .then(self.tenants[a].arrival.cmp(&self.tenants[b].arrival))
+                        .then(a.cmp(&b))
+                });
+            }
+        }
+        let mut prec = vec![0u64; n];
+        for (rank, &i) in order.iter().enumerate() {
+            prec[i] = rank as u64;
+        }
+        prec
     }
 
     /// One scheduling iteration: ask the strategy, apply its actions.
     /// (Single pass — the strategies are idempotent and every applied
     /// action triggers a fresh iteration through its completion event.)
     fn schedule(&mut self) {
+        let prec = self.tenant_precedence();
         let view = SchedView {
             now: self.net.now(),
             cluster: &self.cluster,
             ready: &self.ready,
+            tenant_prec: &prec,
         };
         let actions = self.scheduler.iterate(&view, &mut self.dps);
         for action in actions {
@@ -416,45 +575,32 @@ impl Executor {
         self.cluster.reserve(node, rt.cores, rt.mem);
         let now = self.net.now();
         self.first_start.get_or_insert(now);
+        let tn = workload::task_tenant(task);
+        let lid = workload::local_task(task);
+        self.tenants[tn].first_start.get_or_insert(now);
+        self.tenants[tn].running_cores += rt.cores as u64;
 
         // Mark used COPs: any completed COP for this task targeting this
-        // node whose files intersect the inputs.
-        let inputs = &self.engine.task(task).inputs;
+        // node whose files intersect the inputs. Inputs are engine-local;
+        // everything shared (COPs, DPS, DFS, flows) uses namespaced ids.
+        let inputs_g: Vec<FileId> = self.tenants[tn]
+            .engine
+            .task(lid)
+            .inputs
+            .iter()
+            .map(|&f| workload::ns_file(tn, f))
+            .collect();
         for (ct, dst, files, used) in self.completed_cops.iter_mut() {
             if *used || *dst != node {
                 continue;
             }
             let _ = ct;
-            if files.iter().any(|f| inputs.contains(f)) {
+            if files.iter().any(|f| inputs_g.contains(f)) {
                 *used = true;
             }
         }
 
-        // Stage-in flows.
-        let local_mode = self.scheduler.uses_local_data();
-        let mut n_flows = 0;
-        let input_list: Vec<FileId> = inputs.clone();
-        for f in input_list {
-            let size = self.engine.file(f).size;
-            let is_input = self.engine.file(f).is_workflow_input();
-            if local_mode && !is_input {
-                // Intermediate input: must be local (node is prepared).
-                debug_assert!(
-                    self.dps.is_prepared(&[f], node),
-                    "task {task:?} started on unprepared node {node:?} (file {f:?})"
-                );
-                let n = self.cluster.node(node);
-                let id = self.net.add_flow(size, vec![n.disk_read]);
-                self.flow_owner.insert(id, FlowOwner::StageIn(task));
-                n_flows += 1;
-            } else {
-                for part in self.dfs.read(f, size, node, &self.cluster, &mut self.rng) {
-                    let id = self.net.add_flow(part.bytes, part.resources);
-                    self.flow_owner.insert(id, FlowOwner::StageIn(task));
-                    n_flows += 1;
-                }
-            }
-        }
+        let n_flows = self.issue_stage_in_flows(task, node);
 
         self.exec_seq += 1;
         self.running.insert(
@@ -476,6 +622,41 @@ impl Executor {
         true
     }
 
+    /// Issue the stage-in flows for `task` on `node` — shared by fresh
+    /// starts and crash-time phase restarts so the two paths can never
+    /// drift: local-disk reads for DPS-prepared intermediates in WOW
+    /// mode, DFS reads otherwise. Returns the number of flows issued.
+    fn issue_stage_in_flows(&mut self, task: TaskId, node: NodeId) -> usize {
+        let local_mode = self.scheduler.uses_local_data();
+        let tn = workload::task_tenant(task);
+        let lid = workload::local_task(task);
+        let inputs = self.tenants[tn].engine.task(lid).inputs.clone();
+        let mut n_flows = 0;
+        for lf in inputs {
+            let size = self.tenants[tn].engine.file(lf).size;
+            let is_input = self.tenants[tn].engine.file(lf).is_workflow_input();
+            let gf = workload::ns_file(tn, lf);
+            if local_mode && !is_input {
+                // Intermediate input: must be local (node is prepared).
+                debug_assert!(
+                    self.dps.is_prepared(&[gf], node),
+                    "task {task:?} started on unprepared node {node:?} (file {gf:?})"
+                );
+                let n = self.cluster.node(node);
+                let id = self.net.add_flow(size, vec![n.disk_read]);
+                self.flow_owner.insert(id, FlowOwner::StageIn(task));
+                n_flows += 1;
+            } else {
+                for part in self.dfs.read(gf, size, node, &self.cluster, &mut self.rng) {
+                    let id = self.net.add_flow(part.bytes, part.resources);
+                    self.flow_owner.insert(id, FlowOwner::StageIn(task));
+                    n_flows += 1;
+                }
+            }
+        }
+        n_flows
+    }
+
     fn begin_compute(&mut self, task: TaskId, now: SimTime) {
         let r = self.running.get_mut(&task).expect("running");
         r.phase = Phase::Compute;
@@ -486,9 +667,9 @@ impl Executor {
         // Retried attempts run inflated (DynamicCloudSim's runtime
         // variation on re-execution).
         let tries = self.retries.get(&task).copied().unwrap_or(0);
-        let infl =
-            if tries > 0 { self.cfg.fault.retry_inflation.powi(tries as i32) } else { 1.0 };
-        let base = self.engine.task(task).compute;
+        let infl = if tries > 0 { self.cfg.fault.retry_inflation.powi(tries as i32) } else { 1.0 };
+        let tn = workload::task_tenant(task);
+        let base = self.tenants[tn].engine.task(workload::local_task(task)).compute;
         let dur = if speed == 1.0 && infl == 1.0 {
             base
         } else {
@@ -525,7 +706,8 @@ impl Executor {
     fn start_stage_out(&mut self, task: TaskId, now: SimTime) {
         let local_mode = self.scheduler.uses_local_data();
         let node = self.running[&task].node;
-        let outputs = self.engine.task(task).outputs.clone();
+        let tn = workload::task_tenant(task);
+        let outputs = self.tenants[tn].engine.task(workload::local_task(task)).outputs.clone();
         let mut n_flows = 0;
         for (f, size) in outputs {
             if local_mode {
@@ -534,7 +716,8 @@ impl Executor {
                 self.flow_owner.insert(id, FlowOwner::StageOut(task));
                 n_flows += 1;
             } else {
-                for part in self.dfs.write(f, size, node, &self.cluster, &mut self.rng) {
+                let gf = workload::ns_file(tn, f);
+                for part in self.dfs.write(gf, size, node, &self.cluster, &mut self.rng) {
                     let id = self.net.add_flow(part.bytes, part.resources);
                     self.flow_owner.insert(id, FlowOwner::StageOut(task));
                     n_flows += 1;
@@ -586,30 +769,34 @@ impl Executor {
         self.node_cpu_seconds[r.node.0] += wall * r.cores as f64;
         self.last_finish = now;
         self.tasks_done += 1;
+        let tn = workload::task_tenant(task);
+        let lid = workload::local_task(task);
+        self.tenants[tn].last_finish = now;
+        self.tenants[tn].running_cores -= r.cores as u64;
 
         // Outputs become visible; in WOW mode they are DPS-managed local
         // files.
         if self.scheduler.uses_local_data() {
-            for (f, size) in self.engine.task(task).outputs.clone() {
-                self.dps.register_output(f, size, r.node);
+            for (f, size) in self.tenants[tn].engine.task(lid).outputs.clone() {
+                self.dps.register_output(workload::ns_file(tn, f), size, r.node);
                 self.node_replica_bytes[r.node.0] += size.as_f64();
             }
             self.update_peak();
         }
-        let newly_ready = self.engine.complete_task(task);
+        let newly_ready = self.tenants[tn].engine.complete_task(lid);
         // Replica GC (§III-A): free intermediate files no task can read
         // any more.
         if self.cfg.replica_gc && self.scheduler.uses_local_data() {
-            for f in self.engine.take_dead_files() {
-                let size = self.engine.file(f).size.as_f64();
-                for node in self.dps.release_file(f) {
+            for f in self.tenants[tn].engine.take_dead_files() {
+                let size = self.tenants[tn].engine.file(f).size.as_f64();
+                for node in self.dps.release_file(workload::ns_file(tn, f)) {
                     self.node_replica_bytes[node.0] -= size;
                 }
             }
         } else {
-            self.engine.take_dead_files();
+            self.tenants[tn].engine.take_dead_files();
         }
-        self.submit(newly_ready);
+        self.submit_local(tn, newly_ready);
     }
 
     fn update_peak(&mut self) {
@@ -816,7 +1003,8 @@ impl Executor {
         self.wasted_core_seconds += wall * r.cores as f64;
         self.tasks_rerun += 1;
         self.retries.remove(&task);
-        self.submit(vec![task]);
+        self.tenants[workload::task_tenant(task)].running_cores -= r.cores as u64;
+        self.submit_global(vec![task]);
     }
 
     /// A task's current stage-in/out lost flows to a crash elsewhere
@@ -839,25 +1027,7 @@ impl Executor {
         }
         match phase {
             Phase::StageIn => {
-                let local_mode = self.scheduler.uses_local_data();
-                let mut n_flows = 0;
-                for file in self.engine.task(task).inputs.clone() {
-                    let size = self.engine.file(file).size;
-                    let is_input = self.engine.file(file).is_workflow_input();
-                    if local_mode && !is_input {
-                        let n = self.cluster.node(node);
-                        let id = self.net.add_flow(size, vec![n.disk_read]);
-                        self.flow_owner.insert(id, FlowOwner::StageIn(task));
-                        n_flows += 1;
-                    } else {
-                        for part in self.dfs.read(file, size, node, &self.cluster, &mut self.rng)
-                        {
-                            let id = self.net.add_flow(part.bytes, part.resources);
-                            self.flow_owner.insert(id, FlowOwner::StageIn(task));
-                            n_flows += 1;
-                        }
-                    }
-                }
+                let n_flows = self.issue_stage_in_flows(task, node);
                 let r = self.running.get_mut(&task).expect("running");
                 r.pending_flows = n_flows;
                 if n_flows == 0 {
@@ -881,44 +1051,59 @@ impl Executor {
         if !self.scheduler.uses_local_data() {
             return;
         }
+        // The stack and the revived list hold namespaced ids; engine
+        // queries go through the owning tenant's local ids.
         let mut stack: Vec<FileId> = lost.into_iter().map(|(f, _)| f).collect();
         let mut revived: Vec<TaskId> = Vec::new();
         while let Some(f) = stack.pop() {
             if !self.dps.locations(f).is_empty() {
                 continue; // a surviving replica exists elsewhere
             }
-            if !self.engine.file_needed(f) {
+            let tn = workload::file_tenant(f);
+            let lf = workload::local_file(f);
+            let eng = &self.tenants[tn].engine;
+            if !eng.file_needed(lf) {
                 continue; // nobody will ever read it
             }
-            let Some(prod) = self.engine.file(f).producer else { continue };
-            if !self.engine.is_done(prod) {
+            let Some(prod) = eng.file(lf).producer else { continue };
+            if !eng.is_done(prod) {
                 continue; // already queued, running, or revived
             }
-            self.engine.revive_task(prod);
+            self.tenants[tn].engine.revive_task(prod);
             self.tasks_rerun += 1;
-            revived.push(prod);
-            for inp in self.engine.task(prod).inputs.clone() {
-                if !self.engine.file(inp).is_workflow_input() {
-                    stack.push(inp);
+            revived.push(workload::ns_task(tn, prod));
+            for inp in self.tenants[tn].engine.task(prod).inputs.clone() {
+                if !self.tenants[tn].engine.file(inp).is_workflow_input() {
+                    stack.push(workload::ns_file(tn, inp));
                 }
             }
         }
         revived.sort();
-        self.submit(revived);
+        self.submit_global(revived);
     }
 
     fn finish_metrics(self) -> RunMetrics {
         let unique_generated: Bytes = self
-            .engine
-            .files()
+            .tenants
             .iter()
+            .flat_map(|t| t.engine.files().iter())
             .filter(|f| !f.is_workflow_input())
             .map(|f| f.size)
             .sum();
-        let tasks_total = self.engine.n_tasks_materialized();
-        let tasks_no_cop = (0..tasks_total)
-            .filter(|i| !self.cops_per_task.contains_key(&TaskId(*i as u64)))
-            .count();
+        let tasks_total: usize = self.tenants.iter().map(|t| t.engine.n_tasks_materialized()).sum();
+        let tasks_no_cop: usize = self
+            .tenants
+            .iter()
+            .enumerate()
+            .map(|(tn, t)| {
+                (0..t.engine.n_tasks_materialized())
+                    .filter(|i| {
+                        let id = workload::ns_task(tn, TaskId(*i as u64));
+                        !self.cops_per_task.contains_key(&id)
+                    })
+                    .count()
+            })
+            .sum();
         let cops_used = self.completed_cops.iter().filter(|(_, _, _, used)| *used).count() as u64;
 
         // Per-node storage: total bytes written to each worker's disk.
@@ -928,11 +1113,22 @@ impl Executor {
             .map(|n| self.net.bytes_through[self.cluster.node(n).disk_write.0])
             .collect();
 
-        let makespan = self
-            .last_finish
-            .saturating_sub(self.first_start.unwrap_or(SimTime::ZERO));
+        let tenant_metrics: Vec<TenantMetrics> = self
+            .tenants
+            .iter()
+            .map(|t| TenantMetrics {
+                name: t.name.clone(),
+                arrival: t.arrival,
+                first_start: t.first_start,
+                makespan: t.last_finish.saturating_sub(t.first_start.unwrap_or(SimTime::ZERO)),
+                completion: t.last_finish.saturating_sub(t.arrival),
+                tasks: t.engine.n_tasks_materialized(),
+            })
+            .collect();
+
+        let makespan = self.last_finish.saturating_sub(self.first_start.unwrap_or(SimTime::ZERO));
         RunMetrics {
-            workflow: self.engine.name().to_string(),
+            workflow: self.workload_name.clone(),
             strategy: self.scheduler.name().to_string(),
             dfs: self.dfs.name().to_string(),
             n_nodes: self.cfg.n_nodes,
@@ -956,6 +1152,7 @@ impl Executor {
             cops_aborted: self.dps.cops_aborted,
             wasted_compute_hours: self.wasted_core_seconds / 3600.0,
             recovery_bytes: self.recovery_bytes,
+            tenants: tenant_metrics,
         }
     }
 }

@@ -11,12 +11,19 @@
 //!   node-local replicas and must re-execute lineage) vs the baselines
 //!   (whose DFS self-heals at the cost of re-replication traffic);
 //! - **recovery traffic** (Ceph object healing);
+//! - **peak temporary storage** (live WOW replicas across workers);
 //! - **wasted compute** (killed executions, failed attempts) and the
 //!   **rerun/retry** counts behind it.
 //!
 //! Every configuration follows the paper's protocol: three seeds, the
 //! median-makespan run is reported. Crashed nodes recover after
 //! `RECOVERY_S`, so the cluster shrinks and grows mid-run.
+//!
+//! `wow chaos --gc` runs the same grid with replica GC enabled — the
+//! §VIII trade-off: GC lowers the storage peak but deleted replicas
+//! cannot survive a crash on another node, widening the lineage
+//! re-execution blast radius (compare the Peak repl and Reruns columns
+//! against a GC-off run).
 
 use super::{median_run, paper_cfg, ExpOpts};
 use crate::dfs::DfsKind;
@@ -57,9 +64,14 @@ pub fn fault_cfg(crashes: usize, fail_prob: f64) -> FaultConfig {
     }
 }
 
-fn cell_cfg(strategy: Strategy, crashes: usize, fail_prob: f64) -> RunConfig {
+fn cell_cfg(strategy: Strategy, crashes: usize, fail_prob: f64, gc: bool) -> RunConfig {
     let mut cfg = paper_cfg(strategy, DfsKind::Ceph);
     cfg.fault = fault_cfg(crashes, fail_prob);
+    // `wow chaos --gc`: replica GC shrinks the temporary-storage peak
+    // but widens the lineage re-execution blast radius — deleting a
+    // replica that a crash would otherwise have survived on another
+    // node forces the producer (and possibly its ancestors) to re-run.
+    cfg.replica_gc = gc;
     cfg
 }
 
@@ -88,7 +100,7 @@ pub fn collect(opts: &ExpOpts) -> Vec<Row> {
     for spec in workflows(opts) {
         for strategy in [Strategy::Orig, Strategy::Cws, Strategy::Wow] {
             eprintln!("chaos: {} / {} ...", spec.name, strategy.label());
-            let base = median_run(&spec, &cell_cfg(strategy, 0, 0.0), opts);
+            let base = median_run(&spec, &cell_cfg(strategy, 0, 0.0, opts.gc), opts);
             let base_min = base.makespan_min();
             rows.push(Row {
                 workflow: spec.name.clone(),
@@ -103,7 +115,7 @@ pub fn collect(opts: &ExpOpts) -> Vec<Row> {
                     if crashes == 0 && p == 0.0 {
                         continue; // the baseline row above
                     }
-                    let m = median_run(&spec, &cell_cfg(strategy, crashes, p), opts);
+                    let m = median_run(&spec, &cell_cfg(strategy, crashes, p, opts.gc), opts);
                     rows.push(Row {
                         workflow: spec.name.clone(),
                         strategy,
@@ -120,9 +132,14 @@ pub fn collect(opts: &ExpOpts) -> Vec<Row> {
 }
 
 /// Render the chaos table.
-pub fn render(rows: &[Row]) -> Table {
+pub fn render(rows: &[Row], gc: bool) -> Table {
+    let title = format!(
+        "Chaos — resilience under injected faults (Ceph, 8 nodes, 1 Gbit; crashes recover \
+         after 120 s; replica GC {})",
+        if gc { "on" } else { "off" }
+    );
     let mut t = Table::new(
-        "Chaos — resilience under injected faults (Ceph, 8 nodes, 1 Gbit; crashes recover after 120 s)",
+        &title,
         &[
             "Workflow",
             "Strategy",
@@ -131,6 +148,7 @@ pub fn render(rows: &[Row]) -> Table {
             "Makespan [min]",
             "Degradation",
             "Recovery [GB]",
+            "Peak repl [GB]",
             "Wasted CPU [h]",
             "Reruns",
             "Retries",
@@ -145,6 +163,7 @@ pub fn render(rows: &[Row]) -> Table {
             format!("{:.1}", r.metrics.makespan_min()),
             pct(r.degradation_pct()),
             format!("{:.1}", r.metrics.recovery_gb()),
+            format!("{:.1}", r.metrics.peak_replica_gb()),
             format!("{:.2}", r.metrics.wasted_compute_hours),
             r.metrics.tasks_rerun.to_string(),
             r.metrics.task_failures.to_string(),
@@ -155,7 +174,7 @@ pub fn render(rows: &[Row]) -> Table {
 
 pub fn run(opts: &ExpOpts) -> (Vec<Row>, String) {
     let rows = collect(opts);
-    let s = render(&rows).render();
+    let s = render(&rows, opts.gc).render();
     (rows, s)
 }
 
@@ -174,7 +193,7 @@ mod tests {
         let spec = patterns::group();
         let expect = WorkflowEngine::dry_run_counts(&spec, 0).physical_tasks;
         for strategy in [Strategy::Orig, Strategy::Cws, Strategy::Wow] {
-            let mut cfg = cell_cfg(strategy, 2, 0.05);
+            let mut cfg = cell_cfg(strategy, 2, 0.05, false);
             cfg.fault.crash_window_s = (30.0, 180.0);
             let m = run_sim(&spec, &cfg);
             assert_eq!(m.tasks_total, expect, "{strategy:?} must complete every task");
@@ -183,11 +202,35 @@ mod tests {
     }
 
     #[test]
+    fn gc_survives_crashes_and_shrinks_storage_peak() {
+        // The --gc interaction: with replica GC the WOW run still
+        // completes under crashes (lineage healing copes with deleted
+        // replicas) and its temporary-storage peak cannot exceed the
+        // keep-everything run's.
+        let spec = patterns::chain();
+        let expect = WorkflowEngine::dry_run_counts(&spec, 0).physical_tasks;
+        let mut keep = cell_cfg(Strategy::Wow, 1, 0.0, false);
+        keep.fault.crash_window_s = (30.0, 120.0);
+        let mut gc = cell_cfg(Strategy::Wow, 1, 0.0, true);
+        gc.fault.crash_window_s = (30.0, 120.0);
+        let m_keep = run_sim(&spec, &keep);
+        let m_gc = run_sim(&spec, &gc);
+        assert_eq!(m_gc.tasks_total, expect, "GC run must still finish every task");
+        assert_eq!(m_gc.node_crashes, 1);
+        assert!(
+            m_gc.peak_replica_gb() <= m_keep.peak_replica_gb() + 1e-9,
+            "GC peak {:.2} GB must not exceed keep-everything peak {:.2} GB",
+            m_gc.peak_replica_gb(),
+            m_keep.peak_replica_gb()
+        );
+    }
+
+    #[test]
     fn degradation_is_measured_against_fault_free_baseline() {
         let spec = patterns::fork();
         let opts = ExpOpts { seeds: vec![0], quick: true, ..Default::default() };
-        let base = median_run(&spec, &cell_cfg(Strategy::Wow, 0, 0.0), &opts);
-        let faulted = median_run(&spec, &cell_cfg(Strategy::Wow, 2, 0.05), &opts);
+        let base = median_run(&spec, &cell_cfg(Strategy::Wow, 0, 0.0, false), &opts);
+        let faulted = median_run(&spec, &cell_cfg(Strategy::Wow, 2, 0.05, false), &opts);
         let row = Row {
             workflow: spec.name.clone(),
             strategy: Strategy::Wow,

@@ -11,6 +11,7 @@ pub mod gini;
 pub mod table1;
 pub mod table2;
 pub mod table3;
+pub mod tenants;
 
 use crate::dfs::DfsKind;
 use crate::exec::{run_with_backend, RunConfig};
@@ -28,11 +29,15 @@ pub struct ExpOpts {
     pub quick: bool,
     /// Use the AOT XLA cost backend when the artifact is available.
     pub xla: bool,
+    /// Enable replica GC in experiments that honour it (`wow chaos
+    /// --gc`): quantifies the storage-peak vs lineage-blast-radius
+    /// trade-off.
+    pub gc: bool,
 }
 
 impl Default for ExpOpts {
     fn default() -> Self {
-        ExpOpts { seeds: vec![0, 1, 2], quick: false, xla: false }
+        ExpOpts { seeds: vec![0, 1, 2], quick: false, xla: false, gc: false }
     }
 }
 

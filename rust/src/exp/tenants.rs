@@ -1,0 +1,321 @@
+//! Multi-tenant cluster-sharing experiment (`wow tenants`): the
+//! ensemble scenario the paper's evaluation leaves open. N tenant
+//! workflows share the paper's 8-node cluster; the sweep crosses
+//! arrival processes × workflow mixes × strategies × DFS backends and
+//! reports, per cell:
+//!
+//! - the **workload makespan** (first task start → last task finish
+//!   across all tenants);
+//! - the **per-tenant slowdown**: completion time under contention
+//!   (arrival → last task finish) divided by the solo makespan of the
+//!   *same sampled workflow instance* (same engine seed) under the
+//!   same strategy/DFS — 1.0 means contention cost nothing, large
+//!   values mean the tenant starved;
+//! - **fairness** as the Gini coefficient of the per-tenant slowdowns
+//!   (0 = contention hurt everyone equally).
+//!
+//! A second table contrasts the FIFO and fair-share inter-tenant
+//! policies on the Poisson cell. Protocol: per cell the workload is
+//! regenerated and run once per seed (arrivals are seed-dependent) and
+//! the median-makespan run is reported, mirroring §V-C.
+
+use super::{make_backend, paper_cfg, ExpOpts};
+use crate::dfs::DfsKind;
+use crate::exec::{run_with_backend, run_workload_with_backend};
+use crate::metrics::RunMetrics;
+use crate::report::Table;
+use crate::scheduler::{Strategy, TenantPolicy};
+use crate::util::stats;
+use crate::workflow::spec::WorkflowSpec;
+use crate::workflow::{patterns, synthetic};
+use crate::workload::{tenant_seed, Arrival, WorkloadSpec};
+use std::collections::HashMap;
+
+/// Tenants per workload cell.
+pub const N_TENANTS: usize = 4;
+
+/// The swept arrival processes.
+pub fn arrivals() -> Vec<Arrival> {
+    vec![
+        Arrival::AllAtOnce,
+        Arrival::Staggered { gap_s: 120.0 },
+        Arrival::Poisson { mean_gap_s: 90.0 },
+        Arrival::Bursty { burst: 2, gap_s: 180.0 },
+    ]
+}
+
+/// The swept workflow mixes (quick mode keeps only the pattern mix).
+pub fn mixes(opts: &ExpOpts) -> Vec<(&'static str, Vec<WorkflowSpec>)> {
+    let mut v = vec![(
+        "patterns",
+        vec![patterns::chain(), patterns::fork(), patterns::group(), patterns::all_in_one()],
+    )];
+    if !opts.quick {
+        v.push((
+            "synthetic",
+            vec![
+                synthetic::bwa(),
+                synthetic::blast(),
+                synthetic::cycles(),
+                synthetic::seismology(),
+            ],
+        ));
+    }
+    v
+}
+
+/// One sweep cell (the median-makespan run of the seed protocol).
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub mix: &'static str,
+    pub arrival: Arrival,
+    pub strategy: Strategy,
+    pub dfs: DfsKind,
+    pub policy: TenantPolicy,
+    pub metrics: RunMetrics,
+    /// Per-tenant slowdowns vs the solo baseline, in tenant order.
+    pub slowdowns: Vec<f64>,
+}
+
+impl Row {
+    pub fn mean_slowdown(&self) -> f64 {
+        stats::mean(&self.slowdowns)
+    }
+
+    pub fn max_slowdown(&self) -> f64 {
+        self.slowdowns.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Aggregate fairness: Gini of the per-tenant slowdowns.
+    pub fn fairness_gini(&self) -> f64 {
+        stats::gini(&self.slowdowns)
+    }
+}
+
+/// Cache of solo makespans keyed by (workflow, strategy, dfs, seed):
+/// the slowdown denominator. The seed is the *tenant-mixed* engine
+/// seed, so the baseline runs the same sampled workflow instance
+/// (compute jitter, output sizes) the tenant ran under contention.
+/// Run-level randomness (DFS input placement) still differs between
+/// the two runs, so an uncontended tenant scores ≈1.0 with a few
+/// percent of placement noise, not exactly 1.0.
+type SoloCache = HashMap<(String, &'static str, &'static str, u64), f64>;
+
+fn solo_makespan_secs(
+    spec: &WorkflowSpec,
+    strategy: Strategy,
+    dfs: DfsKind,
+    seed: u64,
+    xla: bool,
+    cache: &mut SoloCache,
+) -> f64 {
+    let key = (spec.name.clone(), strategy.label(), dfs.label(), seed);
+    if let Some(&v) = cache.get(&key) {
+        return v;
+    }
+    let mut cfg = paper_cfg(strategy, dfs);
+    cfg.seed = seed;
+    let m = run_with_backend(spec, &cfg, make_backend(xla));
+    let v = m.makespan.as_secs_f64();
+    cache.insert(key, v);
+    v
+}
+
+/// Run one cell: regenerate + run the workload per seed, keep the
+/// median-makespan run, and attach per-tenant slowdowns.
+#[allow(clippy::too_many_arguments)]
+fn run_cell(
+    mix_name: &'static str,
+    mix: &[WorkflowSpec],
+    arrival: &Arrival,
+    strategy: Strategy,
+    dfs: DfsKind,
+    policy: TenantPolicy,
+    opts: &ExpOpts,
+    cache: &mut SoloCache,
+) -> Row {
+    let mut per_seed: Vec<RunMetrics> = opts
+        .seeds
+        .iter()
+        .map(|&seed| {
+            let name = format!("{mix_name} x{N_TENANTS}");
+            let wl = WorkloadSpec::from_mix(&name, mix, N_TENANTS, arrival, seed);
+            let mut cfg = paper_cfg(strategy, dfs);
+            cfg.seed = seed;
+            cfg.tenant_policy = policy;
+            run_workload_with_backend(&wl, &cfg, make_backend(opts.xla))
+        })
+        .collect();
+    per_seed.sort_by(|a, b| a.makespan.cmp(&b.makespan));
+    let metrics = per_seed.remove(per_seed.len() / 2);
+    // Solo baselines only for the selected median run — its seed is in
+    // the metrics, and baselines for unselected seeds would be wasted.
+    let slowdowns: Vec<f64> = metrics
+        .tenants
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            // Same engine seed as tenant i's instance (see SoloCache).
+            let solo_seed = tenant_seed(metrics.seed, i);
+            let solo =
+                solo_makespan_secs(&mix[i % mix.len()], strategy, dfs, solo_seed, opts.xla, cache);
+            t.completion.as_secs_f64() / solo.max(1e-9)
+        })
+        .collect();
+    Row { mix: mix_name, arrival: arrival.clone(), strategy, dfs, policy, metrics, slowdowns }
+}
+
+/// Run the full sweep: mixes × arrivals × strategies × DFS backends
+/// (FIFO policy), plus the FIFO-vs-fair-share contrast on the Poisson
+/// pattern cell.
+pub fn collect(opts: &ExpOpts) -> Vec<Row> {
+    let mut cache = SoloCache::new();
+    let mut rows = Vec::new();
+    let dfses: &[DfsKind] =
+        if opts.quick { &[DfsKind::Ceph] } else { &[DfsKind::Ceph, DfsKind::Nfs] };
+    for (mix_name, mix) in mixes(opts) {
+        for arrival in arrivals() {
+            for &strategy in &[Strategy::Orig, Strategy::Cws, Strategy::Wow] {
+                for &dfs in dfses {
+                    eprintln!(
+                        "tenants: {mix_name} / {} / {} / {} ...",
+                        arrival.label(),
+                        strategy.label(),
+                        dfs.label()
+                    );
+                    rows.push(run_cell(
+                        mix_name,
+                        &mix,
+                        &arrival,
+                        strategy,
+                        dfs,
+                        TenantPolicy::Fifo,
+                        opts,
+                        &mut cache,
+                    ));
+                }
+            }
+        }
+    }
+    // Policy contrast: fair-share on the Poisson pattern mix.
+    let (mix_name, mix) = mixes(opts).swap_remove(0);
+    let poisson = Arrival::Poisson { mean_gap_s: 90.0 };
+    for &strategy in &[Strategy::Orig, Strategy::Cws, Strategy::Wow] {
+        eprintln!("tenants: {mix_name} / fair-share / {} ...", strategy.label());
+        rows.push(run_cell(
+            mix_name,
+            &mix,
+            &poisson,
+            strategy,
+            DfsKind::Ceph,
+            TenantPolicy::FairShare,
+            opts,
+            &mut cache,
+        ));
+    }
+    rows
+}
+
+/// Render the sweep table.
+pub fn render(rows: &[Row]) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Multi-tenant workloads — {N_TENANTS} tenants sharing 8 nodes, 1 Gbit \
+             (slowdown = completion / solo makespan)"
+        ),
+        &[
+            "Mix",
+            "Arrival",
+            "Strategy",
+            "DFS",
+            "Policy",
+            "Makespan [min]",
+            "Slowdown mean",
+            "Slowdown max",
+            "Gini",
+        ],
+    );
+    for r in rows {
+        t.row(vec![
+            r.mix.to_string(),
+            r.arrival.label(),
+            r.strategy.label().into(),
+            r.dfs.label().into(),
+            r.policy.label().into(),
+            format!("{:.1}", r.metrics.makespan_min()),
+            format!("{:.2}", r.mean_slowdown()),
+            format!("{:.2}", r.max_slowdown()),
+            format!("{:.2}", r.fairness_gini()),
+        ]);
+    }
+    t
+}
+
+pub fn run(opts: &ExpOpts) -> (Vec<Row>, String) {
+    let rows = collect(opts);
+    let s = render(&rows).render();
+    (rows, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_reports_one_slowdown_per_tenant_and_contention_hurts() {
+        let opts = ExpOpts { seeds: vec![0], quick: true, ..Default::default() };
+        let mut cache = SoloCache::new();
+        let (mix_name, mix) = mixes(&opts).swap_remove(0);
+        let row = run_cell(
+            mix_name,
+            &mix,
+            &Arrival::AllAtOnce,
+            Strategy::Wow,
+            DfsKind::Ceph,
+            TenantPolicy::Fifo,
+            &opts,
+            &mut cache,
+        );
+        assert_eq!(row.slowdowns.len(), N_TENANTS);
+        assert_eq!(row.metrics.tenants.len(), N_TENANTS);
+        // Four workflows contending for the cluster cannot *all* run as
+        // fast as solo; allow small reschedule noise on the fastest.
+        assert!(
+            row.max_slowdown() > 1.0,
+            "max slowdown {:.2} — contention must slow someone down",
+            row.max_slowdown()
+        );
+        assert!(row.mean_slowdown() > 0.9, "mean {:.2}", row.mean_slowdown());
+        assert!((0.0..1.0).contains(&row.fairness_gini()));
+    }
+
+    #[test]
+    fn cells_are_deterministic() {
+        let opts = ExpOpts { seeds: vec![0], quick: true, ..Default::default() };
+        let (mix_name, mix) = mixes(&opts).swap_remove(0);
+        let mut c1 = SoloCache::new();
+        let mut c2 = SoloCache::new();
+        let a = run_cell(
+            mix_name,
+            &mix,
+            &Arrival::Poisson { mean_gap_s: 60.0 },
+            Strategy::Cws,
+            DfsKind::Ceph,
+            TenantPolicy::Fifo,
+            &opts,
+            &mut c1,
+        );
+        let b = run_cell(
+            mix_name,
+            &mix,
+            &Arrival::Poisson { mean_gap_s: 60.0 },
+            Strategy::Cws,
+            DfsKind::Ceph,
+            TenantPolicy::Fifo,
+            &opts,
+            &mut c2,
+        );
+        assert_eq!(a.metrics, b.metrics);
+        assert_eq!(a.slowdowns, b.slowdowns);
+    }
+}

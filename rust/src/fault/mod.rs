@@ -282,10 +282,7 @@ mod tests {
     fn nfs_outage_targets_the_server() {
         let cfg = FaultConfig { nfs_outage: true, ..Default::default() };
         let plan = FaultPlan::compile(&cfg, 8, Some(NodeId(8)), 5);
-        assert!(plan
-            .events
-            .iter()
-            .any(|(_, e)| *e == FaultEvent::NodeCrash(NodeId(8))));
+        assert!(plan.events.iter().any(|(_, e)| *e == FaultEvent::NodeCrash(NodeId(8))));
         // Without a server the outage is a no-op.
         assert!(FaultPlan::compile(&cfg, 8, None, 5).is_empty());
     }

@@ -38,5 +38,6 @@ pub mod scheduler;
 pub mod sim;
 pub mod util;
 pub mod workflow;
+pub mod workload;
 
 pub use util::units::{Bandwidth, Bytes, SimTime};

@@ -5,9 +5,11 @@
 //!         [--gbit 1.0] [--seed 0] [--c-node 1] [--c-task 2] [--xla]
 //!         [--crashes N] [--fail-prob P] [--recovery S] [--degrades N]
 //!         [--nfs-outage]
+//!         [--tenants N] [--mix wf1,wf2] [--arrival SPEC] [--policy P]
 //! wow table1 | table2 | table3 | fig4 | fig5 | gini | all
 //!         [--seeds 0,1,2] [--quick] [--xla]
-//! wow chaos             # fault-injection sweep (crashes × fail rates)
+//! wow chaos [--gc]      # fault-injection sweep (crashes × fail rates)
+//! wow tenants           # multi-tenant sweep (arrivals × mixes × strategies)
 //! wow ablate            # c_node / c_task sweep on the pattern set
 //! ```
 //!
@@ -16,10 +18,12 @@
 
 use anyhow::{bail, Context, Result};
 use wow::dfs::DfsKind;
-use wow::exec::{run_with_backend, RunConfig};
+use wow::exec::{run_with_backend, run_workload_with_backend, RunConfig};
 use wow::exp::{self, ExpOpts};
+use wow::metrics::RunMetrics;
 use wow::report::Table;
-use wow::scheduler::Strategy;
+use wow::scheduler::{Strategy, TenantPolicy};
+use wow::workload::{Arrival, WorkloadSpec};
 
 fn main() {
     if let Err(e) = real_main() {
@@ -81,7 +85,12 @@ impl Args {
             .transpose()
             .context("--seeds wants a comma list like 0,1,2")?
             .unwrap_or_else(|| vec![0, 1, 2]);
-        Ok(ExpOpts { seeds, quick: self.has("quick"), xla: self.has("xla") })
+        Ok(ExpOpts {
+            seeds,
+            quick: self.has("quick"),
+            xla: self.has("xla"),
+            gc: self.has("gc"),
+        })
     }
 }
 
@@ -123,6 +132,11 @@ fn real_main() -> Result<()> {
             println!("{out}");
             Ok(())
         }
+        "tenants" => {
+            let (_, out) = exp::tenants::run(&args.opts()?);
+            println!("{out}");
+            Ok(())
+        }
         "ablate" => cmd_ablate(&args),
         "all" => {
             let opts = args.opts()?;
@@ -145,10 +159,14 @@ fn real_main() -> Result<()> {
                  subcommands:\n  \
                  run     --workflow NAME [--strategy orig|cws|wow] [--dfs ceph|nfs]\n          \
                  [--nodes N] [--gbit F] [--seed S] [--c-node N] [--c-task N] [--xla]\n          \
-                 [--crashes N] [--fail-prob P] [--recovery S] [--degrades N] [--nfs-outage]\n  \
+                 [--crashes N] [--fail-prob P] [--recovery S] [--degrades N] [--nfs-outage]\n          \
+                 [--tenants N] [--mix wf1,wf2,..] [--arrival all|staggered:G|poisson:G|bursty:BxG]\n          \
+                 [--policy fifo|fair]   multi-tenant run when N > 1 or --mix is given\n  \
                  table1 | table2 | table3 | fig4 | fig5 | gini | all\n          \
                  [--seeds 0,1,2] [--quick] [--xla]\n  \
-                 chaos   fault-injection sweep: crashes x failure rates (see DESIGN.md \u{a7}7)\n  \
+                 chaos   fault-injection sweep: crashes x failure rates (see DESIGN.md \u{a7}7);\n          \
+                 [--gc] enables replica GC to probe the storage-vs-blast-radius trade-off\n  \
+                 tenants multi-tenant sweep: arrivals x mixes x strategies x DFS (DESIGN.md \u{a7}8)\n  \
                  ablate  c_node/c_task sweep over the pattern workflows"
             );
             Ok(())
@@ -159,9 +177,9 @@ fn real_main() -> Result<()> {
 
 fn cmd_run(args: &Args) -> Result<()> {
     let name: String = args.get("workflow", String::from("chain"))?;
-    let spec = wow::workflow::by_name(&name)
-        .with_context(|| format!("unknown workflow '{name}'"))?;
+    let spec = wow::workflow::by_name(&name).with_context(|| format!("unknown workflow '{name}'"))?;
     let cfg = RunConfig {
+        tenant_policy: args.get("policy", TenantPolicy::Fifo)?,
         n_nodes: args.get("nodes", 8usize)?,
         link_gbit: args.get("gbit", 1.0f64)?,
         dfs: args.get("dfs", DfsKind::Ceph)?,
@@ -194,18 +212,65 @@ fn cmd_run(args: &Args) -> Result<()> {
             ..Default::default()
         },
     };
+    // Multi-tenant run: --tenants N and/or --mix build a workload from
+    // the named workflows (the --workflow value seeds the default mix).
+    let mix: Vec<wow::workflow::spec::WorkflowSpec> = match args.flags.get("mix") {
+        Some(s) => s
+            .split(',')
+            .map(|w| {
+                wow::workflow::by_name(w.trim())
+                    .with_context(|| format!("unknown workflow '{}' in --mix", w.trim()))
+            })
+            .collect::<Result<Vec<_>>>()?,
+        None => vec![spec.clone()],
+    };
+    let n_tenants: usize = args.get("tenants", mix.len().max(1))?;
+    if n_tenants == 0 {
+        bail!("--tenants must be at least 1");
+    }
+    if mix.len() > n_tenants {
+        eprintln!(
+            "warn: --mix lists {} workflows but --tenants {} runs only the first {} of them",
+            mix.len(),
+            n_tenants,
+            n_tenants
+        );
+    }
+    let arrival: Arrival = args.get("arrival", Arrival::AllAtOnce)?;
+    let multi = n_tenants > 1 || args.has("mix");
+
     let backend = exp::make_backend(args.has("xla"));
-    eprintln!(
-        "running {} with {} on {} ({} nodes, {} Gbit, backend={})",
-        spec.name,
-        cfg.strategy.label(),
-        cfg.dfs.label(),
-        cfg.n_nodes,
-        cfg.link_gbit,
-        backend.backend_name(),
-    );
     let t0 = std::time::Instant::now();
-    let m = run_with_backend(&spec, &cfg, backend);
+    let m = if multi {
+        let wl_name = format!("{n_tenants} tenants ({})", arrival.label());
+        let wl = WorkloadSpec::from_mix(&wl_name, &mix, n_tenants, &arrival, cfg.seed);
+        eprintln!(
+            "running {} tenants ({}) with {} on {} ({} nodes, {} Gbit, {}, backend={})",
+            n_tenants,
+            arrival.label(),
+            cfg.strategy.label(),
+            cfg.dfs.label(),
+            cfg.n_nodes,
+            cfg.link_gbit,
+            cfg.tenant_policy.label(),
+            backend.backend_name(),
+        );
+        run_workload_with_backend(&wl, &cfg, backend)
+    } else {
+        eprintln!(
+            "running {} with {} on {} ({} nodes, {} Gbit, backend={})",
+            spec.name,
+            cfg.strategy.label(),
+            cfg.dfs.label(),
+            cfg.n_nodes,
+            cfg.link_gbit,
+            backend.backend_name(),
+        );
+        run_with_backend(&spec, &cfg, backend)
+    };
+    if multi {
+        println!("{}", tenant_table(&m).render());
+    }
     let mut t = Table::new(
         &format!("{} / {} / {}", m.workflow, m.strategy, m.dfs),
         &["metric", "value"],
@@ -235,6 +300,24 @@ fn cmd_run(args: &Args) -> Result<()> {
     t.row(vec!["sim wallclock".into(), format!("{:.2} s", t0.elapsed().as_secs_f64())]);
     println!("{}", t.render());
     Ok(())
+}
+
+/// Per-tenant table for multi-tenant `wow run` invocations.
+fn tenant_table(m: &RunMetrics) -> Table {
+    let mut t = Table::new(
+        "Per-tenant outcomes",
+        &["Tenant", "Arrival [min]", "Makespan [min]", "Completion [min]", "Tasks"],
+    );
+    for tm in &m.tenants {
+        t.row(vec![
+            tm.name.clone(),
+            format!("{:.1}", tm.arrival.as_minutes_f64()),
+            format!("{:.1}", tm.makespan_min()),
+            format!("{:.1}", tm.completion_min()),
+            tm.tasks.to_string(),
+        ]);
+    }
+    t
 }
 
 /// Ablation: sweep the COP throttles over the pattern workflows

@@ -3,6 +3,34 @@
 use crate::util::stats;
 use crate::util::units::{Bytes, SimTime};
 
+/// Per-tenant outcomes of a multi-tenant run (one entry per tenant,
+/// in tenant-index order; single-tenant runs carry exactly one).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantMetrics {
+    pub name: String,
+    /// Simulated submission time of this tenant's workflow.
+    pub arrival: SimTime,
+    /// When its first task started (None if nothing ever ran).
+    pub first_start: Option<SimTime>,
+    /// First task start → last task finish (the per-workflow makespan).
+    pub makespan: SimTime,
+    /// Arrival → last task finish (sojourn/response time; the slowdown
+    /// numerator: completion under contention vs the solo makespan).
+    pub completion: SimTime,
+    /// Physical tasks the tenant materialized.
+    pub tasks: usize,
+}
+
+impl TenantMetrics {
+    pub fn makespan_min(&self) -> f64 {
+        self.makespan.as_minutes_f64()
+    }
+
+    pub fn completion_min(&self) -> f64 {
+        self.completion.as_minutes_f64()
+    }
+}
+
 /// Metrics of one simulated workflow execution.
 ///
 /// `PartialEq` compares every field bit-for-bit — the determinism
@@ -63,6 +91,11 @@ pub struct RunMetrics {
     /// DFS re-replication traffic triggered by crashes (recovery
     /// traffic; Ceph object healing).
     pub recovery_bytes: Bytes,
+
+    // --- multi-tenant workloads ---
+    /// Per-tenant outcomes, in tenant-index order. Single-tenant runs
+    /// carry one entry mirroring the global metrics.
+    pub tenants: Vec<TenantMetrics>,
 }
 
 impl RunMetrics {

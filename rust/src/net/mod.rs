@@ -266,7 +266,8 @@ impl FlowNet {
         if any_done {
             let completed = &mut self.completed;
             self.flows.retain(|f| {
-                let done = f.remaining < 1.0 || (f.rate.is_finite() && f.remaining <= f.rate * 1e-6);
+                let done =
+                    f.remaining < 1.0 || (f.rate.is_finite() && f.remaining <= f.rate * 1e-6);
                 if done {
                     completed.push(f.id);
                 }
@@ -295,10 +296,7 @@ mod tests {
 
     fn net_with(caps: &[f64]) -> (FlowNet, Vec<ResourceId>) {
         let mut net = FlowNet::new();
-        let ids = caps
-            .iter()
-            .map(|&c| net.add_resource(Bandwidth(c)))
-            .collect();
+        let ids = caps.iter().map(|&c| net.add_resource(Bandwidth(c))).collect();
         (net, ids)
     }
 

@@ -99,10 +99,8 @@ mod enabled {
             debug_assert_eq!(req.len(), TILE_T * TILE_F);
             debug_assert_eq!(present.len(), TILE_F * TILE_N);
             debug_assert_eq!(sizes.len(), TILE_F);
-            let req_l =
-                xla::Literal::vec1(req).reshape(&[TILE_T as i64, TILE_F as i64])?;
-            let present_l =
-                xla::Literal::vec1(present).reshape(&[TILE_F as i64, TILE_N as i64])?;
+            let req_l = xla::Literal::vec1(req).reshape(&[TILE_T as i64, TILE_F as i64])?;
+            let present_l = xla::Literal::vec1(present).reshape(&[TILE_F as i64, TILE_N as i64])?;
             let sizes_l = xla::Literal::vec1(sizes);
             let result = self.exe.execute::<xla::Literal>(&[req_l, present_l, sizes_l])?
                 [0][0]
@@ -154,8 +152,7 @@ mod enabled {
                     let req_p = pad_tile(&req_tile, t_rows, f_cols, TILE_T, TILE_F);
                     let mut pres_tile: Vec<f32> = Vec::with_capacity(f_cols * n);
                     for r in 0..f_cols {
-                        pres_tile
-                            .extend_from_slice(&present[(f0 + r) * n..(f0 + r) * n + n]);
+                        pres_tile.extend_from_slice(&present[(f0 + r) * n..(f0 + r) * n + n]);
                     }
                     let pres_p = pad_tile(&pres_tile, f_cols, n, TILE_F, TILE_N);
                     let mut sizes_p = vec![0f32; TILE_F];

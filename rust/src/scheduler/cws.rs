@@ -23,12 +23,14 @@ impl Scheduler for CwsScheduler {
 
     fn iterate(&mut self, view: &SchedView<'_>, _dps: &mut Dps) -> Vec<Action> {
         let mut actions = Vec::new();
-        // Priority: rank first, input size second (descending), FIFO as
-        // the final deterministic tie-break.
+        // Tenant precedence first (a no-op on single-tenant runs), then
+        // the CWS priority: rank first, input size second (descending),
+        // FIFO as the final deterministic tie-break.
         let mut queue: Vec<&super::ReadyTask> = view.ready.iter().collect();
         queue.sort_by(|a, b| {
-            b.rank
-                .cmp(&a.rank)
+            view.prec(a)
+                .cmp(&view.prec(b))
+                .then(b.rank.cmp(&a.rank))
                 .then(b.input_bytes.cmp(&a.input_bytes))
                 .then(a.submitted_seq.cmp(&b.submitted_seq))
         });
@@ -91,6 +93,7 @@ mod tests {
             input_bytes: Bytes::from_gb(gb),
             intermediate_inputs: vec![],
             submitted_seq: seq,
+            tenant: 0,
         }
     }
 
@@ -98,7 +101,7 @@ mod tests {
     fn higher_rank_scheduled_first_when_capacity_tight() {
         let (_n, c) = fixture(1); // 16 cores, each task takes 8 → 2 fit
         let ready = vec![rt(0, 0, 0.0), rt(1, 3, 0.0), rt(2, 1, 0.0)];
-        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready, tenant_prec: &[] };
         let actions = CwsScheduler::new().iterate(&view, &mut Dps::new(0));
         let ids: Vec<u64> = actions
             .iter()
@@ -114,7 +117,7 @@ mod tests {
     fn input_size_breaks_rank_ties() {
         let (_n, c) = fixture(1);
         let ready = vec![rt(0, 1, 0.5), rt(1, 1, 50.0), rt(2, 1, 5.0)];
-        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready, tenant_prec: &[] };
         let actions = CwsScheduler::new().iterate(&view, &mut Dps::new(0));
         let first = match actions[0] {
             Action::Start { task, .. } => task.0,
@@ -124,10 +127,33 @@ mod tests {
     }
 
     #[test]
+    fn tenant_precedence_dominates_rank() {
+        let (_n, c) = fixture(1); // 16 cores: 2 of 3 tasks fit
+        let mut high_rank_late_tenant = rt(0, 9, 0.0);
+        high_rank_late_tenant.tenant = 1;
+        let mut a = rt(1, 1, 0.0);
+        a.tenant = 0;
+        let mut b = rt(2, 2, 0.0);
+        b.tenant = 0;
+        let ready = vec![high_rank_late_tenant, a, b];
+        let prec = [0u64, 1];
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready, tenant_prec: &prec };
+        let actions = CwsScheduler::new().iterate(&view, &mut Dps::new(0));
+        let ids: Vec<u64> = actions
+            .iter()
+            .map(|a| match a {
+                Action::Start { task, .. } => task.0,
+                _ => panic!(),
+            })
+            .collect();
+        assert_eq!(ids, vec![2, 1], "tenant 0 first (rank order within it)");
+    }
+
+    #[test]
     fn spreads_across_nodes() {
         let (_n, c) = fixture(2);
         let ready = vec![rt(0, 0, 0.0), rt(1, 0, 0.0)];
-        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready, tenant_prec: &[] };
         let actions = CwsScheduler::new().iterate(&view, &mut Dps::new(0));
         let nodes: Vec<usize> = actions
             .iter()

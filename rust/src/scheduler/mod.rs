@@ -34,6 +34,9 @@ pub struct ReadyTask {
     pub intermediate_inputs: Vec<FileId>,
     /// Submission order (FIFO key for the Orig baseline).
     pub submitted_seq: u64,
+    /// Tenant index of the workflow this task belongs to (0 on
+    /// single-tenant runs).
+    pub tenant: usize,
 }
 
 impl ReadyTask {
@@ -59,11 +62,41 @@ pub enum Action {
     StartCop { task: TaskId, dst: NodeId },
 }
 
+/// Weight of one tenant-precedence rank step in WOW's boosted priority:
+/// larger than any task priority (rank + tie-break < a few hundred), so
+/// precedence dominates, while priorities still order tasks within a
+/// tenant.
+pub const TENANT_BOOST: f64 = 1e4;
+
 /// Read-only cluster/queue view passed to schedulers each iteration.
 pub struct SchedView<'a> {
     pub now: SimTime,
     pub cluster: &'a Cluster,
     pub ready: &'a [ReadyTask],
+    /// Inter-tenant precedence ranks, indexed by tenant (0 = schedule
+    /// first). Computed per iteration by the executor from the
+    /// [`TenantPolicy`]; an empty slice (single-tenant runs) ranks every
+    /// task 0 and leaves all strategies exactly on their single-workflow
+    /// behaviour.
+    pub tenant_prec: &'a [u64],
+}
+
+impl SchedView<'_> {
+    /// Precedence rank of this task's tenant (0 = highest precedence).
+    pub fn prec(&self, t: &ReadyTask) -> u64 {
+        self.tenant_prec.get(t.tenant).copied().unwrap_or(0)
+    }
+
+    /// Task priority boosted by tenant precedence: the preferred tenant
+    /// gets the largest boost, the lowest-precedence tenant gets zero.
+    /// With an empty `tenant_prec` this is exactly `t.priority()`.
+    pub fn eff_priority(&self, t: &ReadyTask) -> f64 {
+        // The boost only dominates while priorities stay below one rank
+        // step; a >10k-stage DAG would silently invert the precedence.
+        debug_assert!(t.priority() < TENANT_BOOST, "task priority exceeds TENANT_BOOST");
+        let max = self.tenant_prec.iter().copied().max().unwrap_or(0);
+        (max - self.prec(t)) as f64 * TENANT_BOOST + t.priority()
+    }
 }
 
 /// A scheduling strategy.
@@ -80,6 +113,41 @@ pub trait Scheduler {
     /// One scheduling iteration (§III-B: runs whenever a task finishes,
     /// a COP finishes, or a new task is submitted).
     fn iterate(&mut self, view: &SchedView<'_>, dps: &mut Dps) -> Vec<Action>;
+}
+
+/// How ready tasks of *different* tenants are ordered against each
+/// other. Composes with every strategy: the policy fixes the inter-
+/// tenant precedence, the strategy keeps its intra-tenant behaviour
+/// (and its placement logic) unchanged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TenantPolicy {
+    /// Earlier-arrived tenants strictly first (ties by tenant index).
+    #[default]
+    Fifo,
+    /// Tenants ordered by weighted resource usage (allocated cores /
+    /// weight, ascending): the tenant furthest below its fair share is
+    /// served first, re-evaluated every scheduling iteration.
+    FairShare,
+}
+
+impl TenantPolicy {
+    pub fn label(self) -> &'static str {
+        match self {
+            TenantPolicy::Fifo => "FIFO",
+            TenantPolicy::FairShare => "FairShare",
+        }
+    }
+}
+
+impl std::str::FromStr for TenantPolicy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "fifo" => Ok(TenantPolicy::Fifo),
+            "fair" | "fairshare" | "fair-share" => Ok(TenantPolicy::FairShare),
+            other => anyhow::bail!("unknown tenant policy '{other}' (expected fifo|fair)"),
+        }
+    }
 }
 
 /// Which strategy to instantiate (CLI/experiments).
@@ -133,6 +201,7 @@ mod tests {
             input_bytes: Bytes::from_gb(gb),
             intermediate_inputs: vec![],
             submitted_seq: seq,
+            tenant: 0,
         }
     }
 
@@ -151,5 +220,43 @@ mod tests {
         assert_eq!("wow".parse::<Strategy>().unwrap(), Strategy::Wow);
         assert_eq!("Orig".parse::<Strategy>().unwrap(), Strategy::Orig);
         assert!("heft".parse::<Strategy>().is_err());
+    }
+
+    #[test]
+    fn tenant_policy_parses() {
+        assert_eq!("fifo".parse::<TenantPolicy>().unwrap(), TenantPolicy::Fifo);
+        assert_eq!("fair".parse::<TenantPolicy>().unwrap(), TenantPolicy::FairShare);
+        assert_eq!("fair-share".parse::<TenantPolicy>().unwrap(), TenantPolicy::FairShare);
+        assert!("lottery".parse::<TenantPolicy>().is_err());
+    }
+
+    #[test]
+    fn empty_tenant_prec_is_the_identity_view() {
+        let mut net = crate::net::FlowNet::new();
+        let cluster =
+            Cluster::build(&mut net, 1, crate::cluster::NodeSpec::paper_worker(1.0), None);
+        let ready = vec![rt(3, 2.0, 0)];
+        let view =
+            SchedView { now: SimTime::ZERO, cluster: &cluster, ready: &ready, tenant_prec: &[] };
+        assert_eq!(view.prec(&ready[0]), 0);
+        assert_eq!(view.eff_priority(&ready[0]), ready[0].priority());
+    }
+
+    #[test]
+    fn eff_priority_boosts_preferred_tenant_over_rank() {
+        let mut net = crate::net::FlowNet::new();
+        let cluster =
+            Cluster::build(&mut net, 1, crate::cluster::NodeSpec::paper_worker(1.0), None);
+        let mut high_rank_late_tenant = rt(50, 0.0, 0);
+        high_rank_late_tenant.tenant = 1;
+        let low_rank_first_tenant = rt(0, 0.0, 1);
+        let ready = vec![high_rank_late_tenant, low_rank_first_tenant];
+        let prec = [0u64, 1];
+        let view =
+            SchedView { now: SimTime::ZERO, cluster: &cluster, ready: &ready, tenant_prec: &prec };
+        assert!(
+            view.eff_priority(&ready[1]) > view.eff_priority(&ready[0]),
+            "tenant precedence must dominate task rank"
+        );
     }
 }

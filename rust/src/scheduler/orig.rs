@@ -26,9 +26,10 @@ impl Scheduler for OrigScheduler {
 
     fn iterate(&mut self, view: &SchedView<'_>, _dps: &mut Dps) -> Vec<Action> {
         let mut actions = Vec::new();
+        // Tenant precedence first (a no-op on single-tenant runs), then
         // FIFO order = submission order.
         let mut queue: Vec<&super::ReadyTask> = view.ready.iter().collect();
-        queue.sort_by_key(|t| t.submitted_seq);
+        queue.sort_by_key(|t| (view.prec(t), t.submitted_seq));
 
         // Only alive nodes are placement targets; the set may shrink and
         // grow mid-run under fault injection.
@@ -95,6 +96,7 @@ mod tests {
             input_bytes: Bytes::ZERO,
             intermediate_inputs: vec![],
             submitted_seq: seq,
+            tenant: 0,
         }
     }
 
@@ -102,7 +104,7 @@ mod tests {
     fn round_robin_rotates_nodes() {
         let (_n, c) = view_fixture(3);
         let ready = vec![rt(0, 1), rt(1, 1), rt(2, 1), rt(3, 1)];
-        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready, tenant_prec: &[] };
         let mut s = OrigScheduler::new();
         let actions = s.iterate(&view, &mut Dps::new(0));
         let nodes: Vec<NodeId> = actions
@@ -120,7 +122,7 @@ mod tests {
         let (_n, mut c) = view_fixture(3);
         c.set_alive(NodeId(1), false);
         let ready = vec![rt(0, 1), rt(1, 1), rt(2, 1)];
-        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready, tenant_prec: &[] };
         let mut s = OrigScheduler::new();
         let actions = s.iterate(&view, &mut Dps::new(0));
         assert_eq!(actions.len(), 3);
@@ -135,7 +137,7 @@ mod tests {
         let (_n, c) = view_fixture(1);
         // Submitted out of order in the vec; FIFO must sort by seq.
         let ready = vec![rt(5, 1), rt(1, 1), rt(3, 1)];
-        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready, tenant_prec: &[] };
         let mut s = OrigScheduler::new();
         let actions = s.iterate(&view, &mut Dps::new(0));
         let ids: Vec<u64> = actions
@@ -152,17 +154,43 @@ mod tests {
     fn capacity_respected_within_iteration() {
         let (_n, c) = view_fixture(1); // 16 cores
         let ready: Vec<ReadyTask> = (0..20).map(|i| rt(i, 2)).collect();
-        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready, tenant_prec: &[] };
         let mut s = OrigScheduler::new();
         let actions = s.iterate(&view, &mut Dps::new(0));
         assert_eq!(actions.len(), 8, "16 cores / 2 per task");
     }
 
     #[test]
+    fn tenant_precedence_overrides_submission_order() {
+        let (_n, c) = view_fixture(1); // 16 cores: only 2 of 3 tasks fit
+        let mut early_seq_late_tenant = rt(0, 8);
+        early_seq_late_tenant.tenant = 1;
+        let mut a = rt(1, 8);
+        a.tenant = 0;
+        let mut b = rt(2, 8);
+        b.tenant = 0;
+        let ready = vec![early_seq_late_tenant, a, b];
+        // Tenant 0 arrived first: its tasks go before tenant 1 despite
+        // higher submission sequence numbers.
+        let prec = [0u64, 1];
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready, tenant_prec: &prec };
+        let mut s = OrigScheduler::new();
+        let actions = s.iterate(&view, &mut Dps::new(0));
+        let ids: Vec<u64> = actions
+            .iter()
+            .map(|a| match a {
+                Action::Start { task, .. } => task.0,
+                _ => panic!(),
+            })
+            .collect();
+        assert_eq!(ids, vec![1, 2], "tenant 0's tasks fill the node first");
+    }
+
+    #[test]
     fn big_task_skipped_small_task_fits() {
         let (_n, c) = view_fixture(1);
         let ready = vec![rt(0, 32), rt(1, 4)]; // first can never fit
-        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready, tenant_prec: &[] };
         let mut s = OrigScheduler::new();
         let actions = s.iterate(&view, &mut Dps::new(0));
         assert_eq!(actions.len(), 1);

@@ -257,8 +257,7 @@ mod tests {
 
     #[test]
     fn multi_node_packs_everything() {
-        let tasks: Vec<IlpTask> =
-            (0..8).map(|_| task(1.0, 8, 4.0, &[0, 1, 2, 3])).collect();
+        let tasks: Vec<IlpTask> = (0..8).map(|_| task(1.0, 8, 4.0, &[0, 1, 2, 3])).collect();
         let nodes: Vec<IlpNode> = (0..4).map(|_| node(16, 64.0)).collect();
         let s = solve(&tasks, &nodes);
         assert!((s.objective - 8.0).abs() < 1e-12);

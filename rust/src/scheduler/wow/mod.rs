@@ -108,7 +108,10 @@ impl Scheduler for WowScheduler {
             .iter()
             .enumerate()
             .map(|(ti, t)| ilp::IlpTask {
-                priority: t.priority(),
+                // Tenant-precedence-boosted priority: on multi-tenant
+                // runs the ILP serves preferred tenants first; on
+                // single-tenant runs this is exactly `t.priority()`.
+                priority: view.eff_priority(t),
                 cores: t.cores,
                 mem: t.mem,
                 candidate_nodes: (0..workers.len())
@@ -149,9 +152,11 @@ impl Scheduler for WowScheduler {
             .collect();
         let n_prep = |ti: usize| -> usize { n_prep_of[ti] };
         unassigned.sort_by(|&a, &b| {
-            n_prep(a)
-                .cmp(&n_prep(b))
-                .then(dps.task_cop_count(view.ready[a].id).cmp(&dps.task_cop_count(view.ready[b].id)))
+            let cops = |ti: usize| dps.task_cop_count(view.ready[ti].id);
+            view.prec(&view.ready[a])
+                .cmp(&view.prec(&view.ready[b]))
+                .then(n_prep(a).cmp(&n_prep(b)))
+                .then(cops(a).cmp(&cops(b)))
                 .then(view.ready[a].submitted_seq.cmp(&view.ready[b].submitted_seq))
         });
         for &ti in &unassigned {
@@ -213,9 +218,8 @@ impl Scheduler for WowScheduler {
             })
             .collect();
         spec.sort_by(|&a, &b| {
-            view.ready[b]
-                .priority()
-                .partial_cmp(&view.ready[a].priority())
+            view.eff_priority(&view.ready[b])
+                .partial_cmp(&view.eff_priority(&view.ready[a]))
                 .unwrap()
                 .then(view.ready[a].submitted_seq.cmp(&view.ready[b].submitted_seq))
         });
@@ -235,7 +239,11 @@ impl Scheduler for WowScheduler {
                 }
                 if let Some(plan) = dps.plan(&t.intermediate_inputs, node) {
                     let price = plan.price();
-                    if best.map_or(true, |(bp, _)| price < bp) {
+                    let better = match best {
+                        Some((bp, _)) => price < bp,
+                        None => true,
+                    };
+                    if better {
                         best = Some((price, ni));
                     }
                 }
@@ -276,6 +284,7 @@ mod tests {
             input_bytes: Bytes::from_gb(1.0),
             intermediate_inputs: inputs,
             submitted_seq: seq,
+            tenant: 0,
         }
     }
 
@@ -305,10 +314,28 @@ mod tests {
         let mut dps = Dps::new(1);
         dps.register_output(FileId(0), Bytes::from_gb(1.0), NodeId(1));
         let ready = vec![rt(0, 1, vec![FileId(0)])];
-        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready, tenant_prec: &[] };
         let mut s = WowScheduler::new(WowParams::default());
         let actions = s.iterate(&view, &mut dps);
         assert_eq!(starts(&actions), vec![(0, 1)], "must start on the data-holding node");
+    }
+
+    #[test]
+    fn step1_prefers_preferred_tenant_under_contention() {
+        let (_n, mut c) = fixture(1);
+        // One core left: only one of the two tasks can start.
+        c.reserve(NodeId(0), 15, Bytes::ZERO);
+        let mut dps = Dps::new(1);
+        let mut high_rank_late_tenant = rt(0, 9, vec![]);
+        high_rank_late_tenant.tenant = 1;
+        let mut low_rank_first_tenant = rt(1, 0, vec![]);
+        low_rank_first_tenant.tenant = 0;
+        let ready = vec![high_rank_late_tenant, low_rank_first_tenant];
+        let prec = [0u64, 1];
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready, tenant_prec: &prec };
+        let mut s = WowScheduler::new(WowParams::default());
+        let actions = s.iterate(&view, &mut dps);
+        assert_eq!(starts(&actions), vec![(1, 0)], "tenant precedence beats rank");
     }
 
     #[test]
@@ -316,7 +343,7 @@ mod tests {
         let (_n, c) = fixture(4);
         let mut dps = Dps::new(1);
         let ready: Vec<ReadyTask> = (0..8).map(|i| rt(i, 1, vec![])).collect();
-        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready, tenant_prec: &[] };
         let mut s = WowScheduler::new(WowParams::default());
         let actions = s.iterate(&view, &mut dps);
         assert_eq!(starts(&actions).len(), 8, "all source tasks start somewhere");
@@ -332,7 +359,7 @@ mod tests {
         let mut dps = Dps::new(1);
         dps.register_output(FileId(0), Bytes::from_gb(1.0), NodeId(1));
         let ready = vec![rt(0, 1, vec![FileId(0)])];
-        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready, tenant_prec: &[] };
         let mut s = WowScheduler::new(WowParams::default());
         let actions = s.iterate(&view, &mut dps);
         assert!(starts(&actions).is_empty(), "holder is full, cannot start");
@@ -348,7 +375,7 @@ mod tests {
         let mut dps = Dps::new(1);
         dps.register_output(FileId(0), Bytes::from_gb(1.0), NodeId(1));
         let ready = vec![rt(0, 1, vec![FileId(0)])];
-        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready, tenant_prec: &[] };
         let mut s = WowScheduler::new(WowParams::default());
         let actions = s.iterate(&view, &mut dps);
         for a in &actions {
@@ -370,7 +397,7 @@ mod tests {
         dps.register_output(FileId(0), Bytes::from_gb(1.0), NodeId(1));
         dps.register_output(FileId(1), Bytes::from_gb(1.0), NodeId(1));
         let ready = vec![rt(0, 1, vec![FileId(0)]), rt(1, 1, vec![FileId(1)])];
-        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready, tenant_prec: &[] };
         let mut s = WowScheduler::new(WowParams::with_limits(1, 2));
         let actions = s.iterate(&view, &mut dps);
         // Only one COP may target node 0 (c_node = 1). Step 2 reserves
@@ -390,7 +417,7 @@ mod tests {
         dps.register_output(FileId(0), Bytes::from_gb(1.0), NodeId(1));
         dps.register_output(FileId(1), Bytes::from_gb(1.0), NodeId(2));
         let ready = vec![rt(0, 5, vec![FileId(0), FileId(1)])];
-        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready, tenant_prec: &[] };
         let mut s = WowScheduler::new(WowParams::with_limits(4, 2));
         let actions = s.iterate(&view, &mut dps);
         // Step 3 may speculatively prepare, but at most c_task = 2 COPs.
@@ -409,7 +436,7 @@ mod tests {
         let mut dps = Dps::new(1);
         dps.register_output(FileId(0), Bytes::from_gb(1.0), NodeId(1));
         let ready = vec![rt(0, 3, vec![FileId(0)])];
-        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready, tenant_prec: &[] };
         let mut s = WowScheduler::new(WowParams::default());
         let actions = s.iterate(&view, &mut dps);
         assert!(actions.is_empty(), "{actions:?}");
@@ -432,7 +459,7 @@ mod tests {
             rt(0, 1, vec![FileId(0), FileId(1)]),
             rt(1, 9, vec![FileId(2), FileId(3)]),
         ];
-        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready, tenant_prec: &[] };
         let mut s = WowScheduler::new(WowParams::with_limits(1, 1));
         let actions = s.iterate(&view, &mut dps);
         // c_node=1 allows one COP per target node; the high-rank task is
@@ -449,7 +476,7 @@ mod tests {
         dps.register_output(FileId(0), Bytes::from_gb(1.0), NodeId(1));
         let ready = vec![rt(0, 1, vec![FileId(0)])];
         // First iteration creates the COP...
-        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready };
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready, tenant_prec: &[] };
         let mut s = WowScheduler::new(WowParams::default());
         let a1 = s.iterate(&view, &mut dps);
         assert_eq!(cops(&a1).len(), 1);

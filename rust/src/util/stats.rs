@@ -51,11 +51,7 @@ pub fn gini(xs: &[f64]) -> f64 {
     let mut v: Vec<f64> = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let n = v.len() as f64;
-    let weighted: f64 = v
-        .iter()
-        .enumerate()
-        .map(|(i, &x)| (i as f64 + 1.0) * x)
-        .sum();
+    let weighted: f64 = v.iter().enumerate().map(|(i, &x)| (i as f64 + 1.0) * x).sum();
     (2.0 * weighted) / (n * total) - (n + 1.0) / n
 }
 

@@ -207,22 +207,19 @@ impl WorkflowEngine {
             let s_idx = self.consumers[stage.0][ci].0;
             match self.spec.stages[s_idx].rule {
                 Rule::PerTask { from } if from == stage => {
-                    let outs: Vec<FileId> =
-                        self.task(t).outputs.iter().map(|(f, _)| *f).collect();
+                    let outs: Vec<FileId> = self.task(t).outputs.iter().map(|(f, _)| *f).collect();
                     let id = self.materialize(StageId(s_idx), outs);
                     newly_ready.push(id);
                 }
                 Rule::PerFile { from } if from == stage => {
-                    let outs: Vec<FileId> =
-                        self.task(t).outputs.iter().map(|(f, _)| *f).collect();
+                    let outs: Vec<FileId> = self.task(t).outputs.iter().map(|(f, _)| *f).collect();
                     for f in outs {
                         let id = self.materialize(StageId(s_idx), vec![f]);
                         newly_ready.push(id);
                     }
                 }
                 Rule::Fanout { from, count } if from == stage => {
-                    let outs: Vec<FileId> =
-                        self.task(t).outputs.iter().map(|(f, _)| *f).collect();
+                    let outs: Vec<FileId> = self.task(t).outputs.iter().map(|(f, _)| *f).collect();
                     for _ in 0..count {
                         let id = self.materialize(StageId(s_idx), outs.clone());
                         newly_ready.push(id);
@@ -246,9 +243,7 @@ impl WorkflowEngine {
             let file = &self.files[f.0 as usize];
             let Some(prod) = file.producer else { continue }; // workflow inputs stay in the DFS
             let prod_stage = self.tasks[prod.0 as usize].stage;
-            let no_future = self.all_consumers[prod_stage.0]
-                .iter()
-                .all(|c| self.stage_closed[c.0]);
+            let no_future = self.all_consumers[prod_stage.0].iter().all(|c| self.stage_closed[c.0]);
             let (mat, done) = self.file_refs[f.0 as usize];
             if no_future && mat == done {
                 self.dead_files.push(f);
@@ -307,7 +302,8 @@ impl WorkflowEngine {
     /// regardless of the order in which upstream completions and stage
     /// closures interleave.
     fn fire_aggregates(&mut self, newly_ready: &mut Vec<TaskId>) {
-        for ai in 0..self.aggregate_stages.len() {
+        let n_agg = self.aggregate_stages.len();
+        for ai in 0..n_agg {
             let s_idx = self.aggregate_stages[ai];
             // Cheap discrimination without cloning the rule (GatherAll
             // holds a Vec; cloning it per completion showed up in the
@@ -380,7 +376,9 @@ impl WorkflowEngine {
                         }
                         from.iter()
                             .flat_map(|f| self.stage_tasks[f.0].iter())
-                            .flat_map(|mt| self.tasks[mt.0 as usize].outputs.iter().map(|(f, _)| *f))
+                            .flat_map(|mt| {
+                                self.tasks[mt.0 as usize].outputs.iter().map(|(f, _)| *f)
+                            })
                             .collect()
                     };
                     self.gather_fired[s_idx] = true;

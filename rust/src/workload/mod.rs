@@ -1,0 +1,347 @@
+//! Multi-tenant workloads: ensembles of workflows sharing one cluster.
+//!
+//! The paper evaluates WOW one workflow at a time; real clusters run
+//! many workflows concurrently, contending for nodes, network, and the
+//! DFS — the regime where speculative COPs either amortize or thrash.
+//! Following the ensemble studies around the Common Workflow Scheduler
+//! interface and CloudWorkflowSimulator (DPDS/WA-DPDS), this module
+//! treats a *workload* — N tenant workflows with an arrival process —
+//! as the unit of evaluation:
+//!
+//! - [`TenantSpec`] / [`WorkloadSpec`]: one workflow instance per
+//!   tenant, with an arrival time and a fair-share weight.
+//! - [`Arrival`]: deterministic arrival processes (all-at-once,
+//!   staggered, Poisson, bursty) drawing their randomness from a seeded
+//!   stream independent of workload generation.
+//! - Task/file **namespacing**: every tenant runs its own
+//!   [`WorkflowEngine`](crate::workflow::engine::WorkflowEngine) with
+//!   engine-local ids; the executor maps them into a shared id space by
+//!   packing the tenant index into the high bits. Tenant 0 maps to the
+//!   identity, so a single-tenant workload reproduces the pre-workload
+//!   executor bit-for-bit.
+//!
+//! Inter-tenant scheduling policies live in the scheduler layer
+//! ([`crate::scheduler::TenantPolicy`]); the `wow tenants` experiment
+//! ([`crate::exp::tenants`]) sweeps arrival processes × workflow mixes
+//! × strategies × DFS backends.
+
+use crate::util::rng::Rng;
+use crate::util::units::SimTime;
+use crate::workflow::spec::WorkflowSpec;
+use crate::workflow::task::{FileId, TaskId};
+
+/// Bits reserved for engine-local task/file ids; the tenant index lives
+/// above them. 2^40 ids per tenant and 2^24 tenants are both far beyond
+/// anything the simulator materializes.
+pub const TENANT_SHIFT: u32 = 40;
+const LOCAL_MASK: u64 = (1u64 << TENANT_SHIFT) - 1;
+
+/// Namespace an engine-local task id into the shared id space.
+/// Identity for tenant 0.
+pub fn ns_task(tenant: usize, local: TaskId) -> TaskId {
+    debug_assert!(local.0 <= LOCAL_MASK, "task id overflows tenant namespace");
+    TaskId(((tenant as u64) << TENANT_SHIFT) | local.0)
+}
+
+/// Namespace an engine-local file id into the shared id space.
+/// Identity for tenant 0.
+pub fn ns_file(tenant: usize, local: FileId) -> FileId {
+    debug_assert!(local.0 <= LOCAL_MASK, "file id overflows tenant namespace");
+    FileId(((tenant as u64) << TENANT_SHIFT) | local.0)
+}
+
+/// The tenant index a namespaced task id belongs to.
+pub fn task_tenant(id: TaskId) -> usize {
+    (id.0 >> TENANT_SHIFT) as usize
+}
+
+/// The engine-local part of a namespaced task id.
+pub fn local_task(id: TaskId) -> TaskId {
+    TaskId(id.0 & LOCAL_MASK)
+}
+
+/// The tenant index a namespaced file id belongs to.
+pub fn file_tenant(id: FileId) -> usize {
+    (id.0 >> TENANT_SHIFT) as usize
+}
+
+/// The engine-local part of a namespaced file id.
+pub fn local_file(id: FileId) -> FileId {
+    FileId(id.0 & LOCAL_MASK)
+}
+
+/// Per-tenant seed: tenant 0 keeps the run seed unchanged (single-tenant
+/// bit-identity), later tenants get decorrelated streams.
+pub fn tenant_seed(seed: u64, tenant: usize) -> u64 {
+    seed ^ (tenant as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// One tenant: a workflow instance submitted to the shared cluster.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub name: String,
+    pub workflow: WorkflowSpec,
+    /// Simulated submission time (the workflow's inputs appear in the
+    /// DFS and its source tasks materialize at this instant).
+    pub arrival: SimTime,
+    /// Fair-share weight (1.0 = equal share) — only read by
+    /// [`crate::scheduler::TenantPolicy::FairShare`].
+    pub weight: f64,
+}
+
+/// A multi-tenant workload: what the executor runs.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub name: String,
+    pub tenants: Vec<TenantSpec>,
+}
+
+impl WorkloadSpec {
+    /// The degenerate single-tenant workload: arrival 0, weight 1. Runs
+    /// bit-identically to the pre-workload single-workflow executor.
+    pub fn solo(workflow: WorkflowSpec) -> Self {
+        let name = workflow.name.clone();
+        WorkloadSpec {
+            name: name.clone(),
+            tenants: vec![TenantSpec { name, workflow, arrival: SimTime::ZERO, weight: 1.0 }],
+        }
+    }
+
+    /// `n` tenants cycling through `mix`, with arrivals drawn from
+    /// `arrival` under `seed`.
+    pub fn from_mix(
+        name: &str,
+        mix: &[WorkflowSpec],
+        n: usize,
+        arrival: &Arrival,
+        seed: u64,
+    ) -> Self {
+        assert!(!mix.is_empty(), "workload mix must not be empty");
+        assert!(n > 0, "workload needs at least one tenant");
+        let times = arrival.times(n, seed);
+        let tenants = (0..n)
+            .map(|i| {
+                let workflow = mix[i % mix.len()].clone();
+                TenantSpec {
+                    name: format!("t{i}:{}", workflow.name),
+                    workflow,
+                    arrival: times[i],
+                    weight: 1.0,
+                }
+            })
+            .collect();
+        WorkloadSpec { name: name.to_string(), tenants }
+    }
+
+    pub fn n_tenants(&self) -> usize {
+        self.tenants.len()
+    }
+}
+
+/// Deterministic arrival processes for workload generation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Arrival {
+    /// Every tenant arrives at t = 0 (maximum contention).
+    AllAtOnce,
+    /// Tenant `i` arrives at `i * gap_s`.
+    Staggered { gap_s: f64 },
+    /// Exponentially distributed inter-arrival gaps with the given mean
+    /// (a Poisson process), sampled from a seeded stream.
+    Poisson { mean_gap_s: f64 },
+    /// Bursts of `burst` simultaneous arrivals, `gap_s` apart.
+    Bursty { burst: usize, gap_s: f64 },
+}
+
+impl Arrival {
+    /// Arrival times for `n` tenants. Pure in `(self, n, seed)`; the
+    /// Poisson stream is independent of workload-generation randomness.
+    pub fn times(&self, n: usize, seed: u64) -> Vec<SimTime> {
+        match *self {
+            Arrival::AllAtOnce => vec![SimTime::ZERO; n],
+            Arrival::Staggered { gap_s } => (0..n)
+                .map(|i| SimTime::from_secs_f64(i as f64 * gap_s.max(0.0)))
+                .collect(),
+            Arrival::Poisson { mean_gap_s } => {
+                let mut rng = Rng::new(seed ^ 0xA441_7A1C_0FFE_E5ED);
+                let mut t = 0.0;
+                (0..n)
+                    .map(|i| {
+                        if i > 0 {
+                            // Inverse-CDF exponential; (1 - u) keeps the
+                            // argument of ln strictly positive.
+                            t += -mean_gap_s.max(0.0) * (1.0 - rng.next_f64()).ln();
+                        }
+                        SimTime::from_secs_f64(t)
+                    })
+                    .collect()
+            }
+            Arrival::Bursty { burst, gap_s } => (0..n)
+                .map(|i| SimTime::from_secs_f64((i / burst.max(1)) as f64 * gap_s.max(0.0)))
+                .collect(),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            Arrival::AllAtOnce => "all-at-once".into(),
+            Arrival::Staggered { gap_s } => format!("staggered {gap_s:.0}s"),
+            Arrival::Poisson { mean_gap_s } => format!("poisson {mean_gap_s:.0}s"),
+            Arrival::Bursty { burst, gap_s } => format!("bursty {burst}x{gap_s:.0}s"),
+        }
+    }
+}
+
+impl std::str::FromStr for Arrival {
+    type Err = anyhow::Error;
+
+    /// `all` | `staggered:GAP` | `poisson:MEAN_GAP` | `bursty:BxGAP`
+    /// (seconds), e.g. `staggered:120`, `bursty:2x180`.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let lower = s.to_ascii_lowercase();
+        let (kind, arg) = match lower.split_once(':') {
+            Some((k, a)) => (k, Some(a)),
+            None => (lower.as_str(), None),
+        };
+        let pos_gap = |gap: f64, what: &str| -> Result<f64, anyhow::Error> {
+            anyhow::ensure!(gap >= 0.0, "{what} gap must be non-negative, got {gap}");
+            Ok(gap)
+        };
+        match kind {
+            "all" | "allatonce" | "all-at-once" => Ok(Arrival::AllAtOnce),
+            "staggered" => {
+                let gap: f64 = arg
+                    .ok_or_else(|| anyhow::anyhow!("staggered wants a gap, e.g. staggered:120"))?
+                    .parse()?;
+                Ok(Arrival::Staggered { gap_s: pos_gap(gap, "staggered")? })
+            }
+            "poisson" => {
+                let gap: f64 = arg
+                    .ok_or_else(|| anyhow::anyhow!("poisson wants a mean gap, e.g. poisson:90"))?
+                    .parse()?;
+                Ok(Arrival::Poisson { mean_gap_s: pos_gap(gap, "poisson")? })
+            }
+            "bursty" => {
+                let a = arg
+                    .ok_or_else(|| anyhow::anyhow!("bursty wants BURSTxGAP, e.g. bursty:2x180"))?;
+                let (b, g) = a
+                    .split_once('x')
+                    .ok_or_else(|| anyhow::anyhow!("bursty wants BURSTxGAP, e.g. bursty:2x180"))?;
+                let burst: usize = b.parse()?;
+                anyhow::ensure!(burst > 0, "bursty burst size must be at least 1");
+                Ok(Arrival::Bursty { burst, gap_s: pos_gap(g.parse()?, "bursty")? })
+            }
+            other => anyhow::bail!(
+                "unknown arrival '{other}' (expected all|staggered:G|poisson:G|bursty:BxG)"
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::patterns;
+
+    #[test]
+    fn tenant_zero_namespace_is_identity() {
+        for raw in [0u64, 1, 17, LOCAL_MASK] {
+            assert_eq!(ns_task(0, TaskId(raw)), TaskId(raw));
+            assert_eq!(ns_file(0, FileId(raw)), FileId(raw));
+        }
+        assert_eq!(tenant_seed(123, 0), 123);
+    }
+
+    #[test]
+    fn namespace_roundtrip() {
+        for tenant in [0usize, 1, 3, 250] {
+            for raw in [0u64, 42, 99_999] {
+                let t = ns_task(tenant, TaskId(raw));
+                assert_eq!(task_tenant(t), tenant);
+                assert_eq!(local_task(t), TaskId(raw));
+                let f = ns_file(tenant, FileId(raw));
+                assert_eq!(file_tenant(f), tenant);
+                assert_eq!(local_file(f), FileId(raw));
+            }
+        }
+    }
+
+    #[test]
+    fn namespaces_never_collide() {
+        let a = ns_task(1, TaskId(0));
+        let b = ns_task(2, TaskId(0));
+        assert_ne!(a, b);
+        assert!(ns_task(1, TaskId(LOCAL_MASK)) < ns_task(2, TaskId(0)));
+    }
+
+    #[test]
+    fn arrivals_all_at_once_and_staggered() {
+        assert_eq!(Arrival::AllAtOnce.times(3, 0), vec![SimTime::ZERO; 3]);
+        let t = Arrival::Staggered { gap_s: 60.0 }.times(3, 0);
+        assert_eq!(t[0], SimTime::ZERO);
+        assert_eq!(t[1], SimTime::from_secs_f64(60.0));
+        assert_eq!(t[2], SimTime::from_secs_f64(120.0));
+    }
+
+    #[test]
+    fn bursty_groups_arrivals() {
+        let t = Arrival::Bursty { burst: 2, gap_s: 100.0 }.times(5, 0);
+        assert_eq!(t[0], t[1]);
+        assert_eq!(t[2], t[3]);
+        assert_eq!(t[2], SimTime::from_secs_f64(100.0));
+        assert_eq!(t[4], SimTime::from_secs_f64(200.0));
+    }
+
+    #[test]
+    fn poisson_is_deterministic_per_seed_and_monotone() {
+        let p = Arrival::Poisson { mean_gap_s: 90.0 };
+        let a = p.times(6, 7);
+        let b = p.times(6, 7);
+        assert_eq!(a, b);
+        assert_eq!(a[0], SimTime::ZERO);
+        for w in a.windows(2) {
+            assert!(w[0] <= w[1], "arrivals must be non-decreasing");
+        }
+        let c = p.times(6, 8);
+        assert_ne!(a, c, "different seed, different schedule");
+    }
+
+    #[test]
+    fn from_mix_cycles_and_sorts_nothing() {
+        let mix = vec![patterns::chain(), patterns::fork()];
+        let w = WorkloadSpec::from_mix("m", &mix, 5, &Arrival::AllAtOnce, 0);
+        assert_eq!(w.n_tenants(), 5);
+        assert_eq!(w.tenants[0].workflow.name, "Chain");
+        assert_eq!(w.tenants[1].workflow.name, "Fork");
+        assert_eq!(w.tenants[4].workflow.name, "Chain");
+    }
+
+    #[test]
+    fn solo_keeps_workflow_name() {
+        let w = WorkloadSpec::solo(patterns::chain());
+        assert_eq!(w.name, "Chain");
+        assert_eq!(w.n_tenants(), 1);
+        assert_eq!(w.tenants[0].arrival, SimTime::ZERO);
+    }
+
+    #[test]
+    fn arrival_parses() {
+        assert_eq!("all".parse::<Arrival>().unwrap(), Arrival::AllAtOnce);
+        assert_eq!(
+            "staggered:120".parse::<Arrival>().unwrap(),
+            Arrival::Staggered { gap_s: 120.0 }
+        );
+        assert_eq!(
+            "poisson:90".parse::<Arrival>().unwrap(),
+            Arrival::Poisson { mean_gap_s: 90.0 }
+        );
+        assert_eq!(
+            "bursty:2x180".parse::<Arrival>().unwrap(),
+            Arrival::Bursty { burst: 2, gap_s: 180.0 }
+        );
+        assert!("every-full-moon".parse::<Arrival>().is_err());
+        assert!("staggered".parse::<Arrival>().is_err());
+        assert!("staggered:-60".parse::<Arrival>().is_err(), "negative gap");
+        assert!("poisson:-1".parse::<Arrival>().is_err(), "negative mean gap");
+        assert!("bursty:0x100".parse::<Arrival>().is_err(), "zero burst");
+    }
+}

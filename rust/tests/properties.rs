@@ -163,8 +163,7 @@ fn ilp_matches_brute_force_on_random_instances() {
             .collect();
         let tasks: Vec<IlpTask> = (0..n_tasks)
             .map(|_| {
-                let cands: Vec<usize> =
-                    (0..n_nodes).filter(|_| rng.next_f64() < 0.7).collect();
+                let cands: Vec<usize> = (0..n_nodes).filter(|_| rng.next_f64() < 0.7).collect();
                 IlpTask {
                     priority: 0.5 + rng.next_f64() * 5.0,
                     cores: 1 + rng.index(4) as u32,
@@ -354,11 +353,7 @@ fn flownet_cancellation_conserves_bytes_and_reconverges() {
         // what our ledger saw each flow move across it — cancelling
         // must neither lose nor invent traffic.
         for (ri, r) in res.iter().enumerate() {
-            let expected: f64 = flows
-                .iter()
-                .filter(|f| f.res.contains(r))
-                .map(|f| f.moved)
-                .sum();
+            let expected: f64 = flows.iter().filter(|f| f.res.contains(r)).map(|f| f.moved).sum();
             let got = net.bytes_through[r.0];
             let tol = flows.len() as f64 + 1.0; // remaining() rounds to whole bytes
             assert!(
