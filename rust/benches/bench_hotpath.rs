@@ -1,12 +1,14 @@
 //! Bench: the DPS cost-matrix hot path — Native rust vs the AOT XLA
-//! artifact (Layers 1/2), plus the greedy COP planner. This is the
-//! Layer-1/2 performance instrument for EXPERIMENTS.md §Perf.
+//! artifact (Layers 1/2), the dirty-tracked row cache, and the greedy
+//! COP planner. This is the Layer-1/2 performance instrument for
+//! EXPERIMENTS.md §Perf. Emits `BENCH_hotpath.json`.
 //!
 //! `cargo bench --bench bench_hotpath`
 
 #[path = "common/mod.rs"]
 mod common;
 
+use common::Jv;
 use wow::dps::cost::{CostEval, NativeCost};
 use wow::util::rng::Rng;
 
@@ -19,14 +21,19 @@ fn instance(rng: &mut Rng, t: usize, f: usize, n: usize) -> (Vec<f32>, Vec<f32>,
 
 fn main() {
     println!("bench_hotpath — DPS cost-matrix backends\n");
+    let mut report = common::JsonReport::new("hotpath");
     let mut rng = Rng::new(1);
     let shapes = [(32usize, 256usize, 8usize), (64, 512, 8), (256, 1024, 8), (1024, 4096, 8)];
 
     for &(t, f, n) in &shapes {
         let (req, present, sizes) = instance(&mut rng, t, f, n);
-        common::bench_n(&format!("native  ({t:>4} x {f:>4} x {n})"), 20, || {
+        let (min, mean) = common::bench_n(&format!("native  ({t:>4} x {f:>4} x {n})"), 20, || {
             let _ = NativeCost.missing_local(&req, &present, &sizes, t, f, n);
         });
+        report.row(
+            &format!("native-{t}x{f}x{n}"),
+            &[("min_s", Jv::F(min)), ("mean_s", Jv::F(mean))],
+        );
     }
 
     #[cfg(feature = "xla-runtime")]
@@ -35,44 +42,116 @@ fn main() {
             let mut xla = wow::runtime::XlaCostModel::load_default().expect("artifact");
             for &(t, f, n) in &shapes {
                 let (req, present, sizes) = instance(&mut rng, t, f, n);
-                common::bench_n(&format!("xla     ({t:>4} x {f:>4} x {n})"), 20, || {
-                    let _ = xla.missing_local(&req, &present, &sizes, t, f, n);
-                });
+                let (min, mean) =
+                    common::bench_n(&format!("xla     ({t:>4} x {f:>4} x {n})"), 20, || {
+                        let _ = xla.missing_local(&req, &present, &sizes, t, f, n);
+                    });
+                report.row(
+                    &format!("xla-{t}x{f}x{n}"),
+                    &[("min_s", Jv::F(min)), ("mean_s", Jv::F(mean))],
+                );
             }
         } else {
             println!("(xla artifact not built; run `make artifacts` for the XLA rows)");
         }
     }
 
-    // Greedy COP planner microbench.
-    use wow::cluster::NodeId;
-    use wow::dps::Dps;
-    use wow::util::units::Bytes;
-    use wow::workflow::task::FileId;
-    let mut dps = Dps::new(7);
-    let files: Vec<FileId> = (0..64).map(FileId).collect();
-    for &f in &files {
-        for node in 0..4 {
-            dps.register_output(f, Bytes::from_gb(0.5), NodeId(node));
+    // Dirty-tracked row cache vs the full rebuild under single-task
+    // churn: each iteration touches one task's input file — the cached
+    // path recomputes one row, the full path all of them.
+    {
+        use wow::cluster::NodeId;
+        use wow::dps::Dps;
+        use wow::util::units::Bytes;
+        use wow::workflow::task::{FileId, TaskId};
+        let n_tasks = 256usize;
+        let n_nodes = 16usize;
+        let mut dps = Dps::new(3);
+        let inputs: Vec<[FileId; 2]> = (0..n_tasks)
+            .map(|k| [FileId(2 * k as u64), FileId(2 * k as u64 + 1)])
+            .collect();
+        for ins in &inputs {
+            for f in ins {
+                dps.register_output(*f, Bytes::from_gb(0.5), NodeId(f.0 as usize % n_nodes));
+            }
         }
+        let tasks: Vec<(TaskId, &[FileId])> =
+            inputs.iter().enumerate().map(|(k, ins)| (TaskId(k as u64), &ins[..])).collect();
+        let inputs_of: Vec<&[FileId]> = inputs.iter().map(|ins| &ins[..]).collect();
+        let nodes: Vec<NodeId> = (0..n_nodes).map(NodeId).collect();
+        let mut churn = 0u64;
+        let (min, mean) = common::bench_n(
+            &format!("cost rows cached   ({n_tasks} tasks, 1-file churn)"),
+            200,
+            || {
+                dps.register_output(
+                    FileId(churn % (2 * n_tasks as u64)),
+                    Bytes::from_gb(0.5),
+                    NodeId((churn % n_nodes as u64) as usize),
+                );
+                churn += 1;
+                let _ = dps.cost_matrix_cached(&tasks, &nodes, &mut NativeCost);
+            },
+        );
+        report.row(
+            "cost-rows-cached",
+            &[("min_s", Jv::F(min)), ("mean_s", Jv::F(mean))],
+        );
+        let (min, mean) = common::bench_n(
+            &format!("cost rows rebuilt  ({n_tasks} tasks, 1-file churn)"),
+            200,
+            || {
+                dps.register_output(
+                    FileId(churn % (2 * n_tasks as u64)),
+                    Bytes::from_gb(0.5),
+                    NodeId((churn % n_nodes as u64) as usize),
+                );
+                churn += 1;
+                let _ = dps.cost_matrix(&inputs_of, &nodes, &mut NativeCost);
+            },
+        );
+        report.row(
+            "cost-rows-rebuilt",
+            &[("min_s", Jv::F(min)), ("mean_s", Jv::F(mean))],
+        );
     }
-    common::bench_n("dps::plan (64 files, 4 holders)", 200, || {
-        let _ = dps.plan(&files, NodeId(6));
-    });
+
+    // Greedy COP planner microbench.
+    {
+        use wow::cluster::NodeId;
+        use wow::dps::Dps;
+        use wow::util::units::Bytes;
+        use wow::workflow::task::FileId;
+        let mut dps = Dps::new(7);
+        let files: Vec<FileId> = (0..64).map(FileId).collect();
+        for &f in &files {
+            for node in 0..4 {
+                dps.register_output(f, Bytes::from_gb(0.5), NodeId(node));
+            }
+        }
+        let (min, mean) = common::bench_n("dps::plan (64 files, 4 holders)", 200, || {
+            let _ = dps.plan(&files, NodeId(6));
+        });
+        report.row("dps-plan", &[("min_s", Jv::F(min)), ("mean_s", Jv::F(mean))]);
+    }
 
     // One full WOW scheduling-heavy simulation as the end-to-end probe.
     use wow::exec::{run, RunConfig};
     use wow::scheduler::Strategy;
-    common::bench_n("full sim: Group Multiple / WOW / Ceph", 5, || {
+    let (min, mean) = common::bench_n("full sim: Group Multiple / WOW / Ceph", 5, || {
         let _ = run(
             &wow::workflow::patterns::group_multiple(),
             &RunConfig { strategy: Strategy::Wow, ..Default::default() },
         );
     });
-    common::bench_n("full sim: Chip-Seq / WOW / Ceph", 1, || {
+    report.row("sim-group-multiple", &[("min_s", Jv::F(min)), ("mean_s", Jv::F(mean))]);
+    let (min, mean) = common::bench_n("full sim: Chip-Seq / WOW / Ceph", 1, || {
         let _ = run(
             &wow::workflow::realworld::chipseq(),
             &RunConfig { strategy: Strategy::Wow, ..Default::default() },
         );
     });
+    report.row("sim-chipseq", &[("min_s", Jv::F(min)), ("mean_s", Jv::F(mean))]);
+
+    report.write("BENCH_hotpath.json");
 }

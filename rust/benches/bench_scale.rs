@@ -1,0 +1,90 @@
+//! Bench: the end-to-end scaling instrument for the incremental
+//! simulation core. Runs multi-tenant Poisson workloads at cluster ×
+//! tenant shapes up to 256 nodes × 32 tenants under all three
+//! strategies, once with [`SimCore::Incremental`] and once with
+//! [`SimCore::Naive`] (the pre-refactor algorithms: full max-min
+//! recompute per network change, full cost-matrix rebuild per
+//! scheduling iteration), asserting the two produce bit-identical
+//! `RunMetrics` fingerprints before reporting the speedup. The naive
+//! core reproduces the old cost model's *dominant* terms on the new
+//! data structures (see `SimCore::Naive` docs for the second-order
+//! caveats in both directions), so the speedup column measures the
+//! algorithmic win, not a cycle-exact old-binary A/B.
+//!
+//! `cargo bench --bench bench_scale` — full sweep (the largest naive
+//! cell is deliberately expensive; that is the point).
+//! `BENCH_SMOKE=1 cargo bench --bench bench_scale` (or `-- --smoke`) —
+//! one small shape, for CI.
+//!
+//! Emits `BENCH_scale.json` for PR-over-PR perf tracking.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::Jv;
+use wow::exec::{run_workload, RunConfig, SimCore};
+use wow::scheduler::Strategy;
+use wow::workflow::patterns;
+use wow::workload::{Arrival, WorkloadSpec};
+
+fn main() {
+    let smoke =
+        std::env::var("BENCH_SMOKE").is_ok() || std::env::args().any(|a| a == "--smoke");
+    println!("bench_scale — incremental vs naive (pre-refactor) simulation core\n");
+    let shapes: &[(usize, usize)] =
+        if smoke { &[(16, 2)] } else { &[(64, 8), (128, 16), (256, 32)] };
+    let mix = vec![patterns::chain(), patterns::fork(), patterns::group()];
+    let mut report = common::JsonReport::new("scale");
+
+    for &(nodes, tenants) in shapes {
+        let wl = WorkloadSpec::from_mix(
+            &format!("scale-{tenants}"),
+            &mix,
+            tenants,
+            &Arrival::Poisson { mean_gap_s: 60.0 },
+            0,
+        );
+        for strategy in [Strategy::Orig, Strategy::Cws, Strategy::Wow] {
+            let cfg = |core: SimCore| RunConfig {
+                n_nodes: nodes,
+                strategy,
+                core,
+                ..Default::default()
+            };
+            let mut fp_inc = 0u64;
+            let (inc_s, _) = common::bench_n(
+                &format!("incremental {nodes:>3}n x {tenants:>2}t / {}", strategy.label()),
+                1,
+                || fp_inc = run_workload(&wl, &cfg(SimCore::Incremental)).fingerprint(),
+            );
+            let mut fp_naive = 0u64;
+            let (naive_s, _) = common::bench_n(
+                &format!("naive       {nodes:>3}n x {tenants:>2}t / {}", strategy.label()),
+                1,
+                || fp_naive = run_workload(&wl, &cfg(SimCore::Naive)).fingerprint(),
+            );
+            assert_eq!(
+                fp_inc, fp_naive,
+                "cores disagree on {nodes}n x {tenants}t / {strategy:?}"
+            );
+            let speedup = naive_s / inc_s;
+            println!(
+                "  -> speedup {speedup:>6.2}x (fingerprint {fp_inc:016x} identical)\n"
+            );
+            report.row(
+                &format!("{nodes}n-{tenants}t-{}", strategy.label()),
+                &[
+                    ("nodes", Jv::U(nodes as u64)),
+                    ("tenants", Jv::U(tenants as u64)),
+                    ("strategy", Jv::S(strategy.label().to_string())),
+                    ("incremental_s", Jv::F(inc_s)),
+                    ("naive_s", Jv::F(naive_s)),
+                    ("speedup", Jv::F(speedup)),
+                    ("fingerprint", Jv::S(format!("{fp_inc:016x}"))),
+                    ("smoke", Jv::B(smoke)),
+                ],
+            );
+        }
+    }
+    report.write("BENCH_scale.json");
+}

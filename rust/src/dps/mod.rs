@@ -20,7 +20,7 @@ use crate::util::rng::Rng;
 use crate::util::units::Bytes;
 use crate::workflow::task::{FileId, TaskId};
 use cost::CostEval;
-use crate::util::fxmap::FastMap;
+use crate::util::fxmap::{FastMap, FastSet};
 use std::collections::HashMap;
 
 /// Identifies a copy operation.
@@ -61,6 +61,28 @@ impl CopPlan {
     }
 }
 
+/// One cached cost-matrix row: the missing/local vectors of a single
+/// ready task over the current worker list, plus what they were computed
+/// from — the f32 accumulation order (`order`) and the placement
+/// generation (`stamp`). A row is reusable only while both still match;
+/// see [`Dps::cost_matrix_cached`].
+#[derive(Debug)]
+struct CachedRow {
+    order: Vec<FileId>,
+    missing: Vec<f32>,
+    local: Vec<f32>,
+    stamp: u64,
+}
+
+/// Row cache for [`Dps::cost_matrix_cached`].
+#[derive(Debug, Default)]
+struct CostCache {
+    rows: FastMap<TaskId, CachedRow>,
+    /// Worker list (columns) the cached rows are valid for; any change
+    /// (crash, recovery, different cluster) flushes everything.
+    workers: Vec<NodeId>,
+}
+
 /// The data placement service.
 #[derive(Debug)]
 pub struct Dps {
@@ -75,6 +97,15 @@ pub struct Dps {
     node_cops: FastMap<NodeId, u32>,
     /// Per-task active COP count for `c_task`.
     task_cops: FastMap<TaskId, u32>,
+    /// Placement generation: bumped on every replica-set or size change;
+    /// `file_stamp` records each file's last change. Cost-matrix rows
+    /// older than any of their files are recomputed.
+    loc_gen: u64,
+    file_stamp: FastMap<FileId, u64>,
+    cache: CostCache,
+    /// When set, every cached matrix is cross-checked bit-for-bit
+    /// against the uncached full rebuild (test builds / `SimCore::Checked`).
+    check_reference: bool,
     /// Metrics: bytes copied via COPs (replica overhead, Fig 4).
     pub bytes_copied: Bytes,
     pub cops_created: u64,
@@ -93,6 +124,10 @@ impl Dps {
             next_cop: 0,
             node_cops: FastMap::default(),
             task_cops: FastMap::default(),
+            loc_gen: 0,
+            file_stamp: FastMap::default(),
+            cache: CostCache::default(),
+            check_reference: false,
             bytes_copied: Bytes::ZERO,
             cops_created: 0,
             cops_completed: 0,
@@ -101,9 +136,23 @@ impl Dps {
         }
     }
 
+    /// Cross-check every [`Self::cost_matrix_cached`] result against the
+    /// uncached full rebuild (differential testing).
+    pub fn set_reference_check(&mut self, on: bool) {
+        self.check_reference = on;
+    }
+
+    /// Record that `file`'s replica set (or size) changed: invalidates
+    /// cost-matrix rows that read it.
+    fn touch(&mut self, file: FileId) {
+        self.loc_gen += 1;
+        self.file_stamp.insert(file, self.loc_gen);
+    }
+
     /// A task finished on `node`: its outputs are now local there
     /// (§III-B: data stays where it was produced until the DPS moves it).
     pub fn register_output(&mut self, file: FileId, size: Bytes, node: NodeId) {
+        self.touch(file);
         self.sizes.insert(file, size);
         let locs = self.locations.entry(file).or_default();
         if !locs.contains(&node) {
@@ -200,6 +249,7 @@ impl Dps {
     pub fn complete_cop(&mut self, id: CopId) -> Cop {
         let cop = self.active.remove(&id).expect("unknown COP");
         for (file, _src, size) in &cop.parts {
+            self.touch(*file);
             let locs = self.locations.entry(*file).or_default();
             if !locs.contains(&cop.dst) {
                 locs.push(cop.dst);
@@ -223,6 +273,7 @@ impl Dps {
         if self.active.values().any(|c| c.parts.iter().any(|(f, _, _)| *f == file)) {
             return Vec::new();
         }
+        self.touch(file);
         self.sizes.remove(&file);
         self.locations.remove(&file).unwrap_or_default()
     }
@@ -242,6 +293,7 @@ impl Dps {
         affected.sort();
         let mut lost = Vec::with_capacity(affected.len());
         for f in affected {
+            self.touch(f);
             self.locations.get_mut(&f).expect("affected file").retain(|n| *n != node);
             lost.push((f, self.sizes.get(&f).copied().unwrap_or(Bytes::ZERO)));
         }
@@ -349,6 +401,158 @@ impl Dps {
             backend.missing_local_sparse(&task_files, &present, &sizes, f, n)
         };
         CostMatrix { missing_gb: missing, local_gb: local, n }
+    }
+
+    /// Incremental variant of [`Self::cost_matrix`]: per-task rows are
+    /// cached and only *stale* rows are re-evaluated through the
+    /// backend. A row is stale when (a) the worker list changed (crash /
+    /// recovery — flushes everything), (b) any of the task's input files
+    /// was touched (replica added, invalidated, or released) since the
+    /// row was computed, or (c) the row's f32 accumulation order — the
+    /// global first-seen file order restricted to the task, exactly as
+    /// the full rebuild uses — changed with the ready-set composition.
+    /// Condition (c) is what keeps cached rows bit-identical to the full
+    /// rebuild even though f32 addition is order-sensitive.
+    ///
+    /// An iteration after a single task completion therefore recomputes
+    /// one row (the consumer whose input moved), not |ready| × |nodes|.
+    ///
+    /// Bit-identity to [`Self::cost_matrix`] is guaranteed for the
+    /// (default) [`cost::NativeCost`] backend, whose sparse left-fold is
+    /// invariant under the sub-universe restriction. Tiled backends like
+    /// the XLA artifact fold partial sums per `TILE_F` file tile, so a
+    /// row's float grouping depends on where its files land relative to
+    /// tile boundaries — dirty-batch results may differ in the last ULP
+    /// from a full rebuild there (the backends are equivalence-tested
+    /// with a tolerance in `rust/tests/runtime_xla.rs` instead).
+    pub fn cost_matrix_cached(
+        &mut self,
+        tasks: &[(TaskId, &[FileId])],
+        nodes: &[NodeId],
+        backend: &mut dyn CostEval,
+    ) -> CostMatrix {
+        let n = nodes.len();
+        if self.cache.workers != nodes {
+            self.cache.rows.clear();
+            self.cache.workers = nodes.to_vec();
+        }
+        // Global first-seen file order — identical to the full rebuild.
+        let mut file_idx: FastMap<FileId, usize> = FastMap::default();
+        let mut files: Vec<FileId> = Vec::new();
+        for (_, ins) in tasks {
+            for f in ins.iter() {
+                file_idx.entry(*f).or_insert_with(|| {
+                    files.push(*f);
+                    files.len() - 1
+                });
+            }
+        }
+        // Classify rows; remember each task's current accumulation order.
+        let mut orders: Vec<Vec<usize>> = Vec::with_capacity(tasks.len());
+        let mut dirty: Vec<usize> = Vec::new();
+        for (ti, (task, ins)) in tasks.iter().enumerate() {
+            let mut v: Vec<usize> = ins.iter().map(|file| file_idx[file]).collect();
+            v.sort_unstable();
+            v.dedup();
+            let fresh = match self.cache.rows.get(task) {
+                Some(row) => {
+                    row.order.len() == v.len()
+                        && row.order.iter().zip(&v).all(|(f, &i)| *f == files[i])
+                        && row
+                            .order
+                            .iter()
+                            .all(|f| self.file_stamp.get(f).copied().unwrap_or(0) <= row.stamp)
+                }
+                None => false,
+            };
+            if !fresh {
+                dirty.push(ti);
+            }
+            orders.push(v);
+        }
+        if !dirty.is_empty() {
+            // Sub-universe of the dirty tasks' files, in global order —
+            // a monotone restriction, so each dirty row's f32
+            // accumulation sequence matches the full rebuild's.
+            let mut in_sub = vec![false; files.len()];
+            for &ti in &dirty {
+                for &fi in &orders[ti] {
+                    in_sub[fi] = true;
+                }
+            }
+            let mut sub_pos = vec![usize::MAX; files.len()];
+            let mut sub_files: Vec<FileId> = Vec::new();
+            for (fi, file) in files.iter().enumerate() {
+                if in_sub[fi] {
+                    sub_pos[fi] = sub_files.len();
+                    sub_files.push(*file);
+                }
+            }
+            let f_sub = sub_files.len();
+            let mut present = vec![0f32; f_sub * n];
+            for (si, file) in sub_files.iter().enumerate() {
+                let locs = self.locations(*file);
+                for (ni, node) in nodes.iter().enumerate() {
+                    if locs.contains(node) {
+                        present[si * n + ni] = 1.0;
+                    }
+                }
+            }
+            let sizes: Vec<f32> = sub_files
+                .iter()
+                .map(|file| self.sizes.get(file).map(|b| b.as_gb() as f32).unwrap_or(0.0))
+                .collect();
+            let task_files: Vec<Vec<usize>> = dirty
+                .iter()
+                .map(|&ti| orders[ti].iter().map(|&fi| sub_pos[fi]).collect())
+                .collect();
+            let (missing, local) = if f_sub == 0 || n == 0 {
+                (vec![0f32; dirty.len() * n], vec![0f32; dirty.len() * n])
+            } else {
+                backend.missing_local_sparse(&task_files, &present, &sizes, f_sub, n)
+            };
+            for (k, &ti) in dirty.iter().enumerate() {
+                let order: Vec<FileId> = orders[ti].iter().map(|&fi| files[fi]).collect();
+                self.cache.rows.insert(
+                    tasks[ti].0,
+                    CachedRow {
+                        order,
+                        missing: missing[k * n..(k + 1) * n].to_vec(),
+                        local: local[k * n..(k + 1) * n].to_vec(),
+                        stamp: self.loc_gen,
+                    },
+                );
+            }
+        }
+        // Assemble the t × n result from the (now fresh) rows, then drop
+        // cache entries for tasks that left the ready set.
+        let mut missing = Vec::with_capacity(tasks.len() * n);
+        let mut local = Vec::with_capacity(tasks.len() * n);
+        for (task, _) in tasks {
+            let row = self.cache.rows.get(task).expect("row just refreshed");
+            missing.extend_from_slice(&row.missing);
+            local.extend_from_slice(&row.local);
+        }
+        if self.cache.rows.len() > tasks.len() {
+            let current: FastSet<TaskId> = tasks.iter().map(|(t, _)| *t).collect();
+            self.cache.rows.retain(|t, _| current.contains(t));
+        }
+        let out = CostMatrix { missing_gb: missing, local_gb: local, n };
+        if self.check_reference {
+            let inputs_of: Vec<&[FileId]> = tasks.iter().map(|(_, ins)| *ins).collect();
+            let want = self.cost_matrix(&inputs_of, nodes, backend);
+            assert_bitwise_eq(&out.missing_gb, &want.missing_gb, "missing");
+            assert_bitwise_eq(&out.local_gb, &want.local_gb, "local");
+        }
+        out
+    }
+}
+
+/// Differential-testing helper: f32 slices must agree bit-for-bit.
+fn assert_bitwise_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "cost cache {what} length diverged");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "cost cache {what}[{i}] diverged: {g} vs {w}");
     }
 }
 
@@ -509,5 +713,38 @@ mod tests {
         let d = dps();
         let m = d.cost_matrix(&[], &[NodeId(0)], &mut NativeCost);
         assert!(m.missing_gb.is_empty());
+    }
+
+    #[test]
+    fn cached_cost_matrix_matches_full_rebuild_under_churn() {
+        let mut d = dps();
+        // Every cached call below is asserted bit-identical against the
+        // uncached full rebuild.
+        d.set_reference_check(true);
+        let nodes = vec![NodeId(0), NodeId(1), NodeId(2)];
+        d.register_output(FileId(1), Bytes::from_gb(2.0), NodeId(0));
+        d.register_output(FileId(2), Bytes::from_gb(1.0), NodeId(1));
+        let i0 = [FileId(1), FileId(2)];
+        let i1 = [FileId(2)];
+        let tasks: Vec<(TaskId, &[FileId])> = vec![(TaskId(0), &i0), (TaskId(1), &i1)];
+        let a = d.cost_matrix_cached(&tasks, &nodes, &mut NativeCost);
+        assert!((a.missing(0, 0) - 1.0).abs() < 1e-5);
+        // Second call: every row served from cache.
+        let b = d.cost_matrix_cached(&tasks, &nodes, &mut NativeCost);
+        assert_eq!(a.missing_gb, b.missing_gb);
+        assert_eq!(a.local_gb, b.local_gb);
+        // A placement change invalidates the rows reading that file.
+        d.register_output(FileId(2), Bytes::from_gb(1.0), NodeId(2));
+        let c = d.cost_matrix_cached(&tasks, &nodes, &mut NativeCost);
+        assert!(c.is_prepared(1, 2));
+        // A changed worker list flushes the whole cache.
+        let fewer = vec![NodeId(0), NodeId(1)];
+        let m = d.cost_matrix_cached(&tasks, &fewer, &mut NativeCost);
+        assert_eq!(m.missing_gb.len(), 4);
+        // A ready-set reordering that changes a row's accumulation order
+        // (file 2 now first-seen before file 1) is detected, not reused.
+        let swapped: Vec<(TaskId, &[FileId])> = vec![(TaskId(1), &i1), (TaskId(0), &i0)];
+        let s = d.cost_matrix_cached(&swapped, &fewer, &mut NativeCost);
+        assert_eq!(s.missing(1, 0), m.missing(0, 0));
     }
 }

@@ -36,13 +36,54 @@ use crate::net::{FlowId, FlowNet};
 use crate::scheduler::wow::WowParams;
 use crate::scheduler::{Action, ReadyTask, SchedView, Scheduler, Strategy, TenantPolicy};
 use crate::sim::event::EventQueue;
-use crate::util::fxmap::FastMap;
+use crate::util::fxmap::{FastMap, FastSet};
 use crate::util::rng::Rng;
 use crate::util::units::{Bandwidth, Bytes, SimTime};
 use crate::workflow::engine::WorkflowEngine;
 use crate::workflow::spec::WorkflowSpec;
 use crate::workflow::task::{FileId, TaskId};
 use crate::workload::{self, WorkloadSpec};
+
+/// Which simulation-core implementation drives the run. All three
+/// produce bit-identical `RunMetrics`; they differ only in cost. (With
+/// a non-native cost backend — the tiled XLA artifact — the executor
+/// keeps the full cost-matrix rebuild under every core, because the
+/// row cache's bit-identity argument only holds for the native
+/// backend's accumulation order.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimCore {
+    /// The incremental core: component-restricted max-min recompute,
+    /// dirty-tracked cost-matrix rows, O(1) executor bookkeeping.
+    #[default]
+    Incremental,
+    /// Incremental, with naive shadow oracles attached: every FlowNet
+    /// observable and every cost matrix is asserted bit-identical
+    /// against the pre-refactor algorithms. Slow; for tests.
+    Checked,
+    /// The pre-refactor cost model: full progressive filling on every
+    /// network change and a full cost-matrix rebuild per scheduling
+    /// iteration. Kept as `bench_scale`'s baseline. The dominant terms
+    /// match the old core exactly; second-order costs differ in both
+    /// directions (this mode still pays the incremental index upkeep
+    /// the old core lacked, but also enjoys its O(1) lookups where the
+    /// old core scanned), so treat measured speedups as estimates of
+    /// the algorithmic win, not a cycle-exact A/B.
+    Naive,
+}
+
+impl std::str::FromStr for SimCore {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "incremental" | "incr" => Ok(SimCore::Incremental),
+            "checked" => Ok(SimCore::Checked),
+            "naive" | "full" => Ok(SimCore::Naive),
+            other => {
+                anyhow::bail!("unknown sim core '{other}' (expected incremental|checked|naive)")
+            }
+        }
+    }
+}
 
 /// Configuration of one simulated run.
 #[derive(Debug, Clone)]
@@ -78,6 +119,9 @@ pub struct RunConfig {
     /// single-tenant runs (the executor passes an empty precedence
     /// vector, so both policies take the identical code path).
     pub tenant_policy: TenantPolicy,
+    /// Simulation-core selection (incremental / checked / naive); the
+    /// choice never changes results, only how fast they are produced.
+    pub core: SimCore,
 }
 
 impl Default for RunConfig {
@@ -95,6 +139,7 @@ impl Default for RunConfig {
             speed_factors: Vec::new(),
             fault: FaultConfig::default(),
             tenant_policy: TenantPolicy::Fifo,
+            core: SimCore::Incremental,
         }
     }
 }
@@ -188,6 +233,16 @@ struct TenantRt {
     running_cores: u64,
 }
 
+/// A finished COP awaiting (or past) its usefulness attribution: `used`
+/// flips when a task starting on `dst` reads any of `files` (Table II's
+/// "used" column).
+#[derive(Debug)]
+struct CompletedCop {
+    dst: NodeId,
+    files: Vec<FileId>,
+    used: bool,
+}
+
 struct Executor {
     cfg: RunConfig,
     workload_name: String,
@@ -201,9 +256,21 @@ struct Executor {
     events: EventQueue<Event>,
     rng: Rng,
 
+    /// Ready queue in submission order. Started tasks are tombstoned
+    /// (`ready_dead`) in O(1) and compacted away at the next scheduling
+    /// iteration, so the slice handed to schedulers stays dense while
+    /// `start_task`/`start_cop` never scan.
     ready: Vec<ReadyTask>,
+    ready_dead: Vec<bool>,
+    n_ready_dead: usize,
+    /// id → position in `ready` (live entries only).
+    ready_pos: FastMap<TaskId, usize>,
     running: FastMap<TaskId, Running>,
     flow_owner: FastMap<FlowId, FlowOwner>,
+    /// Reverse index of `flow_owner` for stage-in/out flows: task → its
+    /// live flows in ascending id order (crash handling's
+    /// `flows_of_task` used to scan every flow).
+    task_flows: FastMap<TaskId, Vec<FlowId>>,
     submitted_seq: u64,
 
     // Metrics accumulation.
@@ -212,7 +279,11 @@ struct Executor {
     cpu_core_seconds: f64,
     node_cpu_seconds: Vec<f64>,
     cops_per_task: FastMap<TaskId, u32>,
-    completed_cops: Vec<(TaskId, NodeId, Vec<FileId>, bool)>, // task, dst, files, used
+    completed_cops: Vec<CompletedCop>,
+    /// Not-yet-used completed COPs indexed by destination node, so the
+    /// usefulness attribution in `start_task` touches only that node's
+    /// candidates instead of every COP ever completed.
+    unused_cops_by_node: FastMap<NodeId, Vec<usize>>,
     /// COPs in their setup-latency window, not yet flowing.
     pending_cops: FastMap<CopId, crate::dps::Cop>,
     tasks_done: usize,
@@ -245,6 +316,11 @@ impl Executor {
     fn new(workload: WorkloadSpec, cfg: RunConfig, backend: Box<dyn CostEval>) -> Self {
         assert!(!workload.tenants.is_empty(), "workload needs at least one tenant");
         let mut net = FlowNet::new();
+        match cfg.core {
+            SimCore::Incremental => {}
+            SimCore::Checked => net.enable_reference_check(),
+            SimCore::Naive => net.set_full_recompute(true),
+        }
         let needs_server = cfg.dfs == DfsKind::Nfs;
         let mut cluster = Cluster::build(
             &mut net,
@@ -261,12 +337,21 @@ impl Executor {
             DfsKind::Ceph => Box::new(Ceph::new()),
             DfsKind::Nfs => Box::new(Nfs::new(cluster.nfs_server().expect("server"))),
         };
+        // The row cache is bit-identical to the full rebuild only for
+        // the native backend (tiled backends fold per-tile partial sums,
+        // so their float grouping depends on the batch's file universe);
+        // keep non-native backends on the full rebuild so `--xla` runs
+        // reproduce the pre-refactor numbers exactly.
+        let incremental = cfg.core != SimCore::Naive && backend.backend_name() == "native";
         let params = WowParams {
             c_node: cfg.c_node,
             c_task: cfg.c_task,
             backend,
+            incremental,
         };
         let scheduler = cfg.strategy.build(params);
+        let mut dps = Dps::new(cfg.seed);
+        dps.set_reference_check(cfg.core == SimCore::Checked);
         let workload_name = workload.name;
         let tenants: Vec<TenantRt> = workload
             .tenants
@@ -291,13 +376,17 @@ impl Executor {
             net,
             cluster,
             dfs,
-            dps: Dps::new(cfg.seed),
+            dps,
             lcs: Lcs::new(),
             events: EventQueue::new(),
             rng: Rng::new(cfg.seed ^ 0xEC5E_C0DE),
             ready: Vec::new(),
+            ready_dead: Vec::new(),
+            n_ready_dead: 0,
+            ready_pos: FastMap::default(),
             running: FastMap::default(),
             flow_owner: FastMap::default(),
+            task_flows: FastMap::default(),
             submitted_seq: 0,
             first_start: None,
             last_finish: SimTime::ZERO,
@@ -305,6 +394,7 @@ impl Executor {
             node_cpu_seconds: vec![0.0; n_workers],
             cops_per_task: FastMap::default(),
             completed_cops: Vec::new(),
+            unused_cops_by_node: FastMap::default(),
             pending_cops: FastMap::default(),
             tasks_done: 0,
             node_replica_bytes: vec![0.0; n_workers],
@@ -360,7 +450,7 @@ impl Executor {
             assert!(
                 t != SimTime::FAR_FUTURE,
                 "deadlock: no pending events; ready={} running={} arrived={}/{} done={}/{}",
-                self.ready.len(),
+                self.ready.len() - self.n_ready_dead,
                 self.running.len(),
                 self.tenants.iter().filter(|t| t.arrived).count(),
                 self.tenants.len(),
@@ -373,7 +463,7 @@ impl Executor {
 
             // Flow completions.
             for flow in self.net.take_completed() {
-                if let Some(owner) = self.flow_owner.remove(&flow) {
+                if let Some(owner) = self.disown_flow(flow) {
                     need_schedule |= self.flow_finished(owner, t);
                 } else if let Some(cop_id) = self.lcs.flow_done(flow) {
                     self.cop_finished(cop_id);
@@ -425,7 +515,12 @@ impl Executor {
                     }
                 }
             }
-            if need_schedule {
+            // A scheduling iteration is observably a no-op when nothing
+            // is ready: every strategy returns no actions and draws no
+            // randomness on an empty queue, so skip the call outright
+            // (common during long drain phases). Any broader skip would
+            // desync WOW's COP-planning RNG stream.
+            if need_schedule && self.ready.len() > self.n_ready_dead {
                 self.schedule();
             }
         }
@@ -500,7 +595,36 @@ impl Executor {
         // fact; policy code reads the field, id-keyed maps the high bits.
         debug_assert_eq!(workload::task_tenant(rt.id), rt.tenant);
         self.submitted_seq += 1;
+        self.ready_pos.insert(rt.id, self.ready.len());
         self.ready.push(rt);
+        self.ready_dead.push(false);
+    }
+
+    /// Drop tombstoned (started) entries so the schedulers see a dense
+    /// slice; submission order — and with it every FIFO tie-break — is
+    /// preserved.
+    fn compact_ready(&mut self) {
+        if self.n_ready_dead == 0 {
+            return;
+        }
+        let mut w = 0;
+        for i in 0..self.ready.len() {
+            if self.ready_dead[i] {
+                continue;
+            }
+            if w != i {
+                self.ready.swap(w, i);
+            }
+            w += 1;
+        }
+        self.ready.truncate(w);
+        self.ready_dead.clear();
+        self.ready_dead.resize(w, false);
+        self.n_ready_dead = 0;
+        self.ready_pos.clear();
+        for (i, rt) in self.ready.iter().enumerate() {
+            self.ready_pos.insert(rt.id, i);
+        }
     }
 
     /// Inter-tenant precedence ranks for this iteration (empty on
@@ -542,6 +666,7 @@ impl Executor {
     /// (Single pass — the strategies are idempotent and every applied
     /// action triggers a fresh iteration through its completion event.)
     fn schedule(&mut self) {
+        self.compact_ready();
         let prec = self.tenant_precedence();
         let view = SchedView {
             now: self.net.now(),
@@ -563,40 +688,50 @@ impl Executor {
     }
 
     fn start_task(&mut self, task: TaskId, node: NodeId) -> bool {
-        let idx = match self.ready.iter().position(|r| r.id == task) {
-            Some(i) => i,
+        let pos = match self.ready_pos.get(&task) {
+            Some(&p) => p,
             None => return false, // already started (stale action)
         };
-        let rt = self.ready.remove(idx);
+        debug_assert!(!self.ready_dead[pos] && self.ready[pos].id == task);
+        let (cores, mem) = (self.ready[pos].cores, self.ready[pos].mem);
+        self.ready_dead[pos] = true;
+        self.n_ready_dead += 1;
+        self.ready_pos.remove(&task);
         assert!(
-            self.cluster.fits(node, rt.cores, rt.mem),
+            self.cluster.fits(node, cores, mem),
             "scheduler over-subscribed node {node:?} for task {task:?}"
         );
-        self.cluster.reserve(node, rt.cores, rt.mem);
+        self.cluster.reserve(node, cores, mem);
         let now = self.net.now();
         self.first_start.get_or_insert(now);
         let tn = workload::task_tenant(task);
         let lid = workload::local_task(task);
         self.tenants[tn].first_start.get_or_insert(now);
-        self.tenants[tn].running_cores += rt.cores as u64;
+        self.tenants[tn].running_cores += cores as u64;
 
-        // Mark used COPs: any completed COP for this task targeting this
-        // node whose files intersect the inputs. Inputs are engine-local;
+        // Mark used COPs: any not-yet-used completed COP targeting this
+        // node whose files intersect the inputs — regardless of which
+        // task the COP was created for. Inputs are engine-local;
         // everything shared (COPs, DPS, DFS, flows) uses namespaced ids.
-        let inputs_g: Vec<FileId> = self.tenants[tn]
-            .engine
-            .task(lid)
-            .inputs
-            .iter()
-            .map(|&f| workload::ns_file(tn, f))
-            .collect();
-        for (ct, dst, files, used) in self.completed_cops.iter_mut() {
-            if *used || *dst != node {
-                continue;
-            }
-            let _ = ct;
-            if files.iter().any(|f| inputs_g.contains(f)) {
-                *used = true;
+        if let Some(mut candidates) = self.unused_cops_by_node.remove(&node) {
+            let inputs_g: FastSet<FileId> = self.tenants[tn]
+                .engine
+                .task(lid)
+                .inputs
+                .iter()
+                .map(|&f| workload::ns_file(tn, f))
+                .collect();
+            candidates.retain(|&idx| {
+                let cop = &mut self.completed_cops[idx];
+                if cop.files.iter().any(|f| inputs_g.contains(f)) {
+                    cop.used = true;
+                    false
+                } else {
+                    true
+                }
+            });
+            if !candidates.is_empty() {
+                self.unused_cops_by_node.insert(node, candidates);
             }
         }
 
@@ -612,8 +747,8 @@ impl Executor {
                 started: now,
                 compute_started: now,
                 attempt: self.exec_seq,
-                cores: rt.cores,
-                mem: rt.mem,
+                cores,
+                mem,
             },
         );
         if n_flows == 0 {
@@ -644,12 +779,12 @@ impl Executor {
                 );
                 let n = self.cluster.node(node);
                 let id = self.net.add_flow(size, vec![n.disk_read]);
-                self.flow_owner.insert(id, FlowOwner::StageIn(task));
+                self.own_flow(id, FlowOwner::StageIn(task));
                 n_flows += 1;
             } else {
                 for part in self.dfs.read(gf, size, node, &self.cluster, &mut self.rng) {
                     let id = self.net.add_flow(part.bytes, part.resources);
-                    self.flow_owner.insert(id, FlowOwner::StageIn(task));
+                    self.own_flow(id, FlowOwner::StageIn(task));
                     n_flows += 1;
                 }
             }
@@ -713,13 +848,13 @@ impl Executor {
             if local_mode {
                 let n = self.cluster.node(node);
                 let id = self.net.add_flow(size, vec![n.disk_write]);
-                self.flow_owner.insert(id, FlowOwner::StageOut(task));
+                self.own_flow(id, FlowOwner::StageOut(task));
                 n_flows += 1;
             } else {
                 let gf = workload::ns_file(tn, f);
                 for part in self.dfs.write(gf, size, node, &self.cluster, &mut self.rng) {
                     let id = self.net.add_flow(part.bytes, part.resources);
-                    self.flow_owner.insert(id, FlowOwner::StageOut(task));
+                    self.own_flow(id, FlowOwner::StageOut(task));
                     n_flows += 1;
                 }
             }
@@ -808,8 +943,8 @@ impl Executor {
 
     fn start_cop(&mut self, task: TaskId, dst: NodeId) -> bool {
         // The scheduler checked feasibility; re-plan for fresh sources.
-        let inputs = match self.ready.iter().find(|r| r.id == task) {
-            Some(r) => r.intermediate_inputs.clone(),
+        let inputs = match self.ready_pos.get(&task) {
+            Some(&pos) => self.ready[pos].intermediate_inputs.clone(),
             None => return false, // task started in the same batch
         };
         let plan = match self.dps.plan(&inputs, dst) {
@@ -833,7 +968,9 @@ impl Executor {
         }
         self.update_peak();
         let files = cop.parts.iter().map(|(f, _, _)| *f).collect();
-        self.completed_cops.push((cop.task, cop.dst, files, false));
+        let idx = self.completed_cops.len();
+        self.completed_cops.push(CompletedCop { dst: cop.dst, files, used: false });
+        self.unused_cops_by_node.entry(cop.dst).or_default().push(idx);
     }
 
     // ---- fault injection & recovery --------------------------------
@@ -926,7 +1063,7 @@ impl Executor {
                     }
                 }
                 Some(FlowOwner::Recovery) => {
-                    self.flow_owner.remove(&f);
+                    let _ = self.disown_flow(f);
                     self.net.cancel(f);
                 }
                 None => {}
@@ -943,7 +1080,7 @@ impl Executor {
         for part in self.dfs.fail_node(node, &self.cluster, &mut self.rng) {
             self.recovery_bytes += part.bytes;
             let id = self.net.add_flow(part.bytes, part.resources);
-            self.flow_owner.insert(id, FlowOwner::Recovery);
+            self.own_flow(id, FlowOwner::Recovery);
         }
 
         // 6. Restart interrupted phases against the healed placement.
@@ -972,17 +1109,35 @@ impl Executor {
         }
     }
 
-    /// Stage-in/out flows currently owned by `task`, sorted.
+    /// Record a flow's owner, maintaining the task → flows reverse
+    /// index for stage-in/out flows.
+    fn own_flow(&mut self, id: FlowId, owner: FlowOwner) {
+        self.flow_owner.insert(id, owner);
+        if let FlowOwner::StageIn(t) | FlowOwner::StageOut(t) = owner {
+            self.task_flows.entry(t).or_default().push(id);
+        }
+    }
+
+    /// Remove a flow's ownership record (completion, cancellation),
+    /// keeping the reverse index in sync. Returns the owner, if any.
+    fn disown_flow(&mut self, id: FlowId) -> Option<FlowOwner> {
+        let owner = self.flow_owner.remove(&id)?;
+        if let FlowOwner::StageIn(t) | FlowOwner::StageOut(t) = owner {
+            if let Some(flows) = self.task_flows.get_mut(&t) {
+                flows.retain(|f| *f != id);
+                if flows.is_empty() {
+                    self.task_flows.remove(&t);
+                }
+            }
+        }
+        Some(owner)
+    }
+
+    /// Stage-in/out flows currently owned by `task`, in ascending id
+    /// order (flow ids are monotone, so issue order is already sorted).
     fn flows_of_task(&self, task: TaskId) -> Vec<FlowId> {
-        let mut flows: Vec<FlowId> = self
-            .flow_owner
-            .iter()
-            .filter(|(_, o)| {
-                matches!(**o, FlowOwner::StageIn(t) | FlowOwner::StageOut(t) if t == task)
-            })
-            .map(|(f, _)| *f)
-            .collect();
-        flows.sort();
+        let flows = self.task_flows.get(&task).cloned().unwrap_or_default();
+        debug_assert!(flows.windows(2).all(|w| w[0] < w[1]), "task flows out of order");
         flows
     }
 
@@ -994,7 +1149,7 @@ impl Executor {
         let r = self.running.remove(&task).expect("running victim");
         let flows = self.flows_of_task(task);
         for f in flows {
-            self.flow_owner.remove(&f);
+            let _ = self.disown_flow(f);
             self.net.cancel(f);
         }
         let wall = (now - r.started).as_secs_f64();
@@ -1022,7 +1177,7 @@ impl Executor {
         }
         let flows = self.flows_of_task(task);
         for f in flows {
-            self.flow_owner.remove(&f);
+            let _ = self.disown_flow(f);
             self.net.cancel(f);
         }
         match phase {
@@ -1104,7 +1259,7 @@ impl Executor {
                     .count()
             })
             .sum();
-        let cops_used = self.completed_cops.iter().filter(|(_, _, _, used)| *used).count() as u64;
+        let cops_used = self.completed_cops.iter().filter(|c| c.used).count() as u64;
 
         // Per-node storage: total bytes written to each worker's disk.
         let node_storage_bytes: Vec<f64> = self
@@ -1234,6 +1389,27 @@ mod tests {
         let m = run(&tiny_chain(4), &cfg(Strategy::Cws, DfsKind::Ceph));
         assert_eq!(m.cops_created, 0);
         assert_eq!(m.tasks_no_cop, m.tasks_total);
+    }
+
+    #[test]
+    fn sim_cores_agree_on_tiny_chain() {
+        let spec = tiny_chain(5);
+        for strat in [Strategy::Orig, Strategy::Wow] {
+            let base = run(&spec, &cfg(strat, DfsKind::Ceph));
+            for core in [SimCore::Checked, SimCore::Naive] {
+                let mut c = cfg(strat, DfsKind::Ceph);
+                c.core = core;
+                assert_eq!(base, run(&spec, &c), "{strat:?}/{core:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn sim_core_parses() {
+        assert_eq!("incremental".parse::<SimCore>().unwrap(), SimCore::Incremental);
+        assert_eq!("checked".parse::<SimCore>().unwrap(), SimCore::Checked);
+        assert_eq!("naive".parse::<SimCore>().unwrap(), SimCore::Naive);
+        assert!("fast".parse::<SimCore>().is_err());
     }
 
     #[test]

@@ -17,8 +17,11 @@ use crate::util::fxmap::FastMap;
 pub struct Lcs {
     /// flow → owning COP.
     flow_cop: FastMap<FlowId, CopId>,
-    /// COP → number of unfinished flows.
-    pending: FastMap<CopId, usize>,
+    /// COP → its unfinished flows, in launch (= ascending id) order.
+    /// The reverse index makes crash-time cancellation O(parts) instead
+    /// of a scan over every in-flight flow; the COP barrier fires when
+    /// the vector drains.
+    cop_flows: FastMap<CopId, Vec<FlowId>>,
 }
 
 impl Lcs {
@@ -30,7 +33,7 @@ impl Lcs {
     /// node-to-node (never touching the DFS).
     pub fn start_cop(&mut self, cop: &Cop, cluster: &Cluster, net: &mut FlowNet) {
         assert!(!cop.parts.is_empty(), "empty COP");
-        let mut n = 0;
+        let mut flows = Vec::with_capacity(cop.parts.len());
         for (_, src, size) in &cop.parts {
             let s = cluster.node(*src);
             let d = cluster.node(cop.dst);
@@ -40,19 +43,19 @@ impl Lcs {
                 vec![s.disk_read, s.nic_up, d.nic_down, d.disk_write],
             );
             self.flow_cop.insert(fid, cop.id);
-            n += 1;
+            flows.push(fid);
         }
-        self.pending.insert(cop.id, n);
+        self.cop_flows.insert(cop.id, flows);
     }
 
     /// A flow completed. Returns `Some(cop)` when this was the last
     /// pending flow of its COP (the COP barrier).
     pub fn flow_done(&mut self, flow: FlowId) -> Option<CopId> {
         let cop = self.flow_cop.remove(&flow)?;
-        let left = self.pending.get_mut(&cop).expect("cop pending");
-        *left -= 1;
-        if *left == 0 {
-            self.pending.remove(&cop);
+        let left = self.cop_flows.get_mut(&cop).expect("cop flows");
+        left.retain(|f| *f != flow);
+        if left.is_empty() {
+            self.cop_flows.remove(&cop);
             Some(cop)
         } else {
             None
@@ -63,18 +66,11 @@ impl Lcs {
     /// drop its barrier. Returns the number of flows cancelled (0 if the
     /// COP had none in flight, e.g. still in its setup window).
     pub fn cancel_cop(&mut self, cop: CopId, net: &mut FlowNet) -> usize {
-        let mut flows: Vec<FlowId> = self
-            .flow_cop
-            .iter()
-            .filter(|(_, c)| **c == cop)
-            .map(|(f, _)| *f)
-            .collect();
-        flows.sort();
+        let flows = self.cop_flows.remove(&cop).unwrap_or_default();
         for f in &flows {
             self.flow_cop.remove(f);
             net.cancel(*f);
         }
-        self.pending.remove(&cop);
         flows.len()
     }
 
@@ -84,7 +80,7 @@ impl Lcs {
     }
 
     pub fn active_cops(&self) -> usize {
-        self.pending.len()
+        self.cop_flows.len()
     }
 }
 

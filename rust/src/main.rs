@@ -6,6 +6,7 @@
 //!         [--crashes N] [--fail-prob P] [--recovery S] [--degrades N]
 //!         [--nfs-outage]
 //!         [--tenants N] [--mix wf1,wf2] [--arrival SPEC] [--policy P]
+//!         [--core incremental|checked|naive]
 //! wow table1 | table2 | table3 | fig4 | fig5 | gini | all
 //!         [--seeds 0,1,2] [--quick] [--xla]
 //! wow chaos [--gc]      # fault-injection sweep (crashes × fail rates)
@@ -18,7 +19,7 @@
 
 use anyhow::{bail, Context, Result};
 use wow::dfs::DfsKind;
-use wow::exec::{run_with_backend, run_workload_with_backend, RunConfig};
+use wow::exec::{run_with_backend, run_workload_with_backend, RunConfig, SimCore};
 use wow::exp::{self, ExpOpts};
 use wow::metrics::RunMetrics;
 use wow::report::Table;
@@ -180,6 +181,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let spec = wow::workflow::by_name(&name).with_context(|| format!("unknown workflow '{name}'"))?;
     let cfg = RunConfig {
         tenant_policy: args.get("policy", TenantPolicy::Fifo)?,
+        core: args.get("core", SimCore::Incremental)?,
         n_nodes: args.get("nodes", 8usize)?,
         link_gbit: args.get("gbit", 1.0f64)?,
         dfs: args.get("dfs", DfsKind::Ceph)?,

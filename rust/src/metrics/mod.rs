@@ -155,6 +155,115 @@ impl RunMetrics {
         }
         self.wasted_compute_hours / self.cpu_alloc_hours * 100.0
     }
+
+    /// Order-stable 64-bit FNV-1a digest over every field, with floats
+    /// hashed by bit pattern: equal fingerprints ⇔ bit-identical
+    /// metrics. `bench_scale` uses it to prove the incremental and
+    /// naive simulation cores agree, and the equivalence tests pin runs
+    /// against it without serializing whole structs.
+    pub fn fingerprint(&self) -> u64 {
+        // Exhaustive destructuring (no `..` rest pattern): adding a
+        // field to RunMetrics or TenantMetrics without hashing it here
+        // becomes a compile error instead of a silent digest gap.
+        let RunMetrics {
+            workflow,
+            strategy,
+            dfs,
+            n_nodes,
+            link_gbit,
+            seed,
+            makespan,
+            cpu_alloc_hours,
+            tasks_total,
+            tasks_no_cop,
+            cops_created,
+            cops_used,
+            cop_bytes,
+            unique_generated,
+            node_storage_bytes,
+            node_cpu_seconds,
+            peak_replica_bytes,
+            node_crashes,
+            link_degrades,
+            task_failures,
+            tasks_rerun,
+            cops_aborted,
+            wasted_compute_hours,
+            recovery_bytes,
+            tenants,
+        } = self;
+        let mut h = Fnv1a::new();
+        h.bytes(workflow.as_bytes());
+        h.bytes(strategy.as_bytes());
+        h.bytes(dfs.as_bytes());
+        h.u64(*n_nodes as u64);
+        h.u64(link_gbit.to_bits());
+        h.u64(*seed);
+        h.u64(makespan.0);
+        h.u64(cpu_alloc_hours.to_bits());
+        h.u64(*tasks_total as u64);
+        h.u64(*tasks_no_cop as u64);
+        h.u64(*cops_created);
+        h.u64(*cops_used);
+        h.u64(cop_bytes.0);
+        h.u64(unique_generated.0);
+        h.u64(node_storage_bytes.len() as u64);
+        for v in node_storage_bytes {
+            h.u64(v.to_bits());
+        }
+        h.u64(node_cpu_seconds.len() as u64);
+        for v in node_cpu_seconds {
+            h.u64(v.to_bits());
+        }
+        h.u64(peak_replica_bytes.to_bits());
+        h.u64(*node_crashes);
+        h.u64(*link_degrades);
+        h.u64(*task_failures);
+        h.u64(*tasks_rerun);
+        h.u64(*cops_aborted);
+        h.u64(wasted_compute_hours.to_bits());
+        h.u64(recovery_bytes.0);
+        h.u64(tenants.len() as u64);
+        for t in tenants {
+            let TenantMetrics { name, arrival, first_start, makespan, completion, tasks } = t;
+            h.bytes(name.as_bytes());
+            h.u64(arrival.0);
+            match first_start {
+                Some(s) => {
+                    h.u64(1);
+                    h.u64(s.0);
+                }
+                None => h.u64(0),
+            }
+            h.u64(makespan.0);
+            h.u64(completion.0);
+            h.u64(*tasks as u64);
+        }
+        h.finish()
+    }
+}
+
+/// Minimal FNV-1a (64-bit) for [`RunMetrics::fingerprint`].
+struct Fnv1a(u64);
+
+impl Fnv1a {
+    fn new() -> Self {
+        Fnv1a(0xcbf2_9ce4_8422_2325)
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        self.u64(b.len() as u64);
+        for &x in b {
+            self.0 = (self.0 ^ x as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    fn u64(&mut self, x: u64) {
+        for &b in &x.to_le_bytes() {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    fn finish(&self) -> u64 {
+        self.0
+    }
 }
 
 #[cfg(test)]
@@ -196,5 +305,20 @@ mod tests {
         assert_eq!(m.pct_tasks_no_cop(), 0.0);
         assert_eq!(m.pct_cops_used(), 0.0);
         assert_eq!(m.data_overhead_pct(), 0.0);
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_field_sensitive() {
+        let a = m();
+        assert_eq!(a.fingerprint(), m().fingerprint(), "pure function of the fields");
+        let mut b = m();
+        b.cops_used += 1;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let mut c = m();
+        c.node_cpu_seconds[3] += 1.0;
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        let mut d = m();
+        d.strategy = "wow".into();
+        assert_ne!(a.fingerprint(), d.fingerprint());
     }
 }

@@ -13,8 +13,40 @@
 //! The model is event-driven: rates stay constant between flow
 //! arrivals/departures; [`FlowNet::advance_to`] integrates progress and
 //! [`FlowNet::next_completion`] yields the next departure time.
+//!
+//! ## Incremental core
+//!
+//! The original implementation recomputed the full max-min allocation
+//! over *all* flows and resources on every change and found flows by
+//! linear scan. This version is incremental while staying bit-identical
+//! to the original (asserted by [`reference::NaiveFlowNet`] shadows and
+//! the flow-churn property test):
+//!
+//! - flows live in an arrival-ordered slab with an id → slot index, so
+//!   [`FlowNet::rate_of`] / [`FlowNet::remaining`] /
+//!   [`FlowNet::cancel`] are O(1) instead of O(flows);
+//! - each resource keeps an adjacency list of the flows crossing it, so
+//!   [`FlowNet::flows_using_any`] (crash blast radius) is O(degree);
+//! - [`FlowNet::recompute`] tracks *dirty* resources (touched by flow
+//!   arrival/departure or capacity change) and re-runs progressive
+//!   filling only on the connected components reachable from them.
+//!   Untouched components keep their cached rates — which are exactly
+//!   what a full recompute would reproduce, because max-min shares of a
+//!   component depend only on its own members (see `DESIGN.md` §Perf
+//!   for the invariant argument).
+//!
+//! `next_completion` and `advance_to` intentionally remain single passes
+//! over the live flows: a completion-time heap was evaluated and
+//! rejected because the per-event `remaining -= rate·dt` float chain
+//! makes recomputed completion times drift by ±1 µs relative to cached
+//! ones, which would break bit-identical `RunMetrics`. The scan is a few
+//! flops per flow; the asymptotic hot spot was the full recompute.
 
+pub mod reference;
+
+use crate::util::fxmap::FastMap;
 use crate::util::units::{Bandwidth, Bytes, SimTime};
+use reference::NaiveFlowNet;
 
 /// Identifies a capacity-limited channel (e.g. "node 3 disk read").
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -30,47 +62,112 @@ struct Flow {
     remaining: f64, // bytes
     resources: Vec<ResourceId>,
     rate: f64, // bytes/s, set by recompute()
+    /// False once completed or cancelled; dead slots are skipped until
+    /// the next compaction keeps the slab within 2× the live count.
+    alive: bool,
 }
 
 /// The shared bandwidth substrate.
-#[derive(Debug)]
+#[derive(Debug, Default)]
 pub struct FlowNet {
     capacities: Vec<f64>, // bytes/s per ResourceId
-    flows: Vec<Flow>,     // active flows (dense; order = arrival, deterministic)
+    /// Arrival-ordered slab (append-only between compactions); slot
+    /// order always equals FlowId order, which the component recompute
+    /// relies on for deterministic float accumulation.
+    flows: Vec<Flow>,
+    /// Live-flow index: id → slot in `flows`.
+    id_slot: FastMap<FlowId, usize>,
+    /// Per-resource adjacency: live flows crossing each resource.
+    res_flows: Vec<Vec<FlowId>>,
+    n_live: usize,
+    n_dead: usize,
     next_id: u64,
     now: SimTime,
     completed: Vec<FlowId>,
-    dirty: bool,
+    /// Resources whose flow set or capacity changed since the last
+    /// recompute (`res_dirty` dedups `dirty_list`).
+    dirty_list: Vec<usize>,
+    res_dirty: Vec<bool>,
+    /// When set, every recompute treats all resources as dirty — the
+    /// original full-recompute cost model, kept for `bench_scale`'s
+    /// pre-refactor baseline ([`crate::exec::SimCore::Naive`]).
+    full_recompute: bool,
+    /// Differential-testing shadow: mirrors every mutation and asserts
+    /// all observables bit-identical (test builds / `SimCore::Checked`).
+    shadow: Option<Box<NaiveFlowNet>>,
+    // Scratch buffers and work lists for the component recompute
+    // (persistent so the hot path never allocates; marks are reset to
+    // neutral and lists drained after every use).
+    seen_res: Vec<bool>,
+    seen_flow: Vec<bool>,
+    scratch_cap: Vec<f64>,
+    scratch_users: Vec<u32>,
+    comp_flows: Vec<usize>,
+    comp_res: Vec<usize>,
+    comp_frozen: Vec<bool>,
     /// Statistics: total bytes moved through each resource.
     pub bytes_through: Vec<f64>,
 }
 
 impl FlowNet {
     pub fn new() -> Self {
-        FlowNet {
-            capacities: Vec::new(),
-            flows: Vec::new(),
-            next_id: 0,
-            now: SimTime::ZERO,
-            completed: Vec::new(),
-            dirty: false,
-            bytes_through: Vec::new(),
-        }
+        Self::default()
+    }
+
+    /// Attach a [`NaiveFlowNet`] shadow that mirrors every mutation and
+    /// asserts every observable (rates, completion times, completed
+    /// sets, byte counters) bit-identical. Must be called on an empty
+    /// network; used by the equivalence tests and `SimCore::Checked`.
+    pub fn enable_reference_check(&mut self) {
+        assert!(
+            self.capacities.is_empty() && self.next_id == 0,
+            "reference check must be enabled before resources or flows exist"
+        );
+        self.shadow = Some(Box::new(NaiveFlowNet::new()));
+    }
+
+    /// Force full progressive filling on every recompute (the
+    /// pre-refactor cost model). Benchmarking only — results are
+    /// identical either way.
+    pub fn set_full_recompute(&mut self, on: bool) {
+        self.full_recompute = on;
     }
 
     /// Register a resource with the given capacity; returns its id.
     pub fn add_resource(&mut self, cap: Bandwidth) -> ResourceId {
+        if let Some(sh) = self.shadow.as_mut() {
+            sh.add_resource(cap);
+        }
         let id = ResourceId(self.capacities.len());
         self.capacities.push(cap.bytes_per_sec());
         self.bytes_through.push(0.0);
+        self.res_flows.push(Vec::new());
+        self.res_dirty.push(false);
+        self.seen_res.push(false);
+        self.scratch_cap.push(0.0);
+        self.scratch_users.push(0);
         id
     }
 
     /// Change a resource's capacity (used by the network-bandwidth sweep,
     /// Table III). Takes effect at the next recompute.
     pub fn set_capacity(&mut self, r: ResourceId, cap: Bandwidth) {
+        if let Some(sh) = self.shadow.as_mut() {
+            sh.set_capacity(r, cap);
+        }
         self.capacities[r.0] = cap.bytes_per_sec();
-        self.dirty = true;
+        self.mark_dirty(r.0);
+    }
+
+    fn mark_dirty(&mut self, r: usize) {
+        if !self.res_dirty[r] {
+            self.res_dirty[r] = true;
+            self.dirty_list.push(r);
+        }
+    }
+
+    fn is_dirty(&self) -> bool {
+        !self.dirty_list.is_empty()
     }
 
     pub fn now(&self) -> SimTime {
@@ -78,80 +175,153 @@ impl FlowNet {
     }
 
     pub fn active_flows(&self) -> usize {
-        self.flows.len()
+        self.n_live
     }
 
     /// Number of active flows that traverse resource `r`.
     pub fn flows_through(&self, r: ResourceId) -> usize {
-        self.flows.iter().filter(|f| f.resources.contains(&r)).count()
+        self.res_flows[r.0].len()
     }
 
     /// Start a transfer of `bytes` through `resources`. A zero-byte flow
     /// (or one with no resources) completes at the next `advance_to`.
     pub fn add_flow(&mut self, bytes: Bytes, resources: Vec<ResourceId>) -> FlowId {
-        for r in &resources {
+        for (i, r) in resources.iter().enumerate() {
             debug_assert!(r.0 < self.capacities.len(), "unknown resource {r:?}");
+            // The adjacency lists assume one entry per (flow, resource):
+            // a duplicate would leave a dangling id behind on detach.
+            debug_assert!(!resources[..i].contains(r), "duplicate resource {r:?} in flow");
+        }
+        if let Some(sh) = self.shadow.as_mut() {
+            let sid = sh.add_flow(bytes, resources.clone());
+            assert_eq!(sid.0, self.next_id, "shadow id stream diverged");
         }
         let id = FlowId(self.next_id);
         self.next_id += 1;
-        self.flows.push(Flow {
-            id,
-            remaining: bytes.as_f64(),
-            resources,
-            rate: 0.0,
-        });
-        self.dirty = true;
+        let slot = self.flows.len();
+        // Resourceless flows never enter a component; they carry the
+        // infinite rate a recompute would assign immediately.
+        let rate = if resources.is_empty() { f64::INFINITY } else { 0.0 };
+        for r in &resources {
+            self.res_flows[r.0].push(id);
+            self.mark_dirty(r.0);
+        }
+        self.flows.push(Flow { id, remaining: bytes.as_f64(), resources, rate, alive: true });
+        self.id_slot.insert(id, slot);
+        self.seen_flow.push(false);
+        self.n_live += 1;
         id
+    }
+
+    /// Unlink a live flow from every index, marking its resources dirty.
+    /// The caller decides whether it completed (→ `completed`) or was
+    /// cancelled.
+    fn detach(&mut self, slot: usize) {
+        let id = self.flows[slot].id;
+        self.flows[slot].alive = false;
+        self.id_slot.remove(&id);
+        self.n_live -= 1;
+        self.n_dead += 1;
+        for r in &self.flows[slot].resources {
+            let r = r.0;
+            if let Some(p) = self.res_flows[r].iter().position(|f| *f == id) {
+                self.res_flows[r].swap_remove(p);
+            }
+            if !self.res_dirty[r] {
+                self.res_dirty[r] = true;
+                self.dirty_list.push(r);
+            }
+        }
+    }
+
+    /// Drop dead slots once they outnumber live ones (amortized O(1)
+    /// per retirement); slab order — and with it FlowId order — is
+    /// preserved.
+    fn maybe_compact(&mut self) {
+        if self.n_dead <= 32 || self.n_dead < self.n_live {
+            return;
+        }
+        self.flows.retain(|f| f.alive);
+        self.n_dead = 0;
+        self.seen_flow.truncate(self.flows.len());
+        self.id_slot.clear();
+        for (slot, f) in self.flows.iter().enumerate() {
+            self.id_slot.insert(f.id, slot);
+        }
     }
 
     /// Cancel a flow (e.g. a COP made obsolete). Returns true if it was
     /// still active.
     pub fn cancel(&mut self, id: FlowId) -> bool {
-        let before = self.flows.len();
-        self.flows.retain(|f| f.id != id);
-        let removed = self.flows.len() != before;
-        if removed {
-            self.dirty = true;
+        let removed = match self.id_slot.get(&id) {
+            Some(&slot) => {
+                self.detach(slot);
+                self.maybe_compact();
+                true
+            }
+            None => false,
+        };
+        if let Some(sh) = self.shadow.as_mut() {
+            assert_eq!(sh.cancel(id), removed, "shadow cancel diverged for {id:?}");
         }
         removed
     }
 
     /// Remaining bytes of an active flow, if any.
     pub fn remaining(&self, id: FlowId) -> Option<Bytes> {
-        self.flows
-            .iter()
-            .find(|f| f.id == id)
-            .map(|f| Bytes(f.remaining.max(0.0).round() as u64))
+        let got = self
+            .id_slot
+            .get(&id)
+            .map(|&slot| Bytes(self.flows[slot].remaining.max(0.0).round() as u64));
+        if let Some(sh) = self.shadow.as_deref() {
+            assert_eq!(got, sh.remaining(id), "shadow remaining diverged for {id:?}");
+        }
+        got
     }
 
     /// The resources an active flow occupies, if it is still active.
     pub fn flow_resources(&self, id: FlowId) -> Option<&[ResourceId]> {
-        self.flows.iter().find(|f| f.id == id).map(|f| f.resources.as_slice())
+        self.id_slot.get(&id).map(|&slot| self.flows[slot].resources.as_slice())
     }
 
     /// Active flows crossing any of the given resources, in arrival
     /// order (deterministic). Used by fault handling to find the blast
     /// radius of a node crash.
     pub fn flows_using_any(&self, rs: &[ResourceId]) -> Vec<FlowId> {
-        self.flows
-            .iter()
-            .filter(|f| f.resources.iter().any(|r| rs.contains(r)))
-            .map(|f| f.id)
-            .collect()
+        let mut out: Vec<FlowId> = Vec::new();
+        for r in rs {
+            out.extend_from_slice(&self.res_flows[r.0]);
+        }
+        // FlowId order is arrival order, matching the old linear scan.
+        out.sort_unstable();
+        out.dedup();
+        if let Some(sh) = self.shadow.as_deref() {
+            assert_eq!(out, sh.flows_using_any(rs), "shadow flows_using_any diverged");
+        }
+        out
     }
 
     /// All active flow ids in arrival order.
     pub fn active_flow_ids(&self) -> Vec<FlowId> {
-        self.flows.iter().map(|f| f.id).collect()
+        self.flows.iter().filter(|f| f.alive).map(|f| f.id).collect()
     }
 
     /// Current max-min fair rate of an active flow in bytes/s
     /// (recomputes the allocation if stale).
     pub fn rate_of(&mut self, id: FlowId) -> Option<f64> {
-        if self.dirty {
+        if self.is_dirty() {
             self.recompute();
         }
-        self.flows.iter().find(|f| f.id == id).map(|f| f.rate)
+        let got = self.id_slot.get(&id).map(|&slot| self.flows[slot].rate);
+        if let Some(sh) = self.shadow.as_mut() {
+            let want = sh.rate_of(id);
+            assert_eq!(
+                got.map(f64::to_bits),
+                want.map(f64::to_bits),
+                "shadow rate diverged for {id:?}: {got:?} vs {want:?}"
+            );
+        }
+        got
     }
 
     /// Registered capacity of a resource in bytes/s.
@@ -159,40 +329,81 @@ impl FlowNet {
         self.capacities[r.0]
     }
 
-    /// Recompute max-min fair rates via progressive filling.
+    /// Recompute max-min fair rates via progressive filling, restricted
+    /// to the connected component(s) reachable from dirty resources.
+    /// Rates of untouched components are already bit-identical to what a
+    /// full recompute would assign (their shares depend only on their
+    /// own members), so they are left as-is.
     pub fn recompute(&mut self) {
-        self.dirty = false;
-        let n_res = self.capacities.len();
-        let mut remaining_cap = self.capacities.clone();
-        let mut res_users: Vec<u32> = vec![0; n_res];
-        let mut frozen: Vec<bool> = vec![false; self.flows.len()];
-
-        // Flows without resources (pure-latency / zero-cost) get infinite rate.
-        for (i, f) in self.flows.iter_mut().enumerate() {
-            if f.resources.is_empty() {
-                f.rate = f64::INFINITY;
-                frozen[i] = true;
-            } else {
-                f.rate = 0.0;
+        if self.full_recompute {
+            for r in 0..self.capacities.len() {
+                self.mark_dirty(r);
             }
         }
-        for (i, f) in self.flows.iter().enumerate() {
-            if frozen[i] {
+
+        // Flood fill: dirty resources → their flows → those flows'
+        // other resources, transitively. Collects the union of all
+        // touched components. The work lists are persistent scratch
+        // (taken and handed back) so the hot path never allocates.
+        let mut stack = std::mem::take(&mut self.dirty_list);
+        for &r in &stack {
+            self.res_dirty[r] = false;
+        }
+        let mut comp_flows = std::mem::take(&mut self.comp_flows); // slots
+        let mut comp_res = std::mem::take(&mut self.comp_res);
+        comp_flows.clear();
+        comp_res.clear();
+        while let Some(r) = stack.pop() {
+            if self.seen_res[r] {
                 continue;
             }
-            for r in &f.resources {
-                res_users[r.0] += 1;
+            self.seen_res[r] = true;
+            comp_res.push(r);
+            for fid in &self.res_flows[r] {
+                let slot = self.id_slot[fid];
+                if self.seen_flow[slot] {
+                    continue;
+                }
+                self.seen_flow[slot] = true;
+                comp_flows.push(slot);
+                for r2 in &self.flows[slot].resources {
+                    if !self.seen_res[r2.0] {
+                        stack.push(r2.0);
+                    }
+                }
+            }
+        }
+        // Slot order is arrival order; resource order is index order —
+        // both must match the full algorithm's iteration order so float
+        // accumulation (and bottleneck tie-breaks) stay bit-identical.
+        comp_flows.sort_unstable();
+        comp_res.sort_unstable();
+
+        for &slot in &comp_flows {
+            self.flows[slot].rate = 0.0;
+        }
+        for &r in &comp_res {
+            self.scratch_cap[r] = self.capacities[r];
+            self.scratch_users[r] = 0;
+        }
+        for &slot in &comp_flows {
+            for r in &self.flows[slot].resources {
+                self.scratch_users[r.0] += 1;
             }
         }
 
-        let mut unfrozen = frozen.iter().filter(|&&z| !z).count();
+        let mut frozen = std::mem::take(&mut self.comp_frozen);
+        frozen.clear();
+        frozen.resize(comp_flows.len(), false);
+        let mut unfrozen = comp_flows.len();
         while unfrozen > 0 {
-            // Find the bottleneck resource: min share = cap / users.
+            // Bottleneck: min share = cap / users; ties to the lowest
+            // resource index (strict `<`), as in the full algorithm.
             let mut best_share = f64::INFINITY;
             let mut best_res = usize::MAX;
-            for r in 0..n_res {
-                if res_users[r] > 0 {
-                    let share = remaining_cap[r] / res_users[r] as f64;
+            for &r in &comp_res {
+                if self.scratch_users[r] > 0 {
+                    let share = self.scratch_cap[r] / self.scratch_users[r] as f64;
                     if share < best_share {
                         best_share = share;
                         best_res = r;
@@ -200,92 +411,147 @@ impl FlowNet {
                 }
             }
             debug_assert!(best_res != usize::MAX);
-            // Freeze every unfrozen flow through the bottleneck.
-            for i in 0..self.flows.len() {
-                if frozen[i] || !self.flows[i].resources.contains(&ResourceId(best_res)) {
+            // Freeze every unfrozen component flow through the
+            // bottleneck, in arrival order.
+            for (k, &slot) in comp_flows.iter().enumerate() {
+                if frozen[k] || !self.flows[slot].resources.contains(&ResourceId(best_res)) {
                     continue;
                 }
-                frozen[i] = true;
+                frozen[k] = true;
                 unfrozen -= 1;
-                self.flows[i].rate = best_share;
-                for r in &self.flows[i].resources {
-                    remaining_cap[r.0] = (remaining_cap[r.0] - best_share).max(0.0);
-                    res_users[r.0] -= 1;
+                self.flows[slot].rate = best_share;
+                for r in &self.flows[slot].resources {
+                    self.scratch_cap[r.0] = (self.scratch_cap[r.0] - best_share).max(0.0);
+                    self.scratch_users[r.0] -= 1;
                 }
             }
+        }
+
+        // Reset scratch marks for the next flood fill, and hand every
+        // scratch allocation back.
+        for &r in &comp_res {
+            self.seen_res[r] = false;
+        }
+        for &slot in &comp_flows {
+            self.seen_flow[slot] = false;
+        }
+        debug_assert!(stack.is_empty());
+        self.dirty_list = stack;
+        self.comp_flows = comp_flows;
+        self.comp_res = comp_res;
+        self.comp_frozen = frozen;
+
+        self.assert_shadow_rates();
+    }
+
+    /// Compare every live flow's rate against the naive oracle (no-op
+    /// without an attached shadow).
+    fn assert_shadow_rates(&mut self) {
+        let Some(sh) = self.shadow.as_mut() else { return };
+        let want = sh.rate_table();
+        let got: Vec<(FlowId, f64)> =
+            self.flows.iter().filter(|f| f.alive).map(|f| (f.id, f.rate)).collect();
+        assert_eq!(got.len(), want.len(), "shadow flow set diverged");
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.0, w.0, "shadow flow order diverged");
+            assert_eq!(
+                g.1.to_bits(),
+                w.1.to_bits(),
+                "shadow rate diverged for {:?}: {} vs {}",
+                g.0,
+                g.1,
+                w.1
+            );
         }
     }
 
     /// Earliest completion time among active flows under current rates.
     /// `None` if there are no active flows.
     pub fn next_completion(&mut self) -> Option<SimTime> {
-        if self.dirty {
+        if self.is_dirty() {
             self.recompute();
         }
-        self.flows
-            .iter()
-            .map(|f| {
-                if f.rate.is_infinite() || f.remaining <= 0.0 {
-                    self.now
-                } else {
-                    // Round up to 1 µs so time always advances.
-                    let dt = (f.remaining / f.rate * 1e6).ceil().max(1.0) as u64;
-                    SimTime(self.now.0 + dt)
-                }
-            })
-            .min()
+        let mut best: Option<SimTime> = None;
+        for f in &self.flows {
+            if !f.alive {
+                continue;
+            }
+            let t = if f.rate.is_infinite() || f.remaining <= 0.0 {
+                self.now
+            } else {
+                // Round up to 1 µs so time always advances.
+                let dt = (f.remaining / f.rate * 1e6).ceil().max(1.0) as u64;
+                SimTime(self.now.0 + dt)
+            };
+            best = Some(match best {
+                Some(b) if b <= t => b,
+                _ => t,
+            });
+        }
+        if let Some(sh) = self.shadow.as_mut() {
+            assert_eq!(best, sh.next_completion(), "shadow next_completion diverged");
+        }
+        best
     }
 
     /// Advance simulated time to `t`, integrating flow progress. Flows
     /// that finish are moved to the completed list (drain with
     /// [`Self::take_completed`]). `t` must be ≥ the current time.
     pub fn advance_to(&mut self, t: SimTime) {
-        if self.dirty {
+        // Recompute (and shadow-check rates) before integrating; the
+        // shadow itself advances only after our pass so both sides see
+        // the same pre-advance flow set during the rate comparison.
+        if self.is_dirty() {
             self.recompute();
         }
         assert!(t >= self.now, "time went backwards: {t:?} < {:?}", self.now);
         let dt = (t - self.now).as_secs_f64();
         self.now = t;
-        if self.flows.is_empty() {
-            return;
-        }
-        let mut any_done = false;
-        for f in &mut self.flows {
-            let moved = if f.rate.is_infinite() { f.remaining } else { f.rate * dt };
-            let moved = moved.min(f.remaining);
-            f.remaining -= moved;
-            for r in &f.resources {
-                self.bytes_through[r.0] += moved;
-            }
-            // Completion tolerance: less than one byte left, or would
-            // finish within 1 µs (the event-queue resolution).
-            if f.remaining < 1.0 || (f.rate.is_finite() && f.remaining <= f.rate * 1e-6) {
-                any_done = true;
-            }
-        }
-        if any_done {
-            let completed = &mut self.completed;
-            self.flows.retain(|f| {
-                let done =
-                    f.remaining < 1.0 || (f.rate.is_finite() && f.remaining <= f.rate * 1e-6);
-                if done {
-                    completed.push(f.id);
+        if self.n_live > 0 {
+            for slot in 0..self.flows.len() {
+                if !self.flows[slot].alive {
+                    continue;
                 }
-                !done
-            });
-            self.dirty = true;
+                let rate = self.flows[slot].rate;
+                let moved =
+                    if rate.is_infinite() { self.flows[slot].remaining } else { rate * dt };
+                let moved = moved.min(self.flows[slot].remaining);
+                self.flows[slot].remaining -= moved;
+                for r in &self.flows[slot].resources {
+                    self.bytes_through[r.0] += moved;
+                }
+                // Completion tolerance: less than one byte left, or
+                // would finish within 1 µs (the event-queue resolution).
+                let f = &self.flows[slot];
+                if f.remaining < 1.0 || (f.rate.is_finite() && f.remaining <= f.rate * 1e-6) {
+                    let id = f.id;
+                    self.detach(slot);
+                    self.completed.push(id);
+                }
+            }
+            self.maybe_compact();
+        }
+        if let Some(sh) = self.shadow.as_mut() {
+            sh.advance_to(t);
+        }
+        if let Some(sh) = self.shadow.as_deref() {
+            for (r, (got, want)) in self.bytes_through.iter().zip(&sh.bytes_through).enumerate() {
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "shadow bytes_through diverged on resource {r}: {got} vs {want}"
+                );
+            }
         }
     }
 
     /// Drain the set of flows that completed since the last call.
     pub fn take_completed(&mut self) -> Vec<FlowId> {
-        std::mem::take(&mut self.completed)
-    }
-}
-
-impl Default for FlowNet {
-    fn default() -> Self {
-        Self::new()
+        let out = std::mem::take(&mut self.completed);
+        if let Some(sh) = self.shadow.as_mut() {
+            assert_eq!(out, sh.take_completed(), "shadow completed set diverged");
+        }
+        out
     }
 }
 
@@ -296,6 +562,7 @@ mod tests {
 
     fn net_with(caps: &[f64]) -> (FlowNet, Vec<ResourceId>) {
         let mut net = FlowNet::new();
+        net.enable_reference_check();
         let ids = caps.iter().map(|&c| net.add_resource(Bandwidth(c))).collect();
         (net, ids)
     }
@@ -420,12 +687,15 @@ mod tests {
         assert_eq!(net.flows_using_any(&[r[0]]), vec![a, b]);
         assert_eq!(net.active_flow_ids(), vec![a, b]);
         assert_eq!(net.capacity_of(r[1]), 50.0);
+        assert_eq!(net.flows_through(r[0]), 2);
+        assert_eq!(net.flows_through(r[1]), 1);
         // Max-min: b bottlenecked at r1 (50), a takes the rest of r0.
         assert!((net.rate_of(b).unwrap() - 50.0).abs() < 1e-9);
         assert!((net.rate_of(a).unwrap() - 50.0).abs() < 1e-9);
         net.cancel(a);
         assert_eq!(net.flow_resources(a), None);
         assert_eq!(net.rate_of(a), None);
+        assert_eq!(net.flows_through(r[0]), 1);
     }
 
     #[test]
@@ -449,16 +719,46 @@ mod tests {
     #[test]
     fn many_flows_conserve_capacity() {
         let (mut net, r) = net_with(&[100.0]);
-        for _ in 0..10 {
-            net.add_flow(Bytes(100), vec![r[0]]);
-        }
-        net.recompute();
-        let total_rate: f64 = net.flows.iter().map(|f| f.rate).sum();
+        let ids: Vec<FlowId> = (0..10).map(|_| net.add_flow(Bytes(100), vec![r[0]])).collect();
+        let total_rate: f64 = ids.iter().map(|&f| net.rate_of(f).unwrap()).sum();
         assert!((total_rate - 100.0).abs() < 1e-9);
         // All equal → all complete at t=10.
         let t = net.next_completion().unwrap();
         net.advance_to(t);
         assert_eq!(net.take_completed().len(), 10);
         assert!((t.as_secs_f64() - 10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn disjoint_components_keep_rates_across_churn() {
+        // Two independent resources; churn on r0 must not disturb the
+        // (cached) rate on r1 — and the shadow asserts the cached value
+        // is what a full recompute would produce.
+        let (mut net, r) = net_with(&[100.0, 60.0]);
+        let steady = net.add_flow(Bytes(60_000), vec![r[1]]);
+        assert_eq!(net.rate_of(steady), Some(60.0));
+        let churn1 = net.add_flow(Bytes(1000), vec![r[0]]);
+        let churn2 = net.add_flow(Bytes(1000), vec![r[0]]);
+        assert_eq!(net.rate_of(churn1), Some(50.0));
+        net.cancel(churn1);
+        assert_eq!(net.rate_of(churn2), Some(100.0));
+        assert_eq!(net.rate_of(steady), Some(60.0));
+    }
+
+    #[test]
+    fn slab_compaction_preserves_arrival_order() {
+        let (mut net, r) = net_with(&[1000.0]);
+        let ids: Vec<FlowId> = (0..100).map(|_| net.add_flow(Bytes(500), vec![r[0]])).collect();
+        // Cancel most of them to force a compaction.
+        for id in ids.iter().take(80) {
+            net.cancel(*id);
+        }
+        assert_eq!(net.active_flows(), 20);
+        assert_eq!(net.active_flow_ids(), ids[80..].to_vec());
+        let late = net.add_flow(Bytes(500), vec![r[0]]);
+        let mut expect = ids[80..].to_vec();
+        expect.push(late);
+        assert_eq!(net.active_flow_ids(), expect);
+        assert_eq!(net.flows_through(r[0]), 21);
     }
 }

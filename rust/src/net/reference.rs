@@ -1,0 +1,278 @@
+//! The pre-refactor flow-network implementation, retained verbatim as a
+//! reference oracle.
+//!
+//! [`NaiveFlowNet`] is the original `FlowNet`: a dense flow vector, a
+//! full progressive-filling recompute on every change, and linear scans
+//! in every accessor. It is kept for two jobs:
+//!
+//! 1. **Differential testing.** [`super::FlowNet::enable_reference_check`]
+//!    attaches a `NaiveFlowNet` shadow that mirrors every mutation; every
+//!    observable (rates, completion times, completed sets, byte counters)
+//!    is asserted bit-identical against it. The incremental rework in
+//!    [`super`] is only correct if it is *indistinguishable* from this
+//!    implementation.
+//! 2. **Baseline benchmarking.** `bench_scale` runs the executor with
+//!    [`crate::exec::SimCore::Naive`], which restores the full-recompute
+//!    behaviour modelled here, to quantify the incremental core's win.
+//!
+//! Do not "optimize" this file: its value is being the old algorithm,
+//! unchanged.
+
+use super::{FlowId, ResourceId};
+use crate::util::units::{Bandwidth, Bytes, SimTime};
+
+#[derive(Debug, Clone)]
+struct Flow {
+    id: FlowId,
+    remaining: f64, // bytes
+    resources: Vec<ResourceId>,
+    rate: f64, // bytes/s, set by recompute()
+}
+
+/// The original (pre-incremental) shared bandwidth substrate.
+#[derive(Debug, Default)]
+pub struct NaiveFlowNet {
+    capacities: Vec<f64>, // bytes/s per ResourceId
+    flows: Vec<Flow>,     // active flows (dense; order = arrival, deterministic)
+    next_id: u64,
+    now: SimTime,
+    completed: Vec<FlowId>,
+    dirty: bool,
+    /// Statistics: total bytes moved through each resource.
+    pub bytes_through: Vec<f64>,
+}
+
+impl NaiveFlowNet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a resource with the given capacity; returns its id.
+    pub fn add_resource(&mut self, cap: Bandwidth) -> ResourceId {
+        let id = ResourceId(self.capacities.len());
+        self.capacities.push(cap.bytes_per_sec());
+        self.bytes_through.push(0.0);
+        id
+    }
+
+    /// Change a resource's capacity. Takes effect at the next recompute.
+    pub fn set_capacity(&mut self, r: ResourceId, cap: Bandwidth) {
+        self.capacities[r.0] = cap.bytes_per_sec();
+        self.dirty = true;
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    pub fn active_flows(&self) -> usize {
+        self.flows.len()
+    }
+
+    /// Number of active flows that traverse resource `r`.
+    pub fn flows_through(&self, r: ResourceId) -> usize {
+        self.flows.iter().filter(|f| f.resources.contains(&r)).count()
+    }
+
+    /// Start a transfer of `bytes` through `resources`.
+    pub fn add_flow(&mut self, bytes: Bytes, resources: Vec<ResourceId>) -> FlowId {
+        for r in &resources {
+            debug_assert!(r.0 < self.capacities.len(), "unknown resource {r:?}");
+        }
+        let id = FlowId(self.next_id);
+        self.next_id += 1;
+        self.flows.push(Flow {
+            id,
+            remaining: bytes.as_f64(),
+            resources,
+            rate: 0.0,
+        });
+        self.dirty = true;
+        id
+    }
+
+    /// Cancel a flow. Returns true if it was still active.
+    pub fn cancel(&mut self, id: FlowId) -> bool {
+        let before = self.flows.len();
+        self.flows.retain(|f| f.id != id);
+        let removed = self.flows.len() != before;
+        if removed {
+            self.dirty = true;
+        }
+        removed
+    }
+
+    /// Remaining bytes of an active flow, if any.
+    pub fn remaining(&self, id: FlowId) -> Option<Bytes> {
+        self.flows
+            .iter()
+            .find(|f| f.id == id)
+            .map(|f| Bytes(f.remaining.max(0.0).round() as u64))
+    }
+
+    /// The resources an active flow occupies, if it is still active.
+    pub fn flow_resources(&self, id: FlowId) -> Option<&[ResourceId]> {
+        self.flows.iter().find(|f| f.id == id).map(|f| f.resources.as_slice())
+    }
+
+    /// Active flows crossing any of the given resources, in arrival
+    /// order (deterministic).
+    pub fn flows_using_any(&self, rs: &[ResourceId]) -> Vec<FlowId> {
+        self.flows
+            .iter()
+            .filter(|f| f.resources.iter().any(|r| rs.contains(r)))
+            .map(|f| f.id)
+            .collect()
+    }
+
+    /// All active flow ids in arrival order.
+    pub fn active_flow_ids(&self) -> Vec<FlowId> {
+        self.flows.iter().map(|f| f.id).collect()
+    }
+
+    /// Current max-min fair rate of an active flow in bytes/s
+    /// (recomputes the allocation if stale).
+    pub fn rate_of(&mut self, id: FlowId) -> Option<f64> {
+        if self.dirty {
+            self.recompute();
+        }
+        self.flows.iter().find(|f| f.id == id).map(|f| f.rate)
+    }
+
+    /// All `(id, rate)` pairs in arrival order (recomputing if stale) —
+    /// the hook the incremental implementation's shadow check compares
+    /// against after each of its own recomputes.
+    pub fn rate_table(&mut self) -> Vec<(FlowId, f64)> {
+        if self.dirty {
+            self.recompute();
+        }
+        self.flows.iter().map(|f| (f.id, f.rate)).collect()
+    }
+
+    /// Registered capacity of a resource in bytes/s.
+    pub fn capacity_of(&self, r: ResourceId) -> f64 {
+        self.capacities[r.0]
+    }
+
+    /// Recompute max-min fair rates via progressive filling, over the
+    /// entire network (the original full recompute).
+    pub fn recompute(&mut self) {
+        self.dirty = false;
+        let n_res = self.capacities.len();
+        let mut remaining_cap = self.capacities.clone();
+        let mut res_users: Vec<u32> = vec![0; n_res];
+        let mut frozen: Vec<bool> = vec![false; self.flows.len()];
+
+        // Flows without resources (pure-latency / zero-cost) get infinite rate.
+        for (i, f) in self.flows.iter_mut().enumerate() {
+            if f.resources.is_empty() {
+                f.rate = f64::INFINITY;
+                frozen[i] = true;
+            } else {
+                f.rate = 0.0;
+            }
+        }
+        for (i, f) in self.flows.iter().enumerate() {
+            if frozen[i] {
+                continue;
+            }
+            for r in &f.resources {
+                res_users[r.0] += 1;
+            }
+        }
+
+        let mut unfrozen = frozen.iter().filter(|&&z| !z).count();
+        while unfrozen > 0 {
+            // Find the bottleneck resource: min share = cap / users.
+            let mut best_share = f64::INFINITY;
+            let mut best_res = usize::MAX;
+            for r in 0..n_res {
+                if res_users[r] > 0 {
+                    let share = remaining_cap[r] / res_users[r] as f64;
+                    if share < best_share {
+                        best_share = share;
+                        best_res = r;
+                    }
+                }
+            }
+            debug_assert!(best_res != usize::MAX);
+            // Freeze every unfrozen flow through the bottleneck.
+            for i in 0..self.flows.len() {
+                if frozen[i] || !self.flows[i].resources.contains(&ResourceId(best_res)) {
+                    continue;
+                }
+                frozen[i] = true;
+                unfrozen -= 1;
+                self.flows[i].rate = best_share;
+                for r in &self.flows[i].resources {
+                    remaining_cap[r.0] = (remaining_cap[r.0] - best_share).max(0.0);
+                    res_users[r.0] -= 1;
+                }
+            }
+        }
+    }
+
+    /// Earliest completion time among active flows under current rates.
+    /// `None` if there are no active flows.
+    pub fn next_completion(&mut self) -> Option<SimTime> {
+        if self.dirty {
+            self.recompute();
+        }
+        self.flows
+            .iter()
+            .map(|f| {
+                if f.rate.is_infinite() || f.remaining <= 0.0 {
+                    self.now
+                } else {
+                    // Round up to 1 µs so time always advances.
+                    let dt = (f.remaining / f.rate * 1e6).ceil().max(1.0) as u64;
+                    SimTime(self.now.0 + dt)
+                }
+            })
+            .min()
+    }
+
+    /// Advance simulated time to `t`, integrating flow progress.
+    pub fn advance_to(&mut self, t: SimTime) {
+        if self.dirty {
+            self.recompute();
+        }
+        assert!(t >= self.now, "time went backwards: {t:?} < {:?}", self.now);
+        let dt = (t - self.now).as_secs_f64();
+        self.now = t;
+        if self.flows.is_empty() {
+            return;
+        }
+        let mut any_done = false;
+        for f in &mut self.flows {
+            let moved = if f.rate.is_infinite() { f.remaining } else { f.rate * dt };
+            let moved = moved.min(f.remaining);
+            f.remaining -= moved;
+            for r in &f.resources {
+                self.bytes_through[r.0] += moved;
+            }
+            // Completion tolerance: less than one byte left, or would
+            // finish within 1 µs (the event-queue resolution).
+            if f.remaining < 1.0 || (f.rate.is_finite() && f.remaining <= f.rate * 1e-6) {
+                any_done = true;
+            }
+        }
+        if any_done {
+            let completed = &mut self.completed;
+            self.flows.retain(|f| {
+                let done =
+                    f.remaining < 1.0 || (f.rate.is_finite() && f.remaining <= f.rate * 1e-6);
+                if done {
+                    completed.push(f.id);
+                }
+                !done
+            });
+            self.dirty = true;
+        }
+    }
+
+    /// Drain the set of flows that completed since the last call.
+    pub fn take_completed(&mut self) -> Vec<FlowId> {
+        std::mem::take(&mut self.completed)
+    }
+}

@@ -37,14 +37,7 @@ impl Scheduler for CwsScheduler {
 
         // Only alive nodes are placement targets; the set may shrink and
         // grow mid-run under fault injection.
-        let workers: Vec<_> = view.cluster.alive_workers().collect();
-        let mut free: Vec<(u32, crate::util::units::Bytes)> = workers
-            .iter()
-            .map(|&n| {
-                let node = view.cluster.node(n);
-                (node.free_cores, node.free_mem)
-            })
-            .collect();
+        let (workers, mut free) = view.worker_capacity();
 
         for t in queue {
             // Spread placement: node with the most free cores (ties →

@@ -82,6 +82,21 @@ pub struct SchedView<'a> {
 }
 
 impl SchedView<'_> {
+    /// Alive workers and their free `(cores, mem)` — the per-iteration
+    /// capacity ledger every strategy starts from (and decrements as it
+    /// hands out placements within the iteration).
+    pub fn worker_capacity(&self) -> (Vec<NodeId>, Vec<(u32, Bytes)>) {
+        let workers: Vec<NodeId> = self.cluster.alive_workers().collect();
+        let free = workers
+            .iter()
+            .map(|&n| {
+                let node = self.cluster.node(n);
+                (node.free_cores, node.free_mem)
+            })
+            .collect();
+        (workers, free)
+    }
+
     /// Precedence rank of this task's tenant (0 = highest precedence).
     pub fn prec(&self, t: &ReadyTask) -> u64 {
         self.tenant_prec.get(t.tenant).copied().unwrap_or(0)

@@ -31,20 +31,13 @@ impl Scheduler for OrigScheduler {
         let mut queue: Vec<&super::ReadyTask> = view.ready.iter().collect();
         queue.sort_by_key(|t| (view.prec(t), t.submitted_seq));
 
-        // Only alive nodes are placement targets; the set may shrink and
-        // grow mid-run under fault injection.
-        let workers: Vec<_> = view.cluster.alive_workers().collect();
+        // Only alive nodes are placement targets (the set may shrink and
+        // grow mid-run under fault injection); `free` tracks capacity we
+        // hand out within this iteration.
+        let (workers, mut free) = view.worker_capacity();
         if workers.is_empty() {
             return actions;
         }
-        // Track capacity we hand out within this iteration.
-        let mut free: Vec<(u32, crate::util::units::Bytes)> = workers
-            .iter()
-            .map(|&n| {
-                let node = view.cluster.node(n);
-                (node.free_cores, node.free_mem)
-            })
-            .collect();
 
         for t in queue {
             // Round-robin: start probing at the cursor; take the first

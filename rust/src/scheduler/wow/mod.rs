@@ -30,7 +30,6 @@ use super::{Action, SchedView, Scheduler};
 use crate::cluster::NodeId;
 use crate::dps::cost::{CostEval, NativeCost};
 use crate::dps::Dps;
-use crate::util::units::Bytes;
 
 /// Tunable WOW parameters.
 #[derive(Debug)]
@@ -41,11 +40,18 @@ pub struct WowParams {
     pub c_task: u32,
     /// Cost-matrix backend (native rust or the AOT XLA artifact).
     pub backend: Box<dyn CostEval>,
+    /// Use the dirty-tracked cost-matrix cache
+    /// ([`Dps::cost_matrix_cached`]); off restores the pre-refactor full
+    /// rebuild per iteration ([`crate::exec::SimCore::Naive`]). With the
+    /// default native backend the results are bit-identical either way;
+    /// a tiled backend (XLA artifact) may differ in the last ULP because
+    /// its per-tile float grouping depends on the batch's file universe.
+    pub incremental: bool,
 }
 
 impl Default for WowParams {
     fn default() -> Self {
-        WowParams { c_node: 1, c_task: 2, backend: Box::new(NativeCost) }
+        WowParams { c_node: 1, c_task: 2, backend: Box::new(NativeCost), incremental: true }
     }
 }
 
@@ -81,25 +87,24 @@ impl Scheduler for WowScheduler {
         // Only alive nodes may start tasks or receive COPs; a crashed
         // node's replicas were already invalidated by the DPS, so the
         // cost matrix below never reports it as prepared either.
-        let workers: Vec<NodeId> = view.cluster.alive_workers().collect();
+        let (workers, mut free) = view.worker_capacity();
         if workers.is_empty() || view.ready.is_empty() {
             return actions;
         }
 
         // Batched cost matrix (tasks × nodes) — the XLA/Pallas hot path.
-        let inputs_of: Vec<&[crate::workflow::task::FileId]> =
-            view.ready.iter().map(|t| t.intermediate_inputs.as_slice()).collect();
-        let costs = dps.cost_matrix(&inputs_of, &workers, self.params.backend.as_mut());
-
-        // Free capacity ledger for this iteration (step 1 reservations
-        // and step 2 notional reservations both come out of it).
-        let mut free: Vec<(u32, Bytes)> = workers
-            .iter()
-            .map(|&n| {
-                let node = view.cluster.node(n);
-                (node.free_cores, node.free_mem)
-            })
-            .collect();
+        // The cached variant re-evaluates only rows whose inputs moved
+        // since the last iteration; the full rebuild is the pre-refactor
+        // baseline (`SimCore::Naive`) and the differential oracle.
+        let costs = if self.params.incremental {
+            let tasks: Vec<(crate::workflow::task::TaskId, &[crate::workflow::task::FileId])> =
+                view.ready.iter().map(|t| (t.id, t.intermediate_inputs.as_slice())).collect();
+            dps.cost_matrix_cached(&tasks, &workers, self.params.backend.as_mut())
+        } else {
+            let inputs_of: Vec<&[crate::workflow::task::FileId]> =
+                view.ready.iter().map(|t| t.intermediate_inputs.as_slice()).collect();
+            dps.cost_matrix(&inputs_of, &workers, self.params.backend.as_mut())
+        };
 
         // ---- Step 1: start ready tasks on prepared nodes (ILP). ----
         let mut started = vec![false; view.ready.len()];
@@ -266,7 +271,7 @@ mod tests {
     use crate::cluster::{Cluster, NodeSpec};
     use crate::net::FlowNet;
     use crate::scheduler::ReadyTask;
-    use crate::util::units::SimTime;
+    use crate::util::units::{Bytes, SimTime};
     use crate::workflow::task::{FileId, TaskId};
 
     fn fixture(n: usize) -> (FlowNet, Cluster) {

@@ -365,6 +365,113 @@ fn flownet_cancellation_conserves_bytes_and_reconverges() {
 }
 
 #[test]
+fn incremental_flownet_matches_naive_reference_under_churn() {
+    // Drive the incremental FlowNet and the retained pre-refactor
+    // implementation (net::reference::NaiveFlowNet) through an identical
+    // randomized op sequence — adds (including zero-byte and
+    // resourceless flows), cancels, capacity changes, partial and full
+    // advances — asserting every observable bit-identical at every
+    // step: rates, remaining bytes, completion times, completed sets,
+    // and per-resource byte counters. The incremental net additionally
+    // carries its own internal shadow (enable_reference_check), so each
+    // component-restricted recompute is also checked against a full one.
+    use wow::net::reference::NaiveFlowNet;
+    use wow::net::{FlowId, FlowNet, ResourceId};
+    use wow::util::units::{Bandwidth, SimTime};
+    let mut rng = Rng::new(2077);
+    for round in 0..20 {
+        let mut inc = FlowNet::new();
+        inc.enable_reference_check();
+        let mut naive = NaiveFlowNet::new();
+        let n_res = 2 + rng.index(8);
+        let res: Vec<ResourceId> = (0..n_res)
+            .map(|_| {
+                let cap = Bandwidth(10.0 + rng.next_f64() * 300.0);
+                let a = inc.add_resource(cap);
+                assert_eq!(a, naive.add_resource(cap));
+                a
+            })
+            .collect();
+        let mut live: Vec<FlowId> = Vec::new();
+        for _step in 0..120 {
+            match rng.index(5) {
+                0 | 1 => {
+                    // Add a flow over 0..=2 random resources (0 → the
+                    // resourceless infinite-rate path).
+                    let mut rs: Vec<ResourceId> = Vec::new();
+                    for _ in 0..rng.index(3) {
+                        let r = *rng.choice(&res);
+                        if !rs.contains(&r) {
+                            rs.push(r);
+                        }
+                    }
+                    let bytes = Bytes(rng.below(400_000));
+                    let a = inc.add_flow(bytes, rs.clone());
+                    assert_eq!(a, naive.add_flow(bytes, rs));
+                    live.push(a);
+                }
+                2 => {
+                    if !live.is_empty() {
+                        let victim = live[rng.index(live.len())];
+                        assert_eq!(inc.cancel(victim), naive.cancel(victim));
+                        live.retain(|f| *f != victim);
+                    }
+                }
+                3 => {
+                    let r = *rng.choice(&res);
+                    let cap = Bandwidth(10.0 + rng.next_f64() * 300.0);
+                    inc.set_capacity(r, cap);
+                    naive.set_capacity(r, cap);
+                }
+                _ => {
+                    let t = inc.next_completion();
+                    assert_eq!(t, naive.next_completion());
+                    if let Some(t) = t {
+                        // Half the steps stop mid-transfer.
+                        let now = inc.now();
+                        let target = if rng.next_f64() < 0.5 && t > now {
+                            SimTime((now.0 + t.0) / 2)
+                        } else {
+                            t
+                        };
+                        inc.advance_to(target);
+                        naive.advance_to(target);
+                        let done = inc.take_completed();
+                        assert_eq!(done, naive.take_completed());
+                        live.retain(|f| !done.contains(f));
+                    }
+                }
+            }
+            for &f in &live {
+                let (a, b) = (inc.rate_of(f), naive.rate_of(f));
+                assert_eq!(
+                    a.map(f64::to_bits),
+                    b.map(f64::to_bits),
+                    "round {round}: rate diverged for {f:?}: {a:?} vs {b:?}"
+                );
+                assert_eq!(inc.remaining(f), naive.remaining(f));
+            }
+        }
+        // Drain both to empty; byte accounting must agree bitwise.
+        while let Some(t) = inc.next_completion() {
+            assert_eq!(Some(t), naive.next_completion());
+            inc.advance_to(t);
+            naive.advance_to(t);
+            assert_eq!(inc.take_completed(), naive.take_completed());
+        }
+        assert_eq!(naive.next_completion(), None);
+        assert_eq!(inc.active_flows(), 0);
+        for (r, (a, b)) in inc.bytes_through.iter().zip(&naive.bytes_through).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "round {round} resource {r}: bytes_through diverged ({a} vs {b})"
+            );
+        }
+    }
+}
+
+#[test]
 fn flownet_cancel_never_leaves_negative_remaining() {
     use wow::net::FlowNet;
     use wow::util::units::Bandwidth;
