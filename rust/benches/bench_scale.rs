@@ -11,10 +11,16 @@
 //! caveats in both directions), so the speedup column measures the
 //! algorithmic win, not a cycle-exact old-binary A/B.
 //!
+//! One shape runs on a hierarchical topology (2 racks at 4:1
+//! oversubscription) so `BENCH_scale.json` also tracks the
+//! path-resolution + path-pricing overhead relative to the flat shape
+//! of the same size — and proves the cores stay bit-identical with
+//! rack links in the flow paths.
+//!
 //! `cargo bench --bench bench_scale` — full sweep (the largest naive
 //! cell is deliberately expensive; that is the point).
 //! `BENCH_SMOKE=1 cargo bench --bench bench_scale` (or `-- --smoke`) —
-//! one small shape, for CI.
+//! small shapes, for CI.
 //!
 //! Emits `BENCH_scale.json` for PR-over-PR perf tracking.
 
@@ -22,6 +28,7 @@
 mod common;
 
 use common::Jv;
+use wow::cluster::Topology;
 use wow::exec::{run_workload, RunConfig, SimCore};
 use wow::scheduler::Strategy;
 use wow::workflow::patterns;
@@ -31,12 +38,21 @@ fn main() {
     let smoke =
         std::env::var("BENCH_SMOKE").is_ok() || std::env::args().any(|a| a == "--smoke");
     println!("bench_scale — incremental vs naive (pre-refactor) simulation core\n");
-    let shapes: &[(usize, usize)] =
-        if smoke { &[(16, 2)] } else { &[(64, 8), (128, 16), (256, 32)] };
+    let racks = Topology::Racks { racks: 2, oversub: 4.0 };
+    let shapes: Vec<(usize, usize, Topology)> = if smoke {
+        vec![(16, 2, Topology::Flat), (16, 2, racks)]
+    } else {
+        vec![
+            (64, 8, Topology::Flat),
+            (128, 16, Topology::Flat),
+            (256, 32, Topology::Flat),
+            (64, 8, racks),
+        ]
+    };
     let mix = vec![patterns::chain(), patterns::fork(), patterns::group()];
     let mut report = common::JsonReport::new("scale");
 
-    for &(nodes, tenants) in shapes {
+    for &(nodes, tenants, topology) in &shapes {
         let wl = WorkloadSpec::from_mix(
             &format!("scale-{tenants}"),
             &mix,
@@ -44,39 +60,45 @@ fn main() {
             &Arrival::Poisson { mean_gap_s: 60.0 },
             0,
         );
+        let topo_tag = if topology.is_flat() { String::new() } else { " [2 racks @4:1]".into() };
         for strategy in [Strategy::Orig, Strategy::Cws, Strategy::Wow] {
             let cfg = |core: SimCore| RunConfig {
                 n_nodes: nodes,
                 strategy,
                 core,
+                topology,
                 ..Default::default()
             };
+            let shape = format!("{nodes:>3}n x {tenants:>2}t / {}{topo_tag}", strategy.label());
             let mut fp_inc = 0u64;
             let (inc_s, _) = common::bench_n(
-                &format!("incremental {nodes:>3}n x {tenants:>2}t / {}", strategy.label()),
+                &format!("incremental {shape}"),
                 1,
                 || fp_inc = run_workload(&wl, &cfg(SimCore::Incremental)).fingerprint(),
             );
             let mut fp_naive = 0u64;
             let (naive_s, _) = common::bench_n(
-                &format!("naive       {nodes:>3}n x {tenants:>2}t / {}", strategy.label()),
+                &format!("naive       {shape}"),
                 1,
                 || fp_naive = run_workload(&wl, &cfg(SimCore::Naive)).fingerprint(),
             );
             assert_eq!(
                 fp_inc, fp_naive,
-                "cores disagree on {nodes}n x {tenants}t / {strategy:?}"
+                "cores disagree on {nodes}n x {tenants}t / {strategy:?} ({})",
+                topology.label()
             );
             let speedup = naive_s / inc_s;
             println!(
                 "  -> speedup {speedup:>6.2}x (fingerprint {fp_inc:016x} identical)\n"
             );
+            let key_topo = if topology.is_flat() { "" } else { "-racks" };
             report.row(
-                &format!("{nodes}n-{tenants}t-{}", strategy.label()),
+                &format!("{nodes}n-{tenants}t-{}{key_topo}", strategy.label()),
                 &[
                     ("nodes", Jv::U(nodes as u64)),
                     ("tenants", Jv::U(tenants as u64)),
                     ("strategy", Jv::S(strategy.label().to_string())),
+                    ("topology", Jv::S(topology.label())),
                     ("incremental_s", Jv::F(inc_s)),
                     ("naive_s", Jv::F(naive_s)),
                     ("speedup", Jv::F(speedup)),

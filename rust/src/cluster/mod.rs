@@ -4,6 +4,22 @@
 //! 128 GB RAM, SATA SSDs (~537 MB/s read, ~402 MB/s write), a ninth node
 //! exposing an NVMe SSD via NFS, and 10 Gbit physical links shaped to
 //! 1 or 2 Gbit with `tc`.
+//!
+//! ## Hierarchical topology
+//!
+//! Beyond the paper's flat star, the cluster can model a hierarchical
+//! fabric ([`Topology`]): nodes grouped into racks behind oversubscribed
+//! top-of-rack uplinks, and racks grouped into zones behind aggregation
+//! links. Every rack (and zone) boundary is a pair of [`FlowNet`]
+//! resources (uplink/downlink) whose capacity is the members' aggregate
+//! NIC bandwidth divided by the oversubscription ratio, so cross-rack
+//! flows contend on the shared uplink exactly like real east-west
+//! traffic on a leaf-spine fabric. The NFS server hangs off the core in
+//! a dedicated full-rate storage rack (its bottleneck remains its own
+//! NIC, as in the paper). [`Cluster::net_path`] resolves the link chain
+//! between two nodes; [`Topology::Flat`] registers no extra resources
+//! and resolves every path to the two endpoint NICs — bit-identical to
+//! the pre-topology simulator.
 
 use crate::net::{FlowNet, ResourceId};
 use crate::util::units::{Bandwidth, Bytes};
@@ -12,6 +28,39 @@ use crate::util::units::{Bandwidth, Bytes};
 /// configured) is the last index.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct NodeId(pub usize);
+
+/// The cluster's network shape.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum Topology {
+    /// The paper's flat star: every node sees every other node at full
+    /// link speed. Adds zero resources and zero randomness — runs are
+    /// bit-identical to the pre-topology simulator.
+    #[default]
+    Flat,
+    /// Workers split into `racks` contiguous racks, each behind a
+    /// ToR uplink/downlink of capacity `Σ member NIC bw / oversub`.
+    Racks { racks: usize, oversub: f64 },
+    /// Two-tier fabric: `zones` zones of `racks_per_zone` racks each.
+    /// Rack links as above; each zone's aggregation uplink/downlink
+    /// carries `Σ member rack uplink bw / oversub`.
+    Zones { zones: usize, racks_per_zone: usize, oversub: f64 },
+}
+
+impl Topology {
+    pub fn is_flat(&self) -> bool {
+        matches!(self, Topology::Flat)
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            Topology::Flat => "flat".into(),
+            Topology::Racks { racks, oversub } => format!("{racks} racks @{oversub}:1"),
+            Topology::Zones { zones, racks_per_zone, oversub } => {
+                format!("{zones}x{racks_per_zone} zones @{oversub}:1")
+            }
+        }
+    }
+}
 
 /// Static description of one node.
 #[derive(Debug, Clone)]
@@ -82,25 +131,111 @@ pub struct Node {
     pub alive: bool,
 }
 
+/// One shared boundary link pair (rack ToR or zone aggregation).
+#[derive(Debug, Clone, Copy)]
+struct BoundaryLink {
+    up: ResourceId,
+    down: ResourceId,
+    /// Per-direction capacity in bytes/s.
+    cap: f64,
+    /// Subscriber *nodes* sharing the link (a zone link's subscribers
+    /// are all nodes of all its racks) — the fair-share divisor in
+    /// [`TopoView::penalty`].
+    members: u32,
+}
+
+/// Capacity-aware view of the topology for path pricing, detached from
+/// the cluster so the DPS can own a copy. [`TopoView::penalty`] is the
+/// ratio of the nominal endpoint NIC bandwidth to the fair-share
+/// bottleneck along the path (exactly 1 within a healthy rack; the
+/// oversubscription ratio across racks; squared across zones). Live NIC
+/// capacities are mirrored in by the executor on brownouts/outages so
+/// the price reflects the degraded fabric.
+#[derive(Debug, Clone)]
+pub struct TopoView {
+    node_rack: Vec<usize>,
+    rack_zone: Vec<usize>,
+    rack_cap: Vec<f64>,
+    rack_members: Vec<f64>,
+    zone_cap: Vec<f64>,
+    zone_members: Vec<f64>,
+    nominal_nic: Vec<f64>,
+    nic_cap: Vec<f64>,
+}
+
+impl TopoView {
+    /// Relative cost of moving one byte from `src` to `dst`: nominal
+    /// endpoint bandwidth over the minimum fair-share capacity on the
+    /// path. ≥ 1; exactly 1.0 between healthy same-rack nodes.
+    pub fn penalty(&self, src: NodeId, dst: NodeId) -> f64 {
+        let nominal = self.nominal_nic[src.0].min(self.nominal_nic[dst.0]);
+        let mut eff = self.nic_cap[src.0].min(self.nic_cap[dst.0]);
+        let (rs, rd) = (self.node_rack[src.0], self.node_rack[dst.0]);
+        if rs != rd {
+            eff = eff.min(self.rack_cap[rs] / self.rack_members[rs]);
+            eff = eff.min(self.rack_cap[rd] / self.rack_members[rd]);
+            if !self.zone_cap.is_empty() {
+                let (zs, zd) = (self.rack_zone[rs], self.rack_zone[rd]);
+                if zs != zd {
+                    eff = eff.min(self.zone_cap[zs] / self.zone_members[zs]);
+                    eff = eff.min(self.zone_cap[zd] / self.zone_members[zd]);
+                }
+            }
+        }
+        nominal / eff.max(1e-3)
+    }
+
+    /// Mirror a live NIC capacity change (brownout, outage, recovery).
+    pub fn set_nic_capacity(&mut self, node: NodeId, bytes_per_sec: f64) {
+        self.nic_cap[node.0] = bytes_per_sec;
+    }
+
+    pub fn same_rack(&self, a: NodeId, b: NodeId) -> bool {
+        self.node_rack[a.0] == self.node_rack[b.0]
+    }
+}
+
 /// The cluster: all nodes plus convenience accessors. The bandwidth
 /// substrate itself lives in [`FlowNet`]; `Cluster` owns the mapping from
-/// nodes to resource ids.
+/// nodes to resource ids and from node pairs to link paths.
 #[derive(Debug)]
 pub struct Cluster {
     pub nodes: Vec<Node>,
     n_workers: usize,
     nfs_server: Option<NodeId>,
+    topology: Topology,
+    /// Rack index per node (including the server); empty on `Flat`.
+    node_rack: Vec<usize>,
+    /// Zone index per rack; empty on `Flat` and `Racks`.
+    rack_zone: Vec<usize>,
+    rack_links: Vec<BoundaryLink>,
+    zone_links: Vec<BoundaryLink>,
 }
 
 impl Cluster {
-    /// Build a cluster of `n_workers` identical workers (plus an NFS
-    /// server node if `nfs_server_spec` is given), registering all
+    /// Build a flat cluster of `n_workers` identical workers (plus an
+    /// NFS server node if `nfs_server_spec` is given), registering all
     /// resources in `net`.
     pub fn build(
         net: &mut FlowNet,
         n_workers: usize,
         worker_spec: NodeSpec,
         nfs_server_spec: Option<NodeSpec>,
+    ) -> Self {
+        Self::build_topo(net, n_workers, worker_spec, nfs_server_spec, Topology::Flat)
+    }
+
+    /// Build a cluster with an explicit [`Topology`]. Node resources are
+    /// registered first, in exactly the flat order (so `Flat` adds
+    /// nothing); rack links follow in rack order, then zone links.
+    /// Workers map to contiguous balanced racks; the NFS server gets a
+    /// dedicated full-rate storage rack off the core.
+    pub fn build_topo(
+        net: &mut FlowNet,
+        n_workers: usize,
+        worker_spec: NodeSpec,
+        nfs_server_spec: Option<NodeSpec>,
+        topology: Topology,
     ) -> Self {
         assert!(n_workers > 0, "need at least one worker");
         let mut nodes = Vec::new();
@@ -123,11 +258,185 @@ impl Cluster {
             nodes.push(mk(spec, id, net));
             NodeId(id)
         });
-        Cluster { nodes, n_workers, nfs_server }
+
+        let (worker_racks, oversub, zones) = match topology {
+            Topology::Flat => (0, 1.0, 0),
+            Topology::Racks { racks, oversub } => {
+                assert!(racks >= 1 && racks <= n_workers, "racks must be in 1..=n_workers");
+                assert!(oversub > 0.0, "oversubscription ratio must be positive");
+                (racks, oversub, 0)
+            }
+            Topology::Zones { zones, racks_per_zone, oversub } => {
+                assert!(zones >= 1 && racks_per_zone >= 1, "need at least one zone and rack");
+                let racks = zones * racks_per_zone;
+                assert!(racks <= n_workers, "more racks than workers");
+                assert!(oversub > 0.0, "oversubscription ratio must be positive");
+                (racks, oversub, zones)
+            }
+        };
+
+        let mut node_rack = Vec::new();
+        let mut rack_zone = Vec::new();
+        let mut rack_links = Vec::new();
+        let mut zone_links = Vec::new();
+        if worker_racks > 0 {
+            // Contiguous balanced assignment: worker i → rack
+            // i·R / n_workers; the server gets its own storage rack.
+            node_rack = (0..n_workers).map(|i| i * worker_racks / n_workers).collect();
+            if nfs_server.is_some() {
+                node_rack.push(worker_racks);
+            }
+            let n_racks = worker_racks + usize::from(nfs_server.is_some());
+            let mut members = vec![0u32; n_racks];
+            let mut agg_bw = vec![0.0f64; n_racks];
+            for (i, n) in nodes.iter().enumerate() {
+                members[node_rack[i]] += 1;
+                agg_bw[node_rack[i]] += n.spec.link.bytes_per_sec();
+            }
+            for (r, (&bw, &m)) in agg_bw.iter().zip(&members).enumerate() {
+                // Worker racks are oversubscribed; the storage rack
+                // hangs off the core at full rate (the server's
+                // bottleneck stays its NIC, as in the paper).
+                let cap = if r < worker_racks { bw / oversub } else { bw };
+                rack_links.push(BoundaryLink {
+                    up: net.add_resource(Bandwidth(cap)),
+                    down: net.add_resource(Bandwidth(cap)),
+                    cap,
+                    members: m,
+                });
+            }
+            if zones > 0 {
+                rack_zone = (0..worker_racks).map(|r| r * zones / worker_racks).collect();
+                if nfs_server.is_some() {
+                    rack_zone.push(zones);
+                }
+                let n_zones = zones + usize::from(nfs_server.is_some());
+                let mut zmembers = vec![0u32; n_zones];
+                let mut zagg = vec![0.0f64; n_zones];
+                for (r, link) in rack_links.iter().enumerate() {
+                    zmembers[rack_zone[r]] += link.members;
+                    zagg[rack_zone[r]] += link.cap;
+                }
+                for (z, (&bw, &m)) in zagg.iter().zip(&zmembers).enumerate() {
+                    let cap = if z < zones { bw / oversub } else { bw };
+                    zone_links.push(BoundaryLink {
+                        up: net.add_resource(Bandwidth(cap)),
+                        down: net.add_resource(Bandwidth(cap)),
+                        cap,
+                        members: m,
+                    });
+                }
+            }
+        }
+
+        Cluster {
+            nodes,
+            n_workers,
+            nfs_server,
+            topology,
+            node_rack,
+            rack_zone,
+            rack_links,
+            zone_links,
+        }
     }
 
     pub fn n_workers(&self) -> usize {
         self.n_workers
+    }
+
+    pub fn topology(&self) -> Topology {
+        self.topology
+    }
+
+    /// Number of racks (including the storage rack); 0 on `Flat`.
+    pub fn n_racks(&self) -> usize {
+        self.rack_links.len()
+    }
+
+    /// The rack a node belongs to; `None` on `Flat`.
+    pub fn rack_of(&self, id: NodeId) -> Option<usize> {
+        self.node_rack.get(id.0).copied()
+    }
+
+    /// Worker → rack map (fault-domain input); empty on `Flat`.
+    pub fn worker_racks(&self) -> &[usize] {
+        if self.node_rack.is_empty() {
+            &[]
+        } else {
+            &self.node_rack[..self.n_workers]
+        }
+    }
+
+    /// Rack → zone map; empty on `Flat` and `Racks`.
+    pub fn rack_zones(&self) -> &[usize] {
+        &self.rack_zone
+    }
+
+    /// The rack uplink resources, in rack order. Every transfer that
+    /// leaves a rack crosses exactly one of these, so their summed
+    /// `bytes_through` is the cluster's cross-rack traffic.
+    pub fn rack_uplinks(&self) -> impl Iterator<Item = ResourceId> + '_ {
+        self.rack_links.iter().map(|l| l.up)
+    }
+
+    /// The network-resource chain a transfer from `src` to `dst`
+    /// traverses: source NIC up, [source rack uplink, [source zone
+    /// uplink, destination zone downlink,] destination rack downlink,]
+    /// destination NIC down. On `Flat` this is exactly the two endpoint
+    /// NICs the pre-topology simulator used.
+    pub fn net_path(&self, src: NodeId, dst: NodeId) -> Vec<ResourceId> {
+        debug_assert_ne!(src, dst, "no network path to self");
+        let mut path = Vec::with_capacity(6);
+        path.push(self.nodes[src.0].nic_up);
+        if !self.rack_links.is_empty() {
+            let (rs, rd) = (self.node_rack[src.0], self.node_rack[dst.0]);
+            if rs != rd {
+                path.push(self.rack_links[rs].up);
+                if !self.zone_links.is_empty() {
+                    let (zs, zd) = (self.rack_zone[rs], self.rack_zone[rd]);
+                    if zs != zd {
+                        path.push(self.zone_links[zs].up);
+                        path.push(self.zone_links[zd].down);
+                    }
+                }
+                path.push(self.rack_links[rd].down);
+            }
+        }
+        path.push(self.nodes[dst.0].nic_down);
+        path
+    }
+
+    /// Full disk-to-disk resource chain of a transfer: source disk read,
+    /// the network path, destination disk write. A same-node transfer is
+    /// disk-only (no network), as before.
+    pub fn transfer_path(&self, src: NodeId, dst: NodeId) -> Vec<ResourceId> {
+        if src == dst {
+            return vec![self.nodes[src.0].disk_read, self.nodes[dst.0].disk_write];
+        }
+        let mut path = Vec::with_capacity(8);
+        path.push(self.nodes[src.0].disk_read);
+        path.extend(self.net_path(src, dst));
+        path.push(self.nodes[dst.0].disk_write);
+        path
+    }
+
+    /// Capacity-aware topology view for path pricing (DPS), or `None`
+    /// on `Flat` — the flat cost path must stay bit-identical.
+    pub fn topo_view(&self) -> Option<TopoView> {
+        if self.rack_links.is_empty() {
+            return None;
+        }
+        Some(TopoView {
+            node_rack: self.node_rack.clone(),
+            rack_zone: self.rack_zone.clone(),
+            rack_cap: self.rack_links.iter().map(|l| l.cap).collect(),
+            rack_members: self.rack_links.iter().map(|l| f64::from(l.members)).collect(),
+            zone_cap: self.zone_links.iter().map(|l| l.cap).collect(),
+            zone_members: self.zone_links.iter().map(|l| f64::from(l.members)).collect(),
+            nominal_nic: self.nodes.iter().map(|n| n.spec.link.bytes_per_sec()).collect(),
+            nic_cap: self.nodes.iter().map(|n| n.spec.link.bytes_per_sec()).collect(),
+        })
     }
 
     /// Worker node ids (the nodes the RM may schedule tasks on),
@@ -156,7 +465,8 @@ impl Cluster {
     }
 
     /// The four flow-model channels of a node (NIC up, NIC down, disk
-    /// read, disk write) — the blast radius of a node crash.
+    /// read, disk write) — the blast radius of a node crash. Rack/zone
+    /// links are switch-side and survive node crashes.
     pub fn resources_of(&self, id: NodeId) -> [ResourceId; 4] {
         let n = &self.nodes[id.0];
         [n.nic_up, n.nic_down, n.disk_read, n.disk_write]
@@ -220,6 +530,18 @@ mod tests {
             4,
             NodeSpec::paper_worker(1.0),
             Some(NodeSpec::paper_nfs_server(1.0)),
+        );
+        (net, c)
+    }
+
+    fn racked(n_workers: usize, racks: usize, oversub: f64) -> (FlowNet, Cluster) {
+        let mut net = FlowNet::new();
+        let c = Cluster::build_topo(
+            &mut net,
+            n_workers,
+            NodeSpec::paper_worker(1.0),
+            Some(NodeSpec::paper_nfs_server(1.0)),
+            Topology::Racks { racks, oversub },
         );
         (net, c)
     }
@@ -292,5 +614,123 @@ mod tests {
         all.sort_unstable();
         all.dedup();
         assert_eq!(all.len(), 5 * 4);
+    }
+
+    #[test]
+    fn flat_registers_no_extra_resources_and_trivial_paths() {
+        let (net, c) = small();
+        assert_eq!(net.bytes_through.len(), 5 * 4, "flat = node channels only");
+        assert!(c.topology().is_flat());
+        assert_eq!(c.n_racks(), 0);
+        assert_eq!(c.rack_of(NodeId(0)), None);
+        assert!(c.worker_racks().is_empty());
+        assert!(c.topo_view().is_none());
+        let n0 = c.node(NodeId(0));
+        let n3 = c.node(NodeId(3));
+        assert_eq!(c.net_path(NodeId(0), NodeId(3)), vec![n0.nic_up, n3.nic_down]);
+        assert_eq!(
+            c.transfer_path(NodeId(0), NodeId(3)),
+            vec![n0.disk_read, n0.nic_up, n3.nic_down, n3.disk_write]
+        );
+        assert_eq!(c.transfer_path(NodeId(2), NodeId(2)).len(), 2, "local = disk only");
+    }
+
+    #[test]
+    fn racks_membership_and_link_capacities() {
+        let (net, c) = racked(4, 2, 4.0);
+        // 5 nodes × 4 channels + 3 racks (2 worker + storage) × 2 links.
+        assert_eq!(net.bytes_through.len(), 20 + 6);
+        assert_eq!(c.n_racks(), 3);
+        assert_eq!(c.worker_racks(), &[0, 0, 1, 1]);
+        assert_eq!(c.rack_of(NodeId(4)), Some(2), "server in its own storage rack");
+        let link = c.node(NodeId(0)).spec.link.bytes_per_sec();
+        // Worker rack uplink: 2 members × link / 4.
+        let up0 = c.rack_links[0].up;
+        assert!((net.capacity_of(up0) - 2.0 * link / 4.0).abs() < 1e-6);
+        // Storage rack at full rate.
+        let up_srv = c.rack_links[2].up;
+        assert!((net.capacity_of(up_srv) - link).abs() < 1e-6);
+        assert_eq!(c.rack_uplinks().count(), 3);
+    }
+
+    #[test]
+    fn rack_paths_cross_uplinks_only_between_racks() {
+        let (_n, c) = racked(4, 2, 4.0);
+        // Same rack: endpoint NICs only.
+        assert_eq!(c.net_path(NodeId(0), NodeId(1)).len(), 2);
+        // Cross-rack: NIC, rack up, rack down, NIC.
+        let p = c.net_path(NodeId(0), NodeId(2));
+        assert_eq!(p.len(), 4);
+        assert_eq!(p[1], c.rack_links[0].up);
+        assert_eq!(p[2], c.rack_links[1].down);
+        // To the core-attached server: one uplink, storage downlink.
+        let ps = c.net_path(NodeId(0), NodeId(4));
+        assert_eq!(ps.len(), 4);
+        assert_eq!(ps[1], c.rack_links[0].up);
+        assert_eq!(ps[2], c.rack_links[2].down);
+    }
+
+    #[test]
+    fn zone_paths_cross_aggregation_links() {
+        let mut net = FlowNet::new();
+        let c = Cluster::build_topo(
+            &mut net,
+            8,
+            NodeSpec::paper_worker(1.0),
+            None,
+            Topology::Zones { zones: 2, racks_per_zone: 2, oversub: 4.0 },
+        );
+        assert_eq!(c.worker_racks(), &[0, 0, 1, 1, 2, 2, 3, 3]);
+        assert_eq!(c.rack_zones(), &[0, 0, 1, 1]);
+        // Same rack / same zone / cross zone.
+        assert_eq!(c.net_path(NodeId(0), NodeId(1)).len(), 2);
+        assert_eq!(c.net_path(NodeId(0), NodeId(2)).len(), 4);
+        let p = c.net_path(NodeId(0), NodeId(6));
+        assert_eq!(p.len(), 6);
+        assert_eq!(p[1], c.rack_links[0].up);
+        assert_eq!(p[2], c.zone_links[0].up);
+        assert_eq!(p[3], c.zone_links[1].down);
+        assert_eq!(p[4], c.rack_links[3].down);
+    }
+
+    #[test]
+    fn penalties_reflect_hierarchy_and_brownouts() {
+        let (_n, c) = racked(4, 2, 4.0);
+        let mut tv = c.topo_view().expect("racked cluster has a view");
+        assert_eq!(tv.penalty(NodeId(0), NodeId(1)), 1.0, "same healthy rack");
+        // Cross-rack: fair share of the uplink = 2·link/4 ÷ 2 members.
+        assert!((tv.penalty(NodeId(0), NodeId(2)) - 4.0).abs() < 1e-9);
+        assert!(tv.same_rack(NodeId(0), NodeId(1)));
+        assert!(!tv.same_rack(NodeId(0), NodeId(2)));
+        // A browned-out NIC dominates even the same-rack price.
+        let link = c.node(NodeId(1)).spec.link.bytes_per_sec();
+        tv.set_nic_capacity(NodeId(1), link * 0.1);
+        assert!((tv.penalty(NodeId(0), NodeId(1)) - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zone_penalty_compounds_oversubscription() {
+        let mut net = FlowNet::new();
+        let c = Cluster::build_topo(
+            &mut net,
+            8,
+            NodeSpec::paper_worker(1.0),
+            None,
+            Topology::Zones { zones: 2, racks_per_zone: 2, oversub: 2.0 },
+        );
+        let tv = c.topo_view().unwrap();
+        assert_eq!(tv.penalty(NodeId(0), NodeId(1)), 1.0);
+        assert!((tv.penalty(NodeId(0), NodeId(2)) - 2.0).abs() < 1e-9, "one rack boundary");
+        assert!((tv.penalty(NodeId(0), NodeId(6)) - 4.0).abs() < 1e-9, "zone boundary on top");
+    }
+
+    #[test]
+    fn topology_labels() {
+        assert_eq!(Topology::Flat.label(), "flat");
+        assert_eq!(Topology::Racks { racks: 2, oversub: 4.0 }.label(), "2 racks @4:1");
+        assert_eq!(
+            Topology::Zones { zones: 2, racks_per_zone: 2, oversub: 8.0 }.label(),
+            "2x2 zones @8:1"
+        );
     }
 }

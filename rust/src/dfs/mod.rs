@@ -183,17 +183,10 @@ impl Dfs for Ceph {
         } else {
             replicas[rng.index(self.replica_factor)]
         };
-        let s = cluster.node(src);
-        let d = cluster.node(dst);
         let bytes = inflate(size, CEPH_EFFICIENCY);
-        if src == dst {
-            vec![TransferPart { bytes, resources: vec![s.disk_read, d.disk_write] }]
-        } else {
-            vec![TransferPart {
-                bytes,
-                resources: vec![s.disk_read, s.nic_up, d.nic_down, d.disk_write],
-            }]
-        }
+        // The transfer path resolves the full link chain (endpoint NICs
+        // plus any rack/zone boundary links); local reads stay disk-only.
+        vec![TransferPart { bytes, resources: cluster.transfer_path(src, dst) }]
     }
 
     fn write(
@@ -208,27 +201,20 @@ impl Dfs for Ceph {
         let replicas = self.place(file, cluster, rng);
         let [primary, secondary] = replicas;
         let mut parts = Vec::with_capacity(2);
-        let s = cluster.node(src);
-        let p = cluster.node(primary);
         let bytes = inflate(size, CEPH_EFFICIENCY);
-        // Client → primary OSD.
-        if primary == src {
-            parts.push(TransferPart { bytes, resources: vec![s.disk_read, p.disk_write] });
-        } else {
-            parts.push(TransferPart {
-                bytes,
-                resources: vec![s.disk_read, s.nic_up, p.nic_down, p.disk_write],
-            });
-        }
+        // Client → primary OSD, over the resolved link chain.
+        parts.push(TransferPart { bytes, resources: cluster.transfer_path(src, primary) });
         // Primary → secondary replication (Ceph acks after replication,
         // so this flow is part of the write barrier).
-        let sec = cluster.node(secondary);
         if secondary == primary {
-            parts.push(TransferPart { bytes, resources: vec![sec.disk_write] });
+            parts.push(TransferPart {
+                bytes,
+                resources: vec![cluster.node(secondary).disk_write],
+            });
         } else {
             parts.push(TransferPart {
                 bytes,
-                resources: vec![p.disk_read, p.nic_up, sec.nic_down, sec.disk_write],
+                resources: cluster.transfer_path(primary, secondary),
             });
         }
         parts
@@ -284,11 +270,9 @@ impl Dfs for Ceph {
                 continue;
             }
             let size = self.sizes.get(&file).copied().unwrap_or(Bytes::ZERO);
-            let s = cluster.node(survivor);
-            let d = cluster.node(new_holder);
             parts.push(TransferPart {
                 bytes: inflate(size, CEPH_EFFICIENCY),
-                resources: vec![s.disk_read, s.nic_up, d.nic_down, d.disk_write],
+                resources: cluster.transfer_path(survivor, new_holder),
             });
         }
         parts
@@ -323,12 +307,10 @@ impl Dfs for Nfs {
         cluster: &Cluster,
         _rng: &mut Rng,
     ) -> Vec<TransferPart> {
-        let s = cluster.node(self.server);
-        let d = cluster.node(dst);
         debug_assert_ne!(self.server, dst, "tasks never run on the NFS server");
         vec![TransferPart {
             bytes: inflate(size, NFS_READ_EFFICIENCY),
-            resources: vec![s.disk_read, s.nic_up, d.nic_down, d.disk_write],
+            resources: cluster.transfer_path(self.server, dst),
         }]
     }
 
@@ -340,11 +322,9 @@ impl Dfs for Nfs {
         cluster: &Cluster,
         _rng: &mut Rng,
     ) -> Vec<TransferPart> {
-        let s = cluster.node(src);
-        let srv = cluster.node(self.server);
         vec![TransferPart {
             bytes: inflate(size, NFS_WRITE_EFFICIENCY),
-            resources: vec![s.disk_read, s.nic_up, srv.nic_down, srv.disk_write],
+            resources: cluster.transfer_path(src, self.server),
         }]
     }
 

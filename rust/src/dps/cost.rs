@@ -29,8 +29,16 @@ pub const TILE_N: usize = 16;
 /// The cost-matrix query interface.
 pub trait CostEval: std::fmt::Debug {
     /// Compute `missing` and `local` (both `t × n`, row-major) from
-    /// `req` (`t × f`, row-major 0/1), `present` (`f × n`, row-major
-    /// 0/1) and `sizes` (`f`, in GB to keep f32 exact enough).
+    /// `req` (`t × f`, row-major 0/1), `present` (`f × n`, row-major)
+    /// and `sizes` (`f`, in GB to keep f32 exact enough).
+    ///
+    /// `present` entries are 1 for a local replica and `1 − penalty`
+    /// otherwise, where `penalty` is the path-bottleneck transfer cost
+    /// (exactly 1 on a flat topology, so the matrix degenerates to the
+    /// historical 0/1 form). `missing = Σ w·(1 − p)` therefore prices a
+    /// fetch at the min-capacity link on the path with no change to the
+    /// kernels — the same bricks run on the native backend and the
+    /// fixed-shape XLA artifact.
     fn missing_local(
         &mut self,
         req: &[f32],

@@ -15,7 +15,7 @@
 
 pub mod cost;
 
-use crate::cluster::NodeId;
+use crate::cluster::{NodeId, TopoView};
 use crate::util::rng::Rng;
 use crate::util::units::Bytes;
 use crate::workflow::task::{FileId, TaskId};
@@ -51,13 +51,25 @@ pub struct CopPlan {
     pub parts: Vec<(FileId, NodeId, Bytes)>,
     pub total_bytes: Bytes,
     pub max_source_load: Bytes,
+    /// Path-penalty-weighted traffic: Σ bytes · penalty(src → dst),
+    /// pricing every part at the min-capacity (fair-share) link on its
+    /// path. Equals `total_bytes` exactly on a flat topology.
+    pub weighted_bytes: f64,
 }
 
 impl CopPlan {
-    /// The paper's abstract price: equal weights on total traffic and
-    /// the maximum per-node load.
+    /// The paper's abstract price: equal weights on (path-weighted)
+    /// total traffic and the maximum per-node load. On a flat topology
+    /// this is bit-identical to the pre-topology price.
     pub fn price(&self) -> f64 {
-        0.5 * self.total_bytes.as_f64() + 0.5 * self.max_source_load.as_f64()
+        0.5 * self.weighted_bytes + 0.5 * self.max_source_load.as_f64()
+    }
+
+    /// Mean path penalty of the planned transfer — the rack-affinity
+    /// signal (exactly 1.0 on flat, larger the more rack/zone
+    /// boundaries the chosen sources cross).
+    pub fn mean_penalty(&self) -> f64 {
+        self.weighted_bytes / self.total_bytes.as_f64().max(1.0)
     }
 }
 
@@ -72,6 +84,9 @@ struct CachedRow {
     missing: Vec<f32>,
     local: Vec<f32>,
     stamp: u64,
+    /// Link-capacity epoch the row's path penalties were computed
+    /// under; a brownout/restore bumps the epoch and staleness it.
+    links: u64,
 }
 
 /// Row cache for [`Dps::cost_matrix_cached`].
@@ -102,6 +117,14 @@ pub struct Dps {
     /// older than any of their files are recomputed.
     loc_gen: u64,
     file_stamp: FastMap<FileId, u64>,
+    /// Hierarchical-topology view for path pricing; `None` on a flat
+    /// cluster, which keeps every pre-topology code path (and its exact
+    /// 0/1 presence matrix) byte for byte.
+    topo: Option<TopoView>,
+    /// Bumped whenever a link capacity changes (brownout, outage,
+    /// restore) — path penalties, and with them cached cost-matrix
+    /// rows, depend on live capacities.
+    link_epoch: u64,
     cache: CostCache,
     /// When set, every cached matrix is cross-checked bit-for-bit
     /// against the uncached full rebuild (test builds / `SimCore::Checked`).
@@ -126,6 +149,8 @@ impl Dps {
             task_cops: FastMap::default(),
             loc_gen: 0,
             file_stamp: FastMap::default(),
+            topo: None,
+            link_epoch: 0,
             cache: CostCache::default(),
             check_reference: false,
             bytes_copied: Bytes::ZERO,
@@ -140,6 +165,26 @@ impl Dps {
     /// uncached full rebuild (differential testing).
     pub fn set_reference_check(&mut self, on: bool) {
         self.check_reference = on;
+    }
+
+    /// Attach the hierarchical-topology view: cost queries then price
+    /// every transfer at the min-capacity link on its path, and the COP
+    /// planner gains a rack-affinity source tie-break. Never called on
+    /// flat clusters ([`crate::cluster::Cluster::topo_view`] is `None`
+    /// there), which therefore keep the exact pre-topology behaviour.
+    pub fn set_topology(&mut self, topo: TopoView) {
+        self.topo = Some(topo);
+        self.link_epoch += 1;
+    }
+
+    /// Mirror a live NIC capacity change (brownout, outage, recovery)
+    /// into the topology view. No-op on flat clusters — there the cost
+    /// matrix is capacity-independent, so no rows need invalidating.
+    pub fn note_link_change(&mut self, node: NodeId, bytes_per_sec: f64) {
+        if let Some(t) = self.topo.as_mut() {
+            t.set_nic_capacity(node, bytes_per_sec);
+            self.link_epoch += 1;
+        }
     }
 
     /// Record that `file`'s replica set (or size) changed: invalidates
@@ -195,9 +240,11 @@ impl Dps {
 
     /// Greedy source selection for preparing `inputs` on `dst` (§III-C):
     /// files by descending size; each from the replica holder with the
-    /// least load assigned so far in this plan; ties random. Returns
-    /// `None` if some file has no replica yet (cannot be planned) or if
-    /// nothing is missing.
+    /// least load assigned so far in this plan; load ties broken by rack
+    /// affinity (nearest holder by path penalty — a no-op on flat, where
+    /// every penalty is 1), remaining ties random. Returns `None` if
+    /// some file has no replica yet (cannot be planned) or if nothing is
+    /// missing.
     pub fn plan(&mut self, intermediate_inputs: &[FileId], dst: NodeId) -> Option<CopPlan> {
         let mut missing: Vec<(FileId, Bytes)> = Vec::new();
         for f in intermediate_inputs {
@@ -219,18 +266,39 @@ impl Dps {
             }
             // Least already-assigned load; ties random.
             let min_load = holders.iter().map(|h| *load.get(h).unwrap_or(&0)).min().unwrap();
-            let tied: Vec<NodeId> = holders
+            let mut tied: Vec<NodeId> = holders
                 .iter()
                 .copied()
                 .filter(|h| *load.get(h).unwrap_or(&0) == min_load)
                 .collect();
+            // Rack affinity: among least-loaded holders keep only the
+            // nearest (lowest path penalty). On flat every penalty is 1,
+            // so the tied set — and with it the RNG draw — is exactly
+            // the pre-topology one. (This runs inside WOW's hot loop:
+            // evaluate each penalty once.)
+            if let Some(t) = &self.topo {
+                let pen: Vec<f64> = tied.iter().map(|h| t.penalty(*h, dst)).collect();
+                let best = pen.iter().copied().fold(f64::INFINITY, f64::min);
+                tied = tied
+                    .into_iter()
+                    .zip(pen)
+                    .filter(|&(_, p)| p <= best)
+                    .map(|(h, _)| h)
+                    .collect();
+            }
             let src = *self.rng.choice(&tied);
             *load.entry(src).or_insert(0) += size.as_u64();
             parts.push((file, src, size));
         }
         let total: Bytes = parts.iter().map(|(_, _, b)| *b).sum();
         let max_load = Bytes(load.values().copied().max().unwrap_or(0));
-        Some(CopPlan { parts, total_bytes: total, max_source_load: max_load })
+        // Price each part at the min-capacity link on its path. Flat
+        // keeps the exact pre-topology value (Σ bytes · 1).
+        let weighted_bytes = match &self.topo {
+            None => total.as_f64(),
+            Some(t) => parts.iter().map(|(_, src, b)| b.as_f64() * t.penalty(*src, dst)).sum(),
+        };
+        Some(CopPlan { parts, total_bytes: total, max_source_load: max_load, weighted_bytes })
     }
 
     /// Turn a plan into an active COP for `task` → `dst`.
@@ -350,6 +418,49 @@ impl Dps {
         self.active.len()
     }
 
+    /// Fill the `files × nodes` presence/penalty matrix the cost kernels
+    /// consume. Flat topology: exactly the historical 0/1 presence
+    /// matrix. Hierarchical topology: a missing entry is `1 − penalty`
+    /// where `penalty ≥ 1` prices a fetch from the *nearest* replica
+    /// holder at the min-capacity (fair-share) link on the path, so the
+    /// kernels' `missing = Σ size·(1 − p)` becomes `Σ size·penalty` —
+    /// topology-aware transfer cost through the unchanged native and
+    /// tiled (XLA) backends. Present entries stay exactly 1.0, so
+    /// `CostMatrix::is_prepared` remains exact either way.
+    fn fill_present(&self, files: &[FileId], nodes: &[NodeId], present: &mut [f32]) {
+        let n = nodes.len();
+        match &self.topo {
+            None => {
+                for (fi, file) in files.iter().enumerate() {
+                    let locs = self.locations(*file);
+                    for (ni, node) in nodes.iter().enumerate() {
+                        if locs.contains(node) {
+                            present[fi * n + ni] = 1.0;
+                        }
+                    }
+                }
+            }
+            Some(t) => {
+                for (fi, file) in files.iter().enumerate() {
+                    let locs = self.locations(*file);
+                    for (ni, node) in nodes.iter().enumerate() {
+                        present[fi * n + ni] = if locs.contains(node) {
+                            1.0
+                        } else if locs.is_empty() {
+                            0.0
+                        } else {
+                            let mut best = f64::INFINITY;
+                            for h in locs {
+                                best = best.min(t.penalty(*h, *node));
+                            }
+                            1.0 - best as f32
+                        };
+                    }
+                }
+            }
+        }
+    }
+
     /// Batch missing/local matrices over (tasks × nodes) via the given
     /// backend — the XLA-accelerated hot path. `inputs_of` lists each
     /// task's intermediate inputs.
@@ -383,14 +494,7 @@ impl Dps {
             })
             .collect();
         let mut present = vec![0f32; f * n];
-        for (fi, file) in files.iter().enumerate() {
-            let locs = self.locations(*file);
-            for (ni, node) in nodes.iter().enumerate() {
-                if locs.contains(node) {
-                    present[fi * n + ni] = 1.0;
-                }
-            }
-        }
+        self.fill_present(&files, nodes, &mut present);
         let sizes: Vec<f32> = files
             .iter()
             .map(|file| self.sizes.get(file).map(|b| b.as_gb() as f32).unwrap_or(0.0))
@@ -408,11 +512,15 @@ impl Dps {
     /// backend. A row is stale when (a) the worker list changed (crash /
     /// recovery — flushes everything), (b) any of the task's input files
     /// was touched (replica added, invalidated, or released) since the
-    /// row was computed, or (c) the row's f32 accumulation order — the
+    /// row was computed, (c) the row's f32 accumulation order — the
     /// global first-seen file order restricted to the task, exactly as
-    /// the full rebuild uses — changed with the ready-set composition.
-    /// Condition (c) is what keeps cached rows bit-identical to the full
-    /// rebuild even though f32 addition is order-sensitive.
+    /// the full rebuild uses — changed with the ready-set composition,
+    /// or (d) the link-capacity epoch moved (brownout/outage/restore —
+    /// path penalties, and with them the hierarchical-topology cost
+    /// entries, depend on live link capacities; on flat clusters the
+    /// epoch never moves). Condition (c) is what keeps cached rows
+    /// bit-identical to the full rebuild even though f32 addition is
+    /// order-sensitive.
     ///
     /// An iteration after a single task completion therefore recomputes
     /// one row (the consumer whose input moved), not |ready| × |nodes|.
@@ -456,7 +564,8 @@ impl Dps {
             v.dedup();
             let fresh = match self.cache.rows.get(task) {
                 Some(row) => {
-                    row.order.len() == v.len()
+                    row.links == self.link_epoch
+                        && row.order.len() == v.len()
                         && row.order.iter().zip(&v).all(|(f, &i)| *f == files[i])
                         && row
                             .order
@@ -490,14 +599,7 @@ impl Dps {
             }
             let f_sub = sub_files.len();
             let mut present = vec![0f32; f_sub * n];
-            for (si, file) in sub_files.iter().enumerate() {
-                let locs = self.locations(*file);
-                for (ni, node) in nodes.iter().enumerate() {
-                    if locs.contains(node) {
-                        present[si * n + ni] = 1.0;
-                    }
-                }
-            }
+            self.fill_present(&sub_files, nodes, &mut present);
             let sizes: Vec<f32> = sub_files
                 .iter()
                 .map(|file| self.sizes.get(file).map(|b| b.as_gb() as f32).unwrap_or(0.0))
@@ -520,6 +622,7 @@ impl Dps {
                         missing: missing[k * n..(k + 1) * n].to_vec(),
                         local: local[k * n..(k + 1) * n].to_vec(),
                         stamp: self.loc_gen,
+                        links: self.link_epoch,
                     },
                 );
             }
@@ -560,6 +663,12 @@ fn assert_bitwise_eq(got: &[f32], want: &[f32], what: &str) {
 #[derive(Debug, Clone)]
 pub struct CostMatrix {
     pub missing_gb: Vec<f32>,
+    /// Input volume already local to each node — meaningful on a flat
+    /// topology only. On a hierarchical topology the kernels compute it
+    /// from the same generalized presence matrix as `missing_gb`
+    /// (`local = Σ w·(1 − penalty)`), so missing files with remote
+    /// replicas contribute *negative* terms; no scheduling path reads
+    /// it, and new consumers must not either without clamping.
     pub local_gb: Vec<f32>,
     n: usize,
 }
@@ -571,10 +680,11 @@ impl CostMatrix {
     pub fn local(&self, t: usize, n: usize) -> f32 {
         self.local_gb[t * self.n + n]
     }
-    /// Prepared = nothing missing. Exact: `present` is exactly 0/1, so
-    /// every term of a fully-present row is `w * 0.0` and the f32 sum is
-    /// exactly zero (no tolerance needed — a tolerance would misclassify
-    /// sub-KB files).
+    /// Prepared = nothing missing. Exact: a present file's entry is
+    /// exactly 1.0, so every term of a fully-present row is `w * 0.0`
+    /// and the f32 sum is exactly zero; a missing file contributes
+    /// `w · penalty` with `penalty ≥ 1`, strictly positive (no
+    /// tolerance needed — a tolerance would misclassify sub-KB files).
     pub fn is_prepared(&self, t: usize, n: usize) -> bool {
         self.missing(t, n) <= 0.0
     }
@@ -746,5 +856,100 @@ mod tests {
         let swapped: Vec<(TaskId, &[FileId])> = vec![(TaskId(1), &i1), (TaskId(0), &i0)];
         let s = d.cost_matrix_cached(&swapped, &fewer, &mut NativeCost);
         assert_eq!(s.missing(1, 0), m.missing(0, 0));
+    }
+
+    // ---- hierarchical topology ----
+
+    use crate::cluster::{Cluster, NodeSpec, Topology};
+    use crate::net::FlowNet;
+
+    /// 4 workers in 2 racks at 4:1 — cross-rack penalty is exactly 4.
+    fn topo_view() -> crate::cluster::TopoView {
+        let mut net = FlowNet::new();
+        let c = Cluster::build_topo(
+            &mut net,
+            4,
+            NodeSpec::paper_worker(1.0),
+            None,
+            Topology::Racks { racks: 2, oversub: 4.0 },
+        );
+        c.topo_view().expect("racked cluster has a view")
+    }
+
+    #[test]
+    fn topology_prices_missing_bytes_at_path_bottleneck() {
+        let mut d = dps();
+        d.set_topology(topo_view());
+        d.set_reference_check(true);
+        // File on node 0 (rack 0); node 1 shares the rack, node 2 not.
+        d.register_output(FileId(1), Bytes::from_gb(2.0), NodeId(0));
+        let i0 = [FileId(1)];
+        let tasks: Vec<(TaskId, &[FileId])> = vec![(TaskId(0), &i0)];
+        let nodes = vec![NodeId(0), NodeId(1), NodeId(2)];
+        let m = d.cost_matrix_cached(&tasks, &nodes, &mut NativeCost);
+        assert!(m.is_prepared(0, 0));
+        assert!((m.missing(0, 1) - 2.0).abs() < 1e-4, "same rack: volume only");
+        assert!((m.missing(0, 2) - 8.0).abs() < 1e-4, "cross rack: volume × oversub");
+        assert!(!m.is_prepared(0, 2), "penalties keep is_prepared exact");
+    }
+
+    #[test]
+    fn plan_prefers_same_rack_source_and_weights_price() {
+        let mut d = dps();
+        d.set_topology(topo_view());
+        // Replicas on node 0 (same rack as dst 1) and node 2 (cross).
+        d.register_output(FileId(1), Bytes::from_gb(1.0), NodeId(0));
+        d.register_output(FileId(1), Bytes::from_gb(1.0), NodeId(2));
+        let plan = d.plan(&[FileId(1)], NodeId(1)).unwrap();
+        assert_eq!(plan.parts[0].1, NodeId(0), "rack affinity beats the random tie-break");
+        assert!((plan.mean_penalty() - 1.0).abs() < 1e-9, "same-rack source at penalty 1");
+        // A destination in the other rack reverses the preference.
+        let plan2 = d.plan(&[FileId(1)], NodeId(3)).unwrap();
+        assert_eq!(plan2.parts[0].1, NodeId(2));
+        // Forced cross-rack transfer: price carries the 4x penalty.
+        d.register_output(FileId(2), Bytes::from_gb(1.0), NodeId(2));
+        let cross = d.plan(&[FileId(2)], NodeId(1)).unwrap();
+        assert!((cross.mean_penalty() - 4.0).abs() < 1e-9);
+        assert!(cross.price() > plan.price());
+    }
+
+    #[test]
+    fn link_epoch_invalidates_cached_rows() {
+        let mut d = dps();
+        d.set_topology(topo_view());
+        d.set_reference_check(true);
+        d.register_output(FileId(1), Bytes::from_gb(1.0), NodeId(0));
+        let i0 = [FileId(1)];
+        let tasks: Vec<(TaskId, &[FileId])> = vec![(TaskId(0), &i0)];
+        let nodes = vec![NodeId(0), NodeId(1), NodeId(2)];
+        let a = d.cost_matrix_cached(&tasks, &nodes, &mut NativeCost);
+        // Brownout on the holder's NIC: fetching from node 0 now costs
+        // 10x even within the rack; the cached row must not be reused
+        // (the reference check would trip if it were).
+        let link = 1e9 / 8.0; // 1 Gbit in bytes/s
+        d.note_link_change(NodeId(0), link * 0.1);
+        let b = d.cost_matrix_cached(&tasks, &nodes, &mut NativeCost);
+        assert!(b.missing(0, 1) > a.missing(0, 1) * 5.0, "brownout repriced the row");
+        // Restore: prices return to the originals.
+        d.note_link_change(NodeId(0), link);
+        let c = d.cost_matrix_cached(&tasks, &nodes, &mut NativeCost);
+        assert_eq!(c.missing_gb, a.missing_gb);
+    }
+
+    #[test]
+    fn flat_dps_has_no_topology_pricing() {
+        let mut d = dps();
+        // Without set_topology, note_link_change is a no-op and the
+        // matrix stays the historical 0/1-presence form.
+        d.note_link_change(NodeId(0), 1.0);
+        d.register_output(FileId(1), Bytes::from_gb(2.0), NodeId(0));
+        let i0 = [FileId(1)];
+        let tasks: Vec<(TaskId, &[FileId])> = vec![(TaskId(0), &i0)];
+        let nodes = vec![NodeId(0), NodeId(1)];
+        let m = d.cost_matrix_cached(&tasks, &nodes, &mut NativeCost);
+        assert!((m.missing(0, 1) - 2.0).abs() < 1e-5, "volume, no penalty");
+        let plan = d.plan(&[FileId(1)], NodeId(1)).unwrap();
+        assert_eq!(plan.weighted_bytes, plan.total_bytes.as_f64());
+        assert!((plan.mean_penalty() - 1.0).abs() < 1e-12);
     }
 }

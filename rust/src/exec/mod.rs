@@ -25,7 +25,7 @@
 //! path: tenant 0's namespace is the identity and an empty precedence
 //! vector leaves every strategy on its single-workflow behaviour.
 
-use crate::cluster::{Cluster, NodeId, NodeSpec};
+use crate::cluster::{Cluster, NodeId, NodeSpec, Topology};
 use crate::dfs::{Ceph, Dfs, DfsKind, Nfs};
 use crate::dps::cost::{CostEval, NativeCost};
 use crate::dps::{CopId, Dps};
@@ -90,6 +90,13 @@ impl std::str::FromStr for SimCore {
 pub struct RunConfig {
     pub n_nodes: usize,
     pub link_gbit: f64,
+    /// Network shape: the paper's flat star (default — bit-identical to
+    /// the pre-topology simulator) or a hierarchical rack/zone fabric
+    /// with oversubscribed boundary links. Threads through the cluster
+    /// (path resolution), the net (flows traverse the real link chain),
+    /// the DPS (min-capacity path pricing), the schedulers (via the
+    /// cost matrix) and the fault planner (rack/zone crash domains).
+    pub topology: Topology,
     pub dfs: DfsKind,
     pub strategy: Strategy,
     pub seed: u64,
@@ -129,6 +136,7 @@ impl Default for RunConfig {
         RunConfig {
             n_nodes: 8,
             link_gbit: 1.0,
+            topology: Topology::Flat,
             dfs: DfsKind::Ceph,
             strategy: Strategy::Wow,
             seed: 0,
@@ -322,11 +330,12 @@ impl Executor {
             SimCore::Naive => net.set_full_recompute(true),
         }
         let needs_server = cfg.dfs == DfsKind::Nfs;
-        let mut cluster = Cluster::build(
+        let mut cluster = Cluster::build_topo(
             &mut net,
             cfg.n_nodes,
             NodeSpec::paper_worker(cfg.link_gbit),
             needs_server.then(|| NodeSpec::paper_nfs_server(cfg.link_gbit)),
+            cfg.topology,
         );
         // Heterogeneous compute speeds (§VIII extension).
         for (i, &f) in cfg.speed_factors.iter().enumerate().take(cfg.n_nodes) {
@@ -352,6 +361,12 @@ impl Executor {
         let scheduler = cfg.strategy.build(params);
         let mut dps = Dps::new(cfg.seed);
         dps.set_reference_check(cfg.core == SimCore::Checked);
+        // Hierarchical topology: the DPS prices transfers at the
+        // min-capacity link on the path. `topo_view()` is `None` on
+        // flat clusters, keeping their cost path untouched.
+        if let Some(tv) = cluster.topo_view() {
+            dps.set_topology(tv);
+        }
         let workload_name = workload.name;
         let tenants: Vec<TenantRt> = workload
             .tenants
@@ -417,10 +432,12 @@ impl Executor {
         // Compile and enqueue the fault schedule. A disabled config
         // yields an empty plan: no events, no RNG draws, zero drift from
         // the fault-free path.
-        let plan = FaultPlan::compile(
+        let plan = FaultPlan::compile_with_topology(
             &self.cfg.fault,
             self.cluster.n_workers(),
             self.cluster.nfs_server(),
+            self.cluster.worker_racks(),
+            self.cluster.rack_zones(),
             self.cfg.seed,
         );
         for (t, ev) in plan.events {
@@ -629,37 +646,13 @@ impl Executor {
 
     /// Inter-tenant precedence ranks for this iteration (empty on
     /// single-tenant runs — the strategies then behave exactly as on a
-    /// single workflow).
+    /// single workflow). The ordering itself lives in
+    /// [`crate::scheduler::tenant_precedence`] so weight semantics are
+    /// unit-testable next to the policies.
     fn tenant_precedence(&self) -> Vec<u64> {
-        if self.tenants.len() <= 1 {
-            return Vec::new();
-        }
-        let n = self.tenants.len();
-        let mut order: Vec<usize> = (0..n).collect();
-        match self.cfg.tenant_policy {
-            TenantPolicy::Fifo => {
-                order.sort_by(|&a, &b| {
-                    self.tenants[a].arrival.cmp(&self.tenants[b].arrival).then(a.cmp(&b))
-                });
-            }
-            TenantPolicy::FairShare => {
-                let usage = |i: usize| -> f64 {
-                    self.tenants[i].running_cores as f64 / self.tenants[i].weight.max(1e-9)
-                };
-                order.sort_by(|&a, &b| {
-                    usage(a)
-                        .partial_cmp(&usage(b))
-                        .unwrap()
-                        .then(self.tenants[a].arrival.cmp(&self.tenants[b].arrival))
-                        .then(a.cmp(&b))
-                });
-            }
-        }
-        let mut prec = vec![0u64; n];
-        for (rank, &i) in order.iter().enumerate() {
-            prec[i] = rank as u64;
-        }
-        prec
+        let tenants: Vec<(SimTime, f64, u64)> =
+            self.tenants.iter().map(|t| (t.arrival, t.weight, t.running_cores)).collect();
+        crate::scheduler::tenant_precedence(self.cfg.tenant_policy, &tenants)
     }
 
     /// One scheduling iteration: ask the strategy, apply its actions.
@@ -996,6 +989,8 @@ impl Executor {
                 let (up, down) = (n.nic_up, n.nic_down);
                 self.net.set_capacity(up, cap);
                 self.net.set_capacity(down, cap);
+                // Topology pricing sees the degraded NIC (no-op on flat).
+                self.dps.note_link_change(node, cap.bytes_per_sec());
                 false
             }
             FaultEvent::LinkRestore(node) => {
@@ -1011,6 +1006,7 @@ impl Executor {
                 let (link, up, down) = (n.spec.link, n.nic_up, n.nic_down);
                 self.net.set_capacity(up, link);
                 self.net.set_capacity(down, link);
+                self.dps.note_link_change(node, link.bytes_per_sec());
                 true
             }
         }
@@ -1030,6 +1026,7 @@ impl Executor {
             for r in self.cluster.resources_of(node) {
                 self.net.set_capacity(r, Bandwidth(1.0));
             }
+            self.dps.note_link_change(node, 1.0);
             return;
         }
 
@@ -1106,6 +1103,7 @@ impl Executor {
             for (r, cap) in res.into_iter().zip(caps) {
                 self.net.set_capacity(r, cap);
             }
+            self.dps.note_link_change(node, self.cluster.node(node).spec.link.bytes_per_sec());
         }
     }
 
@@ -1268,6 +1266,11 @@ impl Executor {
             .map(|n| self.net.bytes_through[self.cluster.node(n).disk_write.0])
             .collect();
 
+        // Cross-rack traffic: every transfer leaving a rack crosses
+        // exactly one rack uplink (0 on flat — no rack links exist).
+        let cross_rack_bytes: f64 =
+            self.cluster.rack_uplinks().map(|r| self.net.bytes_through[r.0]).sum();
+
         let tenant_metrics: Vec<TenantMetrics> = self
             .tenants
             .iter()
@@ -1300,6 +1303,7 @@ impl Executor {
             node_storage_bytes,
             node_cpu_seconds: self.node_cpu_seconds.clone(),
             peak_replica_bytes: self.peak_replica_bytes,
+            cross_rack_bytes,
             node_crashes: self.n_crashes,
             link_degrades: self.n_degrades,
             task_failures: self.task_failures,

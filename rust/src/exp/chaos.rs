@@ -24,11 +24,20 @@
 //! cannot survive a crash on another node, widening the lineage
 //! re-execution blast radius (compare the Peak repl and Reruns columns
 //! against a GC-off run).
+//!
+//! `wow chaos --fault-domain rack|zone` runs the grid on a hierarchical
+//! topology (2 racks at 4:1, or 2×2 zones) with *correlated* crashes:
+//! each injected crash takes a whole rack/zone down at once, so the
+//! crash counts count domains and WOW loses every replica the domain
+//! held. Compare the Reruns / Wasted CPU columns against a default
+//! (independent-crash) run to see how correlation widens the lineage
+//! blast radius.
 
 use super::{median_run, paper_cfg, ExpOpts};
+use crate::cluster::Topology;
 use crate::dfs::DfsKind;
 use crate::exec::RunConfig;
-use crate::fault::FaultConfig;
+use crate::fault::{FaultConfig, FaultDomain};
 use crate::metrics::RunMetrics;
 use crate::report::{pct, Table};
 use crate::scheduler::Strategy;
@@ -64,14 +73,24 @@ pub fn fault_cfg(crashes: usize, fail_prob: f64) -> FaultConfig {
     }
 }
 
-fn cell_cfg(strategy: Strategy, crashes: usize, fail_prob: f64, gc: bool) -> RunConfig {
+fn cell_cfg(strategy: Strategy, crashes: usize, fail_prob: f64, opts: &ExpOpts) -> RunConfig {
     let mut cfg = paper_cfg(strategy, DfsKind::Ceph);
     cfg.fault = fault_cfg(crashes, fail_prob);
     // `wow chaos --gc`: replica GC shrinks the temporary-storage peak
     // but widens the lineage re-execution blast radius — deleting a
     // replica that a crash would otherwise have survived on another
     // node forces the producer (and possibly its ancestors) to re-run.
-    cfg.replica_gc = gc;
+    cfg.replica_gc = opts.gc;
+    // `--fault-domain rack|zone`: correlated crashes need a topology
+    // with the matching failure domains.
+    cfg.fault.domain = opts.fault_domain;
+    match opts.fault_domain {
+        FaultDomain::Node => {}
+        FaultDomain::Rack => cfg.topology = Topology::Racks { racks: 2, oversub: 4.0 },
+        FaultDomain::Zone => {
+            cfg.topology = Topology::Zones { zones: 2, racks_per_zone: 2, oversub: 4.0 }
+        }
+    }
     cfg
 }
 
@@ -100,7 +119,7 @@ pub fn collect(opts: &ExpOpts) -> Vec<Row> {
     for spec in workflows(opts) {
         for strategy in [Strategy::Orig, Strategy::Cws, Strategy::Wow] {
             eprintln!("chaos: {} / {} ...", spec.name, strategy.label());
-            let base = median_run(&spec, &cell_cfg(strategy, 0, 0.0, opts.gc), opts);
+            let base = median_run(&spec, &cell_cfg(strategy, 0, 0.0, opts), opts);
             let base_min = base.makespan_min();
             rows.push(Row {
                 workflow: spec.name.clone(),
@@ -115,7 +134,7 @@ pub fn collect(opts: &ExpOpts) -> Vec<Row> {
                     if crashes == 0 && p == 0.0 {
                         continue; // the baseline row above
                     }
-                    let m = median_run(&spec, &cell_cfg(strategy, crashes, p, opts.gc), opts);
+                    let m = median_run(&spec, &cell_cfg(strategy, crashes, p, opts), opts);
                     rows.push(Row {
                         workflow: spec.name.clone(),
                         strategy,
@@ -132,11 +151,15 @@ pub fn collect(opts: &ExpOpts) -> Vec<Row> {
 }
 
 /// Render the chaos table.
-pub fn render(rows: &[Row], gc: bool) -> Table {
+pub fn render(rows: &[Row], opts: &ExpOpts) -> Table {
+    let domain = match opts.fault_domain {
+        FaultDomain::Node => String::new(),
+        d => format!("; correlated {} crashes on a hierarchical topology", d.label()),
+    };
     let title = format!(
         "Chaos — resilience under injected faults (Ceph, 8 nodes, 1 Gbit; crashes recover \
-         after 120 s; replica GC {})",
-        if gc { "on" } else { "off" }
+         after 120 s; replica GC {}{domain})",
+        if opts.gc { "on" } else { "off" }
     );
     let mut t = Table::new(
         &title,
@@ -174,7 +197,7 @@ pub fn render(rows: &[Row], gc: bool) -> Table {
 
 pub fn run(opts: &ExpOpts) -> (Vec<Row>, String) {
     let rows = collect(opts);
-    let s = render(&rows, opts.gc).render();
+    let s = render(&rows, opts).render();
     (rows, s)
 }
 
@@ -185,6 +208,10 @@ mod tests {
     use crate::workflow::engine::WorkflowEngine;
     use crate::workflow::patterns;
 
+    fn plain_opts() -> ExpOpts {
+        ExpOpts { seeds: vec![0], quick: true, ..Default::default() }
+    }
+
     /// The acceptance property behind `wow chaos`: under injected node
     /// crashes all three strategies complete every task of the workflow
     /// via retries / lineage healing.
@@ -193,12 +220,32 @@ mod tests {
         let spec = patterns::group();
         let expect = WorkflowEngine::dry_run_counts(&spec, 0).physical_tasks;
         for strategy in [Strategy::Orig, Strategy::Cws, Strategy::Wow] {
-            let mut cfg = cell_cfg(strategy, 2, 0.05, false);
+            let mut cfg = cell_cfg(strategy, 2, 0.05, &plain_opts());
             cfg.fault.crash_window_s = (30.0, 180.0);
             let m = run_sim(&spec, &cfg);
             assert_eq!(m.tasks_total, expect, "{strategy:?} must complete every task");
             assert_eq!(m.node_crashes, 2, "{strategy:?}");
         }
+    }
+
+    #[test]
+    fn correlated_rack_crash_takes_the_whole_rack_and_completes() {
+        // --fault-domain rack: one injected crash = one whole rack (4 of
+        // the 8 workers at 2 racks), and the run still drains via
+        // resubmission + lineage healing.
+        let opts = ExpOpts { fault_domain: FaultDomain::Rack, ..plain_opts() };
+        let spec = patterns::group();
+        let expect = WorkflowEngine::dry_run_counts(&spec, 0).physical_tasks;
+        let mut cfg = cell_cfg(Strategy::Wow, 1, 0.0, &opts);
+        assert_eq!(cfg.topology, Topology::Racks { racks: 2, oversub: 4.0 });
+        // Early window: the 30 s source stage is still computing on
+        // every node, so the rack crash is guaranteed to land mid-run.
+        cfg.fault.crash_window_s = (10.0, 25.0);
+        let m = run_sim(&spec, &cfg);
+        assert_eq!(m.tasks_total, expect, "the rack outage must not wedge the run");
+        assert_eq!(m.node_crashes, 4, "one domain crash = all four rack members");
+        let b = run_sim(&spec, &cfg);
+        assert_eq!(m, b, "correlated-fault runs stay deterministic");
     }
 
     #[test]
@@ -209,9 +256,9 @@ mod tests {
         // keep-everything run's.
         let spec = patterns::chain();
         let expect = WorkflowEngine::dry_run_counts(&spec, 0).physical_tasks;
-        let mut keep = cell_cfg(Strategy::Wow, 1, 0.0, false);
+        let mut keep = cell_cfg(Strategy::Wow, 1, 0.0, &plain_opts());
         keep.fault.crash_window_s = (30.0, 120.0);
-        let mut gc = cell_cfg(Strategy::Wow, 1, 0.0, true);
+        let mut gc = cell_cfg(Strategy::Wow, 1, 0.0, &ExpOpts { gc: true, ..plain_opts() });
         gc.fault.crash_window_s = (30.0, 120.0);
         let m_keep = run_sim(&spec, &keep);
         let m_gc = run_sim(&spec, &gc);
@@ -228,9 +275,9 @@ mod tests {
     #[test]
     fn degradation_is_measured_against_fault_free_baseline() {
         let spec = patterns::fork();
-        let opts = ExpOpts { seeds: vec![0], quick: true, ..Default::default() };
-        let base = median_run(&spec, &cell_cfg(Strategy::Wow, 0, 0.0, false), &opts);
-        let faulted = median_run(&spec, &cell_cfg(Strategy::Wow, 2, 0.05, false), &opts);
+        let opts = plain_opts();
+        let base = median_run(&spec, &cell_cfg(Strategy::Wow, 0, 0.0, &opts), &opts);
+        let faulted = median_run(&spec, &cell_cfg(Strategy::Wow, 2, 0.05, &opts), &opts);
         let row = Row {
             workflow: spec.name.clone(),
             strategy: Strategy::Wow,

@@ -12,9 +12,11 @@ pub mod table1;
 pub mod table2;
 pub mod table3;
 pub mod tenants;
+pub mod topo;
 
 use crate::dfs::DfsKind;
 use crate::exec::{run_with_backend, RunConfig};
+use crate::fault::FaultDomain;
 use crate::metrics::RunMetrics;
 use crate::scheduler::Strategy;
 use crate::workflow::spec::WorkflowSpec;
@@ -33,11 +35,22 @@ pub struct ExpOpts {
     /// --gc`): quantifies the storage-peak vs lineage-blast-radius
     /// trade-off.
     pub gc: bool,
+    /// Crash-correlation domain for `wow chaos` (`--fault-domain
+    /// rack|zone`): widens each injected crash to a whole rack/zone on
+    /// a hierarchical topology, contrasting correlated outages against
+    /// the default independent node crashes.
+    pub fault_domain: FaultDomain,
 }
 
 impl Default for ExpOpts {
     fn default() -> Self {
-        ExpOpts { seeds: vec![0, 1, 2], quick: false, xla: false, gc: false }
+        ExpOpts {
+            seeds: vec![0, 1, 2],
+            quick: false,
+            xla: false,
+            gc: false,
+            fault_domain: FaultDomain::Node,
+        }
     }
 }
 

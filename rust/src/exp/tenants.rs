@@ -14,10 +14,14 @@
 //! - **fairness** as the Gini coefficient of the per-tenant slowdowns
 //!   (0 = contention hurt everyone equally).
 //!
-//! A second table contrasts the FIFO and fair-share inter-tenant
-//! policies on the Poisson cell. Protocol: per cell the workload is
-//! regenerated and run once per seed (arrivals are seed-dependent) and
-//! the median-makespan run is reported, mirroring §V-C.
+//! A second set of rows contrasts the FIFO and fair-share inter-tenant
+//! policies on the Poisson cell, plus a *weighted* fair-share cell
+//! (tenant 0 at weight 2 — the ROADMAP's weights ≠ 1 follow-up): the
+//! heavy tenant is entitled to twice the allocated cores before losing
+//! precedence, which should flatten its slowdown at the expense of the
+//! weight-1 tenants. Protocol: per cell the workload is regenerated and
+//! run once per seed (arrivals are seed-dependent) and the
+//! median-makespan run is reported, mirroring §V-C.
 
 use super::{make_backend, paper_cfg, ExpOpts};
 use crate::dfs::DfsKind;
@@ -33,6 +37,9 @@ use std::collections::HashMap;
 
 /// Tenants per workload cell.
 pub const N_TENANTS: usize = 4;
+
+/// Fair-share weights of the weighted contrast cell (tenant 0 heavy).
+pub const WEIGHTS: [f64; 4] = [2.0, 1.0, 1.0, 1.0];
 
 /// The swept arrival processes.
 pub fn arrivals() -> Vec<Arrival> {
@@ -72,6 +79,8 @@ pub struct Row {
     pub strategy: Strategy,
     pub dfs: DfsKind,
     pub policy: TenantPolicy,
+    /// Fair-share weights applied to the tenants (empty = all 1.0).
+    pub weights: Vec<f64>,
     pub metrics: RunMetrics,
     /// Per-tenant slowdowns vs the solo baseline, in tenant order.
     pub slowdowns: Vec<f64>,
@@ -131,6 +140,7 @@ fn run_cell(
     strategy: Strategy,
     dfs: DfsKind,
     policy: TenantPolicy,
+    weights: &[f64],
     opts: &ExpOpts,
     cache: &mut SoloCache,
 ) -> Row {
@@ -139,7 +149,10 @@ fn run_cell(
         .iter()
         .map(|&seed| {
             let name = format!("{mix_name} x{N_TENANTS}");
-            let wl = WorkloadSpec::from_mix(&name, mix, N_TENANTS, arrival, seed);
+            let mut wl = WorkloadSpec::from_mix(&name, mix, N_TENANTS, arrival, seed);
+            if !weights.is_empty() {
+                wl = wl.with_weights(weights);
+            }
             let mut cfg = paper_cfg(strategy, dfs);
             cfg.seed = seed;
             cfg.tenant_policy = policy;
@@ -162,7 +175,16 @@ fn run_cell(
             t.completion.as_secs_f64() / solo.max(1e-9)
         })
         .collect();
-    Row { mix: mix_name, arrival: arrival.clone(), strategy, dfs, policy, metrics, slowdowns }
+    Row {
+        mix: mix_name,
+        arrival: arrival.clone(),
+        strategy,
+        dfs,
+        policy,
+        weights: weights.to_vec(),
+        metrics,
+        slowdowns,
+    }
 }
 
 /// Run the full sweep: mixes × arrivals × strategies × DFS backends
@@ -190,6 +212,7 @@ pub fn collect(opts: &ExpOpts) -> Vec<Row> {
                         strategy,
                         dfs,
                         TenantPolicy::Fifo,
+                        &[],
                         opts,
                         &mut cache,
                     ));
@@ -197,7 +220,8 @@ pub fn collect(opts: &ExpOpts) -> Vec<Row> {
             }
         }
     }
-    // Policy contrast: fair-share on the Poisson pattern mix.
+    // Policy contrast: fair-share on the Poisson pattern mix, unweighted
+    // and with tenant 0 at weight 2 (ROADMAP weights follow-up).
     let (mix_name, mix) = mixes(opts).swap_remove(0);
     let poisson = Arrival::Poisson { mean_gap_s: 90.0 };
     for &strategy in &[Strategy::Orig, Strategy::Cws, Strategy::Wow] {
@@ -209,6 +233,21 @@ pub fn collect(opts: &ExpOpts) -> Vec<Row> {
             strategy,
             DfsKind::Ceph,
             TenantPolicy::FairShare,
+            &[],
+            opts,
+            &mut cache,
+        ));
+    }
+    for &strategy in &[Strategy::Orig, Strategy::Cws, Strategy::Wow] {
+        eprintln!("tenants: {mix_name} / fair-share weighted / {} ...", strategy.label());
+        rows.push(run_cell(
+            mix_name,
+            &mix,
+            &poisson,
+            strategy,
+            DfsKind::Ceph,
+            TenantPolicy::FairShare,
+            &WEIGHTS,
             opts,
             &mut cache,
         ));
@@ -236,12 +275,18 @@ pub fn render(rows: &[Row]) -> Table {
         ],
     );
     for r in rows {
+        let policy = if r.weights.is_empty() {
+            r.policy.label().to_string()
+        } else {
+            let w: Vec<String> = r.weights.iter().map(|w| format!("{w:.0}")).collect();
+            format!("{} w={}", r.policy.label(), w.join(":"))
+        };
         t.row(vec![
             r.mix.to_string(),
             r.arrival.label(),
             r.strategy.label().into(),
             r.dfs.label().into(),
-            r.policy.label().into(),
+            policy,
             format!("{:.1}", r.metrics.makespan_min()),
             format!("{:.2}", r.mean_slowdown()),
             format!("{:.2}", r.max_slowdown()),
@@ -273,6 +318,7 @@ mod tests {
             Strategy::Wow,
             DfsKind::Ceph,
             TenantPolicy::Fifo,
+            &[],
             &opts,
             &mut cache,
         );
@@ -302,6 +348,7 @@ mod tests {
             Strategy::Cws,
             DfsKind::Ceph,
             TenantPolicy::Fifo,
+            &[],
             &opts,
             &mut c1,
         );
@@ -312,10 +359,38 @@ mod tests {
             Strategy::Cws,
             DfsKind::Ceph,
             TenantPolicy::Fifo,
+            &[],
             &opts,
             &mut c2,
         );
         assert_eq!(a.metrics, b.metrics);
         assert_eq!(a.slowdowns, b.slowdowns);
+    }
+
+    #[test]
+    fn weighted_cell_is_deterministic_and_reports_per_tenant() {
+        let opts = ExpOpts { seeds: vec![0], quick: true, ..Default::default() };
+        let (mix_name, mix) = mixes(&opts).swap_remove(0);
+        let mut c1 = SoloCache::new();
+        let mut c2 = SoloCache::new();
+        let cell = |cache: &mut SoloCache| {
+            run_cell(
+                mix_name,
+                &mix,
+                &Arrival::AllAtOnce,
+                Strategy::Cws,
+                DfsKind::Ceph,
+                TenantPolicy::FairShare,
+                &WEIGHTS,
+                &opts,
+                cache,
+            )
+        };
+        let a = cell(&mut c1);
+        let b = cell(&mut c2);
+        assert_eq!(a.metrics, b.metrics, "weighted runs must stay deterministic");
+        assert_eq!(a.slowdowns.len(), N_TENANTS);
+        assert_eq!(a.weights, WEIGHTS.to_vec());
+        assert_eq!(a.metrics.tenants.len(), N_TENANTS, "every tenant completes");
     }
 }

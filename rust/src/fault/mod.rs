@@ -12,7 +12,11 @@
 //!   killed and resubmitted, its flows are cancelled, its DPS replicas
 //!   are invalidated, Ceph re-replicates its lost objects) and later
 //!   rejoins empty. Crashing the NFS server instead models an outage
-//!   that stalls every DFS flow until recovery.
+//!   that stalls every DFS flow until recovery. With a hierarchical
+//!   topology the crash [`FaultDomain`] can be widened to whole racks
+//!   or zones: one draw takes every member down at the same instant (a
+//!   ToR switch or aggregation failure — the ROADMAP's correlated
+//!   failure domains), and WOW loses *all* replicas the domain held.
 //! - **`LinkDegrade` / `LinkRestore`**: a link brownout rescales a
 //!   node's NIC capacities; the max-min allocation re-converges.
 //! - **probabilistic task failure** (à la DynamicCloudSim): each compute
@@ -35,12 +39,53 @@ use crate::cluster::NodeId;
 use crate::util::rng::Rng;
 use crate::util::units::SimTime;
 
+/// Crash-correlation granularity: what one injected crash takes down.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FaultDomain {
+    /// Independent single-node crashes (the default, and the only
+    /// behaviour on a flat cluster).
+    #[default]
+    Node,
+    /// A whole rack at once (ToR switch failure). Requires a
+    /// rack-aware [`crate::cluster::Topology`]; degrades to `Node` on
+    /// flat clusters.
+    Rack,
+    /// A whole zone at once (aggregation failure). Requires a zoned
+    /// topology; degrades to `Node` without one.
+    Zone,
+}
+
+impl FaultDomain {
+    pub fn label(self) -> &'static str {
+        match self {
+            FaultDomain::Node => "node",
+            FaultDomain::Rack => "rack",
+            FaultDomain::Zone => "zone",
+        }
+    }
+}
+
+impl std::str::FromStr for FaultDomain {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "node" => Ok(FaultDomain::Node),
+            "rack" => Ok(FaultDomain::Rack),
+            "zone" => Ok(FaultDomain::Zone),
+            other => anyhow::bail!("unknown fault domain '{other}' (expected node|rack|zone)"),
+        }
+    }
+}
+
 /// What to inject into a run. The default injects nothing.
 #[derive(Debug, Clone)]
 pub struct FaultConfig {
-    /// Number of worker-node crashes to inject (distinct victims; capped
-    /// at `n_workers - 1` so the cluster never loses its last worker).
+    /// Number of crashes to inject: distinct victim *domains* (nodes by
+    /// default, racks/zones with a wider [`FaultDomain`]), capped so at
+    /// least one domain always survives.
     pub node_crashes: usize,
+    /// Correlation granularity of those crashes.
+    pub domain: FaultDomain,
     /// Window (seconds) crash and brownout times are drawn from.
     pub crash_window_s: (f64, f64),
     /// Downtime before a crashed node rejoins, empty. `None` = it stays
@@ -71,6 +116,7 @@ impl Default for FaultConfig {
     fn default() -> Self {
         FaultConfig {
             node_crashes: 0,
+            domain: FaultDomain::Node,
             crash_window_s: (60.0, 600.0),
             recovery_s: Some(120.0),
             nfs_outage: false,
@@ -116,14 +162,31 @@ pub struct FaultPlan {
 }
 
 impl FaultPlan {
-    /// Compile `cfg` into a concrete schedule for a cluster of
-    /// `n_workers` workers (plus `nfs_server` if present). Pure in
-    /// `(cfg, shape, seed)`; an all-default config yields an empty plan
-    /// without consuming any randomness.
+    /// Compile `cfg` for a flat cluster (single-node fault domains).
+    /// Pure in `(cfg, shape, seed)`; an all-default config yields an
+    /// empty plan without consuming any randomness.
     pub fn compile(
         cfg: &FaultConfig,
         n_workers: usize,
         nfs_server: Option<NodeId>,
+        seed: u64,
+    ) -> FaultPlan {
+        Self::compile_with_topology(cfg, n_workers, nfs_server, &[], &[], seed)
+    }
+
+    /// Compile `cfg` with the cluster's rack/zone maps (`rack_of[i]` =
+    /// rack of worker `i`; `zone_of_rack[r]` = zone of rack `r`; both
+    /// empty on flat clusters, see
+    /// [`crate::cluster::Cluster::worker_racks`]). With
+    /// `FaultDomain::Node` — or on a flat cluster — the victim groups
+    /// are single nodes and the plan (and its RNG stream) is exactly
+    /// [`Self::compile`]'s.
+    pub fn compile_with_topology(
+        cfg: &FaultConfig,
+        n_workers: usize,
+        nfs_server: Option<NodeId>,
+        rack_of: &[usize],
+        zone_of_rack: &[usize],
         seed: u64,
     ) -> FaultPlan {
         if !cfg.enabled() {
@@ -134,17 +197,23 @@ impl FaultPlan {
         let (lo, hi) = cfg.crash_window_s;
         debug_assert!(lo <= hi, "crash window inverted");
 
-        // Worker crashes: distinct victims, never the whole cluster.
-        let n_crash = cfg.node_crashes.min(n_workers.saturating_sub(1));
-        let mut victims: Vec<usize> = (0..n_workers).collect();
+        // Crashes: distinct victim domains, at least one survives. One
+        // time draw per domain; every member dies at that instant (and
+        // rejoins together, empty). Single-node groups reproduce the
+        // pre-domain stream draw for draw.
+        let groups = crash_groups(cfg.domain, n_workers, rack_of, zone_of_rack);
+        let n_crash = cfg.node_crashes.min(groups.len().saturating_sub(1));
+        let mut victims: Vec<usize> = (0..groups.len()).collect();
         rng.shuffle(&mut victims);
         victims.truncate(n_crash);
-        for v in victims {
+        for g in victims {
             let t = SimTime::from_secs_f64(rng.range_f64(lo, hi));
-            events.push((t, FaultEvent::NodeCrash(NodeId(v))));
-            if let Some(rec) = cfg.recovery_s {
-                let back = t + SimTime::from_secs_f64(rec);
-                events.push((back, FaultEvent::NodeRecover(NodeId(v))));
+            for &v in &groups[g] {
+                events.push((t, FaultEvent::NodeCrash(NodeId(v))));
+                if let Some(rec) = cfg.recovery_s {
+                    let back = t + SimTime::from_secs_f64(rec);
+                    events.push((back, FaultEvent::NodeRecover(NodeId(v))));
+                }
             }
         }
 
@@ -182,6 +251,33 @@ impl FaultPlan {
     pub fn len(&self) -> usize {
         self.events.len()
     }
+}
+
+/// Victim groups for the configured crash domain, in deterministic
+/// (rack/zone index) order. Without topology maps — a flat cluster —
+/// every domain degrades to independent single-node groups.
+fn crash_groups(
+    domain: FaultDomain,
+    n_workers: usize,
+    rack_of: &[usize],
+    zone_of_rack: &[usize],
+) -> Vec<Vec<usize>> {
+    let key: Box<dyn Fn(usize) -> usize + '_> = match domain {
+        FaultDomain::Node => return (0..n_workers).map(|i| vec![i]).collect(),
+        FaultDomain::Rack if rack_of.len() >= n_workers => Box::new(|i| rack_of[i]),
+        FaultDomain::Zone if rack_of.len() >= n_workers && !zone_of_rack.is_empty() => {
+            Box::new(|i| zone_of_rack[rack_of[i]])
+        }
+        // Flat cluster: correlated domains degrade to independent nodes.
+        _ => return (0..n_workers).map(|i| vec![i]).collect(),
+    };
+    let n_groups = (0..n_workers).map(&key).max().map_or(0, |m| m + 1);
+    let mut groups = vec![Vec::new(); n_groups];
+    for i in 0..n_workers {
+        groups[key(i)].push(i);
+    }
+    groups.retain(|g| !g.is_empty());
+    groups
 }
 
 #[cfg(test)]
@@ -285,6 +381,109 @@ mod tests {
         assert!(plan.events.iter().any(|(_, e)| *e == FaultEvent::NodeCrash(NodeId(8))));
         // Without a server the outage is a no-op.
         assert!(FaultPlan::compile(&cfg, 8, None, 5).is_empty());
+    }
+
+    #[test]
+    fn rack_domain_crashes_whole_racks_together() {
+        let cfg = FaultConfig {
+            node_crashes: 1,
+            domain: FaultDomain::Rack,
+            recovery_s: Some(60.0),
+            ..Default::default()
+        };
+        // 8 workers in 2 racks of 4.
+        let rack_of = [0usize, 0, 0, 0, 1, 1, 1, 1];
+        let plan = FaultPlan::compile_with_topology(&cfg, 8, None, &rack_of, &[], 3);
+        let crashes: Vec<(SimTime, NodeId)> = plan
+            .events
+            .iter()
+            .filter_map(|(t, e)| match e {
+                FaultEvent::NodeCrash(n) => Some((*t, *n)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(crashes.len(), 4, "one draw takes the whole rack down");
+        let t0 = crashes[0].0;
+        assert!(crashes.iter().all(|(t, _)| *t == t0), "correlated: same instant");
+        let rack: Vec<usize> = crashes.iter().map(|(_, n)| rack_of[n.0]).collect();
+        assert!(rack.windows(2).all(|w| w[0] == w[1]), "all victims share the rack");
+        let recs = plan
+            .events
+            .iter()
+            .filter(|(_, e)| matches!(e, FaultEvent::NodeRecover(_)))
+            .count();
+        assert_eq!(recs, 4, "the rack rejoins together");
+    }
+
+    #[test]
+    fn rack_domain_never_crashes_the_last_rack() {
+        let cfg =
+            FaultConfig { node_crashes: 10, domain: FaultDomain::Rack, ..Default::default() };
+        let rack_of = [0usize, 0, 1, 1];
+        let plan = FaultPlan::compile_with_topology(&cfg, 4, None, &rack_of, &[], 1);
+        let crashes =
+            plan.events.iter().filter(|(_, e)| matches!(e, FaultEvent::NodeCrash(_))).count();
+        assert_eq!(crashes, 2, "only one of the two racks may die");
+    }
+
+    #[test]
+    fn zone_domain_groups_by_zone() {
+        let cfg =
+            FaultConfig { node_crashes: 1, domain: FaultDomain::Zone, ..Default::default() };
+        // 8 workers, 4 racks of 2, 2 zones of 2 racks.
+        let rack_of = [0usize, 0, 1, 1, 2, 2, 3, 3];
+        let zone_of_rack = [0usize, 0, 1, 1];
+        let plan = FaultPlan::compile_with_topology(&cfg, 8, None, &rack_of, &zone_of_rack, 9);
+        let victims: Vec<usize> = plan
+            .events
+            .iter()
+            .filter_map(|(_, e)| match e {
+                FaultEvent::NodeCrash(n) => Some(n.0),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(victims.len(), 4, "a zone is two racks of two workers");
+        let zones: Vec<usize> = victims.iter().map(|&v| zone_of_rack[rack_of[v]]).collect();
+        assert!(zones.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn node_domain_with_topology_matches_flat_compile() {
+        // The correlated-domain machinery must not perturb the default
+        // single-node stream: same seed, same plan, with or without the
+        // topology maps.
+        let cfg = FaultConfig { node_crashes: 3, link_degrades: 2, ..Default::default() };
+        let rack_of = [0usize, 0, 0, 0, 1, 1, 1, 1];
+        let flat = FaultPlan::compile(&cfg, 8, None, 42);
+        let topo = FaultPlan::compile_with_topology(&cfg, 8, None, &rack_of, &[], 42);
+        assert_eq!(flat.events, topo.events);
+    }
+
+    #[test]
+    fn correlated_domain_on_flat_cluster_degrades_to_nodes() {
+        let cfg =
+            FaultConfig { node_crashes: 2, domain: FaultDomain::Rack, ..Default::default() };
+        let plan = FaultPlan::compile_with_topology(&cfg, 8, None, &[], &[], 7);
+        let mut victims: Vec<usize> = plan
+            .events
+            .iter()
+            .filter_map(|(_, e)| match e {
+                FaultEvent::NodeCrash(n) => Some(n.0),
+                _ => None,
+            })
+            .collect();
+        victims.sort_unstable();
+        victims.dedup();
+        assert_eq!(victims.len(), 2, "no rack map: two independent node crashes");
+    }
+
+    #[test]
+    fn fault_domain_parses() {
+        assert_eq!("node".parse::<FaultDomain>().unwrap(), FaultDomain::Node);
+        assert_eq!("Rack".parse::<FaultDomain>().unwrap(), FaultDomain::Rack);
+        assert_eq!("zone".parse::<FaultDomain>().unwrap(), FaultDomain::Zone);
+        assert!("datacenter".parse::<FaultDomain>().is_err());
+        assert_eq!(FaultDomain::Rack.label(), "rack");
     }
 
     #[test]

@@ -35,13 +35,10 @@ impl Lcs {
         assert!(!cop.parts.is_empty(), "empty COP");
         let mut flows = Vec::with_capacity(cop.parts.len());
         for (_, src, size) in &cop.parts {
-            let s = cluster.node(*src);
-            let d = cluster.node(cop.dst);
             debug_assert_ne!(*src, cop.dst, "COP to the node that already holds the file");
-            let fid = net.add_flow(
-                *size,
-                vec![s.disk_read, s.nic_up, d.nic_down, d.disk_write],
-            );
+            // Source disk → link chain (NICs plus any rack/zone
+            // boundary links) → destination disk.
+            let fid = net.add_flow(*size, cluster.transfer_path(*src, cop.dst));
             self.flow_cop.insert(fid, cop.id);
             flows.push(fid);
         }

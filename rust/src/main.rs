@@ -3,14 +3,17 @@
 //! ```text
 //! wow run --workflow chain --strategy wow --dfs ceph [--nodes 8]
 //!         [--gbit 1.0] [--seed 0] [--c-node 1] [--c-task 2] [--xla]
+//!         [--topology flat|racks|zones] [--racks N] [--zones Z] [--oversub F]
 //!         [--crashes N] [--fail-prob P] [--recovery S] [--degrades N]
-//!         [--nfs-outage]
+//!         [--nfs-outage] [--fault-domain node|rack|zone]
 //!         [--tenants N] [--mix wf1,wf2] [--arrival SPEC] [--policy P]
-//!         [--core incremental|checked|naive]
+//!         [--weights 2,1,1] [--core incremental|checked|naive]
 //! wow table1 | table2 | table3 | fig4 | fig5 | gini | all
 //!         [--seeds 0,1,2] [--quick] [--xla]
-//! wow chaos [--gc]      # fault-injection sweep (crashes × fail rates)
+//! wow chaos [--gc] [--fault-domain rack|zone]
+//!                       # fault-injection sweep (crashes × fail rates)
 //! wow tenants           # multi-tenant sweep (arrivals × mixes × strategies)
+//! wow topo              # topology sweep (oversubscription × strategies)
 //! wow ablate            # c_node / c_task sweep on the pattern set
 //! ```
 //!
@@ -18,9 +21,11 @@
 //! (DESIGN.md §5); results print to stdout, progress to stderr.
 
 use anyhow::{bail, Context, Result};
+use wow::cluster::Topology;
 use wow::dfs::DfsKind;
 use wow::exec::{run_with_backend, run_workload_with_backend, RunConfig, SimCore};
 use wow::exp::{self, ExpOpts};
+use wow::fault::FaultDomain;
 use wow::metrics::RunMetrics;
 use wow::report::Table;
 use wow::scheduler::{Strategy, TenantPolicy};
@@ -91,7 +96,26 @@ impl Args {
             quick: self.has("quick"),
             xla: self.has("xla"),
             gc: self.has("gc"),
+            fault_domain: self.get("fault-domain", FaultDomain::Node)?,
         })
+    }
+
+    /// `--topology flat|racks|zones` plus its shape knobs `--racks`
+    /// (racks, or racks per zone in zones mode), `--zones`, `--oversub`.
+    fn topology(&self) -> Result<Topology> {
+        let kind: String = self.get("topology", String::from("flat"))?;
+        let racks: usize = self.get("racks", 2usize)?;
+        let zones: usize = self.get("zones", 2usize)?;
+        let oversub: f64 = self.get("oversub", 4.0f64)?;
+        if oversub <= 0.0 {
+            bail!("--oversub must be positive, got {oversub}");
+        }
+        match kind.to_ascii_lowercase().as_str() {
+            "flat" => Ok(Topology::Flat),
+            "racks" => Ok(Topology::Racks { racks, oversub }),
+            "zones" => Ok(Topology::Zones { zones, racks_per_zone: racks, oversub }),
+            other => bail!("unknown topology '{other}' (expected flat|racks|zones)"),
+        }
     }
 }
 
@@ -138,6 +162,11 @@ fn real_main() -> Result<()> {
             println!("{out}");
             Ok(())
         }
+        "topo" => {
+            let (_, out) = exp::topo::run(&args.opts()?);
+            println!("{out}");
+            Ok(())
+        }
         "ablate" => cmd_ablate(&args),
         "all" => {
             let opts = args.opts()?;
@@ -160,14 +189,18 @@ fn real_main() -> Result<()> {
                  subcommands:\n  \
                  run     --workflow NAME [--strategy orig|cws|wow] [--dfs ceph|nfs]\n          \
                  [--nodes N] [--gbit F] [--seed S] [--c-node N] [--c-task N] [--xla]\n          \
+                 [--topology flat|racks|zones] [--racks N] [--zones Z] [--oversub F]\n          \
                  [--crashes N] [--fail-prob P] [--recovery S] [--degrades N] [--nfs-outage]\n          \
+                 [--fault-domain node|rack|zone]   correlated crashes on a topology\n          \
                  [--tenants N] [--mix wf1,wf2,..] [--arrival all|staggered:G|poisson:G|bursty:BxG]\n          \
-                 [--policy fifo|fair]   multi-tenant run when N > 1 or --mix is given\n  \
+                 [--policy fifo|fair] [--weights 2,1,..]   multi-tenant run when N > 1 or --mix\n  \
                  table1 | table2 | table3 | fig4 | fig5 | gini | all\n          \
                  [--seeds 0,1,2] [--quick] [--xla]\n  \
                  chaos   fault-injection sweep: crashes x failure rates (see DESIGN.md \u{a7}7);\n          \
-                 [--gc] enables replica GC to probe the storage-vs-blast-radius trade-off\n  \
+                 [--gc] enables replica GC to probe the storage-vs-blast-radius trade-off;\n          \
+                 [--fault-domain rack|zone] widens each crash to a correlated domain outage\n  \
                  tenants multi-tenant sweep: arrivals x mixes x strategies x DFS (DESIGN.md \u{a7}8)\n  \
+                 topo    topology sweep: rack oversubscription x strategies (DESIGN.md \u{a7}11)\n  \
                  ablate  c_node/c_task sweep over the pattern workflows"
             );
             Ok(())
@@ -184,6 +217,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         core: args.get("core", SimCore::Incremental)?,
         n_nodes: args.get("nodes", 8usize)?,
         link_gbit: args.get("gbit", 1.0f64)?,
+        topology: args.topology()?,
         dfs: args.get("dfs", DfsKind::Ceph)?,
         strategy: args.get("strategy", Strategy::Wow)?,
         seed: args.get("seed", 0u64)?,
@@ -204,6 +238,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             .unwrap_or_default(),
         fault: wow::fault::FaultConfig {
             node_crashes: args.get("crashes", 0usize)?,
+            domain: args.get("fault-domain", FaultDomain::Node)?,
             task_fail_prob: args.get("fail-prob", 0.0f64)?,
             link_degrades: args.get("degrades", 0usize)?,
             nfs_outage: args.has("nfs-outage"),
@@ -214,6 +249,22 @@ fn cmd_run(args: &Args) -> Result<()> {
             ..Default::default()
         },
     };
+    // A correlated fault domain needs a topology that has that domain —
+    // otherwise the plan silently degrades to independent node crashes
+    // and the run would masquerade as a correlated-outage experiment.
+    match cfg.fault.domain {
+        FaultDomain::Node => {}
+        FaultDomain::Rack => {
+            if cfg.topology.is_flat() {
+                bail!("--fault-domain rack needs --topology racks|zones");
+            }
+        }
+        FaultDomain::Zone => {
+            if !matches!(cfg.topology, Topology::Zones { .. }) {
+                bail!("--fault-domain zone needs --topology zones");
+            }
+        }
+    }
     // Multi-tenant run: --tenants N and/or --mix build a workload from
     // the named workflows (the --workflow value seeds the default mix).
     let mix: Vec<wow::workflow::spec::WorkflowSpec> = match args.flags.get("mix") {
@@ -240,32 +291,57 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     let arrival: Arrival = args.get("arrival", Arrival::AllAtOnce)?;
     let multi = n_tenants > 1 || args.has("mix");
+    // Fair-share weights (`--weights 2,1,1`), cycled over the tenants.
+    let weights: Vec<f64> = args
+        .flags
+        .get("weights")
+        .map(|v| {
+            v.split(',')
+                .map(|x| x.trim().parse::<f64>())
+                .collect::<Result<Vec<_>, _>>()
+        })
+        .transpose()
+        .context("--weights wants a comma list like 2,1,1")?
+        .unwrap_or_default();
+    // The NaN check matters: `w <= 0.0` alone would wave NaN through to
+    // a raw assert panic in `with_weights`.
+    if weights.iter().any(|w| w.is_nan() || *w <= 0.0) {
+        bail!("--weights must all be positive");
+    }
+    if !weights.is_empty() && !multi {
+        eprintln!("warn: --weights has no effect on a single-tenant run");
+    }
 
     let backend = exp::make_backend(args.has("xla"));
     let t0 = std::time::Instant::now();
     let m = if multi {
         let wl_name = format!("{n_tenants} tenants ({})", arrival.label());
-        let wl = WorkloadSpec::from_mix(&wl_name, &mix, n_tenants, &arrival, cfg.seed);
+        let mut wl = WorkloadSpec::from_mix(&wl_name, &mix, n_tenants, &arrival, cfg.seed);
+        if !weights.is_empty() {
+            wl = wl.with_weights(&weights);
+        }
         eprintln!(
-            "running {} tenants ({}) with {} on {} ({} nodes, {} Gbit, {}, backend={})",
+            "running {} tenants ({}) with {} on {} ({} nodes, {} Gbit, {}, {}, backend={})",
             n_tenants,
             arrival.label(),
             cfg.strategy.label(),
             cfg.dfs.label(),
             cfg.n_nodes,
             cfg.link_gbit,
+            cfg.topology.label(),
             cfg.tenant_policy.label(),
             backend.backend_name(),
         );
         run_workload_with_backend(&wl, &cfg, backend)
     } else {
         eprintln!(
-            "running {} with {} on {} ({} nodes, {} Gbit, backend={})",
+            "running {} with {} on {} ({} nodes, {} Gbit, {}, backend={})",
             spec.name,
             cfg.strategy.label(),
             cfg.dfs.label(),
             cfg.n_nodes,
             cfg.link_gbit,
+            cfg.topology.label(),
             backend.backend_name(),
         );
         run_with_backend(&spec, &cfg, backend)
@@ -285,6 +361,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     t.row(vec!["COPs used".into(), format!("{:.1}%", m.pct_cops_used())]);
     t.row(vec!["data overhead".into(), format!("{:.1}%", m.data_overhead_pct())]);
     t.row(vec!["peak replicas".into(), format!("{:.1} GB", m.peak_replica_gb())]);
+    if !cfg.topology.is_flat() {
+        t.row(vec!["cross-rack traffic".into(), format!("{:.2} GB", m.cross_rack_gb())]);
+    }
     t.row(vec!["Gini storage".into(), format!("{:.2}", m.gini_storage())]);
     t.row(vec!["Gini CPU".into(), format!("{:.2}", m.gini_cpu())]);
     if cfg.fault.enabled() {

@@ -72,6 +72,11 @@ pub struct RunMetrics {
     /// this is what the paper's "moderate increase of temporary storage"
     /// claim is about).
     pub peak_replica_bytes: f64,
+    /// Bytes that crossed a rack boundary: traffic through the rack
+    /// uplinks of a hierarchical topology (every transfer leaving a
+    /// rack crosses exactly one). Always 0 on the flat topology, which
+    /// has no rack links.
+    pub cross_rack_bytes: f64,
 
     // --- fault injection & resilience (all zero on fault-free runs) ---
     /// Worker-node crashes (and NFS outages) that fired during the run.
@@ -143,6 +148,11 @@ impl RunMetrics {
         self.peak_replica_bytes / 1e9
     }
 
+    /// Cross-rack traffic in GB (0 on the flat topology).
+    pub fn cross_rack_gb(&self) -> f64 {
+        self.cross_rack_bytes / 1e9
+    }
+
     /// Crash-recovery traffic in GB.
     pub fn recovery_gb(&self) -> f64 {
         self.recovery_bytes.as_gb()
@@ -183,6 +193,7 @@ impl RunMetrics {
             node_storage_bytes,
             node_cpu_seconds,
             peak_replica_bytes,
+            cross_rack_bytes,
             node_crashes,
             link_degrades,
             task_failures,
@@ -216,6 +227,7 @@ impl RunMetrics {
             h.u64(v.to_bits());
         }
         h.u64(peak_replica_bytes.to_bits());
+        h.u64(cross_rack_bytes.to_bits());
         h.u64(*node_crashes);
         h.u64(*link_degrades);
         h.u64(*task_failures);

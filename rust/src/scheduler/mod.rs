@@ -165,6 +165,41 @@ impl std::str::FromStr for TenantPolicy {
     }
 }
 
+/// Per-iteration inter-tenant precedence ranks (0 = schedule first) for
+/// tenants given as `(arrival, fair-share weight, allocated cores)`
+/// tuples. FIFO ranks by arrival (ties by index); fair share by
+/// weighted usage `allocated cores / weight`, ascending — a tenant with
+/// weight 2 is entitled to twice the cores before losing precedence.
+/// Returns an empty vector for 0/1 tenants: the single-tenant identity
+/// every strategy treats as "no precedence" (see [`SchedView`]).
+pub fn tenant_precedence(policy: TenantPolicy, tenants: &[(SimTime, f64, u64)]) -> Vec<u64> {
+    if tenants.len() <= 1 {
+        return Vec::new();
+    }
+    let n = tenants.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    match policy {
+        TenantPolicy::Fifo => {
+            order.sort_by(|&a, &b| tenants[a].0.cmp(&tenants[b].0).then(a.cmp(&b)));
+        }
+        TenantPolicy::FairShare => {
+            let usage = |i: usize| -> f64 { tenants[i].2 as f64 / tenants[i].1.max(1e-9) };
+            order.sort_by(|&a, &b| {
+                usage(a)
+                    .partial_cmp(&usage(b))
+                    .unwrap()
+                    .then(tenants[a].0.cmp(&tenants[b].0))
+                    .then(a.cmp(&b))
+            });
+        }
+    }
+    let mut prec = vec![0u64; n];
+    for (rank, &i) in order.iter().enumerate() {
+        prec[i] = rank as u64;
+    }
+    prec
+}
+
 /// Which strategy to instantiate (CLI/experiments).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Strategy {
@@ -255,6 +290,26 @@ mod tests {
             SchedView { now: SimTime::ZERO, cluster: &cluster, ready: &ready, tenant_prec: &[] };
         assert_eq!(view.prec(&ready[0]), 0);
         assert_eq!(view.eff_priority(&ready[0]), ready[0].priority());
+    }
+
+    #[test]
+    fn fair_share_weights_shift_precedence() {
+        // Equal usage (4 cores each), tenant 0 weighted 2x: its weighted
+        // usage is half, so it keeps precedence.
+        let t = [(SimTime::ZERO, 2.0, 4u64), (SimTime::ZERO, 1.0, 4u64)];
+        assert_eq!(tenant_precedence(TenantPolicy::FairShare, &t), vec![0, 1]);
+        // With equal weights the same allocation ties and arrival order
+        // (then index) decides.
+        let t = [(SimTime::ZERO, 1.0, 4u64), (SimTime::ZERO, 1.0, 4u64)];
+        assert_eq!(tenant_precedence(TenantPolicy::FairShare, &t), vec![0, 1]);
+        // A weight-2 tenant loses precedence only past 2x the usage.
+        let t = [(SimTime::ZERO, 2.0, 9u64), (SimTime::ZERO, 1.0, 4u64)];
+        assert_eq!(tenant_precedence(TenantPolicy::FairShare, &t), vec![1, 0]);
+        // FIFO ignores weights entirely.
+        let t = [(SimTime(5), 100.0, 0u64), (SimTime(1), 1.0, 64u64)];
+        assert_eq!(tenant_precedence(TenantPolicy::Fifo, &t), vec![1, 0]);
+        // Single tenant: the identity (empty precedence vector).
+        assert!(tenant_precedence(TenantPolicy::FairShare, &t[..1]).is_empty());
     }
 
     #[test]

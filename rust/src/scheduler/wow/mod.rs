@@ -23,6 +23,13 @@
 //! The batched missing/local-bytes matrix behind preparedness and
 //! transfer estimates is the Layer-1/2 cost kernel, invoked through a
 //! pluggable [`CostEval`] backend (XLA artifact or native rust).
+//!
+//! On a hierarchical topology ([`crate::cluster::Topology`]) the cost
+//! matrix prices every missing byte at the min-capacity link on the
+//! path from its nearest replica, so step 2's earliest-start estimate
+//! and step 3's price steer COPs toward same-rack destinations with no
+//! scheduler changes; step 3 additionally tie-breaks equal prices by
+//! rack affinity, and the DPS planner prefers same-rack sources.
 
 pub mod ilp;
 
@@ -232,7 +239,12 @@ impl Scheduler for WowScheduler {
             let t = &view.ready[ti];
             // Lowest-price node among those not prepared, under c_node,
             // without an in-flight or just-queued COP for this task.
-            let mut best: Option<(f64, usize)> = None;
+            // Prices carry the path penalties of a hierarchical
+            // topology; at equal price the rack-affinity tie-break
+            // prefers the destination whose sources are nearest (lowest
+            // mean path penalty). On flat every penalty is 1, so the
+            // tie-break reduces to the original keep-first behaviour.
+            let mut best: Option<(f64, f64, usize)> = None;
             for ni in 0..workers.len() {
                 let node = workers[ni];
                 if costs.is_prepared(ti, ni)
@@ -244,16 +256,17 @@ impl Scheduler for WowScheduler {
                 }
                 if let Some(plan) = dps.plan(&t.intermediate_inputs, node) {
                     let price = plan.price();
+                    let affinity = plan.mean_penalty();
                     let better = match best {
-                        Some((bp, _)) => price < bp,
+                        Some((bp, ba, _)) => price < bp || (price == bp && affinity < ba),
                         None => true,
                     };
                     if better {
-                        best = Some((price, ni));
+                        best = Some((price, affinity, ni));
                     }
                 }
             }
-            if let Some((_, ni)) = best {
+            if let Some((_, _, ni)) = best {
                 let node = workers[ni];
                 *queued_node.entry(node).or_insert(0) += 1;
                 *queued_task.entry(t.id).or_insert(0) += 1;

@@ -133,6 +133,20 @@ impl WorkloadSpec {
         WorkloadSpec { name: name.to_string(), tenants }
     }
 
+    /// Assign fair-share weights, cycling `weights` over the tenants
+    /// (like the workflow mix). Weights only matter under
+    /// [`crate::scheduler::TenantPolicy::FairShare`], where a weight-2
+    /// tenant is entitled to twice the allocated cores before losing
+    /// precedence. CLI: `wow run --weights 2,1,1`.
+    pub fn with_weights(mut self, weights: &[f64]) -> Self {
+        assert!(!weights.is_empty(), "weights must not be empty");
+        assert!(weights.iter().all(|w| *w > 0.0), "weights must be positive");
+        for (i, t) in self.tenants.iter_mut().enumerate() {
+            t.weight = weights[i % weights.len()];
+        }
+        self
+    }
+
     pub fn n_tenants(&self) -> usize {
         self.tenants.len()
     }
@@ -313,6 +327,26 @@ mod tests {
         assert_eq!(w.tenants[0].workflow.name, "Chain");
         assert_eq!(w.tenants[1].workflow.name, "Fork");
         assert_eq!(w.tenants[4].workflow.name, "Chain");
+    }
+
+    #[test]
+    fn with_weights_cycles_like_the_mix() {
+        let mix = vec![patterns::chain()];
+        let w = WorkloadSpec::from_mix("m", &mix, 5, &Arrival::AllAtOnce, 0)
+            .with_weights(&[2.0, 1.0]);
+        let got: Vec<f64> = w.tenants.iter().map(|t| t.weight).collect();
+        assert_eq!(got, vec![2.0, 1.0, 2.0, 1.0, 2.0]);
+        // Default weights stay 1.0.
+        let plain = WorkloadSpec::from_mix("m", &mix, 2, &Arrival::AllAtOnce, 0);
+        assert!(plain.tenants.iter().all(|t| t.weight == 1.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn with_weights_rejects_nonpositive() {
+        let mix = vec![patterns::chain()];
+        let _ = WorkloadSpec::from_mix("m", &mix, 2, &Arrival::AllAtOnce, 0)
+            .with_weights(&[1.0, 0.0]);
     }
 
     #[test]

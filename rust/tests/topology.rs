@@ -1,0 +1,279 @@
+//! Hierarchical-topology tests: the Flat no-op guarantee against the
+//! 4-tenant Poisson goldens, multi-rack/zone determinism across all
+//! three simulation cores (the Checked core's shadow oracles validate
+//! the topology-aware cost caches bit for bit), cross-rack traffic
+//! accounting, correlated fault domains end to end, and a FlowNet
+//! property test driving rack-shaped multi-hop paths against the naive
+//! reference implementation.
+
+use wow::cluster::{Cluster, NodeId, NodeSpec, Topology};
+use wow::exec::{run, run_workload, RunConfig, SimCore};
+use wow::fault::{FaultConfig, FaultDomain};
+use wow::net::FlowNet;
+use wow::scheduler::{Strategy, TenantPolicy};
+use wow::util::rng::Rng;
+use wow::util::units::{Bandwidth, Bytes, SimTime};
+use wow::workflow::patterns;
+use wow::workload::{Arrival, WorkloadSpec};
+
+fn racks2(oversub: f64) -> Topology {
+    Topology::Racks { racks: 2, oversub }
+}
+
+fn cfg(strategy: Strategy, topology: Topology) -> RunConfig {
+    RunConfig { strategy, topology, seed: 7, ..Default::default() }
+}
+
+/// The golden workload of the incremental-core equivalence suite.
+fn four_tenant_poisson(seed: u64) -> WorkloadSpec {
+    let mix = vec![patterns::chain(), patterns::fork(), patterns::group()];
+    WorkloadSpec::from_mix("poisson-4", &mix, 4, &Arrival::Poisson { mean_gap_s: 60.0 }, seed)
+}
+
+#[test]
+fn flat_is_the_default_and_a_strict_noop() {
+    // RunConfig::default() is Flat; an explicit Flat produces the very
+    // same metrics, with no rack links and zero cross-rack bytes.
+    let spec = patterns::fork();
+    let base = run(&spec, &RunConfig { strategy: Strategy::Wow, seed: 7, ..Default::default() });
+    let explicit = run(&spec, &cfg(Strategy::Wow, Topology::Flat));
+    assert_eq!(base, explicit);
+    assert_eq!(base.fingerprint(), explicit.fingerprint());
+    assert_eq!(base.cross_rack_bytes, 0.0, "no rack links on flat");
+}
+
+#[test]
+fn flat_goldens_agree_across_cores_with_topology_threading() {
+    // The Flat fingerprint guarantee on the 4-tenant Poisson goldens:
+    // the topology-threaded net/cluster/dps/exec layers must leave the
+    // flat runs bit-identical across the incremental core, the checked
+    // core (shadow oracles on) and the retained pre-refactor core.
+    let wl = four_tenant_poisson(7);
+    for strategy in [Strategy::Orig, Strategy::Cws, Strategy::Wow] {
+        let base = run_workload(&wl, &cfg(strategy, Topology::Flat));
+        assert_eq!(base.cross_rack_bytes, 0.0, "{strategy:?}");
+        for core in [SimCore::Checked, SimCore::Naive] {
+            let mut c = cfg(strategy, Topology::Flat);
+            c.core = core;
+            let m = run_workload(&wl, &c);
+            assert_eq!(base, m, "{strategy:?}/{core:?}");
+            assert_eq!(base.fingerprint(), m.fingerprint(), "{strategy:?}/{core:?}");
+        }
+        // Both tenant policies stay on the flat golden under the
+        // checked core (shadow oracles + cost-cache reference on).
+        let mut fair = cfg(strategy, Topology::Flat);
+        fair.tenant_policy = TenantPolicy::FairShare;
+        let fair_base = run_workload(&wl, &fair);
+        let mut fair_checked = fair.clone();
+        fair_checked.core = SimCore::Checked;
+        let fm = run_workload(&wl, &fair_checked);
+        assert_eq!(fair_base, fm, "{strategy:?}/FairShare");
+        assert_eq!(fair_base.cross_rack_bytes, 0.0, "{strategy:?}/FairShare");
+    }
+}
+
+#[test]
+fn multi_rack_runs_bit_identical_across_cores() {
+    // Multi-rack determinism: same seed ⇒ bit-identical RunMetrics
+    // across SimCore::{Incremental, Checked, Naive}. The Checked core
+    // asserts every FlowNet observable (6-resource path flows included)
+    // against the naive reference and every cached cost matrix — with
+    // its topology penalties and link epochs — against the full
+    // rebuild, so this is the end-to-end proof that path pricing is
+    // cache-coherent.
+    let wl = four_tenant_poisson(7);
+    for strategy in [Strategy::Orig, Strategy::Cws, Strategy::Wow] {
+        let base = run_workload(&wl, &cfg(strategy, racks2(4.0)));
+        let again = run_workload(&wl, &cfg(strategy, racks2(4.0)));
+        assert_eq!(base, again, "{strategy:?}: reruns must be bit-identical");
+        for core in [SimCore::Checked, SimCore::Naive] {
+            let mut c = cfg(strategy, racks2(4.0));
+            c.core = core;
+            let m = run_workload(&wl, &c);
+            assert_eq!(base, m, "{strategy:?}/{core:?}");
+            assert_eq!(base.fingerprint(), m.fingerprint(), "{strategy:?}/{core:?}");
+        }
+    }
+}
+
+#[test]
+fn zoned_topology_completes_checked_and_fair_shared() {
+    // Zones-of-racks with the fair-share policy under the checked core:
+    // the deepest paths (6 resources) and the zone penalty compounding,
+    // shadow-asserted throughout.
+    let wl = four_tenant_poisson(3);
+    let zones = Topology::Zones { zones: 2, racks_per_zone: 2, oversub: 4.0 };
+    let mut c = cfg(Strategy::Wow, zones);
+    c.tenant_policy = TenantPolicy::FairShare;
+    c.core = SimCore::Checked;
+    let m = run_workload(&wl, &c);
+    let mut plain = cfg(Strategy::Wow, zones);
+    plain.tenant_policy = TenantPolicy::FairShare;
+    let p = run_workload(&wl, &plain);
+    assert_eq!(m, p, "checked core must change nothing on a zoned fabric");
+    assert!(m.tenants.len() == 4 && m.tasks_total > 0);
+}
+
+#[test]
+fn cross_rack_counter_explains_the_topology_cost() {
+    let spec = patterns::chain();
+    let orig = run(&spec, &cfg(Strategy::Orig, racks2(4.0)));
+    let wow = run(&spec, &cfg(Strategy::Wow, racks2(4.0)));
+    assert!(orig.cross_rack_bytes > 0.0, "Ceph scatters intermediates across racks");
+    assert!(
+        wow.cross_rack_bytes < orig.cross_rack_bytes,
+        "WOW's node-local plan moves less across racks: {} vs {}",
+        wow.cross_rack_bytes,
+        orig.cross_rack_bytes
+    );
+    // Tightening the core hurts the DFS-bound baseline.
+    let orig_flat = run(&spec, &cfg(Strategy::Orig, Topology::Flat));
+    assert!(
+        orig.makespan.as_secs_f64() > orig_flat.makespan.as_secs_f64(),
+        "oversubscription must slow the baseline: {} vs flat {}",
+        orig.makespan,
+        orig_flat.makespan
+    );
+}
+
+#[test]
+fn correlated_rack_crash_through_the_executor() {
+    // --fault-domain rack end to end: one injected crash kills all four
+    // members of one rack at the same instant; the run heals (lineage
+    // re-execution + resubmission) and stays deterministic.
+    let spec = patterns::group();
+    let mut c = cfg(Strategy::Wow, racks2(4.0));
+    c.fault = FaultConfig {
+        node_crashes: 1,
+        domain: FaultDomain::Rack,
+        // Early window: the 30 s source stage is still computing on
+        // every node, so the crash is guaranteed to land mid-run.
+        crash_window_s: (10.0, 25.0),
+        recovery_s: Some(120.0),
+        ..Default::default()
+    };
+    let m = run(&spec, &c);
+    assert_eq!(m.node_crashes, 4, "8 workers in 2 racks: a rack crash is 4 node crashes");
+    assert!(m.tasks_rerun > 0, "losing a whole rack mid-run must discard work");
+    assert_eq!(m, run(&spec, &c), "correlated-fault runs stay deterministic");
+    // The same config with node domains kills exactly one worker.
+    let mut ind = c.clone();
+    ind.fault.domain = FaultDomain::Node;
+    let mi = run(&spec, &ind);
+    assert_eq!(mi.node_crashes, 1);
+}
+
+#[test]
+fn brownout_on_racks_stays_deterministic_and_checked() {
+    // Link brownouts bump the DPS link-capacity epoch on hierarchical
+    // topologies; the checked core proves the repriced rows still match
+    // the full rebuild bit for bit.
+    let spec = patterns::fork();
+    let mut c = cfg(Strategy::Wow, racks2(4.0));
+    c.fault.link_degrades = 2;
+    // Early window: fork's 30 s source task is still running, so both
+    // brownouts land inside the run regardless of the final makespan.
+    c.fault.crash_window_s = (5.0, 20.0);
+    c.fault.degrade_duration_s = 60.0;
+    let base = run(&spec, &c);
+    assert_eq!(base.link_degrades, 2);
+    let mut checked = c.clone();
+    checked.core = SimCore::Checked;
+    assert_eq!(base, run(&spec, &checked), "checked core under brownouts");
+}
+
+#[test]
+fn wow_run_without_topology_flags_matches_pre_topology_config() {
+    // Guard for the CLI default: a RunConfig built field-by-field with
+    // Topology::Flat equals ..Default::default() construction.
+    let a = RunConfig::default();
+    assert!(a.topology.is_flat());
+}
+
+/// Property test: multi-hop path flows through shared, oversubscribed
+/// rack uplinks produce bit-identical observables on the incremental
+/// FlowNet and the retained naive reference. Flows are generated from
+/// real `Cluster::transfer_path` chains (2–6 resources, disks + NICs +
+/// rack links) under random churn: adds, cancels, partial advances.
+#[test]
+fn path_flows_through_shared_uplinks_match_naive_reference() {
+    use wow::net::reference::NaiveFlowNet;
+    use wow::net::FlowId;
+    let mut rng = Rng::new(4242);
+    for round in 0..8 {
+        let mut inc = FlowNet::new();
+        inc.enable_reference_check();
+        let c = Cluster::build_topo(
+            &mut inc,
+            8,
+            NodeSpec::paper_worker(1.0),
+            None,
+            racks2(2.0 + round as f64),
+        );
+        // Mirror the exact resource table into an external naive net.
+        let mut naive = NaiveFlowNet::new();
+        for r in 0..inc.bytes_through.len() {
+            naive.add_resource(Bandwidth(inc.capacity_of(wow::net::ResourceId(r))));
+        }
+        let mut live: Vec<FlowId> = Vec::new();
+        for _step in 0..150 {
+            match rng.index(4) {
+                0 | 1 => {
+                    let src = NodeId(rng.index(8));
+                    let dst = NodeId(rng.index(8));
+                    let path = c.transfer_path(src, dst);
+                    let bytes = Bytes(1_000 + rng.below(500_000_000));
+                    let a = inc.add_flow(bytes, path.clone());
+                    assert_eq!(a, naive.add_flow(bytes, path));
+                    live.push(a);
+                }
+                2 => {
+                    if !live.is_empty() {
+                        let victim = live[rng.index(live.len())];
+                        assert_eq!(inc.cancel(victim), naive.cancel(victim));
+                        live.retain(|f| *f != victim);
+                    }
+                }
+                _ => {
+                    let t = inc.next_completion();
+                    assert_eq!(t, naive.next_completion());
+                    if let Some(t) = t {
+                        let now = inc.now();
+                        let target = if rng.next_f64() < 0.5 && t > now {
+                            SimTime((now.0 + t.0) / 2)
+                        } else {
+                            t
+                        };
+                        inc.advance_to(target);
+                        naive.advance_to(target);
+                        let done = inc.take_completed();
+                        assert_eq!(done, naive.take_completed());
+                        live.retain(|f| !done.contains(f));
+                    }
+                }
+            }
+            for &f in &live {
+                let (a, b) = (inc.rate_of(f), naive.rate_of(f));
+                assert_eq!(
+                    a.map(f64::to_bits),
+                    b.map(f64::to_bits),
+                    "round {round}: rate diverged for {f:?}"
+                );
+            }
+        }
+        // Drain; the shared-uplink byte counters must agree bitwise.
+        while let Some(t) = inc.next_completion() {
+            assert_eq!(Some(t), naive.next_completion());
+            inc.advance_to(t);
+            naive.advance_to(t);
+            assert_eq!(inc.take_completed(), naive.take_completed());
+        }
+        for up in c.rack_uplinks() {
+            assert_eq!(
+                inc.bytes_through[up.0].to_bits(),
+                naive.bytes_through[up.0].to_bits(),
+                "round {round}: uplink {up:?} bytes diverged"
+            );
+        }
+    }
+}
