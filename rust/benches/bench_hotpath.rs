@@ -1,9 +1,12 @@
-//! Bench: the DPS cost-matrix hot path — Native rust vs the AOT XLA
-//! artifact (Layers 1/2), the dirty-tracked row cache, and the greedy
-//! COP planner. This is the Layer-1/2 performance instrument for
-//! EXPERIMENTS.md §Perf. Emits `BENCH_hotpath.json`.
+//! Bench: the simulator's per-event hot paths — the flow-churn
+//! micro-bench isolating `next_completion`/`advance_to` on many
+//! disjoint components (lazy vs eager advance), the DPS cost-matrix
+//! kernels (native Rust vs the AOT XLA artifact), the dirty-tracked row
+//! cache, and the greedy COP planner. Emits `BENCH_hotpath.json`.
 //!
-//! `cargo bench --bench bench_hotpath`
+//! `cargo bench --bench bench_hotpath` — full run.
+//! `BENCH_SMOKE=1 cargo bench --bench bench_hotpath` (or `-- --smoke`)
+//! — reduced shapes/iterations, for CI.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -20,12 +23,93 @@ fn instance(rng: &mut Rng, t: usize, f: usize, n: usize) -> (Vec<f32>, Vec<f32>,
 }
 
 fn main() {
-    println!("bench_hotpath — DPS cost-matrix backends\n");
+    let smoke =
+        std::env::var("BENCH_SMOKE").is_ok() || std::env::args().any(|a| a == "--smoke");
+    println!("bench_hotpath — network hot path + DPS cost-matrix backends\n");
     let mut report = common::JsonReport::new("hotpath");
-    let mut rng = Rng::new(1);
-    let shapes = [(32usize, 256usize, 8usize), (64, 512, 8), (256, 1024, 8), (1024, 4096, 8)];
 
-    for &(t, f, n) in &shapes {
+    // Flow-churn micro-bench for the O(touched)-per-event network
+    // substrate: N disjoint components of 20 long-lived flows each, with
+    // all churn (cancel + add + partial advance) landing on one hot
+    // component. Per-component completion horizons and lazy replay keep
+    // the lazy rows flat as total flows grow; the eager baseline pays
+    // O(total flows) in `next_completion` + `advance_to` on every
+    // event. (Uniform round-robin churn would converge the two again —
+    // total integration work is conserved by bit-identical replay; the
+    // win is skipping quiescent components and the completion scan.)
+    {
+        use wow::net::FlowNet;
+        use wow::util::units::{Bandwidth, Bytes, SimTime};
+
+        let flows_per_comp = 20usize;
+        let comp_counts: &[usize] = if smoke { &[16, 64] } else { &[64, 256, 512] };
+        let events: usize = if smoke { 2_000 } else { 20_000 };
+
+        for &n_comps in comp_counts {
+            for eager in [false, true] {
+                let mut net = FlowNet::new();
+                net.set_eager_advance(eager);
+                let mut comp_res = Vec::with_capacity(n_comps);
+                for _ in 0..n_comps {
+                    let a = net.add_resource(Bandwidth(125e6));
+                    let b = net.add_resource(Bandwidth(125e6));
+                    comp_res.push((a, b));
+                }
+                // Long-lived background flows: they never finish inside
+                // the bench window, so untouched components stay
+                // rate-quiescent throughout.
+                for &(a, b) in &comp_res {
+                    for _ in 0..flows_per_comp - 1 {
+                        net.add_flow(Bytes::from_gb(500.0), vec![a, b]);
+                    }
+                }
+                let (hot_a, hot_b) = comp_res[0];
+                let mut churn = net.add_flow(Bytes::from_gb(1.0), vec![hot_a, hot_b]);
+                let mode = if eager { "eager" } else { "lazy " };
+                let total = n_comps * flows_per_comp;
+                let label = format!("net churn {mode} ({total:>6} flows, {n_comps:>4} comps)");
+                let (min, mean) = common::bench_n(&label, 1, || {
+                    for _ in 0..events {
+                        net.cancel(churn);
+                        churn = net.add_flow(Bytes::from_gb(1.0), vec![hot_a, hot_b]);
+                        let horizon = net.next_completion().expect("flows active");
+                        // Advance partway: the hot component replays,
+                        // everything else defers; nothing completes.
+                        let now = net.now();
+                        let target = SimTime(now.0 + ((horizon.0 - now.0) / 1000).max(1));
+                        net.advance_to(target);
+                        // Hard assert (cargo bench runs release): a
+                        // completion here would mean the lazy and eager
+                        // rows measure different event mixes.
+                        assert!(net.take_completed().is_empty());
+                    }
+                });
+                let per_event_us = min / events as f64 * 1e6;
+                println!("    -> {per_event_us:.2} µs/event");
+                let key = if eager { "eager" } else { "lazy" };
+                report.row(
+                    &format!("net-churn-{key}-{n_comps}c"),
+                    &[
+                        ("flows", Jv::U(total as u64)),
+                        ("components", Jv::U(n_comps as u64)),
+                        ("events", Jv::U(events as u64)),
+                        ("min_s", Jv::F(min)),
+                        ("mean_s", Jv::F(mean)),
+                        ("per_event_us", Jv::F(per_event_us)),
+                    ],
+                );
+            }
+        }
+    }
+
+    let mut rng = Rng::new(1);
+    let shapes: &[(usize, usize, usize)] = if smoke {
+        &[(32, 256, 8), (64, 512, 8)]
+    } else {
+        &[(32, 256, 8), (64, 512, 8), (256, 1024, 8), (1024, 4096, 8)]
+    };
+
+    for &(t, f, n) in shapes {
         let (req, present, sizes) = instance(&mut rng, t, f, n);
         let (min, mean) = common::bench_n(&format!("native  ({t:>4} x {f:>4} x {n})"), 20, || {
             let _ = NativeCost.missing_local(&req, &present, &sizes, t, f, n);
@@ -40,7 +124,7 @@ fn main() {
     {
         if wow::runtime::XlaCostModel::available() {
             let mut xla = wow::runtime::XlaCostModel::load_default().expect("artifact");
-            for &(t, f, n) in &shapes {
+            for &(t, f, n) in shapes {
                 let (req, present, sizes) = instance(&mut rng, t, f, n);
                 let (min, mean) =
                     common::bench_n(&format!("xla     ({t:>4} x {f:>4} x {n})"), 20, || {
@@ -138,20 +222,23 @@ fn main() {
     // One full WOW scheduling-heavy simulation as the end-to-end probe.
     use wow::exec::{run, RunConfig};
     use wow::scheduler::Strategy;
-    let (min, mean) = common::bench_n("full sim: Group Multiple / WOW / Ceph", 5, || {
+    let iters = if smoke { 1 } else { 5 };
+    let (min, mean) = common::bench_n("full sim: Group Multiple / WOW / Ceph", iters, || {
         let _ = run(
             &wow::workflow::patterns::group_multiple(),
             &RunConfig { strategy: Strategy::Wow, ..Default::default() },
         );
     });
     report.row("sim-group-multiple", &[("min_s", Jv::F(min)), ("mean_s", Jv::F(mean))]);
-    let (min, mean) = common::bench_n("full sim: Chip-Seq / WOW / Ceph", 1, || {
-        let _ = run(
-            &wow::workflow::realworld::chipseq(),
-            &RunConfig { strategy: Strategy::Wow, ..Default::default() },
-        );
-    });
-    report.row("sim-chipseq", &[("min_s", Jv::F(min)), ("mean_s", Jv::F(mean))]);
+    if !smoke {
+        let (min, mean) = common::bench_n("full sim: Chip-Seq / WOW / Ceph", 1, || {
+            let _ = run(
+                &wow::workflow::realworld::chipseq(),
+                &RunConfig { strategy: Strategy::Wow, ..Default::default() },
+            );
+        });
+        report.row("sim-chipseq", &[("min_s", Jv::F(min)), ("mean_s", Jv::F(mean))]);
+    }
 
     report.write("BENCH_hotpath.json");
 }

@@ -1,15 +1,22 @@
 //! Bench: the end-to-end scaling instrument for the incremental
 //! simulation core. Runs multi-tenant Poisson workloads at cluster ×
 //! tenant shapes up to 256 nodes × 32 tenants under all three
-//! strategies, once with [`SimCore::Incremental`] and once with
-//! [`SimCore::Naive`] (the pre-refactor algorithms: full max-min
-//! recompute per network change, full cost-matrix rebuild per
-//! scheduling iteration), asserting the two produce bit-identical
-//! `RunMetrics` fingerprints before reporting the speedup. The naive
-//! core reproduces the old cost model's *dominant* terms on the new
-//! data structures (see `SimCore::Naive` docs for the second-order
-//! caveats in both directions), so the speedup column measures the
-//! algorithmic win, not a cycle-exact old-binary A/B.
+//! strategies, with three simulation cores per cell:
+//!
+//! - [`SimCore::Incremental`] — the current core: component-restricted
+//!   max-min recompute, per-component completion horizons and lazy
+//!   timeline replay (O(touched)-per-event network substrate);
+//! - [`SimCore::Eager`] — the pre-lazy-advance baseline ("before" for
+//!   the O(touched) refactor): same recompute and row caches, but every
+//!   advance integrates every live flow and `next_completion` scans
+//!   them all;
+//! - [`SimCore::Naive`] — the pre-refactor algorithms (full max-min
+//!   recompute per network change, full cost-matrix rebuild per
+//!   scheduling iteration; see `SimCore::Naive` docs for second-order
+//!   caveats in both directions).
+//!
+//! All three fingerprints are asserted bit-identical before any speedup
+//! is reported, so the table measures algorithmic cost, never drift.
 //!
 //! One shape runs on a hierarchical topology (2 racks at 4:1
 //! oversubscription) so `BENCH_scale.json` also tracks the
@@ -37,7 +44,7 @@ use wow::workload::{Arrival, WorkloadSpec};
 fn main() {
     let smoke =
         std::env::var("BENCH_SMOKE").is_ok() || std::env::args().any(|a| a == "--smoke");
-    println!("bench_scale — incremental vs naive (pre-refactor) simulation core\n");
+    println!("bench_scale — incremental vs eager (pre-lazy) vs naive (pre-refactor) cores\n");
     let racks = Topology::Racks { racks: 2, oversub: 4.0 };
     let shapes: Vec<(usize, usize, Topology)> = if smoke {
         vec![(16, 2, Topology::Flat), (16, 2, racks)]
@@ -76,6 +83,12 @@ fn main() {
                 1,
                 || fp_inc = run_workload(&wl, &cfg(SimCore::Incremental)).fingerprint(),
             );
+            let mut fp_eager = 0u64;
+            let (eager_s, _) = common::bench_n(
+                &format!("eager       {shape}"),
+                1,
+                || fp_eager = run_workload(&wl, &cfg(SimCore::Eager)).fingerprint(),
+            );
             let mut fp_naive = 0u64;
             let (naive_s, _) = common::bench_n(
                 &format!("naive       {shape}"),
@@ -83,13 +96,20 @@ fn main() {
                 || fp_naive = run_workload(&wl, &cfg(SimCore::Naive)).fingerprint(),
             );
             assert_eq!(
+                fp_inc, fp_eager,
+                "incremental vs eager disagree on {nodes}n x {tenants}t / {strategy:?} ({})",
+                topology.label()
+            );
+            assert_eq!(
                 fp_inc, fp_naive,
                 "cores disagree on {nodes}n x {tenants}t / {strategy:?} ({})",
                 topology.label()
             );
             let speedup = naive_s / inc_s;
+            let speedup_vs_eager = eager_s / inc_s;
             println!(
-                "  -> speedup {speedup:>6.2}x (fingerprint {fp_inc:016x} identical)\n"
+                "  -> {speedup_vs_eager:>6.2}x vs eager, {speedup:>6.2}x vs naive \
+                 (fingerprint {fp_inc:016x} identical)\n"
             );
             let key_topo = if topology.is_flat() { "" } else { "-racks" };
             report.row(
@@ -100,8 +120,10 @@ fn main() {
                     ("strategy", Jv::S(strategy.label().to_string())),
                     ("topology", Jv::S(topology.label())),
                     ("incremental_s", Jv::F(inc_s)),
+                    ("eager_s", Jv::F(eager_s)),
                     ("naive_s", Jv::F(naive_s)),
                     ("speedup", Jv::F(speedup)),
+                    ("speedup_vs_eager", Jv::F(speedup_vs_eager)),
                     ("fingerprint", Jv::S(format!("{fp_inc:016x}"))),
                     ("smoke", Jv::B(smoke)),
                 ],

@@ -7,7 +7,7 @@
 //!         [--crashes N] [--fail-prob P] [--recovery S] [--degrades N]
 //!         [--nfs-outage] [--fault-domain node|rack|zone]
 //!         [--tenants N] [--mix wf1,wf2] [--arrival SPEC] [--policy P]
-//!         [--weights 2,1,1] [--core incremental|checked|naive]
+//!         [--weights 2,1,1] [--core incremental|checked|eager|naive]
 //! wow table1 | table2 | table3 | fig4 | fig5 | gini | all
 //!         [--seeds 0,1,2] [--quick] [--xla]
 //! wow chaos [--gc] [--fault-domain rack|zone]

@@ -17,14 +17,17 @@
 //! ## Incremental core
 //!
 //! The original implementation recomputed the full max-min allocation
-//! over *all* flows and resources on every change and found flows by
-//! linear scan. This version is incremental while staying bit-identical
-//! to the original (asserted by [`reference::NaiveFlowNet`] shadows and
-//! the flow-churn property test):
+//! over *all* flows and resources on every change, found flows by linear
+//! scan, and paid O(flows) on every event to re-derive completion times
+//! and integrate progress. This version keeps per-event cost
+//! proportional to the *touched* connected component while staying
+//! bit-identical to the eager reference implementation
+//! ([`reference::NaiveFlowNet`] shadows plus the lockstep property
+//! tests):
 //!
 //! - flows live in an arrival-ordered slab with an id → slot index, so
 //!   [`FlowNet::rate_of`] / [`FlowNet::remaining`] /
-//!   [`FlowNet::cancel`] are O(1) instead of O(flows);
+//!   [`FlowNet::cancel`] are O(1)/O(component) instead of O(flows);
 //! - each resource keeps an adjacency list of the flows crossing it, so
 //!   [`FlowNet::flows_using_any`] (crash blast radius) is O(degree);
 //! - [`FlowNet::recompute`] tracks *dirty* resources (touched by flow
@@ -32,18 +35,33 @@
 //!   filling only on the connected components reachable from them.
 //!   Untouched components keep their cached rates — which are exactly
 //!   what a full recompute would reproduce, because max-min shares of a
-//!   component depend only on its own members (see `DESIGN.md` §Perf
-//!   for the invariant argument).
+//!   component depend only on its own members (see `DESIGN.md` §9);
+//! - every flow carries an **anchored completion time** (`finish`,
+//!   integer µs), re-derived only when its rate *changes bitwise*.
+//!   [`FlowNet::next_completion`] is the first element of a
+//!   deterministic keyed min-set of per-component horizons ordered by
+//!   `(time, component id)` — never a heap-internal order;
+//! - [`FlowNet::advance_to`] records the global advance timeline as
+//!   `(t, dt)` steps. Components whose horizon lies beyond the target
+//!   defer integration entirely; when such a component is next touched
+//!   (recompute, cancel) or observed (`remaining`), it **replays** the
+//!   identical sequence of `remaining -= rate·dt` updates, in the same
+//!   flow-slot/step order the eager path uses, so per-resource
+//!   `bytes_through` accumulation stays bit-identical (a resource's
+//!   flows all belong to its own component, so no foreign writes can
+//!   interleave). Collapsing `rate·dt₁ + rate·dt₂` into
+//!   `rate·(dt₁+dt₂)` would drift in f64 — the replay never does.
 //!
-//! `next_completion` and `advance_to` intentionally remain single passes
-//! over the live flows: a completion-time heap was evaluated and
-//! rejected because the per-event `remaining -= rate·dt` float chain
-//! makes recomputed completion times drift by ±1 µs relative to cached
-//! ones, which would break bit-identical `RunMetrics`. The scan is a few
-//! flops per flow; the asymptotic hot spot was the full recompute.
+//! A completion-time *heap* keyed on re-derived `remaining / rate`
+//! values was evaluated and rejected in PR 3 because the chained float
+//! updates make recomputed completion times drift by ±1 µs. The
+//! anchored scheme sidesteps that: completion times are integers fixed
+//! at rate-change instants, compared exactly, and both the lazy and the
+//! eager reference implementation use the very same anchors.
 
 pub mod reference;
 
+use crate::sim::event::MinTimeSet;
 use crate::util::fxmap::FastMap;
 use crate::util::units::{Bandwidth, Bytes, SimTime};
 use reference::NaiveFlowNet;
@@ -56,15 +74,72 @@ pub struct ResourceId(pub usize);
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct FlowId(pub u64);
 
+/// Sentinel for "not a member of any component group" (resourceless
+/// flows, and flows added since the last recompute).
+const NO_GROUP: u64 = u64::MAX;
+
+/// The anchored completion time of a flow whose rate was just set:
+/// `now + ceil(remaining / rate)` in µs, with a 1 µs floor so time
+/// always advances. A zero rate (a fully browned-out resource) yields
+/// no completion at all — `remaining / 0` used to saturate `inf as u64`
+/// into a bogus `SimTime` — and the µs count is clamped before it can
+/// overflow the clock.
+pub(crate) fn anchor_finish(now: SimTime, remaining: f64, rate: f64) -> SimTime {
+    if rate.is_infinite() || remaining <= 0.0 {
+        return now;
+    }
+    if rate <= 0.0 {
+        return SimTime::FAR_FUTURE;
+    }
+    let dt = (remaining / rate * 1e6).ceil().max(1.0);
+    if dt.is_nan() || dt >= (SimTime::FAR_FUTURE.0 - now.0) as f64 {
+        return SimTime::FAR_FUTURE;
+    }
+    SimTime(now.0 + dt as u64)
+}
+
 #[derive(Debug, Clone)]
 struct Flow {
     id: FlowId,
-    remaining: f64, // bytes
+    remaining: f64, // bytes (folded up to the owning group's cursor)
     resources: Vec<ResourceId>,
     rate: f64, // bytes/s, set by recompute()
     /// False once completed or cancelled; dead slots are skipped until
     /// the next compaction keeps the slab within 2× the live count.
     alive: bool,
+    /// Anchored completion time: derived from `(now, remaining, rate)`
+    /// whenever the rate changes bitwise, kept verbatim otherwise.
+    /// `FAR_FUTURE` = no completion (zero rate).
+    finish: SimTime,
+    /// Component group this flow belongs to (`NO_GROUP` until the first
+    /// recompute touches it, or forever for resourceless flows).
+    group: u64,
+}
+
+/// One global advance step: `advance_to` moved the clock to `end`
+/// across `dt` seconds. `dt` is stored exactly as the eager integration
+/// would have computed it, so a replayed `rate * dt` is bit-identical.
+#[derive(Debug, Clone, Copy)]
+struct TimeStep {
+    end: SimTime,
+    dt: f64,
+}
+
+/// A connected component of flows ↔ resources, frozen at the recompute
+/// that created it. Groups only ever retire (members complete/cancel or
+/// a later recompute absorbs them into a fresh group); they are the
+/// unit of lazy advance and completion-horizon caching.
+#[derive(Debug)]
+struct Group {
+    /// Member flow ids in arrival order (= slab order). Entries whose
+    /// flow died or was regrouped are skipped lazily.
+    members: Vec<FlowId>,
+    /// Absolute index into the step timeline: steps before this are
+    /// already folded into the members' `remaining`/`bytes_through`.
+    cursor: u64,
+    /// Cached earliest anchored finish among live members
+    /// (`FAR_FUTURE` = none); mirrored in the horizon set.
+    horizon: SimTime,
 }
 
 /// The shared bandwidth substrate.
@@ -90,14 +165,36 @@ pub struct FlowNet {
     res_dirty: Vec<bool>,
     /// When set, every recompute treats all resources as dirty — the
     /// original full-recompute cost model, kept for `bench_scale`'s
-    /// pre-refactor baseline ([`crate::exec::SimCore::Naive`]).
+    /// pre-refactor baseline ([`crate::exec::SimCore::Naive`]). Implies
+    /// eager advance.
     full_recompute: bool,
+    /// When set, every advance integrates every flow and
+    /// `next_completion` scans all of them — the pre-lazy-advance cost
+    /// model ([`crate::exec::SimCore::Eager`], this PR's baseline).
+    /// Results are identical either way.
+    eager_advance: bool,
     /// Differential-testing shadow: mirrors every mutation and asserts
     /// all observables bit-identical (test builds / `SimCore::Checked`).
     shadow: Option<Box<NaiveFlowNet>>,
-    // Scratch buffers and work lists for the component recompute
-    // (persistent so the hot path never allocates; marks are reset to
-    // neutral and lists drained after every use).
+
+    // Component groups and completion horizons.
+    groups: FastMap<u64, Group>,
+    next_group: u64,
+    /// Per-group earliest finish, ordered by `(time, group id)`.
+    horizons: MinTimeSet<u64>,
+    /// Resourceless flows (infinite rate), keyed by `(finish, flow id)`;
+    /// they complete at the first advance after creation.
+    loose: MinTimeSet<u64>,
+    /// Global advance timeline (`steps_base` = number of pruned steps).
+    steps: Vec<TimeStep>,
+    steps_base: u64,
+    /// Force-fold threshold for the step buffer (0 = default 65536);
+    /// see [`Self::maybe_prune_steps`].
+    force_fold_steps: usize,
+
+    // Scratch buffers and work lists for the component recompute and
+    // the replay machinery (persistent so the hot path never allocates;
+    // marks are reset to neutral and lists drained after every use).
     seen_res: Vec<bool>,
     seen_flow: Vec<bool>,
     scratch_cap: Vec<f64>,
@@ -105,7 +202,16 @@ pub struct FlowNet {
     comp_flows: Vec<usize>,
     comp_res: Vec<usize>,
     comp_frozen: Vec<bool>,
-    /// Statistics: total bytes moved through each resource.
+    scratch_stack: Vec<usize>,
+    scratch_rates: Vec<f64>,
+    scratch_gids: Vec<u64>,
+    scratch_slots: Vec<usize>,
+    scratch_done: Vec<FlowId>,
+    reset_res: Vec<usize>,
+    reset_flows: Vec<usize>,
+    /// Statistics: total bytes moved through each resource. Fully
+    /// folded whenever no flows are live; call [`Self::sync`] before
+    /// reading it mid-run.
     pub bytes_through: Vec<f64>,
 }
 
@@ -118,6 +224,10 @@ impl FlowNet {
     /// asserts every observable (rates, completion times, completed
     /// sets, byte counters) bit-identical. Must be called on an empty
     /// network; used by the equivalence tests and `SimCore::Checked`.
+    /// The shadow comparison folds every deferred segment on each
+    /// advance, so a shadowed net is effectively eager — the lockstep
+    /// property tests drive a shadowless net against an external
+    /// reference to prove the deferral itself.
     pub fn enable_reference_check(&mut self) {
         assert!(
             self.capacities.is_empty() && self.next_id == 0,
@@ -127,10 +237,18 @@ impl FlowNet {
     }
 
     /// Force full progressive filling on every recompute (the
-    /// pre-refactor cost model). Benchmarking only — results are
-    /// identical either way.
+    /// pre-refactor cost model; implies eager advance). Benchmarking
+    /// only — results are identical either way.
     pub fn set_full_recompute(&mut self, on: bool) {
         self.full_recompute = on;
+    }
+
+    /// Integrate every live flow on every advance and derive
+    /// `next_completion` by scanning all flows — the pre-lazy-advance
+    /// cost model, kept as the `bench_scale`/`bench_hotpath` baseline
+    /// for this refactor. Results are identical either way.
+    pub fn set_eager_advance(&mut self, on: bool) {
+        self.eager_advance = on;
     }
 
     /// Register a resource with the given capacity; returns its id.
@@ -150,7 +268,8 @@ impl FlowNet {
     }
 
     /// Change a resource's capacity (used by the network-bandwidth sweep,
-    /// Table III). Takes effect at the next recompute.
+    /// Table III, and link brownouts). Takes effect at the next
+    /// recompute.
     pub fn set_capacity(&mut self, r: ResourceId, cap: Bandwidth) {
         if let Some(sh) = self.shadow.as_mut() {
             sh.set_capacity(r, cap);
@@ -202,11 +321,29 @@ impl FlowNet {
         // Resourceless flows never enter a component; they carry the
         // infinite rate a recompute would assign immediately.
         let rate = if resources.is_empty() { f64::INFINITY } else { 0.0 };
+        // Immediate flows are anchored at creation; everything else
+        // waits for its first rate assignment.
+        let finish = if resources.is_empty() || bytes.as_u64() == 0 {
+            self.now
+        } else {
+            SimTime::FAR_FUTURE
+        };
+        if resources.is_empty() {
+            self.loose.insert(finish, id.0);
+        }
         for r in &resources {
             self.res_flows[r.0].push(id);
             self.mark_dirty(r.0);
         }
-        self.flows.push(Flow { id, remaining: bytes.as_f64(), resources, rate, alive: true });
+        self.flows.push(Flow {
+            id,
+            remaining: bytes.as_f64(),
+            resources,
+            rate,
+            alive: true,
+            finish,
+            group: NO_GROUP,
+        });
         self.id_slot.insert(id, slot);
         self.seen_flow.push(false);
         self.n_live += 1;
@@ -215,7 +352,7 @@ impl FlowNet {
 
     /// Unlink a live flow from every index, marking its resources dirty.
     /// The caller decides whether it completed (→ `completed`) or was
-    /// cancelled.
+    /// cancelled, and owns the group/loose bookkeeping.
     fn detach(&mut self, slot: usize) {
         let id = self.flows[slot].id;
         self.flows[slot].alive = false;
@@ -236,7 +373,8 @@ impl FlowNet {
 
     /// Drop dead slots once they outnumber live ones (amortized O(1)
     /// per retirement); slab order — and with it FlowId order — is
-    /// preserved.
+    /// preserved. Group member lists hold stable FlowIds, so they
+    /// survive compaction untouched.
     fn maybe_compact(&mut self) {
         if self.n_dead <= 32 || self.n_dead < self.n_live {
             return;
@@ -255,7 +393,27 @@ impl FlowNet {
     pub fn cancel(&mut self, id: FlowId) -> bool {
         let removed = match self.id_slot.get(&id) {
             Some(&slot) => {
+                let gid = self.flows[slot].group;
+                let finish = self.flows[slot].finish;
+                if gid != NO_GROUP {
+                    // Fold the component's deferred segments first: the
+                    // eager path had integrated this flow through every
+                    // past step, so its traffic must land before the
+                    // flow disappears.
+                    self.sync_group(gid);
+                } else if self.flows[slot].resources.is_empty() {
+                    self.loose.remove(finish, id.0);
+                }
                 self.detach(slot);
+                // The cached horizon needs re-deriving only when the
+                // victim attained it (ties included; `FAR == FAR`
+                // covers the group-may-now-be-empty case). Otherwise
+                // some other member still attains the min, so a crash
+                // cancelling K flows of an N-member component stays
+                // O(K + sync), not O(K·N).
+                if gid != NO_GROUP && finish == self.groups[&gid].horizon {
+                    self.finish_group_update(gid);
+                }
                 self.maybe_compact();
                 true
             }
@@ -267,8 +425,15 @@ impl FlowNet {
         removed
     }
 
-    /// Remaining bytes of an active flow, if any.
-    pub fn remaining(&self, id: FlowId) -> Option<Bytes> {
+    /// Remaining bytes of an active flow, if any. Observing a deferred
+    /// flow folds its component's pending segments first.
+    pub fn remaining(&mut self, id: FlowId) -> Option<Bytes> {
+        if let Some(&slot) = self.id_slot.get(&id) {
+            let gid = self.flows[slot].group;
+            if gid != NO_GROUP {
+                self.sync_group(gid);
+            }
+        }
         let got = self
             .id_slot
             .get(&id)
@@ -333,26 +498,64 @@ impl FlowNet {
     /// to the connected component(s) reachable from dirty resources.
     /// Rates of untouched components are already bit-identical to what a
     /// full recompute would assign (their shares depend only on their
-    /// own members), so they are left as-is.
+    /// own members), so they are left as-is — and so are their anchored
+    /// finish times, because the re-anchor rule below only fires on a
+    /// bitwise rate change.
     pub fn recompute(&mut self) {
         if self.full_recompute {
             for r in 0..self.capacities.len() {
                 self.mark_dirty(r);
             }
         }
-
-        // Flood fill: dirty resources → their flows → those flows'
-        // other resources, transitively. Collects the union of all
-        // touched components. The work lists are persistent scratch
-        // (taken and handed back) so the hot path never allocates.
-        let mut stack = std::mem::take(&mut self.dirty_list);
-        for &r in &stack {
+        let mut dirty = std::mem::take(&mut self.dirty_list);
+        for &r in &dirty {
             self.res_dirty[r] = false;
         }
+        // Each dirty seed floods its own connected component (seeds
+        // inside an already-processed component skip via the marks);
+        // per-component filling is bit-identical to the union filling
+        // PR 3 used, and the component is exactly the granularity the
+        // groups and horizons need.
+        for &seed in &dirty {
+            if !self.seen_res[seed] {
+                self.recompute_component(seed);
+            }
+        }
+        // Reset the flood-fill marks touched by any component.
+        let mut reset_res = std::mem::take(&mut self.reset_res);
+        for &r in &reset_res {
+            self.seen_res[r] = false;
+        }
+        reset_res.clear();
+        self.reset_res = reset_res;
+        let mut reset_flows = std::mem::take(&mut self.reset_flows);
+        for &slot in &reset_flows {
+            self.seen_flow[slot] = false;
+        }
+        reset_flows.clear();
+        self.reset_flows = reset_flows;
+        dirty.clear();
+        self.dirty_list = dirty;
+
+        self.assert_shadow_rates();
+    }
+
+    /// Flood-fill one connected component from `seed`, replay its
+    /// deferred segments at the old rates, re-run progressive filling,
+    /// re-anchor finish times where rates changed, and regroup it.
+    fn recompute_component(&mut self, seed: usize) {
+        // Flood fill: seed resource → its flows → those flows' other
+        // resources, transitively. The work lists are persistent
+        // scratch (taken and handed back) so the hot path never
+        // allocates. Marks stay set for the caller (they dedup seeds
+        // across components) and are reset in `recompute`.
+        let mut stack = std::mem::take(&mut self.scratch_stack);
         let mut comp_flows = std::mem::take(&mut self.comp_flows); // slots
         let mut comp_res = std::mem::take(&mut self.comp_res);
         comp_flows.clear();
         comp_res.clear();
+        stack.clear();
+        stack.push(seed);
         while let Some(r) = stack.pop() {
             if self.seen_res[r] {
                 continue;
@@ -373,13 +576,35 @@ impl FlowNet {
                 }
             }
         }
+        self.scratch_stack = stack;
         // Slot order is arrival order; resource order is index order —
         // both must match the full algorithm's iteration order so float
         // accumulation (and bottleneck tie-breaks) stay bit-identical.
         comp_flows.sort_unstable();
         comp_res.sort_unstable();
 
+        // Replay the deferred segments of every group this component
+        // absorbs — at the OLD rates, before any rate changes land.
+        let mut old_gids = std::mem::take(&mut self.scratch_gids);
+        old_gids.clear();
         for &slot in &comp_flows {
+            let g = self.flows[slot].group;
+            if g != NO_GROUP {
+                old_gids.push(g);
+            }
+        }
+        old_gids.sort_unstable();
+        old_gids.dedup();
+        for &gid in &old_gids {
+            self.sync_group(gid);
+        }
+
+        // Snapshot old rates (for the re-anchor rule) and zero for the
+        // filling pass.
+        let mut old_rates = std::mem::take(&mut self.scratch_rates);
+        old_rates.clear();
+        for &slot in &comp_flows {
+            old_rates.push(self.flows[slot].rate);
             self.flows[slot].rate = 0.0;
         }
         for &r in &comp_res {
@@ -427,21 +652,203 @@ impl FlowNet {
             }
         }
 
-        // Reset scratch marks for the next flood fill, and hand every
-        // scratch allocation back.
-        for &r in &comp_res {
-            self.seen_res[r] = false;
+        // Re-anchor completion times where the rate changed bitwise; an
+        // unchanged rate keeps its anchor verbatim, which is what makes
+        // full and component-restricted recomputes agree exactly.
+        let now = self.now;
+        for (k, &slot) in comp_flows.iter().enumerate() {
+            let f = &mut self.flows[slot];
+            if f.rate.to_bits() != old_rates[k].to_bits() {
+                f.finish = anchor_finish(now, f.remaining, f.rate);
+            }
         }
-        for &slot in &comp_flows {
-            self.seen_flow[slot] = false;
+
+        // Regroup: the component becomes one fresh group, caught up to
+        // the present (its old groups were just replayed).
+        if !comp_flows.is_empty() {
+            let gid = self.next_group;
+            self.next_group += 1;
+            let mut members = Vec::with_capacity(comp_flows.len());
+            let mut horizon = SimTime::FAR_FUTURE;
+            for &slot in &comp_flows {
+                let f = &mut self.flows[slot];
+                f.group = gid;
+                members.push(f.id);
+                if f.finish < horizon {
+                    horizon = f.finish;
+                }
+            }
+            let cursor = self.steps_base + self.steps.len() as u64;
+            self.groups.insert(gid, Group { members, cursor, horizon });
+            if horizon != SimTime::FAR_FUTURE {
+                self.horizons.insert(horizon, gid);
+            }
         }
-        debug_assert!(stack.is_empty());
-        self.dirty_list = stack;
+        // Groups whose members we absorbed: retire them, or — when a
+        // past detach split a group and only part of it was reached
+        // here — re-derive the horizon of the members left behind.
+        for &gid in &old_gids {
+            if self.groups.contains_key(&gid) {
+                self.finish_group_update(gid);
+            }
+        }
+
+        // Record the touched marks for the caller's reset, and hand
+        // every scratch allocation back.
+        self.reset_res.extend_from_slice(&comp_res);
+        self.reset_flows.extend_from_slice(&comp_flows);
+        old_gids.clear();
+        self.scratch_gids = old_gids;
+        old_rates.clear();
+        self.scratch_rates = old_rates;
         self.comp_flows = comp_flows;
         self.comp_res = comp_res;
         self.comp_frozen = frozen;
+    }
 
-        self.assert_shadow_rates();
+    /// Apply the deferred timeline steps to a group's live members:
+    /// the identical `remaining -= rate·dt` sequence the eager path
+    /// would have run, in the same flow-slot/step order, folding
+    /// `bytes_through` as it goes. A member whose anchored finish falls
+    /// inside a step is recorded in `scratch_done` (the caller detaches
+    /// it) and excluded from later steps — outside `advance_to` this
+    /// cannot trigger, because live finishes always lie beyond the last
+    /// recorded step.
+    fn replay_group(&mut self, gid: u64) {
+        let end_abs = self.steps_base + self.steps.len() as u64;
+        let (cursor, members) = {
+            let g = self.groups.get_mut(&gid).expect("replay of unknown group");
+            (g.cursor, std::mem::take(&mut g.members))
+        };
+        let from = (cursor - self.steps_base) as usize;
+        if from < self.steps.len() {
+            let mut live = std::mem::take(&mut self.scratch_slots);
+            live.clear();
+            for id in &members {
+                if let Some(&slot) = self.id_slot.get(id) {
+                    if self.flows[slot].group == gid {
+                        live.push(slot);
+                    }
+                }
+            }
+            let steps = std::mem::take(&mut self.steps);
+            for &step in &steps[from..] {
+                let mut finished = false;
+                for &slot in &live {
+                    let f = &mut self.flows[slot];
+                    let moved = if f.rate.is_infinite() {
+                        f.remaining
+                    } else {
+                        (f.rate * step.dt).min(f.remaining)
+                    };
+                    f.remaining -= moved;
+                    let done = f.finish <= step.end;
+                    for r in &self.flows[slot].resources {
+                        self.bytes_through[r.0] += moved;
+                    }
+                    if done {
+                        self.scratch_done.push(self.flows[slot].id);
+                        finished = true;
+                    }
+                }
+                if finished {
+                    let flows = &self.flows;
+                    live.retain(|&slot| flows[slot].finish > step.end);
+                }
+            }
+            self.steps = steps;
+            live.clear();
+            self.scratch_slots = live;
+        }
+        let g = self.groups.get_mut(&gid).expect("group vanished during replay");
+        g.members = members;
+        g.cursor = end_abs;
+    }
+
+    /// Fold a group's deferred segments without expecting completions
+    /// (observation / pre-mutation catch-up).
+    fn sync_group(&mut self, gid: u64) {
+        let n0 = self.scratch_done.len();
+        self.replay_group(gid);
+        debug_assert_eq!(self.scratch_done.len(), n0, "completion surfaced outside advance_to");
+    }
+
+    /// Fold every deferred segment so `remaining` and `bytes_through`
+    /// reflect the current instant. Observation paths call this (or the
+    /// per-group variant) automatically; end-of-run metric readers use
+    /// it before touching `bytes_through` while flows are still live.
+    pub fn sync(&mut self) {
+        let mut gids: Vec<u64> = self.groups.keys().copied().collect();
+        gids.sort_unstable();
+        for gid in gids {
+            self.sync_group(gid);
+        }
+    }
+
+    /// Earliest finish and live-member count of a group.
+    fn group_live_min(&self, gid: u64) -> (SimTime, usize) {
+        let g = &self.groups[&gid];
+        let mut min = SimTime::FAR_FUTURE;
+        let mut n_live = 0;
+        for id in &g.members {
+            if let Some(&slot) = self.id_slot.get(id) {
+                let f = &self.flows[slot];
+                if f.group == gid {
+                    n_live += 1;
+                    if f.finish < min {
+                        min = f.finish;
+                    }
+                }
+            }
+        }
+        (min, n_live)
+    }
+
+    /// Re-derive a group's cached horizon after its member set or their
+    /// finishes changed; drops the group once no live member remains.
+    fn finish_group_update(&mut self, gid: u64) {
+        let (min, n_live) = self.group_live_min(gid);
+        let old = self.groups[&gid].horizon;
+        if old != SimTime::FAR_FUTURE {
+            self.horizons.remove(old, gid);
+        }
+        if n_live == 0 {
+            self.groups.remove(&gid);
+            return;
+        }
+        if min != SimTime::FAR_FUTURE {
+            self.horizons.insert(min, gid);
+        }
+        self.groups.get_mut(&gid).expect("live group").horizon = min;
+    }
+
+    /// Drop fully-replayed timeline prefixes (checked every 1024
+    /// appends, amortized O(groups)). A long-quiescent component would
+    /// pin the whole buffer through its cursor, so past
+    /// `force_fold_steps` entries the backlog is folded early — value-
+    /// and work-neutral, since every (component, step) pair is
+    /// integrated exactly once no matter when — which bounds the buffer
+    /// at ~1 MB. Called *before* a new step lands: every recorded step
+    /// then ends strictly before any live finish, so the fold can never
+    /// surface a completion.
+    fn maybe_prune_steps(&mut self) {
+        if self.steps.len() < 1024 || self.steps.len() % 1024 != 0 {
+            return;
+        }
+        let end = self.steps_base + self.steps.len() as u64;
+        let mut min = self.groups.values().map(|g| g.cursor).min().unwrap_or(end);
+        // Field default 0 = unset (FlowNet derives Default); tests dial
+        // it down to exercise the forced fold cheaply.
+        let force_at = if self.force_fold_steps == 0 { 65_536 } else { self.force_fold_steps };
+        if self.steps.len() >= force_at && min < end {
+            self.sync();
+            min = end;
+        }
+        let drop = (min - self.steps_base) as usize;
+        if drop > 0 {
+            self.steps.drain(..drop);
+            self.steps_base = min;
+        }
     }
 
     /// Compare every live flow's rate against the naive oracle (no-op
@@ -465,38 +872,49 @@ impl FlowNet {
         }
     }
 
-    /// Earliest completion time among active flows under current rates.
-    /// `None` if there are no active flows.
+    /// Earliest completion time among active flows under current rates:
+    /// the first element of the horizon set (plus any resourceless
+    /// flow). `None` if no active flow will ever finish — zero-rate
+    /// flows under a total brownout make no progress and yield no
+    /// completion.
     pub fn next_completion(&mut self) -> Option<SimTime> {
         if self.is_dirty() {
             self.recompute();
         }
-        let mut best: Option<SimTime> = None;
-        for f in &self.flows {
-            if !f.alive {
-                continue;
+        let best = if self.eager_advance || self.full_recompute {
+            // Pre-lazy cost model: derive the minimum by scanning every
+            // live flow. Identical value to the horizon set.
+            let mut best: Option<SimTime> = None;
+            for f in &self.flows {
+                if !f.alive || f.finish == SimTime::FAR_FUTURE {
+                    continue;
+                }
+                best = Some(match best {
+                    Some(b) if b <= f.finish => b,
+                    _ => f.finish,
+                });
             }
-            let t = if f.rate.is_infinite() || f.remaining <= 0.0 {
-                self.now
-            } else {
-                // Round up to 1 µs so time always advances.
-                let dt = (f.remaining / f.rate * 1e6).ceil().max(1.0) as u64;
-                SimTime(self.now.0 + dt)
-            };
-            best = Some(match best {
-                Some(b) if b <= t => b,
-                _ => t,
-            });
-        }
+            best
+        } else {
+            match (self.horizons.first(), self.loose.first()) {
+                (Some((a, _)), Some((b, _))) => Some(a.min(b)),
+                (Some((a, _)), None) => Some(a),
+                (None, Some((b, _))) => Some(b),
+                (None, None) => None,
+            }
+        };
         if let Some(sh) = self.shadow.as_mut() {
             assert_eq!(best, sh.next_completion(), "shadow next_completion diverged");
         }
         best
     }
 
-    /// Advance simulated time to `t`, integrating flow progress. Flows
-    /// that finish are moved to the completed list (drain with
-    /// [`Self::take_completed`]). `t` must be ≥ the current time.
+    /// Advance simulated time to `t`. Components whose cached horizon
+    /// lies beyond `t` merely record the step for later replay; the
+    /// rest replay their backlog and retire every member whose anchored
+    /// finish has arrived. Flows that finish are moved to the completed
+    /// list (drain with [`Self::take_completed`]). `t` must be ≥ the
+    /// current time.
     pub fn advance_to(&mut self, t: SimTime) {
         // Recompute (and shadow-check rates) before integrating; the
         // shadow itself advances only after our pass so both sides see
@@ -506,30 +924,75 @@ impl FlowNet {
         }
         assert!(t >= self.now, "time went backwards: {t:?} < {:?}", self.now);
         let dt = (t - self.now).as_secs_f64();
+        if dt > 0.0 && !self.groups.is_empty() {
+            // Prune/fold BEFORE the new step lands: all recorded steps
+            // end before any live finish, so folding is completion-free.
+            self.maybe_prune_steps();
+            self.steps.push(TimeStep { end: t, dt });
+        }
         self.now = t;
-        if self.n_live > 0 {
-            for slot in 0..self.flows.len() {
-                if !self.flows[slot].alive {
-                    continue;
-                }
-                let rate = self.flows[slot].rate;
-                let moved =
-                    if rate.is_infinite() { self.flows[slot].remaining } else { rate * dt };
-                let moved = moved.min(self.flows[slot].remaining);
-                self.flows[slot].remaining -= moved;
-                for r in &self.flows[slot].resources {
-                    self.bytes_through[r.0] += moved;
-                }
-                // Completion tolerance: less than one byte left, or
-                // would finish within 1 µs (the event-queue resolution).
-                let f = &self.flows[slot];
-                if f.remaining < 1.0 || (f.rate.is_finite() && f.remaining <= f.rate * 1e-6) {
-                    let id = f.id;
-                    self.detach(slot);
-                    self.completed.push(id);
+        debug_assert!(self.scratch_done.is_empty());
+        // Resourceless flows: anchored at creation, complete at the
+        // first advance regardless of dt.
+        while let Some((ft, key)) = self.loose.first() {
+            if ft > t {
+                break;
+            }
+            self.loose.pop_first();
+            let id = FlowId(key);
+            let slot = self.id_slot[&id];
+            self.flows[slot].remaining = 0.0;
+            self.detach(slot);
+            self.scratch_done.push(id);
+        }
+        // Components whose horizon fires: replay the backlog, then
+        // retire every member whose finish has arrived.
+        while let Some((h, gid)) = self.horizons.first() {
+            if h > t {
+                break;
+            }
+            self.horizons.pop_first();
+            let before = self.scratch_done.len();
+            self.replay_group(gid);
+            let mut i = before;
+            while i < self.scratch_done.len() {
+                let id = self.scratch_done[i];
+                let slot = self.id_slot[&id];
+                self.detach(slot);
+                i += 1;
+            }
+            // A dt == 0 advance pushes no step, so the replay alone
+            // cannot catch a finish == t member (e.g. a zero-byte flow
+            // anchored at this very instant); sweep the members too.
+            let members =
+                std::mem::take(&mut self.groups.get_mut(&gid).expect("live group").members);
+            for id in &members {
+                if let Some(&slot) = self.id_slot.get(id) {
+                    if self.flows[slot].group == gid && self.flows[slot].finish <= t {
+                        self.detach(slot);
+                        self.scratch_done.push(*id);
+                    }
                 }
             }
+            self.groups.get_mut(&gid).expect("live group").members = members;
+            debug_assert!(self.scratch_done.len() > before, "horizon fired without completion");
+            self.finish_group_update(gid);
+        }
+        if !self.scratch_done.is_empty() {
+            // Eager order within one advance call is slab (= arrival)
+            // order; merge the per-component batches back into it.
+            let mut done = std::mem::take(&mut self.scratch_done);
+            done.sort_unstable();
+            self.completed.extend_from_slice(&done);
+            done.clear();
+            self.scratch_done = done;
             self.maybe_compact();
+        }
+        if self.eager_advance || self.full_recompute || self.shadow.is_some() {
+            // The baseline cost models integrate every flow on every
+            // advance; the shadow comparison below also needs fully
+            // folded counters on both sides.
+            self.sync();
         }
         if let Some(sh) = self.shadow.as_mut() {
             sh.advance_to(t);
@@ -743,6 +1206,20 @@ mod tests {
         net.cancel(churn1);
         assert_eq!(net.rate_of(churn2), Some(100.0));
         assert_eq!(net.rate_of(steady), Some(60.0));
+        // Brownout the steady component to zero: no completion may be
+        // fabricated for it, while the churn component still finishes.
+        net.set_capacity(r[1], Bandwidth(0.0));
+        assert_eq!(net.rate_of(steady), Some(0.0));
+        let t = net.next_completion().expect("churn2 still finishes");
+        net.advance_to(t);
+        assert_eq!(net.take_completed(), vec![churn2]);
+        assert_eq!(net.next_completion(), None, "zero-rate flow yields no completion");
+        // Restore and drain; the shadow asserts rates, completions and
+        // byte counters bit-identical throughout.
+        net.set_capacity(r[1], Bandwidth(60.0));
+        let t = run_until_done(&mut net, steady);
+        assert!(t > SimTime::ZERO);
+        assert_eq!(net.active_flows(), 0);
     }
 
     #[test]
@@ -760,5 +1237,198 @@ mod tests {
         expect.push(late);
         assert_eq!(net.active_flow_ids(), expect);
         assert_eq!(net.flows_through(r[0]), 21);
+    }
+
+    #[test]
+    fn anchor_finish_handles_the_degenerate_rates() {
+        let now = SimTime(5_000_000);
+        // Zero rate (total brownout): no completion, never an overflow.
+        assert_eq!(anchor_finish(now, 1e9, 0.0), SimTime::FAR_FUTURE);
+        // Subnormal rate: the µs count clamps instead of wrapping.
+        assert_eq!(anchor_finish(now, 1e12, 1e-300), SimTime::FAR_FUTURE);
+        // Immediate cases anchor at the current instant.
+        assert_eq!(anchor_finish(now, 0.0, 50.0), now);
+        assert_eq!(anchor_finish(now, 1e9, f64::INFINITY), now);
+        // The 1 µs floor keeps time advancing.
+        assert_eq!(anchor_finish(now, 1e-9, 1e9), SimTime(now.0 + 1));
+        // Plain case: 1000 B at 100 B/s = 10 s.
+        assert_eq!(anchor_finish(now, 1000.0, 100.0), SimTime(now.0 + 10_000_000));
+    }
+
+    #[test]
+    fn brownout_to_zero_rate_yields_no_completion_and_recovers() {
+        // Regression for the `remaining / 0 → inf as u64` overflow: a
+        // fully browned-out resource leaves its flows at rate 0, which
+        // must read as "no completion", not a saturated SimTime.
+        let (mut net, r) = net_with(&[100.0]);
+        let f = net.add_flow(Bytes(1000), vec![r[0]]);
+        net.advance_to(SimTime(2_000_000)); // 2 s in: 200 B moved
+        net.set_capacity(r[0], Bandwidth(0.0));
+        assert_eq!(net.rate_of(f), Some(0.0));
+        assert_eq!(net.next_completion(), None);
+        // Time passes; the flow neither finishes nor loses progress.
+        net.advance_to(SimTime(60_000_000));
+        assert!(net.take_completed().is_empty());
+        assert_eq!(net.active_flows(), 1);
+        assert_eq!(net.remaining(f), Some(Bytes(800)));
+        // Restore: the flow finishes from its remaining bytes.
+        net.set_capacity(r[0], Bandwidth(100.0));
+        let t = net.next_completion().expect("finite completion again");
+        assert!((t.as_secs_f64() - 68.0).abs() < 1e-3, "t={t}");
+        net.advance_to(t);
+        assert!(net.take_completed().contains(&f));
+        assert!((net.bytes_through[r[0].0] - 1000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn lazy_deferral_matches_naive_reference_under_brownouts_and_cancels() {
+        // The true-deferral proof: a shadowless FlowNet (shadowed nets
+        // fold every segment per advance for the bytes comparison, so
+        // they never defer) driven in lockstep with an external
+        // NaiveFlowNet through disjoint-component churn, partial
+        // advances, brownouts to zero, restores and crash-style
+        // cancellations. Completion order and times are asserted at
+        // every step, remaining() on random probes (which forces a
+        // per-component replay), and the byte counters bitwise at the
+        // end.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(99);
+        for round in 0..12 {
+            let mut net = FlowNet::new();
+            let mut naive = NaiveFlowNet::new();
+            let n_res = 4 + rng.index(6);
+            let res: Vec<ResourceId> = (0..n_res)
+                .map(|_| {
+                    let cap = Bandwidth(20.0 + rng.next_f64() * 200.0);
+                    let a = net.add_resource(cap);
+                    assert_eq!(a, naive.add_resource(cap));
+                    a
+                })
+                .collect();
+            let mut caps_zeroed = vec![false; n_res];
+            let mut live: Vec<FlowId> = Vec::new();
+            for _step in 0..140 {
+                match rng.index(8) {
+                    0 | 1 | 2 => {
+                        // Mostly single-resource flows → many disjoint
+                        // components that defer independently.
+                        let mut rs = vec![*rng.choice(&res)];
+                        if rng.next_f64() < 0.25 {
+                            let r2 = *rng.choice(&res);
+                            if !rs.contains(&r2) {
+                                rs.push(r2);
+                            }
+                        }
+                        let bytes = Bytes(rng.below(400_000));
+                        let a = net.add_flow(bytes, rs.clone());
+                        assert_eq!(a, naive.add_flow(bytes, rs));
+                        live.push(a);
+                    }
+                    3 => {
+                        if !live.is_empty() {
+                            let victim = live[rng.index(live.len())];
+                            assert_eq!(net.cancel(victim), naive.cancel(victim));
+                            live.retain(|f| *f != victim);
+                        }
+                    }
+                    4 => {
+                        // Brownout to zero, or restore a browned link.
+                        let k = rng.index(n_res);
+                        let cap = if caps_zeroed[k] {
+                            caps_zeroed[k] = false;
+                            Bandwidth(20.0 + rng.next_f64() * 200.0)
+                        } else {
+                            caps_zeroed[k] = true;
+                            Bandwidth(0.0)
+                        };
+                        net.set_capacity(res[k], cap);
+                        naive.set_capacity(res[k], cap);
+                    }
+                    5 => {
+                        if !live.is_empty() {
+                            let probe = live[rng.index(live.len())];
+                            assert_eq!(net.remaining(probe), naive.remaining(probe));
+                        }
+                    }
+                    _ => {
+                        let t = net.next_completion();
+                        assert_eq!(t, naive.next_completion(), "round {round}");
+                        if let Some(t) = t {
+                            let now = net.now();
+                            let target = if rng.next_f64() < 0.5 && t > now {
+                                SimTime((now.0 + t.0) / 2)
+                            } else {
+                                t
+                            };
+                            net.advance_to(target);
+                            naive.advance_to(target);
+                            let done = net.take_completed();
+                            assert_eq!(done, naive.take_completed(), "round {round}");
+                            live.retain(|f| !done.contains(f));
+                        }
+                    }
+                }
+            }
+            // Restore every browned-out link so the drain terminates.
+            for (k, zeroed) in caps_zeroed.iter().enumerate() {
+                if *zeroed {
+                    let cap = Bandwidth(50.0);
+                    net.set_capacity(res[k], cap);
+                    naive.set_capacity(res[k], cap);
+                }
+            }
+            while let Some(t) = net.next_completion() {
+                assert_eq!(Some(t), naive.next_completion());
+                net.advance_to(t);
+                naive.advance_to(t);
+                assert_eq!(net.take_completed(), naive.take_completed());
+            }
+            assert_eq!(naive.next_completion(), None);
+            assert_eq!(net.active_flows(), 0);
+            for (r, (a, b)) in net.bytes_through.iter().zip(&naive.bytes_through).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "round {round} resource {r}: bytes_through diverged ({a} vs {b})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn timeline_prunes_without_losing_deferred_segments() {
+        // A quiet component deferring across thousands of steps while a
+        // busy one churns. Shadowless on purpose: a shadowed net folds
+        // every advance, so nothing would defer. The quiet component
+        // pins the buffer through its cursor until the forced fold
+        // (dialed down from 64k to 256 steps here) integrates its
+        // backlog early; the final byte count proves no step was lost
+        // or double-applied.
+        let mut net = FlowNet::new();
+        net.force_fold_steps = 256;
+        let r0 = net.add_resource(Bandwidth(100.0));
+        let r1 = net.add_resource(Bandwidth(1_000_000.0));
+        let quiet = net.add_flow(Bytes(1_000_000), vec![r0]);
+        for i in 0..3000u64 {
+            let f = net.add_flow(Bytes(1000), vec![r1]);
+            let t = net.next_completion().unwrap();
+            net.advance_to(t);
+            assert_eq!(net.take_completed(), vec![f], "iteration {i}");
+        }
+        assert!(
+            net.steps.len() < 2048,
+            "step buffer must prune ({} entries kept)",
+            net.steps.len()
+        );
+        // The quiet flow ran at 100 B/s throughout: 1 MB → 10_000 s.
+        loop {
+            let t = net.next_completion().expect("quiet flow still active");
+            net.advance_to(t);
+            if net.take_completed().contains(&quiet) {
+                assert!((t.as_secs_f64() - 10_000.0).abs() < 1.0, "t={t}");
+                break;
+            }
+        }
+        assert!((net.bytes_through[r0.0] - 1_000_000.0).abs() < 2.0);
     }
 }

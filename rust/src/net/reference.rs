@@ -1,24 +1,34 @@
-//! The pre-refactor flow-network implementation, retained verbatim as a
-//! reference oracle.
+//! The eager flow-network reference implementation, retained as an
+//! oracle.
 //!
-//! [`NaiveFlowNet`] is the original `FlowNet`: a dense flow vector, a
-//! full progressive-filling recompute on every change, and linear scans
-//! in every accessor. It is kept for two jobs:
+//! [`NaiveFlowNet`] keeps the original data layout and cost model: a
+//! dense flow vector, a full progressive-filling recompute on every
+//! change, linear scans in every accessor, and eager per-step
+//! integration of every flow on every advance. It shares the *anchored
+//! completion-time semantics* with [`super::FlowNet`] (a flow's finish
+//! time is fixed, in integer µs, whenever its rate changes bitwise —
+//! see `DESIGN.md` §9) but computes everything the slow, obvious way.
+//! It is kept for two jobs:
 //!
 //! 1. **Differential testing.** [`super::FlowNet::enable_reference_check`]
 //!    attaches a `NaiveFlowNet` shadow that mirrors every mutation; every
 //!    observable (rates, completion times, completed sets, byte counters)
-//!    is asserted bit-identical against it. The incremental rework in
-//!    [`super`] is only correct if it is *indistinguishable* from this
-//!    implementation.
+//!    is asserted bit-identical against it. The incremental rework —
+//!    component-restricted recompute, per-component completion horizons
+//!    and lazy timeline replay — is only correct if it is
+//!    *indistinguishable* from this implementation. The lockstep
+//!    property tests additionally drive a shadowless `FlowNet` (which
+//!    genuinely defers integration) against an external instance of
+//!    this type.
 //! 2. **Baseline benchmarking.** `bench_scale` runs the executor with
 //!    [`crate::exec::SimCore::Naive`], which restores the full-recompute
-//!    behaviour modelled here, to quantify the incremental core's win.
+//!    + eager-advance behaviour modelled here, to quantify the
+//!    incremental core's win.
 //!
-//! Do not "optimize" this file: its value is being the old algorithm,
+//! Do not "optimize" this file: its value is being the eager algorithm,
 //! unchanged.
 
-use super::{FlowId, ResourceId};
+use super::{anchor_finish, FlowId, ResourceId};
 use crate::util::units::{Bandwidth, Bytes, SimTime};
 
 #[derive(Debug, Clone)]
@@ -27,6 +37,9 @@ struct Flow {
     remaining: f64, // bytes
     resources: Vec<ResourceId>,
     rate: f64, // bytes/s, set by recompute()
+    /// Anchored completion time (µs), re-derived only when the rate
+    /// changes bitwise; `FAR_FUTURE` = no completion (zero rate).
+    finish: SimTime,
 }
 
 /// The original (pre-incremental) shared bandwidth substrate.
@@ -81,11 +94,20 @@ impl NaiveFlowNet {
         }
         let id = FlowId(self.next_id);
         self.next_id += 1;
+        // Immediate flows are anchored at creation; everything else
+        // waits for its first rate assignment (same rule as the
+        // incremental implementation).
+        let finish = if resources.is_empty() || bytes.as_u64() == 0 {
+            self.now
+        } else {
+            SimTime::FAR_FUTURE
+        };
         self.flows.push(Flow {
             id,
             remaining: bytes.as_f64(),
             resources,
             rate: 0.0,
+            finish,
         });
         self.dirty = true;
         id
@@ -155,13 +177,17 @@ impl NaiveFlowNet {
     }
 
     /// Recompute max-min fair rates via progressive filling, over the
-    /// entire network (the original full recompute).
+    /// entire network (the original full recompute), then re-anchor the
+    /// completion time of every flow whose rate changed bitwise. An
+    /// unchanged rate keeps its anchor verbatim — the rule that makes
+    /// this full pass agree exactly with the component-restricted one.
     pub fn recompute(&mut self) {
         self.dirty = false;
         let n_res = self.capacities.len();
         let mut remaining_cap = self.capacities.clone();
         let mut res_users: Vec<u32> = vec![0; n_res];
         let mut frozen: Vec<bool> = vec![false; self.flows.len()];
+        let old_rates: Vec<f64> = self.flows.iter().map(|f| f.rate).collect();
 
         // Flows without resources (pure-latency / zero-cost) get infinite rate.
         for (i, f) in self.flows.iter_mut().enumerate() {
@@ -210,29 +236,26 @@ impl NaiveFlowNet {
                 }
             }
         }
+
+        let now = self.now;
+        for (i, f) in self.flows.iter_mut().enumerate() {
+            if f.rate.to_bits() != old_rates[i].to_bits() {
+                f.finish = anchor_finish(now, f.remaining, f.rate);
+            }
+        }
     }
 
-    /// Earliest completion time among active flows under current rates.
-    /// `None` if there are no active flows.
+    /// Earliest anchored completion time among active flows. `None` if
+    /// no active flow will ever finish (zero-rate under a brownout).
     pub fn next_completion(&mut self) -> Option<SimTime> {
         if self.dirty {
             self.recompute();
         }
-        self.flows
-            .iter()
-            .map(|f| {
-                if f.rate.is_infinite() || f.remaining <= 0.0 {
-                    self.now
-                } else {
-                    // Round up to 1 µs so time always advances.
-                    let dt = (f.remaining / f.rate * 1e6).ceil().max(1.0) as u64;
-                    SimTime(self.now.0 + dt)
-                }
-            })
-            .min()
+        self.flows.iter().map(|f| f.finish).filter(|t| *t != SimTime::FAR_FUTURE).min()
     }
 
-    /// Advance simulated time to `t`, integrating flow progress.
+    /// Advance simulated time to `t`, integrating every flow's progress
+    /// and retiring every flow whose anchored finish has arrived.
     pub fn advance_to(&mut self, t: SimTime) {
         if self.dirty {
             self.recompute();
@@ -251,17 +274,14 @@ impl NaiveFlowNet {
             for r in &f.resources {
                 self.bytes_through[r.0] += moved;
             }
-            // Completion tolerance: less than one byte left, or would
-            // finish within 1 µs (the event-queue resolution).
-            if f.remaining < 1.0 || (f.rate.is_finite() && f.remaining <= f.rate * 1e-6) {
+            if f.finish <= t {
                 any_done = true;
             }
         }
         if any_done {
             let completed = &mut self.completed;
             self.flows.retain(|f| {
-                let done =
-                    f.remaining < 1.0 || (f.rate.is_finite() && f.remaining <= f.rate * 1e-6);
+                let done = f.finish <= t;
                 if done {
                     completed.push(f.id);
                 }

@@ -1,12 +1,19 @@
-//! A deterministic discrete-event queue.
+//! Deterministic time-ordered structures for the simulation core.
 //!
-//! Events are ordered by `(time, sequence)`: ties are broken by insertion
-//! order, which makes every simulation run fully deterministic regardless
-//! of `BinaryHeap` internals.
+//! [`EventQueue`] orders events by `(time, sequence)`: ties are broken
+//! by insertion order, which makes every simulation run fully
+//! deterministic regardless of `BinaryHeap` internals.
+//!
+//! [`MinTimeSet`] is a keyed min-structure over `(time, key)` pairs —
+//! unlike a binary heap it supports exact removal and its ordering is
+//! total and explicit, never a heap-internal artifact. The flow
+//! network's per-component completion horizons live in one (see
+//! `net`): each connected component owns at most one entry and the
+//! earliest completion is the first element.
 
 use crate::util::units::SimTime;
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BTreeSet, BinaryHeap};
 
 /// A time-ordered queue of events of type `E`.
 #[derive(Debug)]
@@ -76,6 +83,58 @@ impl<E> EventQueue<E> {
     }
 }
 
+/// A deterministic keyed min-set ordered by `(time, key)`.
+///
+/// Each key appears at most once (enforced by the caller pairing every
+/// `insert` with a matching `remove`); ties on `time` break on the
+/// smaller key, so iteration order is a pure function of the contents.
+#[derive(Debug)]
+pub struct MinTimeSet<K: Ord + Copy> {
+    set: BTreeSet<(SimTime, K)>,
+}
+
+impl<K: Ord + Copy> Default for MinTimeSet<K> {
+    fn default() -> Self {
+        MinTimeSet { set: BTreeSet::new() }
+    }
+}
+
+impl<K: Ord + Copy> MinTimeSet<K> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert `(time, key)`. Returns false if that exact pair was
+    /// already present.
+    pub fn insert(&mut self, time: SimTime, key: K) -> bool {
+        self.set.insert((time, key))
+    }
+
+    /// Remove `(time, key)` if present. Tolerates absent pairs so the
+    /// caller can remove-then-reinsert without tracking liveness.
+    pub fn remove(&mut self, time: SimTime, key: K) -> bool {
+        self.set.remove(&(time, key))
+    }
+
+    /// The earliest `(time, key)` pair, if any.
+    pub fn first(&self) -> Option<(SimTime, K)> {
+        self.set.first().copied()
+    }
+
+    /// Pop the earliest `(time, key)` pair.
+    pub fn pop_first(&mut self) -> Option<(SimTime, K)> {
+        self.set.pop_first()
+    }
+
+    pub fn len(&self) -> usize {
+        self.set.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.set.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -109,5 +168,31 @@ mod tests {
         q.push(SimTime(7), ());
         assert_eq!(q.peek_time(), Some(SimTime(7)));
         assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn min_time_set_orders_by_time_then_key() {
+        let mut s: MinTimeSet<u64> = MinTimeSet::new();
+        assert!(s.is_empty());
+        s.insert(SimTime(20), 1);
+        s.insert(SimTime(10), 9);
+        s.insert(SimTime(10), 3);
+        assert_eq!(s.first(), Some((SimTime(10), 3)), "time ties break on the key");
+        assert_eq!(s.pop_first(), Some((SimTime(10), 3)));
+        assert_eq!(s.pop_first(), Some((SimTime(10), 9)));
+        assert_eq!(s.pop_first(), Some((SimTime(20), 1)));
+        assert_eq!(s.pop_first(), None);
+    }
+
+    #[test]
+    fn min_time_set_exact_removal() {
+        let mut s: MinTimeSet<u64> = MinTimeSet::new();
+        s.insert(SimTime(5), 1);
+        s.insert(SimTime(5), 2);
+        assert!(s.remove(SimTime(5), 1));
+        assert!(!s.remove(SimTime(5), 1), "tolerates absent pairs");
+        assert!(!s.remove(SimTime(6), 2), "removal is exact, not by key");
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.first(), Some((SimTime(5), 2)));
     }
 }

@@ -366,14 +366,16 @@ fn flownet_cancellation_conserves_bytes_and_reconverges() {
 
 #[test]
 fn incremental_flownet_matches_naive_reference_under_churn() {
-    // Drive the incremental FlowNet and the retained pre-refactor
+    // Drive the incremental FlowNet and the retained eager reference
     // implementation (net::reference::NaiveFlowNet) through an identical
     // randomized op sequence — adds (including zero-byte and
-    // resourceless flows), cancels, capacity changes, partial and full
-    // advances — asserting every observable bit-identical at every
-    // step: rates, remaining bytes, completion times, completed sets,
-    // and per-resource byte counters. The incremental net additionally
-    // carries its own internal shadow (enable_reference_check), so each
+    // resourceless flows), cancels, capacity changes (including
+    // brownouts to zero, which must read as "no completion" instead of
+    // overflowing a SimTime), partial and full advances — asserting
+    // every observable bit-identical at every step: rates, remaining
+    // bytes, completion times, completed sets, and per-resource byte
+    // counters. The incremental net additionally carries its own
+    // internal shadow (enable_reference_check), so each
     // component-restricted recompute is also checked against a full one.
     use wow::net::reference::NaiveFlowNet;
     use wow::net::{FlowId, FlowNet, ResourceId};
@@ -392,6 +394,7 @@ fn incremental_flownet_matches_naive_reference_under_churn() {
                 a
             })
             .collect();
+        let mut zeroed = vec![false; n_res];
         let mut live: Vec<FlowId> = Vec::new();
         for _step in 0..120 {
             match rng.index(5) {
@@ -418,10 +421,19 @@ fn incremental_flownet_matches_naive_reference_under_churn() {
                     }
                 }
                 3 => {
-                    let r = *rng.choice(&res);
-                    let cap = Bandwidth(10.0 + rng.next_f64() * 300.0);
-                    inc.set_capacity(r, cap);
-                    naive.set_capacity(r, cap);
+                    // Capacity churn; occasionally a brownout to zero
+                    // (restored on the next hit so the drain below can
+                    // terminate).
+                    let k = rng.index(res.len());
+                    let cap = if !zeroed[k] && rng.next_f64() < 0.3 {
+                        zeroed[k] = true;
+                        Bandwidth(0.0)
+                    } else {
+                        zeroed[k] = false;
+                        Bandwidth(10.0 + rng.next_f64() * 300.0)
+                    };
+                    inc.set_capacity(res[k], cap);
+                    naive.set_capacity(res[k], cap);
                 }
                 _ => {
                     let t = inc.next_completion();
@@ -452,7 +464,16 @@ fn incremental_flownet_matches_naive_reference_under_churn() {
                 assert_eq!(inc.remaining(f), naive.remaining(f));
             }
         }
-        // Drain both to empty; byte accounting must agree bitwise.
+        // Restore any browned-out resources so the drain terminates
+        // (zero-rate flows never complete), then drain both to empty;
+        // byte accounting must agree bitwise.
+        for (k, z) in zeroed.iter().enumerate() {
+            if *z {
+                let cap = Bandwidth(42.0);
+                inc.set_capacity(res[k], cap);
+                naive.set_capacity(res[k], cap);
+            }
+        }
         while let Some(t) = inc.next_completion() {
             assert_eq!(Some(t), naive.next_completion());
             inc.advance_to(t);

@@ -52,7 +52,7 @@ fn flat_goldens_agree_across_cores_with_topology_threading() {
     for strategy in [Strategy::Orig, Strategy::Cws, Strategy::Wow] {
         let base = run_workload(&wl, &cfg(strategy, Topology::Flat));
         assert_eq!(base.cross_rack_bytes, 0.0, "{strategy:?}");
-        for core in [SimCore::Checked, SimCore::Naive] {
+        for core in [SimCore::Checked, SimCore::Eager, SimCore::Naive] {
             let mut c = cfg(strategy, Topology::Flat);
             c.core = core;
             let m = run_workload(&wl, &c);
@@ -86,7 +86,7 @@ fn multi_rack_runs_bit_identical_across_cores() {
         let base = run_workload(&wl, &cfg(strategy, racks2(4.0)));
         let again = run_workload(&wl, &cfg(strategy, racks2(4.0)));
         assert_eq!(base, again, "{strategy:?}: reruns must be bit-identical");
-        for core in [SimCore::Checked, SimCore::Naive] {
+        for core in [SimCore::Checked, SimCore::Eager, SimCore::Naive] {
             let mut c = cfg(strategy, racks2(4.0));
             c.core = core;
             let m = run_workload(&wl, &c);

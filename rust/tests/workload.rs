@@ -155,10 +155,10 @@ fn fair_share_policy_changes_multi_tenant_schedules_deterministically() {
 
 #[test]
 fn incremental_core_is_bit_identical_to_pre_refactor_core() {
-    // The pre-refactor simulation algorithms are retained verbatim
+    // The pre-refactor simulation cost model is retained
     // (SimCore::Naive: full max-min recompute on every network change,
-    // full cost-matrix rebuild per scheduling iteration; see
-    // net::reference). The incremental core must reproduce their
+    // eager advance, full cost-matrix rebuild per scheduling iteration;
+    // see net::reference). The incremental core must reproduce their
     // RunMetrics bit for bit on the 4-tenant Poisson workload under
     // every strategy and both tenant policies — the golden comparison
     // for the incremental rework, evaluated against the live
@@ -175,13 +175,19 @@ fn incremental_core_is_bit_identical_to_pre_refactor_core() {
         for policy in [TenantPolicy::Fifo, TenantPolicy::FairShare] {
             let mut inc = cfg(strategy, DfsKind::Ceph);
             inc.tenant_policy = policy;
+            let mut eager = inc.clone();
             let mut naive = inc.clone();
             inc.core = SimCore::Incremental;
+            eager.core = SimCore::Eager;
             naive.core = SimCore::Naive;
             let a = run_workload(&wl, &inc);
             let b = run_workload(&wl, &naive);
             assert_eq!(a, b, "{strategy:?}/{policy:?}: cores must agree bit for bit");
             assert_eq!(a.fingerprint(), b.fingerprint(), "{strategy:?}/{policy:?}");
+            // The eager-advance baseline (lazy advance off, everything
+            // else incremental) is the same simulation too.
+            let e = run_workload(&wl, &eager);
+            assert_eq!(a, e, "{strategy:?}/{policy:?}: lazy advance must change nothing");
         }
     }
     // The checked core — incremental with naive shadow oracles
