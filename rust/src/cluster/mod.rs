@@ -190,6 +190,13 @@ impl TopoView {
         self.nic_cap[node.0] = bytes_per_sec;
     }
 
+    /// Mirror a live rack-uplink capacity change (rack brownout or
+    /// restore): cross-rack penalties through the rack price in at the
+    /// degraded fair share.
+    pub fn set_rack_capacity(&mut self, rack: usize, bytes_per_sec: f64) {
+        self.rack_cap[rack] = bytes_per_sec;
+    }
+
     pub fn same_rack(&self, a: NodeId, b: NodeId) -> bool {
         self.node_rack[a.0] == self.node_rack[b.0]
     }
@@ -378,6 +385,14 @@ impl Cluster {
     /// `bytes_through` is the cluster's cross-rack traffic.
     pub fn rack_uplinks(&self) -> impl Iterator<Item = ResourceId> + '_ {
         self.rack_links.iter().map(|l| l.up)
+    }
+
+    /// One rack's boundary-link pair and nominal per-direction capacity
+    /// `(uplink, downlink, bytes/s)` — the blast radius of a rack-uplink
+    /// brownout. Panics on `Flat`, where no rack links exist.
+    pub fn rack_link(&self, rack: usize) -> (ResourceId, ResourceId, f64) {
+        let l = &self.rack_links[rack];
+        (l.up, l.down, l.cap)
     }
 
     /// The network-resource chain a transfer from `src` to `dst`

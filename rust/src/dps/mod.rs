@@ -125,6 +125,12 @@ pub struct Dps {
     /// restore) — path penalties, and with them cached cost-matrix
     /// rows, depend on live capacities.
     link_epoch: u64,
+    /// Cross-tenant dedup (serving regime): maps a tenant-namespaced
+    /// reference file to its content key, and each key to every file
+    /// registered under it. Empty unless `register_reference` was
+    /// called, keeping closed-batch runs on the exact pre-serve path.
+    alias_key: FastMap<FileId, u64>,
+    key_files: FastMap<u64, Vec<FileId>>,
     cache: CostCache,
     /// When set, every cached matrix is cross-checked bit-for-bit
     /// against the uncached full rebuild (test builds / `SimCore::Checked`).
@@ -151,6 +157,8 @@ impl Dps {
             file_stamp: FastMap::default(),
             topo: None,
             link_epoch: 0,
+            alias_key: FastMap::default(),
+            key_files: FastMap::default(),
             cache: CostCache::default(),
             check_reference: false,
             bytes_copied: Bytes::ZERO,
@@ -185,6 +193,37 @@ impl Dps {
             t.set_nic_capacity(node, bytes_per_sec);
             self.link_epoch += 1;
         }
+    }
+
+    /// Mirror a live rack-uplink capacity change (rack brownout /
+    /// restore) into the topology view. No-op on flat clusters, where
+    /// rack links do not exist.
+    pub fn note_rack_change(&mut self, rack: usize, bytes_per_sec: f64) {
+        if let Some(t) = self.topo.as_mut() {
+            t.set_rack_capacity(rack, bytes_per_sec);
+            self.link_epoch += 1;
+        }
+    }
+
+    /// Cross-tenant dedup (serving regime): declare that `file` is a
+    /// tenant-namespaced view of shared reference content identified by
+    /// `key`. Files registered under the same key may satisfy each
+    /// other's stage-ins via [`Self::shared_replica`].
+    pub fn register_reference(&mut self, file: FileId, key: u64) {
+        self.alias_key.insert(file, key);
+        let sibs = self.key_files.entry(key).or_default();
+        if !sibs.contains(&file) {
+            sibs.push(file);
+        }
+    }
+
+    /// A file with the same reference content as `file` (possibly
+    /// itself) holding a valid replica on `node`, if any — the dedup
+    /// fast path for stage-in. Siblings are scanned in registration
+    /// order, so the answer is deterministic.
+    pub fn shared_replica(&self, file: FileId, node: NodeId) -> Option<FileId> {
+        let key = self.alias_key.get(&file)?;
+        self.key_files.get(key)?.iter().copied().find(|f| self.locations(*f).contains(&node))
     }
 
     /// Record that `file`'s replica set (or size) changed: invalidates
@@ -707,6 +746,22 @@ mod tests {
         assert!(d.is_prepared(&[FileId(1)], NodeId(2)));
         assert!(!d.is_prepared(&[FileId(1)], NodeId(0)));
         assert_eq!(d.size_of(FileId(1)), Some(Bytes(100)));
+    }
+
+    #[test]
+    fn reference_dedup_finds_sibling_replicas() {
+        let mut d = dps();
+        // Two tenants' namespaced views of the same reference content.
+        d.register_reference(FileId(10), 77);
+        d.register_reference(FileId(20), 77);
+        assert!(d.shared_replica(FileId(20), NodeId(0)).is_none());
+        // Tenant A staged its copy onto node 0: tenant B can share it.
+        d.register_output(FileId(10), Bytes(100), NodeId(0));
+        assert_eq!(d.shared_replica(FileId(20), NodeId(0)), Some(FileId(10)));
+        assert_eq!(d.shared_replica(FileId(10), NodeId(0)), Some(FileId(10)));
+        assert!(d.shared_replica(FileId(20), NodeId(1)).is_none());
+        // Files never registered as references do not alias anything.
+        assert!(d.shared_replica(FileId(30), NodeId(0)).is_none());
     }
 
     #[test]

@@ -35,6 +35,7 @@ use crate::metrics::{RunMetrics, TenantMetrics};
 use crate::net::{FlowId, FlowNet};
 use crate::scheduler::wow::WowParams;
 use crate::scheduler::{Action, ReadyTask, SchedView, Scheduler, Strategy, TenantPolicy};
+use crate::serve::{self, AdmissionPolicy, DequeueOrder, ServeConfig};
 use crate::sim::event::EventQueue;
 use crate::util::fxmap::{FastMap, FastSet};
 use crate::util::rng::Rng;
@@ -137,6 +138,11 @@ pub struct RunConfig {
     /// single-tenant runs (the executor passes an empty precedence
     /// vector, so both policies take the identical code path).
     pub tenant_policy: TenantPolicy,
+    /// Open-serving regime (admission control, preemption, SLO horizon,
+    /// cross-tenant dedup). The default is inert — closed-batch runs
+    /// take exactly the pre-serve code path, with no extra events and
+    /// no extra RNG draws (the serve analogue of `fault`).
+    pub serve: ServeConfig,
     /// Simulation-core selection (incremental / checked / naive); the
     /// choice never changes results, only how fast they are produced.
     pub core: SimCore,
@@ -158,6 +164,7 @@ impl Default for RunConfig {
             speed_factors: Vec::new(),
             fault: FaultConfig::default(),
             tenant_policy: TenantPolicy::Fifo,
+            serve: ServeConfig::default(),
             core: SimCore::Incremental,
         }
     }
@@ -250,6 +257,17 @@ struct TenantRt {
     /// Cores currently allocated to this tenant's running tasks — the
     /// fair-share policy's usage signal.
     running_cores: u64,
+    /// Shed by the admission controller: never submitted anything.
+    rejected: bool,
+    /// All tasks done — the tenant's admission slot has been released.
+    /// Lineage healing can flip this back (revived work re-occupies it).
+    finished: bool,
+    /// Static expected core-seconds of the workflow — the admission
+    /// controller's price (computed from the spec, zero RNG draws).
+    work_est_s: f64,
+    /// Workflow-spec name, kept for cross-tenant content keys (the
+    /// engine consumes the spec).
+    workflow_name: String,
 }
 
 /// A finished COP awaiting (or past) its usefulness attribution: `used`
@@ -329,6 +347,26 @@ struct Executor {
     n_degrades: u64,
     task_failures: u64,
     tasks_rerun: u64,
+    /// Active brownouts per rack uplink (rack-link fault injection).
+    degraded_racks: FastMap<usize, u32>,
+
+    // Serving-regime state (inert when `cfg.serve` is default).
+    /// Tenants waiting for an admission slot, in arrival order.
+    admit_queue: Vec<usize>,
+    /// Admitted-but-unfinished tenants (the queue policy's slot count).
+    active_tenants: usize,
+    /// Estimated core-seconds of admitted-but-unfinished tenants (the
+    /// load-shedding policy's signal).
+    outstanding_work_s: f64,
+    n_rejected: u64,
+    n_queued: u64,
+    n_preempted: u64,
+    preempted_core_seconds: f64,
+    /// Preemptions per task: each task may be evicted at most once per
+    /// run, bounding total preemptions and guaranteeing progress.
+    preempt_counts: FastMap<TaskId, u32>,
+    /// DFS reads avoided by cross-tenant reference-replica sharing.
+    dedup_bytes: Bytes,
 }
 
 impl Executor {
@@ -384,15 +422,25 @@ impl Executor {
             .tenants
             .into_iter()
             .enumerate()
-            .map(|(i, ts)| TenantRt {
-                engine: WorkflowEngine::new(ts.workflow, workload::tenant_seed(cfg.seed, i)),
-                name: ts.name,
-                arrival: ts.arrival,
-                weight: ts.weight,
-                arrived: false,
-                first_start: None,
-                last_finish: SimTime::ZERO,
-                running_cores: 0,
+            .map(|(i, ts)| {
+                // Price the workflow before the engine consumes the spec
+                // (pure arithmetic — the estimator draws no randomness).
+                let work_est_s = serve::estimate_core_s(&ts.workflow);
+                let workflow_name = ts.workflow.name.clone();
+                TenantRt {
+                    engine: WorkflowEngine::new(ts.workflow, workload::tenant_seed(cfg.seed, i)),
+                    name: ts.name,
+                    arrival: ts.arrival,
+                    weight: ts.weight,
+                    arrived: false,
+                    first_start: None,
+                    last_finish: SimTime::ZERO,
+                    running_cores: 0,
+                    rejected: false,
+                    finished: false,
+                    work_est_s,
+                    workflow_name,
+                }
             })
             .collect();
         let n_workers = cluster.n_workers();
@@ -436,6 +484,16 @@ impl Executor {
             n_degrades: 0,
             task_failures: 0,
             tasks_rerun: 0,
+            degraded_racks: FastMap::default(),
+            admit_queue: Vec::new(),
+            active_tenants: 0,
+            outstanding_work_s: 0.0,
+            n_rejected: 0,
+            n_queued: 0,
+            n_preempted: 0,
+            preempted_core_seconds: 0.0,
+            preempt_counts: FastMap::default(),
+            dedup_bytes: Bytes::ZERO,
             cfg,
         }
     }
@@ -461,7 +519,7 @@ impl Executor {
         for i in 0..self.tenants.len() {
             let at = self.tenants[i].arrival;
             if at == SimTime::ZERO {
-                self.arrive_tenant(i);
+                self.on_tenant_arrival(i);
             } else {
                 self.events.push(at, Event::TenantArrive(i));
             }
@@ -539,7 +597,7 @@ impl Executor {
                         need_schedule |= self.apply_fault(fe, t);
                     }
                     Event::TenantArrive(i) => {
-                        self.arrive_tenant(i);
+                        self.on_tenant_arrival(i);
                         need_schedule = true;
                     }
                 }
@@ -557,9 +615,105 @@ impl Executor {
         self.finish_metrics()
     }
 
-    /// All tenants have arrived and finished every task.
+    /// All tenants have arrived and either been shed or finished every
+    /// task. Queued tenants count as not-arrived until admitted, so the
+    /// loop keeps running while the admission queue drains.
     fn workload_done(&self) -> bool {
-        self.tenants.iter().all(|t| t.arrived && t.engine.all_done())
+        self.tenants.iter().all(|t| t.arrived && (t.rejected || t.engine.all_done()))
+    }
+
+    /// A tenant hits the admission controller at its arrival instant.
+    /// The default `AdmitAll` submits immediately — byte for byte the
+    /// closed-batch path (the counters it bumps are pure bookkeeping).
+    fn on_tenant_arrival(&mut self, tenant: usize) {
+        match self.cfg.serve.admission {
+            AdmissionPolicy::AdmitAll => self.admit_tenant(tenant),
+            AdmissionPolicy::Queue { active, depth, .. } => {
+                if self.active_tenants < active {
+                    self.admit_tenant(tenant);
+                } else if self.admit_queue.len() < depth {
+                    self.admit_queue.push(tenant);
+                    self.n_queued += 1;
+                } else {
+                    self.reject_tenant(tenant);
+                }
+            }
+            AdmissionPolicy::LoadShed { max_core_s } => {
+                let est = self.tenants[tenant].work_est_s;
+                if self.active_tenants == 0 || self.outstanding_work_s + est <= max_core_s {
+                    self.admit_tenant(tenant);
+                } else {
+                    self.reject_tenant(tenant);
+                }
+            }
+        }
+    }
+
+    fn admit_tenant(&mut self, tenant: usize) {
+        self.active_tenants += 1;
+        self.outstanding_work_s += self.tenants[tenant].work_est_s;
+        self.arrive_tenant(tenant);
+    }
+
+    /// Shed the tenant: it never registers inputs, never materializes
+    /// tasks, and consumes no randomness — only the rejection counters
+    /// move.
+    fn reject_tenant(&mut self, tenant: usize) {
+        let t = &mut self.tenants[tenant];
+        debug_assert!(!t.arrived, "tenant rejected twice");
+        t.arrived = true;
+        t.rejected = true;
+        self.n_rejected += 1;
+    }
+
+    /// A tenant's last task completed: release its admission slot and
+    /// let queued arrivals in.
+    fn tenant_finished(&mut self, tenant: usize) {
+        let t = &mut self.tenants[tenant];
+        debug_assert!(!t.finished, "tenant finished twice");
+        t.finished = true;
+        self.active_tenants -= 1;
+        self.outstanding_work_s = (self.outstanding_work_s - t.work_est_s).max(0.0);
+        self.drain_admit_queue();
+    }
+
+    /// Lineage healing revived work of an already-finished tenant: it
+    /// re-occupies its admission slot until it drains again.
+    fn tenant_unfinished(&mut self, tenant: usize) {
+        let t = &mut self.tenants[tenant];
+        if !t.finished {
+            return;
+        }
+        t.finished = false;
+        self.active_tenants += 1;
+        self.outstanding_work_s += t.work_est_s;
+    }
+
+    /// Admit queued tenants while slots are free. `Fifo` keeps arrival
+    /// order; `Shortest` picks the smallest work estimate (ties keep
+    /// queue order), the admission-level shortest-job-first.
+    fn drain_admit_queue(&mut self) {
+        let AdmissionPolicy::Queue { active, order, .. } = self.cfg.serve.admission else {
+            return;
+        };
+        while self.active_tenants < active && !self.admit_queue.is_empty() {
+            let pos = match order {
+                DequeueOrder::Fifo => 0,
+                DequeueOrder::Shortest => {
+                    let mut best = 0;
+                    for i in 1..self.admit_queue.len() {
+                        if self.tenants[self.admit_queue[i]].work_est_s
+                            < self.tenants[self.admit_queue[best]].work_est_s
+                        {
+                            best = i;
+                        }
+                    }
+                    best
+                }
+            };
+            let t = self.admit_queue.remove(pos);
+            self.admit_tenant(t);
+        }
     }
 
     /// A tenant's workflow is submitted: its input files register in the
@@ -573,13 +727,24 @@ impl Executor {
             .iter()
             .map(|&f| (f, self.tenants[tenant].engine.file(f).size))
             .collect();
-        for (f, size) in inputs {
+        for (f, size) in &inputs {
             self.dfs.register_input(
-                workload::ns_file(tenant, f),
-                size,
+                workload::ns_file(tenant, *f),
+                *size,
                 &self.cluster,
                 &mut self.rng,
             );
+        }
+        // Cross-tenant dedup: tag each reference input with its content
+        // key so stage-ins can share replicas other tenants already
+        // pulled onto a node.
+        if self.cfg.serve.dedup {
+            for (idx, (f, size)) in inputs.iter().enumerate() {
+                self.dps.register_reference(
+                    workload::ns_file(tenant, *f),
+                    serve::content_key(&self.tenants[tenant].workflow_name, idx as u64, *size),
+                );
+            }
         }
         let initial = self.tenants[tenant].engine.start();
         self.submit_local(tenant, initial);
@@ -667,10 +832,26 @@ impl Executor {
         crate::scheduler::tenant_precedence(self.cfg.tenant_policy, &tenants)
     }
 
+    /// One scheduling round: a strategy pass, then — with serving
+    /// preemption on — evict-and-repeat until no eviction helps. The
+    /// per-task preemption cap bounds the loop at #tasks iterations
+    /// total across the whole run.
+    fn schedule(&mut self) {
+        self.schedule_once();
+        if !self.cfg.serve.preempt {
+            return;
+        }
+        while let Some(victim) = self.preemption_victim() {
+            let now = self.net.now();
+            self.preempt_task(victim, now);
+            self.schedule_once();
+        }
+    }
+
     /// One scheduling iteration: ask the strategy, apply its actions.
     /// (Single pass — the strategies are idempotent and every applied
     /// action triggers a fresh iteration through its completion event.)
-    fn schedule(&mut self) {
+    fn schedule_once(&mut self) {
         self.compact_ready();
         let prec = self.tenant_precedence();
         let view = SchedView {
@@ -690,6 +871,99 @@ impl Executor {
                 }
             }
         }
+    }
+
+    /// Pick the task to evict so the highest-precedence ready task can
+    /// start, or `None` if no eviction is warranted: the best ready task
+    /// must fit on no alive worker, the victim must belong to a strictly
+    /// lower-precedence tenant, evicting it must actually make room,
+    /// and a task already preempted once is immune (under fair-share,
+    /// precedence flips as usage shifts; an unbounded policy could
+    /// ping-pong kills forever). Among eligible victims the choice is
+    /// by (worst precedence, latest start — least sunk work, highest
+    /// id), which is deterministic regardless of map iteration order.
+    fn preemption_victim(&mut self) -> Option<TaskId> {
+        if self.running.is_empty() {
+            return None;
+        }
+        self.compact_ready();
+        if self.ready.is_empty() {
+            return None;
+        }
+        let prec = self.tenant_precedence();
+        if prec.is_empty() {
+            return None; // single tenant: no one to preempt for
+        }
+        let view = SchedView {
+            now: self.net.now(),
+            cluster: &self.cluster,
+            ready: &self.ready,
+            tenant_prec: &prec,
+        };
+        let best = view.best_ready()?;
+        let (b_cores, b_mem, b_tenant) = (best.cores, best.mem, best.tenant);
+        if self.cluster.alive_workers().any(|n| self.cluster.fits(n, b_cores, b_mem)) {
+            return None; // it fits somewhere: the next iteration starts it
+        }
+        let best_prec = prec[b_tenant];
+        let mut victim: Option<(u64, SimTime, TaskId)> = None;
+        for (&t, r) in &self.running {
+            let vp = prec[workload::task_tenant(t)];
+            if vp <= best_prec {
+                continue; // only strictly lower-precedence tenants yield
+            }
+            if self.preempt_counts.get(&t).copied().unwrap_or(0) >= 1 {
+                continue;
+            }
+            let node = self.cluster.node(r.node);
+            if !node.alive
+                || node.free_cores + r.cores < b_cores
+                || node.free_mem.0 + r.mem.0 < b_mem.0
+            {
+                continue; // eviction would not make room
+            }
+            let key = (vp, r.started, t);
+            if victim.is_none_or(|v| key > v) {
+                victim = Some(key);
+            }
+        }
+        victim.map(|(_, _, t)| t)
+    }
+
+    /// Evict a running task for a higher-precedence one. Like a crash
+    /// kill, the partial work is wasted and the task resubmits (its
+    /// in-flight `ComputeDone`, if any, dies on the attempt check) —
+    /// but the node survives, so its capacity ledger is released here.
+    /// Partial outputs cannot exist (outputs register only at
+    /// completion); the DPS release below is a defensive invariant so a
+    /// preempted task can never leave replicas behind.
+    fn preempt_task(&mut self, task: TaskId, now: SimTime) {
+        let r = self.running.remove(&task).expect("preemption victim");
+        for f in self.flows_of_task(task) {
+            let _ = self.disown_flow(f);
+            self.net.cancel(f);
+        }
+        let wall = (now - r.started).as_secs_f64();
+        self.cpu_core_seconds += wall * r.cores as f64;
+        self.node_cpu_seconds[r.node.0] += wall * r.cores as f64;
+        self.wasted_core_seconds += wall * r.cores as f64;
+        self.preempted_core_seconds += wall * r.cores as f64;
+        self.n_preempted += 1;
+        *self.preempt_counts.entry(task).or_insert(0) += 1;
+        self.tasks_rerun += 1;
+        self.retries.remove(&task);
+        self.cluster.release(r.node, r.cores, r.mem);
+        let tn = workload::task_tenant(task);
+        self.tenants[tn].running_cores -= r.cores as u64;
+        if self.scheduler.uses_local_data() {
+            let lid = workload::local_task(task);
+            for (f, size) in self.tenants[tn].engine.task(lid).outputs.clone() {
+                for node in self.dps.release_file(workload::ns_file(tn, f)) {
+                    self.node_replica_bytes[node.0] -= size.as_f64();
+                }
+            }
+        }
+        self.submit_global(vec![task]);
     }
 
     fn start_task(&mut self, task: TaskId, node: NodeId) -> bool {
@@ -787,6 +1061,20 @@ impl Executor {
                 self.own_flow(id, FlowOwner::StageIn(task));
                 n_flows += 1;
             } else {
+                // Cross-tenant dedup: a reference file whose content
+                // some tenant already staged onto this node is read from
+                // local disk instead of re-fetched through the DFS.
+                if is_input
+                    && self.cfg.serve.dedup
+                    && self.dps.shared_replica(gf, node).is_some()
+                {
+                    self.dedup_bytes += size;
+                    let n = self.cluster.node(node);
+                    let id = self.net.add_flow(size, vec![n.disk_read]);
+                    self.own_flow(id, FlowOwner::StageIn(task));
+                    n_flows += 1;
+                    continue;
+                }
                 for part in self.dfs.read(gf, size, node, &self.cluster, &mut self.rng) {
                     let id = self.net.add_flow(part.bytes, part.resources);
                     self.own_flow(id, FlowOwner::StageIn(task));
@@ -802,6 +1090,25 @@ impl Executor {
         r.phase = Phase::Compute;
         r.compute_started = now;
         let (node, attempt) = (r.node, r.attempt);
+        // Cross-tenant dedup: the reference inputs just staged onto
+        // `node` become shareable replicas for later arrivals. Their
+        // bytes are *not* counted as replica storage — the DFS already
+        // accounts the staged copy; the DPS entry only records where
+        // the content sits. Idempotent across compute retries.
+        if self.cfg.serve.dedup {
+            let tn = workload::task_tenant(task);
+            let lid = workload::local_task(task);
+            for lf in self.tenants[tn].engine.task(lid).inputs.clone() {
+                if !self.tenants[tn].engine.file(lf).is_workflow_input() {
+                    continue;
+                }
+                let gf = workload::ns_file(tn, lf);
+                if !self.dps.locations(gf).contains(&node) {
+                    let size = self.tenants[tn].engine.file(lf).size;
+                    self.dps.register_output(gf, size, node);
+                }
+            }
+        }
         // Heterogeneous speeds: slower nodes stretch compute (§VIII).
         let speed = self.cluster.node(node).spec.speed;
         // Retried attempts run inflated (DynamicCloudSim's runtime
@@ -928,6 +1235,12 @@ impl Executor {
         // any more.
         if self.cfg.replica_gc && self.scheduler.uses_local_data() {
             for f in self.tenants[tn].engine.take_dead_files() {
+                // Dedup'd reference replicas are shared across tenants
+                // (and never counted as replica storage): one tenant's
+                // death must not release them.
+                if self.tenants[tn].engine.file(f).is_workflow_input() {
+                    continue;
+                }
                 let size = self.tenants[tn].engine.file(f).size.as_f64();
                 for node in self.dps.release_file(workload::ns_file(tn, f)) {
                     self.node_replica_bytes[node.0] -= size;
@@ -937,6 +1250,9 @@ impl Executor {
             self.tenants[tn].engine.take_dead_files();
         }
         self.submit_local(tn, newly_ready);
+        if !self.tenants[tn].finished && self.tenants[tn].engine.all_done() {
+            self.tenant_finished(tn);
+        }
     }
 
     fn update_peak(&mut self) {
@@ -1019,6 +1335,35 @@ impl Executor {
                 self.net.set_capacity(up, link);
                 self.net.set_capacity(down, link);
                 self.dps.note_link_change(node, link.bytes_per_sec());
+                true
+            }
+            FaultEvent::RackLinkDegrade(rack) => {
+                // A ToR-uplink brownout: both directions of the shared
+                // rack link rescale, throttling exactly the flows that
+                // cross the rack boundary (within-rack traffic never
+                // touches these resources). Counted with the node-NIC
+                // brownouts in `link_degrades`.
+                self.n_degrades += 1;
+                *self.degraded_racks.entry(rack).or_insert(0) += 1;
+                let (up, down, cap) = self.cluster.rack_link(rack);
+                let degraded = Bandwidth(cap * self.cfg.fault.degrade_factor.max(1e-6));
+                self.net.set_capacity(up, degraded);
+                self.net.set_capacity(down, degraded);
+                self.dps.note_rack_change(rack, degraded.bytes_per_sec());
+                false
+            }
+            FaultEvent::RackLinkRestore(rack) => {
+                let left =
+                    self.degraded_racks.get_mut(&rack).expect("restore without rack degrade");
+                *left -= 1;
+                if *left > 0 {
+                    return false;
+                }
+                self.degraded_racks.remove(&rack);
+                let (up, down, cap) = self.cluster.rack_link(rack);
+                self.net.set_capacity(up, Bandwidth(cap));
+                self.net.set_capacity(down, Bandwidth(cap));
+                self.dps.note_rack_change(rack, cap);
                 true
             }
         }
@@ -1235,6 +1580,7 @@ impl Executor {
                 continue; // already queued, running, or revived
             }
             self.tenants[tn].engine.revive_task(prod);
+            self.tenant_unfinished(tn);
             self.tasks_rerun += 1;
             revived.push(workload::ns_task(tn, prod));
             for inp in self.tenants[tn].engine.task(prod).inputs.clone() {
@@ -1297,10 +1643,42 @@ impl Executor {
                 makespan: t.last_finish.saturating_sub(t.first_start.unwrap_or(SimTime::ZERO)),
                 completion: t.last_finish.saturating_sub(t.arrival),
                 tasks: t.engine.n_tasks_materialized(),
+                rejected: t.rejected,
             })
             .collect();
 
+        // Open-system observables, derived from the same per-tenant
+        // accounting the closed-batch report uses. Pure arithmetic over
+        // already-collected state, so computing them unconditionally
+        // cannot perturb any run.
+        let latencies: Vec<f64> = self
+            .tenants
+            .iter()
+            .filter(|t| !t.rejected && t.first_start.is_some())
+            .map(|t| t.last_finish.saturating_sub(t.arrival).as_secs_f64())
+            .collect();
+        let (latency_p50_s, latency_p99_s) = if latencies.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (
+                crate::util::stats::percentile(&latencies, 50.0),
+                crate::util::stats::percentile(&latencies, 99.0),
+            )
+        };
         let makespan = self.last_finish.saturating_sub(self.first_start.unwrap_or(SimTime::ZERO));
+        let horizon_s = if self.cfg.serve.horizon_s > 0.0 {
+            self.cfg.serve.horizon_s
+        } else {
+            makespan.as_secs_f64()
+        };
+        let throughput_per_min =
+            if horizon_s > 0.0 { latencies.len() as f64 / horizon_s * 60.0 } else { 0.0 };
+        let slo_attainment_pct = if self.cfg.serve.slo_s > 0.0 && !latencies.is_empty() {
+            let met = latencies.iter().filter(|&&l| l <= self.cfg.serve.slo_s).count();
+            100.0 * met as f64 / latencies.len() as f64
+        } else {
+            0.0
+        };
         RunMetrics {
             workflow: self.workload_name.clone(),
             strategy: self.scheduler.name().to_string(),
@@ -1328,6 +1706,15 @@ impl Executor {
             wasted_compute_hours: self.wasted_core_seconds / 3600.0,
             recovery_bytes: self.recovery_bytes,
             tenants: tenant_metrics,
+            tenants_rejected: self.n_rejected,
+            tenants_queued: self.n_queued,
+            preemptions: self.n_preempted,
+            preempted_compute_hours: self.preempted_core_seconds / 3600.0,
+            dedup_bytes: self.dedup_bytes,
+            latency_p50_s,
+            latency_p99_s,
+            throughput_per_min,
+            slo_attainment_pct,
         }
     }
 }
@@ -1556,6 +1943,158 @@ mod tests {
         assert_eq!(m.cops_aborted, 0);
         assert_eq!(m.wasted_compute_hours, 0.0);
         assert_eq!(m.recovery_bytes, Bytes::ZERO);
+    }
+
+    // ---- serving regime ----
+
+    use crate::workload::TenantSpec;
+
+    /// One stage of 16-core tasks: each occupies a full paper worker.
+    fn hog(count: usize) -> WorkflowSpec {
+        WorkflowSpec {
+            name: "hog".into(),
+            stages: vec![StageSpec {
+                name: "h".into(),
+                rule: Rule::Source { count, inputs_per_task: 0 },
+                cores: 16,
+                mem: Bytes::from_gb(8.0),
+                compute: ComputeModel::fixed(60.0),
+                out_count: 1,
+                out_size: OutputSize::FixedGb(0.1),
+            }],
+            input_files_gb: vec![],
+        }
+    }
+
+    #[test]
+    fn preemption_yields_to_the_underserved_tenant() {
+        // Tenant 0 saturates both nodes with long tasks; tenant 1
+        // arrives later with zero usage, so fair-share ranks it first
+        // and its task fits nowhere — preemption must evict for it.
+        let workload = WorkloadSpec {
+            name: "preempt".into(),
+            tenants: vec![
+                TenantSpec {
+                    name: "hog".into(),
+                    workflow: hog(4),
+                    arrival: SimTime::ZERO,
+                    weight: 1.0,
+                },
+                TenantSpec {
+                    name: "late".into(),
+                    workflow: hog(1),
+                    arrival: SimTime::from_secs_f64(5.0),
+                    weight: 1.0,
+                },
+            ],
+        };
+        let mut c = cfg(Strategy::Wow, DfsKind::Ceph);
+        c.n_nodes = 2;
+        c.tenant_policy = TenantPolicy::FairShare;
+        c.serve.preempt = true;
+        let m = run_workload(&workload, &c);
+        assert!(m.preemptions > 0, "saturated cluster + late tenant must preempt");
+        assert!(m.preempted_compute_hours > 0.0);
+        assert!(m.tasks_rerun >= m.preemptions, "every eviction reruns its victim");
+        assert!(m.tenants.iter().all(|t| !t.rejected && t.first_start.is_some()));
+        // Without the preemption pass the same config evicts nothing.
+        let mut c2 = c.clone();
+        c2.serve.preempt = false;
+        assert_eq!(run_workload(&workload, &c2).preemptions, 0);
+    }
+
+    #[test]
+    fn bounded_queue_sheds_a_flood_and_drains_the_rest() {
+        // Six tenants at one-second gaps into one active slot plus a
+        // depth-two queue: the first is admitted, two wait, three shed
+        // (the first workflow cannot finish within five seconds).
+        let tenants: Vec<TenantSpec> = (0..6)
+            .map(|i| TenantSpec {
+                name: format!("t{i}"),
+                workflow: tiny_chain(2),
+                arrival: SimTime::from_secs_f64(i as f64),
+                weight: 1.0,
+            })
+            .collect();
+        let workload = WorkloadSpec { name: "flood".into(), tenants };
+        let mut c = cfg(Strategy::Wow, DfsKind::Ceph);
+        c.serve.admission =
+            AdmissionPolicy::Queue { active: 1, depth: 2, order: DequeueOrder::Fifo };
+        c.serve.slo_s = 30.0;
+        let m = run_workload(&workload, &c);
+        assert_eq!(m.tenants_rejected, 3);
+        assert_eq!(m.tenants_queued, 2);
+        let done: Vec<&TenantMetrics> = m.tenants.iter().filter(|t| !t.rejected).collect();
+        assert_eq!(done.len(), 3);
+        assert!(done.iter().all(|t| t.first_start.is_some()), "queued tenants drain");
+        assert!(m.tenants.iter().filter(|t| t.rejected).all(|t| t.first_start.is_none()));
+        assert!(m.latency_p50_s > 0.0 && m.latency_p99_s >= m.latency_p50_s);
+        assert!(m.throughput_per_min > 0.0);
+        assert!(m.slo_attainment_pct > 0.0);
+    }
+
+    #[test]
+    fn load_shedding_prices_by_estimated_work() {
+        // tiny_chain(2) estimates ~14 core-seconds; a 20 core-second
+        // budget admits the first arrival and sheds the second.
+        let mk = |name: &str, at: f64| TenantSpec {
+            name: name.into(),
+            workflow: tiny_chain(2),
+            arrival: SimTime::from_secs_f64(at),
+            weight: 1.0,
+        };
+        let workload =
+            WorkloadSpec { name: "shed".into(), tenants: vec![mk("a", 0.0), mk("b", 1.0)] };
+        let mut c = cfg(Strategy::Wow, DfsKind::Ceph);
+        c.serve.admission = AdmissionPolicy::LoadShed { max_core_s: 20.0 };
+        let m = run_workload(&workload, &c);
+        assert_eq!(m.tenants_rejected, 1);
+        assert!(m.tenants[0].first_start.is_some() && !m.tenants[0].rejected);
+        assert!(m.tenants[1].rejected);
+    }
+
+    #[test]
+    fn dedup_shares_reference_replicas_across_tenants() {
+        let reader = WorkflowSpec {
+            name: "reader".into(),
+            stages: vec![StageSpec {
+                name: "r".into(),
+                rule: Rule::Source { count: 1, inputs_per_task: 1 },
+                cores: 1,
+                mem: Bytes::from_gb(1.0),
+                compute: ComputeModel::fixed(5.0),
+                out_count: 1,
+                out_size: OutputSize::FixedGb(0.1),
+            }],
+            input_files_gb: vec![1.0],
+        };
+        // Tenant B arrives after tenant A has staged the shared 1 GB
+        // reference input; on one node its read must dedup.
+        let workload = WorkloadSpec {
+            name: "dedup".into(),
+            tenants: vec![
+                TenantSpec {
+                    name: "a".into(),
+                    workflow: reader.clone(),
+                    arrival: SimTime::ZERO,
+                    weight: 1.0,
+                },
+                TenantSpec {
+                    name: "b".into(),
+                    workflow: reader.clone(),
+                    arrival: SimTime::from_secs_f64(60.0),
+                    weight: 1.0,
+                },
+            ],
+        };
+        let mut c = cfg(Strategy::Wow, DfsKind::Ceph);
+        c.n_nodes = 1;
+        c.serve.dedup = true;
+        let m = run_workload(&workload, &c);
+        assert!(m.dedup_bytes.0 > 0, "tenant b must share tenant a's replica");
+        let mut c2 = c.clone();
+        c2.serve.dedup = false;
+        assert_eq!(run_workload(&workload, &c2).dedup_bytes, Bytes::ZERO);
     }
 
     #[test]

@@ -1,0 +1,303 @@
+//! Open serving experiment (`wow serve`): the closed-batch evaluation
+//! of the paper, promoted to an open system. A deterministic Poisson
+//! stream of tenant workflows arrives at the paper's 8-node cluster
+//! until a horizon; the sweep drives the offered arrival rate from
+//! under-subscription past the saturation knee and crosses it with
+//! strategy × admission policy, reporting per cell the open-system
+//! observables (throughput, p50/p99 sojourn latency, SLO attainment,
+//! shed count, preemption waste, dedup savings).
+//!
+//! The stream mix is a pair of synthetic serving workflows sized so
+//! the knee falls inside the swept rates on 8×16 cores (the paper
+//! workflows are batch-scale: a single tenant occupies the cluster for
+//! tens of minutes, which pushes the knee below any realistic arrival
+//! rate). Expected shape: below the knee every policy attains the SLO
+//! and throughput tracks the offered rate; past it, admit-all p99
+//! diverges with unbounded queueing while bounded-queue and load-shed
+//! policies hold p50/p99 for the tenants they accept and convert the
+//! excess into rejections. Preemption (fair-share) keeps late-arriving
+//! tenants' p50 down at the cost of rerun waste; dedup removes the
+//! repeated staging of the shared reference inputs.
+//!
+//! Protocol: per cell the stream is regenerated and run once per seed
+//! (arrival times are seed-dependent) and the median-makespan run is
+//! reported, mirroring §V-C. Quick mode trims rates × policies and
+//! shortens the horizon to smoke-run scale.
+
+use super::{make_backend, paper_cfg, ExpOpts};
+use crate::dfs::DfsKind;
+use crate::exec::run_workload_with_backend;
+use crate::metrics::RunMetrics;
+use crate::report::Table;
+use crate::scheduler::{Strategy, TenantPolicy};
+use crate::serve::{self, AdmissionPolicy, DequeueOrder, ServeConfig};
+use crate::util::units::Bytes;
+use crate::workflow::spec::{ComputeModel, OutputSize, Rule, StageSpec, WorkflowSpec};
+use crate::workflow::task::StageId;
+
+/// SLO on tenant sojourn time (arrival → last task finish), seconds.
+pub const SLO_S: f64 = 600.0;
+
+/// Arrival cut-off: tenants arriving past this are not generated.
+pub const HORIZON_S: f64 = 1800.0;
+pub const QUICK_HORIZON_S: f64 = 480.0;
+
+/// Swept mean inter-arrival gaps, seconds (offered rate = 60/gap per
+/// minute). The serve mix averages ≈6 000 core-seconds per tenant on a
+/// 128-core cluster, so saturation sits near a 47 s gap: the sweep
+/// brackets the knee.
+pub fn gaps(quick: bool) -> Vec<f64> {
+    if quick {
+        vec![120.0, 45.0]
+    } else {
+        vec![240.0, 120.0, 60.0, 30.0]
+    }
+}
+
+/// A two-stage serving workflow: `width` mappers reading one shared
+/// reference input each, then a 1:1 refine stage.
+fn micro(name: &str, width: usize, cores: u32, map_s: f64, refine_s: f64) -> WorkflowSpec {
+    WorkflowSpec {
+        name: name.into(),
+        stages: vec![
+            StageSpec {
+                name: "map".into(),
+                rule: Rule::Source { count: width, inputs_per_task: 1 },
+                cores,
+                mem: Bytes::from_gb(2.0),
+                compute: ComputeModel::fixed(map_s),
+                out_count: 1,
+                out_size: OutputSize::FixedGb(0.5),
+            },
+            StageSpec {
+                name: "refine".into(),
+                rule: Rule::PerTask { from: StageId(0) },
+                cores: 2,
+                mem: Bytes::from_gb(2.0),
+                compute: ComputeModel::fixed(refine_s),
+                out_count: 1,
+                out_size: OutputSize::RatioOfInput(0.5),
+            },
+        ],
+        input_files_gb: vec![0.5; width],
+    }
+}
+
+/// The served workflow mix. Every tenant of the same workflow reads
+/// the same reference inputs, so cross-tenant dedup has bytes to save.
+pub fn mix() -> Vec<WorkflowSpec> {
+    vec![
+        micro("serve-wide", 8, 4, 240.0, 60.0), // ≈8 640 core-s
+        micro("serve-deep", 4, 2, 300.0, 120.0), // ≈3 360 core-s
+    ]
+}
+
+/// Swept admission policies. The load-shed budget is sized like the
+/// bounded queue's active slots: four tenants' mean estimated work.
+pub fn policies(quick: bool) -> Vec<AdmissionPolicy> {
+    let m = mix();
+    let mean_est = m.iter().map(serve::estimate_core_s).sum::<f64>() / m.len() as f64;
+    let mut v = vec![
+        AdmissionPolicy::AdmitAll,
+        AdmissionPolicy::Queue { active: 4, depth: 8, order: DequeueOrder::Fifo },
+    ];
+    if !quick {
+        v.push(AdmissionPolicy::Queue { active: 4, depth: 8, order: DequeueOrder::Shortest });
+        v.push(AdmissionPolicy::LoadShed { max_core_s: 4.0 * mean_est });
+    }
+    v
+}
+
+/// One sweep cell (the median-makespan run of the seed protocol).
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub mean_gap_s: f64,
+    pub horizon_s: f64,
+    pub strategy: Strategy,
+    pub admission: AdmissionPolicy,
+    pub metrics: RunMetrics,
+}
+
+impl Row {
+    /// Offered arrival rate, tenants per minute.
+    pub fn offered_per_min(&self) -> f64 {
+        60.0 / self.mean_gap_s
+    }
+
+    /// Tenants that arrived within the horizon (admitted or not).
+    pub fn offered(&self) -> usize {
+        self.metrics.tenants.len()
+    }
+
+    /// Tenants admitted and run to completion.
+    pub fn done(&self) -> u64 {
+        self.offered() as u64 - self.metrics.tenants_rejected
+    }
+}
+
+fn run_cell(
+    mean_gap_s: f64,
+    horizon_s: f64,
+    strategy: Strategy,
+    admission: AdmissionPolicy,
+    opts: &ExpOpts,
+) -> Row {
+    let m = mix();
+    let mut per_seed: Vec<RunMetrics> = opts
+        .seeds
+        .iter()
+        .map(|&seed| {
+            let name = format!("serve gap={mean_gap_s}s");
+            let wl = serve::open_stream(&name, &m, mean_gap_s, horizon_s, seed);
+            let mut cfg = paper_cfg(strategy, DfsKind::Ceph);
+            cfg.seed = seed;
+            cfg.tenant_policy = TenantPolicy::FairShare;
+            cfg.serve = ServeConfig {
+                admission,
+                preempt: true,
+                slo_s: SLO_S,
+                horizon_s,
+                dedup: true,
+            };
+            run_workload_with_backend(&wl, &cfg, make_backend(opts.xla))
+        })
+        .collect();
+    per_seed.sort_by(|a, b| a.makespan.cmp(&b.makespan));
+    let metrics = per_seed.remove(per_seed.len() / 2);
+    Row { mean_gap_s, horizon_s, strategy, admission, metrics }
+}
+
+/// Run the knee sweep: rates × strategies × admission policies.
+pub fn collect(opts: &ExpOpts) -> Vec<Row> {
+    let horizon = if opts.quick { QUICK_HORIZON_S } else { HORIZON_S };
+    let mut rows = Vec::new();
+    for &gap in &gaps(opts.quick) {
+        for &strategy in &[Strategy::Orig, Strategy::Cws, Strategy::Wow] {
+            for &admission in &policies(opts.quick) {
+                eprintln!(
+                    "serve: {:.1}/min / {} / {} ...",
+                    60.0 / gap,
+                    strategy.label(),
+                    admission.label()
+                );
+                rows.push(run_cell(gap, horizon, strategy, admission, opts));
+            }
+        }
+    }
+    rows
+}
+
+/// Render the sweep table.
+pub fn render(rows: &[Row]) -> Table {
+    let mut t = Table::new(
+        "Open serving — arrival-rate knee (8 nodes, Ceph, fair-share, preempt+dedup)",
+        &[
+            "Rate [/min]",
+            "Strategy",
+            "Admission",
+            "Offered",
+            "Done",
+            "Shed",
+            "Thru [/min]",
+            "p50 [s]",
+            "p99 [s]",
+            "SLO %",
+            "Preempt",
+            "Waste [h]",
+        ],
+    );
+    for r in rows {
+        t.row(vec![
+            format!("{:.1}", r.offered_per_min()),
+            r.strategy.label().into(),
+            r.admission.label(),
+            r.offered().to_string(),
+            r.done().to_string(),
+            r.metrics.tenants_rejected.to_string(),
+            format!("{:.2}", r.metrics.throughput_per_min),
+            format!("{:.0}", r.metrics.latency_p50_s),
+            format!("{:.0}", r.metrics.latency_p99_s),
+            format!("{:.0}", r.metrics.slo_attainment_pct),
+            r.metrics.preemptions.to_string(),
+            format!("{:.2}", r.metrics.preempted_compute_hours),
+        ]);
+    }
+    t
+}
+
+/// Dependency-free JSON artifact (`SERVE_knee.json`) for PR-over-PR
+/// tracking, mirroring the benches' `BENCH_*.json` shape.
+pub fn to_json(rows: &[Row]) -> String {
+    let mut out = String::from("{\"experiment\": \"serve\", \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        let m = &r.metrics;
+        out.push_str(&format!(
+            "  {{\"rate_per_min\": {:.4}, \"mean_gap_s\": {}, \"horizon_s\": {}, \
+             \"strategy\": \"{}\", \"admission\": \"{}\", \"seed\": {}, \
+             \"offered\": {}, \"done\": {}, \"rejected\": {}, \"queued\": {}, \
+             \"throughput_per_min\": {:.6}, \"latency_p50_s\": {:.3}, \
+             \"latency_p99_s\": {:.3}, \"slo_attainment_pct\": {:.3}, \
+             \"preemptions\": {}, \"preempted_compute_hours\": {:.6}, \
+             \"dedup_gb\": {:.6}, \"makespan_min\": {:.3}}}",
+            r.offered_per_min(),
+            r.mean_gap_s,
+            r.horizon_s,
+            r.strategy.label(),
+            r.admission.label(),
+            m.seed,
+            r.offered(),
+            r.done(),
+            m.tenants_rejected,
+            m.tenants_queued,
+            m.throughput_per_min,
+            m.latency_p50_s,
+            m.latency_p99_s,
+            m.slo_attainment_pct,
+            m.preemptions,
+            m.preempted_compute_hours,
+            m.dedup_bytes.as_gb(),
+            m.makespan_min(),
+        ));
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+pub fn run(opts: &ExpOpts) -> (Vec<Row>, String) {
+    let rows = collect(opts);
+    let s = render(&rows).render();
+    (rows, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cells_are_deterministic() {
+        let opts = ExpOpts { seeds: vec![0], quick: true, ..Default::default() };
+        let a = run_cell(120.0, 300.0, Strategy::Wow, AdmissionPolicy::AdmitAll, &opts);
+        let b = run_cell(120.0, 300.0, Strategy::Wow, AdmissionPolicy::AdmitAll, &opts);
+        assert_eq!(a.metrics, b.metrics);
+        assert!(a.offered() >= 1, "t=0 arrival always exists");
+        assert_eq!(a.done(), a.offered() as u64, "admit-all rejects nobody");
+    }
+
+    #[test]
+    fn flooded_queue_sheds_and_still_serves_the_admitted() {
+        let opts = ExpOpts { seeds: vec![0], quick: true, ..Default::default() };
+        let admission =
+            AdmissionPolicy::Queue { active: 1, depth: 1, order: DequeueOrder::Fifo };
+        // ~7 arrivals in 60 s onto one active slot + one queue slot: the
+        // first tenant runs for minutes, so most of the flood is shed.
+        let r = run_cell(10.0, 60.0, Strategy::Wow, admission, &opts);
+        assert!(r.metrics.tenants_rejected > 0, "flood must shed");
+        assert!(r.done() >= 1, "the admitted tenants complete");
+        assert!(r.metrics.latency_p50_s > 0.0);
+        let json = to_json(&[r]);
+        assert!(json.contains("\"admission\": \"queue 1+1 fifo\""));
+    }
+}

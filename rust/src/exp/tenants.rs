@@ -272,6 +272,8 @@ pub fn render(rows: &[Row]) -> Table {
             "Slowdown mean",
             "Slowdown max",
             "Gini",
+            "p50 [min]",
+            "p99 [min]",
         ],
     );
     for r in rows {
@@ -291,6 +293,8 @@ pub fn render(rows: &[Row]) -> Table {
             format!("{:.2}", r.mean_slowdown()),
             format!("{:.2}", r.max_slowdown()),
             format!("{:.2}", r.fairness_gini()),
+            format!("{:.1}", r.metrics.latency_p50_s / 60.0),
+            format!("{:.1}", r.metrics.latency_p99_s / 60.0),
         ]);
     }
     t

@@ -110,6 +110,12 @@ pub struct FaultConfig {
     pub degrade_factor: f64,
     /// Brownout duration in seconds.
     pub degrade_duration_s: f64,
+    /// Number of *rack-uplink* brownouts to inject: the shared ToR
+    /// uplink/downlink pair of a random worker rack is rescaled by
+    /// `degrade_factor`, throttling exactly the flows crossing that
+    /// rack boundary. Requires a rack-aware topology; a no-op (zero
+    /// events, zero draws) on flat clusters.
+    pub rack_degrades: usize,
 }
 
 impl Default for FaultConfig {
@@ -126,6 +132,7 @@ impl Default for FaultConfig {
             link_degrades: 0,
             degrade_factor: 0.1,
             degrade_duration_s: 120.0,
+            rack_degrades: 0,
         }
     }
 }
@@ -137,6 +144,7 @@ impl FaultConfig {
             || self.nfs_outage
             || self.task_fail_prob > 0.0
             || self.link_degrades > 0
+            || self.rack_degrades > 0
     }
 }
 
@@ -152,6 +160,10 @@ pub enum FaultEvent {
     LinkDegrade(NodeId),
     /// The brownout ends; NIC capacities return to spec.
     LinkRestore(NodeId),
+    /// A brownout starts on this rack's shared ToR uplink/downlink.
+    RackLinkDegrade(usize),
+    /// The rack uplink returns to its nominal capacity.
+    RackLinkRestore(usize),
 }
 
 /// The compiled schedule of injections, sorted by time (ties keep
@@ -236,6 +248,21 @@ impl FaultPlan {
             events.push((t, FaultEvent::LinkDegrade(node)));
             let end = t + SimTime::from_secs_f64(cfg.degrade_duration_s);
             events.push((end, FaultEvent::LinkRestore(node)));
+        }
+
+        // Rack-uplink brownouts. Drawn after everything else so that a
+        // `rack_degrades: 0` config reproduces the pre-rack-brownout
+        // stream draw for draw; on a flat cluster (no rack map) the
+        // loop body never runs and no randomness is consumed.
+        let n_worker_racks = rack_of.iter().copied().max().map_or(0, |m| m + 1);
+        if cfg.rack_degrades > 0 && n_worker_racks > 0 {
+            for _ in 0..cfg.rack_degrades {
+                let rack = rng.index(n_worker_racks);
+                let t = SimTime::from_secs_f64(rng.range_f64(lo, hi));
+                events.push((t, FaultEvent::RackLinkDegrade(rack)));
+                let end = t + SimTime::from_secs_f64(cfg.degrade_duration_s);
+                events.push((end, FaultEvent::RackLinkRestore(rack)));
+            }
         }
 
         // Stable sort: simultaneous events keep insertion order, so the
@@ -493,5 +520,69 @@ mod tests {
         let d = plan.events.iter().filter(|(_, e)| matches!(e, FaultEvent::LinkDegrade(_))).count();
         let r = plan.events.iter().filter(|(_, e)| matches!(e, FaultEvent::LinkRestore(_))).count();
         assert_eq!((d, r), (3, 3));
+    }
+
+    #[test]
+    fn rack_brownouts_target_worker_racks_and_pair_up() {
+        let cfg = FaultConfig {
+            rack_degrades: 2,
+            degrade_duration_s: 30.0,
+            ..Default::default()
+        };
+        let rack_of = [0usize, 0, 1, 1, 2, 2];
+        let plan = FaultPlan::compile_with_topology(&cfg, 6, None, &rack_of, &[], 4);
+        let degrades: Vec<(SimTime, usize)> = plan
+            .events
+            .iter()
+            .filter_map(|(t, e)| match e {
+                FaultEvent::RackLinkDegrade(r) => Some((*t, *r)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(degrades.len(), 2);
+        for (t, r) in degrades {
+            assert!(r < 3, "victims are worker racks");
+            let restore = plan
+                .events
+                .iter()
+                .find(|(_, e)| **e == FaultEvent::RackLinkRestore(r))
+                .expect("matching restore");
+            assert_eq!(restore.0, t + SimTime::from_secs_f64(30.0));
+        }
+    }
+
+    #[test]
+    fn rack_brownouts_are_inert_on_flat_clusters() {
+        // No rack map → no rack to target: the plan stays empty and no
+        // randomness is consumed (the config enables nothing else).
+        let cfg = FaultConfig { rack_degrades: 3, ..Default::default() };
+        assert!(cfg.enabled());
+        let plan = FaultPlan::compile_with_topology(&cfg, 8, None, &[], &[], 2);
+        assert!(plan.is_empty());
+    }
+
+    #[test]
+    fn rack_brownouts_extend_the_stream_without_perturbing_it() {
+        // Adding rack brownouts must leave every pre-existing draw in
+        // place: the node-level events of the two plans are identical.
+        let base = FaultConfig { node_crashes: 2, link_degrades: 1, ..Default::default() };
+        let ext = FaultConfig { rack_degrades: 2, ..base.clone() };
+        let rack_of = [0usize, 0, 1, 1, 2, 2, 3, 3];
+        let a = FaultPlan::compile_with_topology(&base, 8, None, &rack_of, &[], 42);
+        let b = FaultPlan::compile_with_topology(&ext, 8, None, &rack_of, &[], 42);
+        let node_events = |p: &FaultPlan| {
+            p.events
+                .iter()
+                .filter(|(_, e)| {
+                    !matches!(
+                        e,
+                        FaultEvent::RackLinkDegrade(_) | FaultEvent::RackLinkRestore(_)
+                    )
+                })
+                .copied()
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(node_events(&a), node_events(&b));
+        assert_eq!(b.len(), a.len() + 4, "two extra degrade/restore pairs");
     }
 }

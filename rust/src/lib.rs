@@ -35,6 +35,7 @@ pub mod net;
 pub mod report;
 pub mod runtime;
 pub mod scheduler;
+pub mod serve;
 pub mod sim;
 pub mod util;
 pub mod workflow;

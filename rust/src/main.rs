@@ -8,11 +8,14 @@
 //!         [--nfs-outage] [--fault-domain node|rack|zone]
 //!         [--tenants N] [--mix wf1,wf2] [--arrival SPEC] [--policy P]
 //!         [--weights 2,1,1] [--core incremental|checked|eager|naive]
+//!         [--admission all|queue:A:D[:fifo|sjf]|shed:W] [--preempt]
+//!         [--slo S] [--dedup]
 //! wow table1 | table2 | table3 | fig4 | fig5 | gini | all
 //!         [--seeds 0,1,2] [--quick] [--xla]
 //! wow chaos [--gc] [--fault-domain rack|zone]
 //!                       # fault-injection sweep (crashes × fail rates)
 //! wow tenants           # multi-tenant sweep (arrivals × mixes × strategies)
+//! wow serve             # open-serving knee sweep (rates × admission policies)
 //! wow topo              # topology sweep (oversubscription × strategies)
 //! wow ablate            # c_node / c_task sweep on the pattern set
 //! ```
@@ -55,7 +58,7 @@ impl Args {
                 .with_context(|| format!("expected --flag, got '{k}'"))?
                 .to_string();
             // Boolean flags.
-            if ["quick", "xla", "gc", "nfs-outage"].contains(&key.as_str()) {
+            if ["quick", "xla", "gc", "nfs-outage", "preempt", "dedup"].contains(&key.as_str()) {
                 flags.insert(key, "true".into());
                 continue;
             }
@@ -162,6 +165,14 @@ fn real_main() -> Result<()> {
             println!("{out}");
             Ok(())
         }
+        "serve" => {
+            let (rows, out) = exp::serve::run(&args.opts()?);
+            std::fs::write("SERVE_knee.json", exp::serve::to_json(&rows))
+                .context("writing SERVE_knee.json")?;
+            eprintln!("wrote SERVE_knee.json ({} rows)", rows.len());
+            println!("{out}");
+            Ok(())
+        }
         "topo" => {
             let (_, out) = exp::topo::run(&args.opts()?);
             println!("{out}");
@@ -193,13 +204,17 @@ fn real_main() -> Result<()> {
                  [--crashes N] [--fail-prob P] [--recovery S] [--degrades N] [--nfs-outage]\n          \
                  [--fault-domain node|rack|zone]   correlated crashes on a topology\n          \
                  [--tenants N] [--mix wf1,wf2,..] [--arrival all|staggered:G|poisson:G|bursty:BxG]\n          \
-                 [--policy fifo|fair] [--weights 2,1,..]   multi-tenant run when N > 1 or --mix\n  \
+                 [--policy fifo|fair] [--weights 2,1,..]   multi-tenant run when N > 1 or --mix\n          \
+                 [--admission all|queue:A:D[:fifo|sjf]|shed:W] [--preempt] [--slo S] [--dedup]\n          \
+                 serving-regime knobs: admission control, task preemption, SLO, input dedup\n  \
                  table1 | table2 | table3 | fig4 | fig5 | gini | all\n          \
                  [--seeds 0,1,2] [--quick] [--xla]\n  \
                  chaos   fault-injection sweep: crashes x failure rates (see DESIGN.md \u{a7}7);\n          \
                  [--gc] enables replica GC to probe the storage-vs-blast-radius trade-off;\n          \
                  [--fault-domain rack|zone] widens each crash to a correlated domain outage\n  \
                  tenants multi-tenant sweep: arrivals x mixes x strategies x DFS (DESIGN.md \u{a7}8)\n  \
+                 serve   open-serving sweep: arrival rates x admission policies past the\n          \
+                 saturation knee, writes SERVE_knee.json (DESIGN.md \u{a7}12)\n  \
                  topo    topology sweep: rack oversubscription x strategies (DESIGN.md \u{a7}11)\n  \
                  ablate  c_node/c_task sweep over the pattern workflows"
             );
@@ -247,6 +262,13 @@ fn cmd_run(args: &Args) -> Result<()> {
                 (rec > 0.0).then_some(rec)
             },
             ..Default::default()
+        },
+        serve: wow::serve::ServeConfig {
+            admission: args.get("admission", wow::serve::AdmissionPolicy::AdmitAll)?,
+            preempt: args.has("preempt"),
+            slo_s: args.get("slo", 0.0f64)?,
+            horizon_s: 0.0,
+            dedup: args.has("dedup"),
         },
     };
     // A correlated fault domain needs a topology that has that domain —
@@ -377,6 +399,22 @@ fn cmd_run(args: &Args) -> Result<()> {
             "wasted compute".into(),
             format!("{:.2} h ({:.1}%)", m.wasted_compute_hours, m.wasted_compute_pct()),
         ]);
+    }
+    if cfg.serve.enabled() {
+        t.row(vec!["admission".into(), cfg.serve.admission.label()]);
+        t.row(vec!["tenants rejected".into(), m.tenants_rejected.to_string()]);
+        t.row(vec!["tenants queued".into(), m.tenants_queued.to_string()]);
+        t.row(vec!["preemptions".into(), m.preemptions.to_string()]);
+        t.row(vec!["preempted compute".into(), format!("{:.2} h", m.preempted_compute_hours)]);
+        t.row(vec!["dedup savings".into(), format!("{:.2} GB", m.dedup_bytes.as_gb())]);
+        t.row(vec![
+            "latency p50/p99".into(),
+            format!("{:.0} / {:.0} s", m.latency_p50_s, m.latency_p99_s),
+        ]);
+        t.row(vec!["throughput".into(), format!("{:.2} /min", m.throughput_per_min)]);
+        if cfg.serve.slo_s > 0.0 {
+            t.row(vec!["SLO attainment".into(), format!("{:.0}%", m.slo_attainment_pct)]);
+        }
     }
     t.row(vec!["sim wallclock".into(), format!("{:.2} s", t0.elapsed().as_secs_f64())]);
     println!("{}", t.render());

@@ -19,6 +19,9 @@ pub struct TenantMetrics {
     pub completion: SimTime,
     /// Physical tasks the tenant materialized.
     pub tasks: usize,
+    /// The admission controller turned this tenant away (open serving
+    /// regime); it never ran and its latency fields stay zero.
+    pub rejected: bool,
 }
 
 impl TenantMetrics {
@@ -101,6 +104,34 @@ pub struct RunMetrics {
     /// Per-tenant outcomes, in tenant-index order. Single-tenant runs
     /// carry one entry mirroring the global metrics.
     pub tenants: Vec<TenantMetrics>,
+
+    // --- open serving regime (`serve`; counters stay zero on
+    // --- closed-batch runs, latency/throughput derive from the same
+    // --- per-tenant accounting either way) ---
+    /// Arrivals the admission controller rejected (queue overflow or
+    /// load shedding).
+    pub tenants_rejected: u64,
+    /// Arrivals that waited in the bounded admission queue before
+    /// running.
+    pub tenants_queued: u64,
+    /// Running tasks killed by the precedence preemption pass.
+    pub preemptions: u64,
+    /// Core-hours discarded by preemptions (a subset of
+    /// `wasted_compute_hours`).
+    pub preempted_compute_hours: f64,
+    /// Stage-in bytes served from a cross-tenant shared reference
+    /// replica instead of a fresh DFS read (DPS dedup).
+    pub dedup_bytes: Bytes,
+    /// Median / 99th-percentile workflow sojourn latency (arrival →
+    /// last task finish) over tenants that ran, in seconds.
+    pub latency_p50_s: f64,
+    pub latency_p99_s: f64,
+    /// Completed workflows per minute of horizon (the serve config's
+    /// horizon; the run's makespan when none is set).
+    pub throughput_per_min: f64,
+    /// Share of tenants that ran and met the latency SLO, in percent
+    /// (0 when no SLO is configured).
+    pub slo_attainment_pct: f64,
 }
 
 impl RunMetrics {
@@ -202,6 +233,15 @@ impl RunMetrics {
             wasted_compute_hours,
             recovery_bytes,
             tenants,
+            tenants_rejected,
+            tenants_queued,
+            preemptions,
+            preempted_compute_hours,
+            dedup_bytes,
+            latency_p50_s,
+            latency_p99_s,
+            throughput_per_min,
+            slo_attainment_pct,
         } = self;
         let mut h = Fnv1a::new();
         h.bytes(workflow.as_bytes());
@@ -237,7 +277,15 @@ impl RunMetrics {
         h.u64(recovery_bytes.0);
         h.u64(tenants.len() as u64);
         for t in tenants {
-            let TenantMetrics { name, arrival, first_start, makespan, completion, tasks } = t;
+            let TenantMetrics {
+                name,
+                arrival,
+                first_start,
+                makespan,
+                completion,
+                tasks,
+                rejected,
+            } = t;
             h.bytes(name.as_bytes());
             h.u64(arrival.0);
             match first_start {
@@ -250,7 +298,17 @@ impl RunMetrics {
             h.u64(makespan.0);
             h.u64(completion.0);
             h.u64(*tasks as u64);
+            h.u64(*rejected as u64);
         }
+        h.u64(*tenants_rejected);
+        h.u64(*tenants_queued);
+        h.u64(*preemptions);
+        h.u64(preempted_compute_hours.to_bits());
+        h.u64(dedup_bytes.0);
+        h.u64(latency_p50_s.to_bits());
+        h.u64(latency_p99_s.to_bits());
+        h.u64(throughput_per_min.to_bits());
+        h.u64(slo_attainment_pct.to_bits());
         h.finish()
     }
 }
@@ -332,5 +390,11 @@ mod tests {
         let mut d = m();
         d.strategy = "wow".into();
         assert_ne!(a.fingerprint(), d.fingerprint());
+        let mut e = m();
+        e.preemptions = 3;
+        assert_ne!(a.fingerprint(), e.fingerprint(), "serve counters are fingerprinted");
+        let mut f = m();
+        f.latency_p99_s = 1.5;
+        assert_ne!(a.fingerprint(), f.fingerprint());
     }
 }

@@ -112,6 +112,18 @@ impl SchedView<'_> {
         let max = self.tenant_prec.iter().copied().max().unwrap_or(0);
         (max - self.prec(t)) as f64 * TENANT_BOOST + t.priority()
     }
+
+    /// The highest-effective-priority ready task, ties broken FIFO by
+    /// submission order — the claimant of the serving regime's
+    /// preemption pass (the same ordering every strategy schedules by).
+    pub fn best_ready(&self) -> Option<&ReadyTask> {
+        self.ready.iter().max_by(|a, b| {
+            self.eff_priority(a)
+                .partial_cmp(&self.eff_priority(b))
+                .unwrap()
+                .then(b.submitted_seq.cmp(&a.submitted_seq))
+        })
+    }
 }
 
 /// A scheduling strategy.
@@ -328,5 +340,24 @@ mod tests {
             view.eff_priority(&ready[1]) > view.eff_priority(&ready[0]),
             "tenant precedence must dominate task rank"
         );
+        assert_eq!(view.best_ready().unwrap().id, ready[1].id);
+    }
+
+    #[test]
+    fn best_ready_breaks_ties_by_submission_order() {
+        let mut net = crate::net::FlowNet::new();
+        let cluster =
+            Cluster::build(&mut net, 1, crate::cluster::NodeSpec::paper_worker(1.0), None);
+        let ready = vec![rt(1, 1.0, 7), rt(1, 1.0, 3), rt(2, 0.0, 9)];
+        let view =
+            SchedView { now: SimTime::ZERO, cluster: &cluster, ready: &ready, tenant_prec: &[] };
+        assert_eq!(view.best_ready().unwrap().id, TaskId(9), "highest rank wins");
+        let tied = vec![rt(1, 1.0, 7), rt(1, 1.0, 3)];
+        let view =
+            SchedView { now: SimTime::ZERO, cluster: &cluster, ready: &tied, tenant_prec: &[] };
+        assert_eq!(view.best_ready().unwrap().id, TaskId(3), "ties go to the earliest");
+        let view =
+            SchedView { now: SimTime::ZERO, cluster: &cluster, ready: &[], tenant_prec: &[] };
+        assert!(view.best_ready().is_none());
     }
 }

@@ -1,0 +1,364 @@
+//! The open serving regime: an unbounded tenant arrival stream cut at a
+//! time horizon, admission control, and the static work estimator the
+//! load-shedding and shortest-job-dequeue policies price workflows with.
+//!
+//! The closed-batch executor (`wow tenants`) measures makespan of a
+//! fixed ensemble. This module promotes it to an *open* system in the
+//! queueing-theory sense: workflows stream in at a configured rate until
+//! the horizon, and the observables shift to throughput, p50/p99 sojourn
+//! latency, SLO attainment, and shed/preemption counts — the questions
+//! that matter past the saturation knee. The pieces:
+//!
+//! - [`open_stream`] generates the deterministic Poisson arrival stream
+//!   as a plain [`WorkloadSpec`] (its own RNG stream, zero draws shared
+//!   with the run), so the executor's existing arrival-event machinery
+//!   drives it unchanged;
+//! - [`ServeConfig`] / [`AdmissionPolicy`] configure the executor's
+//!   admission controller, task preemption, per-tenant SLO, and the
+//!   cross-tenant reference-replica dedup. The default config is inert:
+//!   it adds **no events and no RNG draws**, so closed-batch runs take
+//!   exactly the pre-serve code path (mirroring `FaultConfig`);
+//! - [`estimate_core_s`] prices a workflow spec in expected core-seconds
+//!   without sampling anything — admission decisions must not consume
+//!   randomness shared with the simulation.
+
+use crate::util::rng::Rng;
+use crate::util::units::{Bytes, SimTime};
+use crate::workflow::spec::{OutputSize, Rule, WorkflowSpec};
+use crate::workload::{TenantSpec, WorkloadSpec};
+
+/// RNG salt of the arrival stream — its own stream, like the fault
+/// plan's, so serving never perturbs workload or placement randomness.
+const ARRIVAL_SALT: u64 = 0x5E4E_D00D_0A11_CE55;
+
+/// Hard cap on generated tenants: a mis-typed rate/horizon pair should
+/// fail loudly, not allocate a million workflow engines.
+const MAX_STREAM_TENANTS: usize = 100_000;
+
+/// How the admission controller treats a tenant arriving at saturation.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum AdmissionPolicy {
+    /// Every arrival is admitted immediately (the closed-batch default).
+    #[default]
+    AdmitAll,
+    /// At most `active` tenants run concurrently; up to `depth` more
+    /// wait in an admission queue (dequeued per `order` when a running
+    /// tenant finishes); arrivals beyond that are rejected.
+    Queue { active: usize, depth: usize, order: DequeueOrder },
+    /// Load shedding: reject an arrival outright when the estimated
+    /// outstanding work of admitted-but-unfinished tenants plus its own
+    /// would exceed `max_core_s` (an always-empty system still admits,
+    /// so a single oversized workflow cannot wedge the stream).
+    LoadShed { max_core_s: f64 },
+}
+
+/// Dequeue order of the bounded admission queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DequeueOrder {
+    /// Strict arrival order.
+    #[default]
+    Fifo,
+    /// Smallest estimated work first (shortest-job-first; ties keep
+    /// arrival order).
+    Shortest,
+}
+
+impl AdmissionPolicy {
+    pub fn label(&self) -> String {
+        match self {
+            AdmissionPolicy::AdmitAll => "admit-all".into(),
+            AdmissionPolicy::Queue { active, depth, order } => {
+                let o = match order {
+                    DequeueOrder::Fifo => "fifo",
+                    DequeueOrder::Shortest => "sjf",
+                };
+                format!("queue {active}+{depth} {o}")
+            }
+            AdmissionPolicy::LoadShed { max_core_s } => format!("shed {max_core_s:.0}s"),
+        }
+    }
+}
+
+impl std::str::FromStr for AdmissionPolicy {
+    type Err = anyhow::Error;
+
+    /// `all` | `queue:ACTIVE:DEPTH[:fifo|sjf]` | `shed:CORE_SECONDS`.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let lower = s.to_ascii_lowercase();
+        if lower == "all" || lower == "admit-all" {
+            return Ok(AdmissionPolicy::AdmitAll);
+        }
+        if let Some(rest) = lower.strip_prefix("queue:") {
+            let parts: Vec<&str> = rest.split(':').collect();
+            if parts.len() < 2 || parts.len() > 3 {
+                anyhow::bail!("expected queue:ACTIVE:DEPTH[:fifo|sjf], got '{s}'");
+            }
+            let active: usize = parts[0].parse()?;
+            let depth: usize = parts[1].parse()?;
+            if active == 0 {
+                anyhow::bail!("queue admission needs at least one active slot");
+            }
+            let order = match parts.get(2).copied() {
+                None | Some("fifo") => DequeueOrder::Fifo,
+                Some("sjf") | Some("shortest") => DequeueOrder::Shortest,
+                Some(o) => anyhow::bail!("unknown dequeue order '{o}' (fifo|sjf)"),
+            };
+            return Ok(AdmissionPolicy::Queue { active, depth, order });
+        }
+        if let Some(rest) = lower.strip_prefix("shed:") {
+            let max_core_s: f64 = rest.parse()?;
+            if !max_core_s.is_finite() || max_core_s <= 0.0 {
+                anyhow::bail!("shed threshold must be positive core-seconds");
+            }
+            return Ok(AdmissionPolicy::LoadShed { max_core_s });
+        }
+        anyhow::bail!("unknown admission policy '{s}' (all|queue:A:D[:fifo|sjf]|shed:W)")
+    }
+}
+
+/// Configuration of the serving regime. The default is **inert**: the
+/// executor takes exactly the closed-batch code path — no admission
+/// interception, no preemption pass, no dedup bookkeeping, no extra
+/// events or RNG draws (the serve analogue of `FaultConfig::default()`).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ServeConfig {
+    /// Admission decision applied to every tenant arrival.
+    pub admission: AdmissionPolicy,
+    /// Precedence preemption: a ready task of a higher-precedence tenant
+    /// that fits nowhere may kill a running lower-precedence task (once
+    /// per victim task — the rerun is immune, so progress is guaranteed).
+    pub preempt: bool,
+    /// Per-tenant latency SLO in seconds (arrival → last task finish);
+    /// 0 disables SLO attainment accounting.
+    pub slo_s: f64,
+    /// Throughput-reporting horizon in seconds (the arrival stream's
+    /// cutoff); 0 falls back to the run's makespan.
+    pub horizon_s: f64,
+    /// Cross-tenant reference-replica dedup: tenants reading the same
+    /// workflow-input content share node-resident replicas through the
+    /// DPS instead of re-reading the DFS.
+    pub dedup: bool,
+}
+
+impl ServeConfig {
+    /// True if any serving mechanism is active. A disabled config takes
+    /// exactly the pre-serve code path.
+    pub fn enabled(&self) -> bool {
+        self.preempt
+            || self.dedup
+            || self.slo_s > 0.0
+            || self.horizon_s > 0.0
+            || self.admission != AdmissionPolicy::AdmitAll
+    }
+}
+
+/// Generate the open arrival stream: Poisson arrivals at mean gap
+/// `mean_gap_s`, cycling through `mix`, cut off at `horizon_s`. The
+/// first tenant arrives at t = 0 (matching [`crate::workload::Arrival`]'s
+/// Poisson process) so the stream is never empty. Deterministic in
+/// `seed`; the draws come from a serve-private RNG stream.
+pub fn open_stream(
+    name: &str,
+    mix: &[WorkflowSpec],
+    mean_gap_s: f64,
+    horizon_s: f64,
+    seed: u64,
+) -> WorkloadSpec {
+    assert!(!mix.is_empty(), "open stream needs a non-empty workflow mix");
+    assert!(mean_gap_s > 0.0, "mean arrival gap must be positive");
+    assert!(horizon_s >= 0.0, "horizon must be non-negative");
+    let mut rng = Rng::new(seed ^ ARRIVAL_SALT);
+    let mut tenants = Vec::new();
+    let mut t = 0.0;
+    loop {
+        let i = tenants.len();
+        assert!(i < MAX_STREAM_TENANTS, "arrival stream exceeds {MAX_STREAM_TENANTS} tenants");
+        let wf = &mix[i % mix.len()];
+        tenants.push(TenantSpec {
+            name: format!("s{i}:{}", wf.name),
+            workflow: wf.clone(),
+            arrival: SimTime::from_secs_f64(t),
+            weight: 1.0,
+        });
+        let u = rng.next_f64();
+        t += -mean_gap_s * (1.0 - u).ln();
+        if t > horizon_s {
+            break;
+        }
+    }
+    WorkloadSpec { name: name.to_string(), tenants }
+}
+
+/// Expected compute demand of a workflow in core-seconds, derived
+/// statically from the spec (expected stage task counts × the compute
+/// model's mean × requested cores). No sampling: admission decisions
+/// must never consume randomness shared with the run. The estimate uses
+/// the same instantiation arithmetic the dynamic engine applies, with
+/// distribution means in place of draws, so it ranks workflows by true
+/// demand even though any individual instance jitters around it.
+pub fn estimate_core_s(spec: &WorkflowSpec) -> f64 {
+    let mean_input_gb = if spec.input_files_gb.is_empty() {
+        0.0
+    } else {
+        spec.total_input_gb() / spec.input_files_gb.len() as f64
+    };
+    // Per earlier stage: expected task count, expected per-file output
+    // GB, expected per-task total output GB.
+    let mut counts: Vec<f64> = Vec::with_capacity(spec.stages.len());
+    let mut out_file_gb: Vec<f64> = Vec::with_capacity(spec.stages.len());
+    let mut out_total_gb: Vec<f64> = Vec::with_capacity(spec.stages.len());
+    let mut total_core_s = 0.0;
+    for st in &spec.stages {
+        let (n, in_gb) = match &st.rule {
+            Rule::Source { count, inputs_per_task } => {
+                (*count as f64, *inputs_per_task as f64 * mean_input_gb)
+            }
+            Rule::PerTask { from } => (counts[from.0], out_total_gb[from.0]),
+            Rule::PerFile { from } => {
+                let files = counts[from.0] * spec.stages[from.0].out_count as f64;
+                (files, out_file_gb[from.0])
+            }
+            Rule::Fanout { from, count } => {
+                (counts[from.0] * *count as f64, out_total_gb[from.0])
+            }
+            Rule::GroupBy { from, div } => {
+                let n = (counts[from.0] / *div as f64).ceil().max(1.0);
+                (n, out_total_gb[from.0] * *div as f64)
+            }
+            Rule::GatherAll { from } => {
+                let gb: f64 = from.iter().map(|f| counts[f.0] * out_total_gb[f.0]).sum();
+                (1.0, gb)
+            }
+        };
+        let per_file = match &st.out_size {
+            OutputSize::UniformGb(lo, hi) => (lo + hi) / 2.0,
+            OutputSize::RatioOfInput(r) => in_gb * r,
+            OutputSize::FixedGb(gb) => *gb,
+        };
+        let compute_s = st.compute.base_s + st.compute.per_input_gb_s * in_gb;
+        total_core_s += n * compute_s.max(0.05) * st.cores as f64;
+        counts.push(n);
+        out_file_gb.push(per_file);
+        out_total_gb.push(per_file * st.out_count as f64);
+    }
+    total_core_s
+}
+
+/// Content key of a workflow-input (reference) file: two tenants running
+/// the same workflow spec hold bit-identical reference inputs (sizes are
+/// fixed by the spec), so `(workflow name, input index, size)` identifies
+/// the content. The DPS dedups node-resident replicas across tenants by
+/// this key.
+pub fn content_key(workflow: &str, input_idx: u64, size: Bytes) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |x: u64| {
+        for &b in &x.to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    for &b in workflow.as_bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    eat(input_idx);
+    eat(size.0);
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::patterns;
+
+    #[test]
+    fn default_config_is_disabled() {
+        assert!(!ServeConfig::default().enabled());
+        let preempt = ServeConfig { preempt: true, ..Default::default() };
+        assert!(preempt.enabled());
+        let queued = ServeConfig {
+            admission: AdmissionPolicy::Queue {
+                active: 2,
+                depth: 4,
+                order: DequeueOrder::Fifo,
+            },
+            ..Default::default()
+        };
+        assert!(queued.enabled());
+    }
+
+    #[test]
+    fn admission_policy_parses() {
+        assert_eq!("all".parse::<AdmissionPolicy>().unwrap(), AdmissionPolicy::AdmitAll);
+        assert_eq!(
+            "queue:4:8".parse::<AdmissionPolicy>().unwrap(),
+            AdmissionPolicy::Queue { active: 4, depth: 8, order: DequeueOrder::Fifo }
+        );
+        assert_eq!(
+            "queue:2:2:sjf".parse::<AdmissionPolicy>().unwrap(),
+            AdmissionPolicy::Queue { active: 2, depth: 2, order: DequeueOrder::Shortest }
+        );
+        assert_eq!(
+            "shed:5000".parse::<AdmissionPolicy>().unwrap(),
+            AdmissionPolicy::LoadShed { max_core_s: 5000.0 }
+        );
+        assert!("queue:0:4".parse::<AdmissionPolicy>().is_err());
+        assert!("shed:-1".parse::<AdmissionPolicy>().is_err());
+        assert!("bogus".parse::<AdmissionPolicy>().is_err());
+    }
+
+    #[test]
+    fn open_stream_is_deterministic_and_cut_at_horizon() {
+        let mix = [patterns::chain(), patterns::fork()];
+        let a = open_stream("s", &mix, 60.0, 600.0, 3);
+        let b = open_stream("s", &mix, 60.0, 600.0, 3);
+        assert_eq!(a.n_tenants(), b.n_tenants());
+        for (x, y) in a.tenants.iter().zip(&b.tenants) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.name, y.name);
+        }
+        assert_eq!(a.tenants[0].arrival, SimTime::ZERO, "first arrival opens the stream");
+        let horizon = SimTime::from_secs_f64(600.0);
+        assert!(a.tenants.iter().all(|t| t.arrival <= horizon));
+        // Mean gap 60 s over 600 s: ~11 tenants in expectation; the
+        // stream must actually stream, not degenerate to one arrival.
+        assert!(a.n_tenants() > 3, "{} tenants", a.n_tenants());
+        // Mix cycles in arrival order.
+        assert!(a.tenants[0].name.ends_with(&mix[0].name));
+        assert!(a.tenants[1].name.ends_with(&mix[1].name));
+    }
+
+    #[test]
+    fn open_stream_varies_with_seed_and_rate() {
+        let mix = [patterns::chain()];
+        let a = open_stream("s", &mix, 60.0, 600.0, 3);
+        let b = open_stream("s", &mix, 60.0, 600.0, 4);
+        let gaps = |w: &WorkloadSpec| -> Vec<SimTime> {
+            w.tenants.iter().map(|t| t.arrival).collect()
+        };
+        assert_ne!(gaps(&a), gaps(&b), "different seed, different arrivals");
+        // 4× the rate packs roughly 4× the tenants into the horizon.
+        let fast = open_stream("s", &mix, 15.0, 600.0, 3);
+        assert!(fast.n_tenants() > 2 * a.n_tenants(), "{} vs {}", fast.n_tenants(), a.n_tenants());
+    }
+
+    #[test]
+    fn work_estimate_is_positive_and_ranks_by_size() {
+        let chain = estimate_core_s(&patterns::chain());
+        let fork = estimate_core_s(&patterns::fork());
+        assert!(chain > 0.0 && fork > 0.0);
+        // Doubling a workflow's source width must raise its estimate.
+        let mut wide = patterns::chain();
+        if let Rule::Source { count, .. } = &mut wide.stages[0].rule {
+            *count *= 2;
+        }
+        assert!(estimate_core_s(&wide) > chain);
+    }
+
+    #[test]
+    fn content_keys_collide_only_on_identical_content() {
+        let a = content_key("bwa", 0, Bytes::from_gb(1.0));
+        assert_eq!(a, content_key("bwa", 0, Bytes::from_gb(1.0)), "same content, same key");
+        assert_ne!(a, content_key("bwa", 1, Bytes::from_gb(1.0)));
+        assert_ne!(a, content_key("blast", 0, Bytes::from_gb(1.0)));
+        assert_ne!(a, content_key("bwa", 0, Bytes::from_gb(2.0)));
+    }
+}

@@ -1,0 +1,178 @@
+//! Serving-regime integration tests (DESIGN.md §12): the open-system
+//! machinery — admission control, preemption, cross-tenant dedup —
+//! must keep the determinism contract (bit-identical fingerprints
+//! across simulation cores, even under faults) and must stay perfectly
+//! inert when disabled (a `ServeConfig::default()` run IS the
+//! pre-serve code path).
+
+use wow::dfs::DfsKind;
+use wow::exec::{run, run_workload, RunConfig, SimCore};
+use wow::fault::FaultConfig;
+use wow::scheduler::{Strategy, TenantPolicy};
+use wow::serve::{self, AdmissionPolicy, DequeueOrder, ServeConfig};
+use wow::util::units::{Bytes, SimTime};
+use wow::workflow::patterns;
+use wow::workflow::spec::{ComputeModel, OutputSize, Rule, StageSpec, WorkflowSpec};
+use wow::workflow::task::StageId;
+use wow::workload::{TenantSpec, WorkloadSpec};
+
+/// A tenant workflow whose map tasks each occupy a full 16-core node:
+/// a handful of concurrent tenants saturates the 8-node cluster, so
+/// fair-share + preemption has real evictions to do.
+fn hog() -> WorkflowSpec {
+    WorkflowSpec {
+        name: "hog".into(),
+        stages: vec![
+            StageSpec {
+                name: "map".into(),
+                rule: Rule::Source { count: 4, inputs_per_task: 1 },
+                cores: 16,
+                mem: Bytes::from_gb(4.0),
+                compute: ComputeModel::fixed(45.0),
+                out_count: 1,
+                out_size: OutputSize::FixedGb(0.3),
+            },
+            StageSpec {
+                name: "reduce".into(),
+                rule: Rule::PerTask { from: StageId(0) },
+                cores: 2,
+                mem: Bytes::from_gb(2.0),
+                compute: ComputeModel::fixed(10.0),
+                out_count: 1,
+                out_size: OutputSize::RatioOfInput(0.5),
+            },
+        ],
+        input_files_gb: vec![0.5; 4],
+    }
+}
+
+fn serving_cfg(strategy: Strategy) -> RunConfig {
+    RunConfig {
+        strategy,
+        dfs: DfsKind::Ceph,
+        seed: 3,
+        tenant_policy: TenantPolicy::FairShare,
+        serve: ServeConfig {
+            admission: AdmissionPolicy::Queue { active: 6, depth: 8, order: DequeueOrder::Fifo },
+            preempt: true,
+            slo_s: 400.0,
+            horizon_s: 300.0,
+            dedup: true,
+        },
+        ..Default::default()
+    }
+}
+
+/// The tentpole determinism property: a serve run — open arrivals,
+/// bounded-queue admission, preemptions, dedup, AND an active fault
+/// plan — fingerprints bit-identically on the incremental, checked
+/// (oracle-asserting) and eager cores.
+#[test]
+fn serve_run_fingerprint_identical_across_cores() {
+    let wl = serve::open_stream("stream", &[hog()], 30.0, 300.0, 3);
+    let mut cfg = serving_cfg(Strategy::Wow);
+    cfg.fault = FaultConfig {
+        node_crashes: 1,
+        crash_window_s: (40.0, 200.0),
+        recovery_s: Some(60.0),
+        task_fail_prob: 0.05,
+        ..Default::default()
+    };
+    let mut prints = Vec::new();
+    for core in [SimCore::Incremental, SimCore::Checked, SimCore::Eager] {
+        let mut c = cfg.clone();
+        c.core = core;
+        let m = run_workload(&wl, &c);
+        if core == SimCore::Incremental {
+            assert!(m.preemptions > 0, "scenario must actually preempt");
+            assert!(m.tasks_rerun >= m.preemptions + m.task_failures);
+        }
+        prints.push((core, m.fingerprint()));
+    }
+    let (_, first) = prints[0];
+    for (core, fp) in &prints {
+        assert_eq!(*fp, first, "{core:?} fingerprint diverged from Incremental");
+    }
+}
+
+/// Disabled serving takes exactly the pre-serve code path: spelling
+/// out `ServeConfig::default()` is the same run, bit for bit, as never
+/// mentioning serving — no extra events, no extra RNG draws — and all
+/// serve counters report zero.
+#[test]
+fn default_serve_config_is_inert() {
+    let spec = patterns::fork();
+    let base =
+        RunConfig { strategy: Strategy::Wow, dfs: DfsKind::Ceph, seed: 7, ..Default::default() };
+    let plain = run(&spec, &base);
+    let mut cfg = base.clone();
+    cfg.serve = ServeConfig::default();
+    let explicit = run(&spec, &cfg);
+    assert_eq!(plain, explicit);
+    assert_eq!(plain.fingerprint(), explicit.fingerprint());
+    assert_eq!(plain.tenants_rejected, 0);
+    assert_eq!(plain.tenants_queued, 0);
+    assert_eq!(plain.preemptions, 0);
+    assert_eq!(plain.preempted_compute_hours, 0.0);
+    assert_eq!(plain.dedup_bytes, Bytes::ZERO);
+    assert_eq!(plain.slo_attainment_pct, 0.0, "no SLO configured, no attainment");
+}
+
+/// Preemption property, across seeds: every preempted task's partial
+/// outputs are invalidated and the task re-produced — observable as
+/// (a) every tenant still completes, (b) reruns cover the evictions,
+/// (c) the checked core's shadow oracles accept the whole run, and
+/// (d) the run stays bit-identical on a rerun (no phantom replicas
+/// feeding later placement decisions).
+#[test]
+fn preempted_outputs_are_invalidated_and_reproduced() {
+    for seed in 0..3u64 {
+        let mk = |name: &str, at: f64| TenantSpec {
+            name: name.into(),
+            workflow: hog(),
+            arrival: SimTime::from_secs_f64(at),
+            weight: 1.0,
+        };
+        // Two saturating tenants at t=0 fill the cluster; two late
+        // arrivals with zero usage outrank them under fair-share.
+        let wl = WorkloadSpec {
+            name: "preempt-prop".into(),
+            tenants: vec![mk("a", 0.0), mk("b", 0.0), mk("c", 20.0), mk("d", 25.0)],
+        };
+        let mut cfg = serving_cfg(Strategy::Wow);
+        cfg.seed = seed;
+        cfg.serve.admission = AdmissionPolicy::AdmitAll;
+        cfg.serve.horizon_s = 0.0;
+        cfg.core = SimCore::Checked;
+        let m = run_workload(&wl, &cfg);
+        assert!(m.preemptions > 0, "seed {seed}: saturated + late tenants must preempt");
+        assert!(m.tasks_rerun >= m.preemptions, "seed {seed}: every victim reruns");
+        assert!(m.preempted_compute_hours > 0.0, "seed {seed}");
+        assert_eq!(m.tenants.len(), 4);
+        for t in &m.tenants {
+            assert!(!t.rejected, "seed {seed}: admit-all rejects nobody");
+            assert!(t.first_start.is_some(), "seed {seed}: tenant {} ran", t.name);
+        }
+        let m2 = run_workload(&wl, &cfg);
+        assert_eq!(m.fingerprint(), m2.fingerprint(), "seed {seed}: rerun must be bit-identical");
+    }
+}
+
+/// Cross-tenant dedup only ever removes network work — it must not
+/// change what completes, and it must report savings on a stream whose
+/// tenants share reference inputs.
+#[test]
+fn dedup_saves_bytes_without_changing_completions() {
+    let wl = serve::open_stream("dedup-stream", &[hog()], 40.0, 240.0, 5);
+    let mut cfg = serving_cfg(Strategy::Wow);
+    cfg.seed = 5;
+    let with = run_workload(&wl, &cfg);
+    let mut cfg_off = cfg.clone();
+    cfg_off.serve.dedup = false;
+    let without = run_workload(&wl, &cfg_off);
+    assert!(with.dedup_bytes.0 > 0, "shared reference inputs must dedup");
+    assert_eq!(without.dedup_bytes, Bytes::ZERO);
+    assert_eq!(with.tenants.len(), without.tenants.len());
+    assert!(with.tenants.iter().all(|t| t.first_start.is_some()));
+    assert_eq!(with.fingerprint(), run_workload(&wl, &cfg).fingerprint());
+}

@@ -182,6 +182,61 @@ fn brownout_on_racks_stays_deterministic_and_checked() {
     assert_eq!(base, run(&spec, &checked), "checked core under brownouts");
 }
 
+/// Satellite regression for rack-link brownouts: throttling a rack's
+/// shared uplink slows exactly the flows that cross that rack's
+/// boundary — within-rack traffic keeps its rate bit for bit, and
+/// restoring the link heals the crossing flow's rate exactly.
+#[test]
+fn rack_uplink_brownout_throttles_only_boundary_crossing_flows() {
+    let mut net = FlowNet::new();
+    let c = Cluster::build_topo(&mut net, 8, NodeSpec::paper_worker(1.0), None, racks2(4.0));
+    let in_rack = |r: usize| -> Vec<NodeId> {
+        (0..8).map(NodeId).filter(|n| c.rack_of(*n) == Some(r)).collect()
+    };
+    let (r0, r1) = (in_rack(0), in_rack(1));
+    assert!(r0.len() >= 3 && !r1.is_empty());
+    let within = net.add_flow(Bytes::from_gb(200.0), c.transfer_path(r0[0], r0[1]));
+    let cross = net.add_flow(Bytes::from_gb(200.0), c.transfer_path(r0[2], r1[0]));
+    let w0 = net.rate_of(within).unwrap();
+    let x0 = net.rate_of(cross).unwrap();
+    assert!(w0 > 0.0 && x0 > 0.0);
+    // Exactly what the executor's RackLinkDegrade arm does: rescale
+    // both directions of rack 0's shared ToR uplink.
+    let (up, down, cap) = c.rack_link(0);
+    net.set_capacity(up, Bandwidth(cap * 0.01));
+    net.set_capacity(down, Bandwidth(cap * 0.01));
+    let w1 = net.rate_of(within).unwrap();
+    let x1 = net.rate_of(cross).unwrap();
+    assert!(x1 <= cap * 0.01 + 1e-6, "crossing flow capped by the browned-out uplink");
+    assert!(x1 < x0, "brownout must slow the crossing flow: {x1} vs {x0}");
+    assert_eq!(w0.to_bits(), w1.to_bits(), "within-rack flow shares no browned resource");
+    // Restore both directions: the crossing rate heals exactly.
+    net.set_capacity(up, Bandwidth(cap));
+    net.set_capacity(down, Bandwidth(cap));
+    assert_eq!(net.rate_of(cross).unwrap().to_bits(), x0.to_bits());
+    assert_eq!(net.rate_of(within).unwrap().to_bits(), w0.to_bits());
+}
+
+/// `rack_degrades` end to end: the executor applies the uplink
+/// brownout, counts it with the link brownouts, reprices the DPS, and
+/// the checked core proves the run stays bit-identical.
+#[test]
+fn rack_brownouts_through_the_executor_stay_deterministic() {
+    let spec = patterns::fork();
+    let mut c = cfg(Strategy::Wow, racks2(4.0));
+    c.fault.rack_degrades = 1;
+    // Early window: fork's 30 s source stage is still running, so the
+    // brownout lands inside the run regardless of the final makespan.
+    c.fault.crash_window_s = (5.0, 20.0);
+    c.fault.degrade_duration_s = 60.0;
+    let m = run(&spec, &c);
+    assert_eq!(m.link_degrades, 1, "the rack brownout is counted");
+    assert_eq!(m, run(&spec, &c), "reruns stay bit-identical");
+    let mut checked = c.clone();
+    checked.core = SimCore::Checked;
+    assert_eq!(m, run(&spec, &checked), "checked core under a rack brownout");
+}
+
 #[test]
 fn wow_run_without_topology_flags_matches_pre_topology_config() {
     // Guard for the CLI default: a RunConfig built field-by-field with
