@@ -36,7 +36,8 @@ mod common;
 
 use common::Jv;
 use wow::cluster::Topology;
-use wow::exec::{run_workload, RunConfig, SimCore};
+use wow::dps::cost::NativeCost;
+use wow::exec::{run_workload, run_workload_observed, ObserveConfig, RunConfig, SimCore};
 use wow::scheduler::Strategy;
 use wow::workflow::patterns;
 use wow::workload::{Arrival, WorkloadSpec};
@@ -111,23 +112,40 @@ fn main() {
                 "  -> {speedup_vs_eager:>6.2}x vs eager, {speedup:>6.2}x vs naive \
                  (fingerprint {fp_inc:016x} identical)\n"
             );
-            let key_topo = if topology.is_flat() { "" } else { "-racks" };
-            report.row(
-                &format!("{nodes}n-{tenants}t-{}{key_topo}", strategy.label()),
-                &[
-                    ("nodes", Jv::U(nodes as u64)),
-                    ("tenants", Jv::U(tenants as u64)),
-                    ("strategy", Jv::S(strategy.label().to_string())),
-                    ("topology", Jv::S(topology.label())),
-                    ("incremental_s", Jv::F(inc_s)),
-                    ("eager_s", Jv::F(eager_s)),
-                    ("naive_s", Jv::F(naive_s)),
-                    ("speedup", Jv::F(speedup)),
-                    ("speedup_vs_eager", Jv::F(speedup_vs_eager)),
-                    ("fingerprint", Jv::S(format!("{fp_inc:016x}"))),
-                    ("smoke", Jv::B(smoke)),
-                ],
+            // One profiled incremental run per cell: simulator
+            // self-metrics (event counts, recomputes, replay folds,
+            // MinTimeSet ops, per-section wall time) land in the JSON
+            // rows so the simulator's own workload is tracked
+            // PR-over-PR, not just end-to-end seconds. Profiling is
+            // observation-only: the fingerprint must not move.
+            let profiled = run_workload_observed(
+                &wl,
+                &cfg(SimCore::Incremental),
+                Box::new(NativeCost),
+                &ObserveConfig { trace: None, profile: true },
             );
+            assert_eq!(
+                profiled.metrics.fingerprint(),
+                fp_inc,
+                "profiling perturbed the run on {nodes}n x {tenants}t / {strategy:?}"
+            );
+            let prof = profiled.profile.expect("profile requested");
+            let key_topo = if topology.is_flat() { "" } else { "-racks" };
+            let mut fields = vec![
+                ("nodes", Jv::U(nodes as u64)),
+                ("tenants", Jv::U(tenants as u64)),
+                ("strategy", Jv::S(strategy.label().to_string())),
+                ("topology", Jv::S(topology.label())),
+                ("incremental_s", Jv::F(inc_s)),
+                ("eager_s", Jv::F(eager_s)),
+                ("naive_s", Jv::F(naive_s)),
+                ("speedup", Jv::F(speedup)),
+                ("speedup_vs_eager", Jv::F(speedup_vs_eager)),
+                ("fingerprint", Jv::S(format!("{fp_inc:016x}"))),
+                ("smoke", Jv::B(smoke)),
+            ];
+            fields.extend(prof.fields());
+            report.row(&format!("{nodes}n-{tenants}t-{}{key_topo}", strategy.label()), &fields);
         }
     }
     report.write("BENCH_scale.json");

@@ -1,11 +1,13 @@
 //! Minimal bench harness shared by the `rust/benches/*` targets
 //! (criterion is unavailable offline; `harness = false` + wall-clock
-//! timing keeps `cargo bench` functional), plus a dependency-free JSON
-//! reporter so benches emit machine-readable `BENCH_*.json` files and
-//! the perf trajectory can be tracked PR-over-PR.
+//! timing keeps `cargo bench` functional). JSON emission delegates to
+//! [`wow::util::json`] so every `BENCH_*.json` shares one renderer;
+//! [`JsonReport`] keeps the benches' `row(label, fields)` call shape.
 #![allow(dead_code)] // each bench target uses a subset of these helpers
 
 use std::time::Instant;
+pub use wow::util::json::Jv;
+use wow::util::json::{self, RowsDoc};
 
 /// Time one closure, returning (result, seconds).
 pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
@@ -28,74 +30,30 @@ pub fn bench_n(label: &str, iters: usize, mut f: impl FnMut()) -> (f64, f64) {
     (min, mean)
 }
 
-/// A JSON scalar for [`JsonReport`] rows.
-pub enum Jv {
-    F(f64),
-    U(u64),
-    S(String),
-    B(bool),
-}
-
-impl Jv {
-    fn render(&self) -> String {
-        match self {
-            // JSON has no NaN/inf; benches never produce them, but be
-            // explicit rather than emit an invalid file.
-            Jv::F(x) if x.is_finite() => format!("{x}"),
-            Jv::F(_) => "null".into(),
-            Jv::U(x) => format!("{x}"),
-            Jv::S(s) => format!("\"{}\"", escape(s)),
-            Jv::B(b) => format!("{b}"),
-        }
-    }
-}
-
-fn escape(s: &str) -> String {
-    let mut out = String::with_capacity(s.len());
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out
-}
-
 /// Accumulates bench rows and writes them as a single JSON document:
-/// `{"bench": NAME, "rows": [{"label": L, ...fields}, ...]}`.
+/// `{"bench": NAME, "rows": [{"label": L, ...fields}, ...]}` — a thin
+/// label-first wrapper over [`wow::util::json::RowsDoc`].
 pub struct JsonReport {
-    bench: String,
-    rows: Vec<String>,
+    doc: RowsDoc,
 }
 
 impl JsonReport {
     pub fn new(bench: &str) -> Self {
-        JsonReport { bench: bench.to_string(), rows: Vec::new() }
+        JsonReport { doc: RowsDoc::new("bench", bench) }
     }
 
-    /// Append one row; field order is preserved.
+    /// Append one row; field order is preserved, `label` leads.
     pub fn row(&mut self, label: &str, fields: &[(&str, Jv)]) {
-        let mut parts = vec![format!("\"label\": \"{}\"", escape(label))];
+        let mut parts = vec![format!("\"label\": {}", Jv::S(label.to_string()).render())];
         for (k, v) in fields {
-            parts.push(format!("\"{}\": {}", escape(k), v.render()));
+            parts.push(format!("\"{}\": {}", json::escape(k), v.render()));
         }
-        self.rows.push(format!("    {{{}}}", parts.join(", ")));
+        self.doc.push_row(format!("{{{}}}", parts.join(", ")));
     }
 
     /// Write the report to `path` (e.g. `BENCH_scale.json` at the repo
     /// root), announcing the file on stdout.
     pub fn write(&self, path: &str) {
-        let doc = format!(
-            "{{\n  \"bench\": \"{}\",\n  \"rows\": [\n{}\n  ]\n}}\n",
-            escape(&self.bench),
-            self.rows.join(",\n")
-        );
-        match std::fs::write(path, doc) {
-            Ok(()) => println!("\nwrote {path} ({} rows)", self.rows.len()),
-            Err(e) => eprintln!("warn: could not write {path}: {e}"),
-        }
+        self.doc.write(path);
     }
 }

@@ -37,6 +37,7 @@ use crate::scheduler::wow::WowParams;
 use crate::scheduler::{Action, ReadyTask, SchedView, Scheduler, Strategy, TenantPolicy};
 use crate::serve::{self, AdmissionPolicy, DequeueOrder, ServeConfig};
 use crate::sim::event::EventQueue;
+use crate::trace::{SimProfile, Trace, TraceConfig, TraceEvent, Tracer};
 use crate::util::fxmap::{FastMap, FastSet};
 use crate::util::rng::Rng;
 use crate::util::units::{Bandwidth, Bytes, SimTime};
@@ -195,7 +196,43 @@ pub fn run_workload_with_backend(
     cfg: &RunConfig,
     backend: Box<dyn CostEval>,
 ) -> RunMetrics {
-    Executor::new(workload.clone(), cfg.clone(), backend).run()
+    Executor::new(workload.clone(), cfg.clone(), backend).run_observed(false).metrics
+}
+
+/// What to observe during a run, on top of the metrics every run
+/// produces. The default observes nothing and is byte-identical to the
+/// plain entry points.
+#[derive(Debug, Clone, Default)]
+pub struct ObserveConfig {
+    /// Record a structured event trace ([`crate::trace`]).
+    pub trace: Option<TraceConfig>,
+    /// Collect simulator self-metrics (event/recompute counters plus
+    /// wall-clock section timers).
+    pub profile: bool,
+}
+
+/// A run's metrics plus whatever observation artifacts were requested.
+pub struct RunOutput {
+    pub metrics: RunMetrics,
+    pub trace: Option<Trace>,
+    pub profile: Option<SimProfile>,
+}
+
+/// Run a multi-tenant workload, optionally recording a trace and/or a
+/// simulator profile. Observation is strictly passive: `metrics` (and
+/// its fingerprint) are bit-identical whatever `obs` requests.
+pub fn run_workload_observed(
+    workload: &WorkloadSpec,
+    cfg: &RunConfig,
+    backend: Box<dyn CostEval>,
+    obs: &ObserveConfig,
+) -> RunOutput {
+    let mut ex = Executor::new(workload.clone(), cfg.clone(), backend);
+    if let Some(tc) = &obs.trace {
+        ex.tracer = Tracer::new(tc);
+    }
+    ex.prof_wall = obs.profile;
+    ex.run_observed(obs.profile)
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -275,6 +312,7 @@ struct TenantRt {
 /// "used" column).
 #[derive(Debug)]
 struct CompletedCop {
+    id: CopId,
     dst: NodeId,
     files: Vec<FileId>,
     used: bool,
@@ -367,6 +405,15 @@ struct Executor {
     preempt_counts: FastMap<TaskId, u32>,
     /// DFS reads avoided by cross-tenant reference-replica sharing.
     dedup_bytes: Bytes,
+
+    // Observability (inert by default: the tracer is a `None` branch and
+    // the profile counters are plain increments; neither touches RNG or
+    // any state that feeds `RunMetrics`).
+    tracer: Tracer,
+    prof: SimProfile,
+    /// Gate for the `Instant`-based wall timers (counter increments are
+    /// always on; reading the clock is opt-in via `--profile`).
+    prof_wall: bool,
 }
 
 impl Executor {
@@ -494,11 +541,15 @@ impl Executor {
             preempted_core_seconds: 0.0,
             preempt_counts: FastMap::default(),
             dedup_bytes: Bytes::ZERO,
+            tracer: Tracer::off(),
+            prof: SimProfile::default(),
+            prof_wall: false,
             cfg,
         }
     }
 
-    fn run(mut self) -> RunMetrics {
+    fn run_observed(mut self, profile: bool) -> RunOutput {
+        let wall0 = self.prof_wall.then(std::time::Instant::now);
         // Compile and enqueue the fault schedule. A disabled config
         // yields an empty plan: no events, no RNG draws, zero drift from
         // the fault-free path.
@@ -544,12 +595,27 @@ impl Executor {
                 self.tenants.iter().map(|t| t.engine.n_tasks_completed()).sum::<usize>(),
                 self.tenants.iter().map(|t| t.engine.n_tasks_materialized()).sum::<usize>()
             );
+            // Interval samplers fire at grid points strictly before `t`.
+            // All sampled state is piecewise-constant on `[now, t)` (no
+            // event fires in between), so we stamp the *current* state at
+            // the grid time without advancing the network there —
+            // splitting a flow step at a sample instant would change the
+            // f64 fold order and perturb the fingerprint.
+            while let Some(g) = self.tracer.due_sample(t) {
+                let s = self.sample_state();
+                self.tracer.record_sample(g, s);
+            }
+            let w = self.prof_wall.then(std::time::Instant::now);
             self.net.advance_to(t);
+            if let Some(w) = w {
+                self.prof.wall_net_s += w.elapsed().as_secs_f64();
+            }
 
             let mut need_schedule = false;
 
             // Flow completions.
             for flow in self.net.take_completed() {
+                self.prof.flow_completions += 1;
                 if let Some(owner) = self.disown_flow(flow) {
                     need_schedule |= self.flow_finished(owner, t);
                 } else if let Some(cop_id) = self.lcs.flow_done(flow) {
@@ -560,6 +626,7 @@ impl Executor {
             // Timed events.
             while self.events.peek_time() == Some(t) {
                 let (_, ev) = self.events.pop().unwrap();
+                self.prof.events_processed += 1;
                 match ev {
                     Event::ComputeDone(task, attempt) => {
                         // Ignore completions from executions a crash
@@ -588,7 +655,12 @@ impl Executor {
                             if sources_ok && self.cluster.node(cop.dst).alive {
                                 self.lcs.start_cop(&cop, &self.cluster, &mut self.net);
                             } else {
-                                self.dps.abort_cop(id);
+                                if self.dps.abort_cop(id).is_some() {
+                                    self.tracer.emit(t, || TraceEvent::CopAbort {
+                                        cop: id.0,
+                                        reason: "sources-lost",
+                                    });
+                                }
                                 need_schedule = true;
                             }
                         }
@@ -612,7 +684,50 @@ impl Executor {
             }
         }
 
-        self.finish_metrics()
+        let metrics = self.finish_metrics();
+        let profile = profile.then(|| {
+            let mut p = self.prof.clone();
+            let (recomputes, folds, steps, mts) = self.net.profile_counters();
+            p.net_recomputes = recomputes;
+            p.replay_folds = folds;
+            p.replay_steps = steps;
+            p.mts_ops = mts;
+            p.trace_events = self.tracer.len() as u64;
+            if let Some(w) = wall0 {
+                p.wall_total_s = w.elapsed().as_secs_f64();
+            }
+            p
+        });
+        let tracer = std::mem::replace(&mut self.tracer, Tracer::off());
+        RunOutput { metrics, trace: tracer.finish(self.cluster.n_workers()), profile }
+    }
+
+    /// Snapshot the sampled gauges at the current instant (queue depths,
+    /// core occupancy, rack-uplink utilization, live replica bytes).
+    /// Read-only: borrows `&self` so it cannot perturb the run.
+    fn sample_state(&self) -> TraceEvent {
+        let node_util: Vec<f64> = self
+            .cluster
+            .workers()
+            .map(|n| {
+                let node = self.cluster.node(n);
+                (node.spec.cores - node.free_cores) as f64 / node.spec.cores as f64
+            })
+            .collect();
+        let rack_util: Vec<f64> = (0..self.cluster.n_racks())
+            .map(|r| {
+                let (up, _, cap) = self.cluster.rack_link(r);
+                if cap > 0.0 { self.net.resource_rate(up) / cap } else { 0.0 }
+            })
+            .collect();
+        TraceEvent::Sample {
+            running: self.running.len() as u64,
+            ready: (self.ready.len() - self.n_ready_dead) as u64,
+            admit_queue: self.admit_queue.len() as u64,
+            replica_gb: self.node_replica_bytes.iter().sum::<f64>() / 1e9,
+            node_util,
+            rack_util,
+        }
     }
 
     /// All tenants have arrived and either been shed or finished every
@@ -634,6 +749,7 @@ impl Executor {
                 } else if self.admit_queue.len() < depth {
                     self.admit_queue.push(tenant);
                     self.n_queued += 1;
+                    self.trace_admission(tenant, "queue");
                 } else {
                     self.reject_tenant(tenant);
                 }
@@ -652,7 +768,17 @@ impl Executor {
     fn admit_tenant(&mut self, tenant: usize) {
         self.active_tenants += 1;
         self.outstanding_work_s += self.tenants[tenant].work_est_s;
+        self.trace_admission(tenant, "admit");
         self.arrive_tenant(tenant);
+    }
+
+    /// Trace one admission-controller decision (covers initial arrivals
+    /// and queue dequeues alike — a queued tenant shows "queue" at
+    /// arrival and "admit" when its slot frees up).
+    fn trace_admission(&mut self, tenant: usize, decision: &'static str) {
+        let now = self.net.now();
+        let name = &self.tenants[tenant].name;
+        self.tracer.emit(now, || TraceEvent::Admission { tenant: name.clone(), decision });
     }
 
     /// Shed the tenant: it never registers inputs, never materializes
@@ -664,6 +790,7 @@ impl Executor {
         t.arrived = true;
         t.rejected = true;
         self.n_rejected += 1;
+        self.trace_admission(tenant, "reject");
     }
 
     /// A tenant's last task completed: release its admission slot and
@@ -789,9 +916,12 @@ impl Executor {
         // fact; policy code reads the field, id-keyed maps the high bits.
         debug_assert_eq!(workload::task_tenant(rt.id), rt.tenant);
         self.submitted_seq += 1;
+        let gid = rt.id;
         self.ready_pos.insert(rt.id, self.ready.len());
         self.ready.push(rt);
         self.ready_dead.push(false);
+        let now = self.net.now();
+        self.tracer.emit(now, || TraceEvent::TaskSubmit { task: gid.0, tenant: tenant as u64 });
     }
 
     /// Drop tombstoned (started) entries so the schedulers see a dense
@@ -860,7 +990,34 @@ impl Executor {
             ready: &self.ready,
             tenant_prec: &prec,
         };
-        let actions = self.scheduler.iterate(&view, &mut self.dps);
+        let w = self.prof_wall.then(std::time::Instant::now);
+        // With tracing on, ask the strategy to also explain its picks.
+        // The explained path is RNG-identical to the plain one (the
+        // default impl and every override are pure observers), so the
+        // placement stream — and the fingerprint — cannot move.
+        let actions = if self.tracer.enabled() {
+            let mut explain = Vec::new();
+            let acts = self.scheduler.iterate_explained(&view, &mut self.dps, &mut explain);
+            let now = view.now;
+            for e in &explain {
+                self.tracer.emit(now, || TraceEvent::Decision {
+                    task: e.task.0,
+                    node: e.node.0,
+                    kind: e.kind.label(),
+                    candidates: e.candidates,
+                    cost: e.cost,
+                    affinity: e.affinity,
+                });
+            }
+            acts
+        } else {
+            self.scheduler.iterate(&view, &mut self.dps)
+        };
+        if let Some(w) = w {
+            self.prof.wall_sched_s += w.elapsed().as_secs_f64();
+        }
+        self.prof.sched_iterations += 1;
+        self.prof.sched_actions += actions.len() as u64;
         for action in actions {
             match action {
                 Action::Start { task, node } => {
@@ -954,6 +1111,11 @@ impl Executor {
         self.retries.remove(&task);
         self.cluster.release(r.node, r.cores, r.mem);
         let tn = workload::task_tenant(task);
+        self.tracer.emit(now, || TraceEvent::TaskPreempt {
+            task: task.0,
+            node: r.node.0,
+            tenant: tn as u64,
+        });
         self.tenants[tn].running_cores -= r.cores as u64;
         if self.scheduler.uses_local_data() {
             let lid = workload::local_task(task);
@@ -987,6 +1149,11 @@ impl Executor {
         let lid = workload::local_task(task);
         self.tenants[tn].first_start.get_or_insert(now);
         self.tenants[tn].running_cores += cores as u64;
+        self.tracer.emit(now, || TraceEvent::PhaseStart {
+            task: task.0,
+            node: node.0,
+            phase: "stage-in",
+        });
 
         // Mark used COPs: any not-yet-used completed COP targeting this
         // node whose files intersect the inputs — regardless of which
@@ -1004,6 +1171,12 @@ impl Executor {
                 let cop = &mut self.completed_cops[idx];
                 if cop.files.iter().any(|f| inputs_g.contains(f)) {
                     cop.used = true;
+                    let cop_id = cop.id;
+                    self.tracer.emit(now, || TraceEvent::CopUsed {
+                        cop: cop_id.0,
+                        task: task.0,
+                        node: node.0,
+                    });
                     false
                 } else {
                     true
@@ -1090,6 +1263,11 @@ impl Executor {
         r.phase = Phase::Compute;
         r.compute_started = now;
         let (node, attempt) = (r.node, r.attempt);
+        self.tracer.emit(now, || TraceEvent::PhaseStart {
+            task: task.0,
+            node: node.0,
+            phase: "compute",
+        });
         // Cross-tenant dedup: the reference inputs just staged onto
         // `node` become shareable replicas for later arrivals. Their
         // bytes are *not* counted as replica storage — the DFS already
@@ -1147,12 +1325,18 @@ impl Executor {
             (r.cores, (now - r.compute_started).as_secs_f64())
         };
         self.wasted_core_seconds += wasted_s * cores as f64;
+        self.tracer.emit(now, || TraceEvent::TaskRetry { task: task.0 });
         self.begin_compute(task, now);
     }
 
     fn start_stage_out(&mut self, task: TaskId, now: SimTime) {
         let local_mode = self.scheduler.uses_local_data();
         let node = self.running[&task].node;
+        self.tracer.emit(now, || TraceEvent::PhaseStart {
+            task: task.0,
+            node: node.0,
+            phase: "stage-out",
+        });
         let tn = workload::task_tenant(task);
         let outputs = self.tenants[tn].engine.task(workload::local_task(task)).outputs.clone();
         let mut n_flows = 0;
@@ -1216,6 +1400,7 @@ impl Executor {
         self.node_cpu_seconds[r.node.0] += wall * r.cores as f64;
         self.last_finish = now;
         self.tasks_done += 1;
+        self.tracer.emit(now, || TraceEvent::TaskComplete { task: task.0, node: r.node.0 });
         let tn = workload::task_tenant(task);
         let lid = workload::local_task(task);
         self.tenants[tn].last_finish = now;
@@ -1277,6 +1462,13 @@ impl Executor {
         // Setup latency before bytes move; the COP occupies its c_node /
         // c_task slots for the whole window (reserved at creation).
         let launch_at = self.net.now() + SimTime::from_secs_f64(self.cfg.cop_setup_s);
+        let now = self.net.now();
+        self.tracer.emit(now, || TraceEvent::CopStart {
+            cop: cop.id.0,
+            task: task.0,
+            dst: dst.0,
+            bytes: cop.total_bytes().as_u64(),
+        });
         self.pending_cops.insert(cop.id, cop.clone());
         self.events.push(launch_at, Event::CopLaunch(cop.id));
         true
@@ -1288,9 +1480,15 @@ impl Executor {
             self.node_replica_bytes[cop.dst.0] += size.as_f64();
         }
         self.update_peak();
+        let now = self.net.now();
+        self.tracer.emit(now, || TraceEvent::CopFinish {
+            cop: id.0,
+            dst: cop.dst.0,
+            bytes: cop.total_bytes().as_u64(),
+        });
         let files = cop.parts.iter().map(|(f, _, _)| *f).collect();
         let idx = self.completed_cops.len();
-        self.completed_cops.push(CompletedCop { dst: cop.dst, files, used: false });
+        self.completed_cops.push(CompletedCop { id, dst: cop.dst, files, used: false });
         self.unused_cops_by_node.entry(cop.dst).or_default().push(idx);
     }
 
@@ -1299,6 +1497,15 @@ impl Executor {
     /// Apply one injected fault. Returns true if a scheduling iteration
     /// should follow.
     fn apply_fault(&mut self, ev: FaultEvent, now: SimTime) -> bool {
+        let (kind, subject) = match ev {
+            FaultEvent::NodeCrash(n) => ("node-crash", n.0 as u64),
+            FaultEvent::NodeRecover(n) => ("node-recover", n.0 as u64),
+            FaultEvent::LinkDegrade(n) => ("link-degrade", n.0 as u64),
+            FaultEvent::LinkRestore(n) => ("link-restore", n.0 as u64),
+            FaultEvent::RackLinkDegrade(r) => ("rack-degrade", r as u64),
+            FaultEvent::RackLinkRestore(r) => ("rack-restore", r as u64),
+        };
+        self.tracer.emit(now, || TraceEvent::Fault { kind, subject });
         match ev {
             FaultEvent::NodeCrash(node) => {
                 self.on_node_crash(node, now);
@@ -1400,7 +1607,9 @@ impl Executor {
         for id in self.dps.cops_touching(node) {
             self.lcs.cancel_cop(id, &mut self.net);
             self.pending_cops.remove(&id);
-            self.dps.abort_cop(id);
+            if self.dps.abort_cop(id).is_some() {
+                self.tracer.emit(now, || TraceEvent::CopAbort { cop: id.0, reason: "node-crash" });
+            }
         }
 
         // 3. Find foreign tasks whose stage-in/out crossed the node
@@ -1512,6 +1721,7 @@ impl Executor {
         self.node_cpu_seconds[r.node.0] += wall * r.cores as f64;
         self.wasted_core_seconds += wall * r.cores as f64;
         self.tasks_rerun += 1;
+        self.tracer.emit(now, || TraceEvent::TaskRerun { task: task.0, reason: "crash" });
         self.retries.remove(&task);
         self.tenants[workload::task_tenant(task)].running_cores -= r.cores as u64;
         self.submit_global(vec![task]);
@@ -1582,7 +1792,10 @@ impl Executor {
             self.tenants[tn].engine.revive_task(prod);
             self.tenant_unfinished(tn);
             self.tasks_rerun += 1;
-            revived.push(workload::ns_task(tn, prod));
+            let gid = workload::ns_task(tn, prod);
+            let now = self.net.now();
+            self.tracer.emit(now, || TraceEvent::TaskRerun { task: gid.0, reason: "lineage" });
+            revived.push(gid);
             for inp in self.tenants[tn].engine.task(prod).inputs.clone() {
                 if !self.tenants[tn].engine.file(inp).is_workflow_input() {
                     stack.push(workload::ns_file(tn, inp));
@@ -1593,7 +1806,7 @@ impl Executor {
         self.submit_global(revived);
     }
 
-    fn finish_metrics(mut self) -> RunMetrics {
+    fn finish_metrics(&mut self) -> RunMetrics {
         // Recovery flows can still be in flight when the last task
         // lands: fold their deferred segments so the byte counters
         // below reflect the present, exactly as the eager core's would.

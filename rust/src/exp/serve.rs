@@ -225,45 +225,35 @@ pub fn render(rows: &[Row]) -> Table {
     t
 }
 
-/// Dependency-free JSON artifact (`SERVE_knee.json`) for PR-over-PR
-/// tracking, mirroring the benches' `BENCH_*.json` shape.
+/// JSON artifact (`SERVE_knee.json`) for PR-over-PR tracking, in the
+/// shared [`crate::util::json::RowsDoc`] shape the benches also emit.
 pub fn to_json(rows: &[Row]) -> String {
-    let mut out = String::from("{\"experiment\": \"serve\", \"rows\": [\n");
-    for (i, r) in rows.iter().enumerate() {
-        if i > 0 {
-            out.push_str(",\n");
-        }
+    use crate::util::json::{Jv, RowsDoc};
+    let mut doc = RowsDoc::new("experiment", "serve");
+    for r in rows {
         let m = &r.metrics;
-        out.push_str(&format!(
-            "  {{\"rate_per_min\": {:.4}, \"mean_gap_s\": {}, \"horizon_s\": {}, \
-             \"strategy\": \"{}\", \"admission\": \"{}\", \"seed\": {}, \
-             \"offered\": {}, \"done\": {}, \"rejected\": {}, \"queued\": {}, \
-             \"throughput_per_min\": {:.6}, \"latency_p50_s\": {:.3}, \
-             \"latency_p99_s\": {:.3}, \"slo_attainment_pct\": {:.3}, \
-             \"preemptions\": {}, \"preempted_compute_hours\": {:.6}, \
-             \"dedup_gb\": {:.6}, \"makespan_min\": {:.3}}}",
-            r.offered_per_min(),
-            r.mean_gap_s,
-            r.horizon_s,
-            r.strategy.label(),
-            r.admission.label(),
-            m.seed,
-            r.offered(),
-            r.done(),
-            m.tenants_rejected,
-            m.tenants_queued,
-            m.throughput_per_min,
-            m.latency_p50_s,
-            m.latency_p99_s,
-            m.slo_attainment_pct,
-            m.preemptions,
-            m.preempted_compute_hours,
-            m.dedup_bytes.as_gb(),
-            m.makespan_min(),
-        ));
+        doc.row(&[
+            ("rate_per_min", Jv::Fx(r.offered_per_min(), 4)),
+            ("mean_gap_s", Jv::F(r.mean_gap_s)),
+            ("horizon_s", Jv::F(r.horizon_s)),
+            ("strategy", Jv::S(r.strategy.label().into())),
+            ("admission", Jv::S(r.admission.label())),
+            ("seed", Jv::U(m.seed)),
+            ("offered", Jv::U(r.offered() as u64)),
+            ("done", Jv::U(r.done())),
+            ("rejected", Jv::U(m.tenants_rejected)),
+            ("queued", Jv::U(m.tenants_queued)),
+            ("throughput_per_min", Jv::Fx(m.throughput_per_min, 6)),
+            ("latency_p50_s", Jv::Fx(m.latency_p50_s, 3)),
+            ("latency_p99_s", Jv::Fx(m.latency_p99_s, 3)),
+            ("slo_attainment_pct", Jv::Fx(m.slo_attainment_pct, 3)),
+            ("preemptions", Jv::U(m.preemptions)),
+            ("preempted_compute_hours", Jv::Fx(m.preempted_compute_hours, 6)),
+            ("dedup_gb", Jv::Fx(m.dedup_bytes.as_gb(), 6)),
+            ("makespan_min", Jv::Fx(m.makespan_min(), 3)),
+        ]);
     }
-    out.push_str("\n]}\n");
-    out
+    doc.render()
 }
 
 pub fn run(opts: &ExpOpts) -> (Vec<Row>, String) {
@@ -299,5 +289,6 @@ mod tests {
         assert!(r.metrics.latency_p50_s > 0.0);
         let json = to_json(&[r]);
         assert!(json.contains("\"admission\": \"queue 1+1 fifo\""));
+        assert!(crate::util::json::validate(&json).is_ok(), "{json}");
     }
 }

@@ -37,6 +37,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod serve;
 pub mod sim;
+pub mod trace;
 pub mod util;
 pub mod workflow;
 pub mod workload;

@@ -9,7 +9,9 @@
 //!         [--tenants N] [--mix wf1,wf2] [--arrival SPEC] [--policy P]
 //!         [--weights 2,1,1] [--core incremental|checked|eager|naive]
 //!         [--admission all|queue:A:D[:fifo|sjf]|shed:W] [--preempt]
-//!         [--slo S] [--dedup]
+//!         [--slo S] [--dedup] [--json]
+//!         [--trace out.json] [--trace-format chrome|jsonl] [--sample-every S]
+//!         [--profile]
 //! wow table1 | table2 | table3 | fig4 | fig5 | gini | all
 //!         [--seeds 0,1,2] [--quick] [--xla]
 //! wow chaos [--gc] [--fault-domain rack|zone]
@@ -26,12 +28,13 @@
 use anyhow::{bail, Context, Result};
 use wow::cluster::Topology;
 use wow::dfs::DfsKind;
-use wow::exec::{run_with_backend, run_workload_with_backend, RunConfig, SimCore};
+use wow::exec::{run_workload_observed, ObserveConfig, RunConfig, SimCore};
 use wow::exp::{self, ExpOpts};
 use wow::fault::FaultDomain;
 use wow::metrics::RunMetrics;
 use wow::report::Table;
 use wow::scheduler::{Strategy, TenantPolicy};
+use wow::trace::{TraceConfig, TraceFormat};
 use wow::workload::{Arrival, WorkloadSpec};
 
 fn main() {
@@ -58,7 +61,9 @@ impl Args {
                 .with_context(|| format!("expected --flag, got '{k}'"))?
                 .to_string();
             // Boolean flags.
-            if ["quick", "xla", "gc", "nfs-outage", "preempt", "dedup"].contains(&key.as_str()) {
+            if ["quick", "xla", "gc", "nfs-outage", "preempt", "dedup", "json", "profile"]
+                .contains(&key.as_str())
+            {
                 flags.insert(key, "true".into());
                 continue;
             }
@@ -206,7 +211,11 @@ fn real_main() -> Result<()> {
                  [--tenants N] [--mix wf1,wf2,..] [--arrival all|staggered:G|poisson:G|bursty:BxG]\n          \
                  [--policy fifo|fair] [--weights 2,1,..]   multi-tenant run when N > 1 or --mix\n          \
                  [--admission all|queue:A:D[:fifo|sjf]|shed:W] [--preempt] [--slo S] [--dedup]\n          \
-                 serving-regime knobs: admission control, task preemption, SLO, input dedup\n  \
+                 serving-regime knobs: admission control, task preemption, SLO, input dedup\n          \
+                 [--json]   print full RunMetrics (incl. fingerprint) as JSON to stdout\n          \
+                 [--trace out.json] [--trace-format chrome|jsonl] [--sample-every S]\n          \
+                 event trace: chrome opens at ui.perfetto.dev (observation-only)\n          \
+                 [--profile]   simulator self-metrics as JSON on stderr\n  \
                  table1 | table2 | table3 | fig4 | fig5 | gini | all\n          \
                  [--seeds 0,1,2] [--quick] [--xla]\n  \
                  chaos   fault-injection sweep: crashes x failure rates (see DESIGN.md \u{a7}7);\n          \
@@ -334,9 +343,25 @@ fn cmd_run(args: &Args) -> Result<()> {
         eprintln!("warn: --weights has no effect on a single-tenant run");
     }
 
+    // Observability: --trace PATH [--trace-format chrome|jsonl]
+    // [--sample-every SECS], --profile, --json. All observation-only —
+    // the metrics (and fingerprint) are identical with them on or off.
+    let trace_path: Option<String> = args.flags.get("trace").cloned();
+    let trace_format: TraceFormat = args.get("trace-format", TraceFormat::default())?;
+    let obs = ObserveConfig {
+        trace: trace_path
+            .as_ref()
+            .map(|_| -> Result<TraceConfig> {
+                Ok(TraceConfig { sample_every_s: args.get("sample-every", 0.0f64)? })
+            })
+            .transpose()?,
+        profile: args.has("profile"),
+    };
+    let json_out = args.has("json");
+
     let backend = exp::make_backend(args.has("xla"));
     let t0 = std::time::Instant::now();
-    let m = if multi {
+    let out = if multi {
         let wl_name = format!("{n_tenants} tenants ({})", arrival.label());
         let mut wl = WorkloadSpec::from_mix(&wl_name, &mix, n_tenants, &arrival, cfg.seed);
         if !weights.is_empty() {
@@ -354,7 +379,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             cfg.tenant_policy.label(),
             backend.backend_name(),
         );
-        run_workload_with_backend(&wl, &cfg, backend)
+        run_workload_observed(&wl, &cfg, backend, &obs)
     } else {
         eprintln!(
             "running {} with {} on {} ({} nodes, {} Gbit, {}, backend={})",
@@ -366,8 +391,25 @@ fn cmd_run(args: &Args) -> Result<()> {
             cfg.topology.label(),
             backend.backend_name(),
         );
-        run_with_backend(&spec, &cfg, backend)
+        run_workload_observed(&WorkloadSpec::solo(spec.clone()), &cfg, backend, &obs)
     };
+    let m = out.metrics;
+    if let (Some(path), Some(trace)) = (&trace_path, &out.trace) {
+        let body = match trace_format {
+            TraceFormat::Chrome => trace.to_chrome(),
+            TraceFormat::Jsonl => trace.to_jsonl(),
+        };
+        std::fs::write(path, body).with_context(|| format!("writing {path}"))?;
+        eprintln!("wrote {path} ({} events, {trace_format:?})", trace.events.len());
+    }
+    if let Some(p) = &out.profile {
+        // Stderr so `--json` keeps stdout a single parseable document.
+        eprintln!("profile: {}", p.to_json());
+    }
+    if json_out {
+        println!("{}", m.to_json());
+        return Ok(());
+    }
     if multi {
         println!("{}", tenant_table(&m).render());
     }

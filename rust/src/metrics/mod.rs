@@ -197,6 +197,116 @@ impl RunMetrics {
         self.wasted_compute_hours / self.cpu_alloc_hours * 100.0
     }
 
+    /// Render every field — plus the derived [`Self::fingerprint`] as a
+    /// hex string (u64 does not fit JSON's safe-integer range) — as one
+    /// JSON object: the `wow run --json` payload. Exhaustive
+    /// destructuring like [`Self::fingerprint`], so a new field cannot
+    /// silently drop out of the JSON.
+    pub fn to_json(&self) -> String {
+        use crate::util::json::{object_s, Jv};
+        let RunMetrics {
+            workflow,
+            strategy,
+            dfs,
+            n_nodes,
+            link_gbit,
+            seed,
+            makespan,
+            cpu_alloc_hours,
+            tasks_total,
+            tasks_no_cop,
+            cops_created,
+            cops_used,
+            cop_bytes,
+            unique_generated,
+            node_storage_bytes,
+            node_cpu_seconds,
+            peak_replica_bytes,
+            cross_rack_bytes,
+            node_crashes,
+            link_degrades,
+            task_failures,
+            tasks_rerun,
+            cops_aborted,
+            wasted_compute_hours,
+            recovery_bytes,
+            tenants,
+            tenants_rejected,
+            tenants_queued,
+            preemptions,
+            preempted_compute_hours,
+            dedup_bytes,
+            latency_p50_s,
+            latency_p99_s,
+            throughput_per_min,
+            slo_attainment_pct,
+        } = self;
+        let tenant_rows: Vec<Jv> = tenants
+            .iter()
+            .map(|t| {
+                let TenantMetrics {
+                    name,
+                    arrival,
+                    first_start,
+                    makespan,
+                    completion,
+                    tasks,
+                    rejected,
+                } = t;
+                Jv::Obj(vec![
+                    ("name".into(), Jv::S(name.clone())),
+                    ("arrival_s".into(), Jv::F(arrival.as_secs_f64())),
+                    (
+                        "first_start_s".into(),
+                        first_start.map_or(Jv::Null, |s| Jv::F(s.as_secs_f64())),
+                    ),
+                    ("makespan_s".into(), Jv::F(makespan.as_secs_f64())),
+                    ("completion_s".into(), Jv::F(completion.as_secs_f64())),
+                    ("tasks".into(), Jv::U(*tasks as u64)),
+                    ("rejected".into(), Jv::B(*rejected)),
+                ])
+            })
+            .collect();
+        object_s(&[
+            ("workflow", Jv::S(workflow.clone())),
+            ("strategy", Jv::S(strategy.clone())),
+            ("dfs", Jv::S(dfs.clone())),
+            ("n_nodes", Jv::U(*n_nodes as u64)),
+            ("link_gbit", Jv::F(*link_gbit)),
+            ("seed", Jv::U(*seed)),
+            ("makespan_s", Jv::F(makespan.as_secs_f64())),
+            ("cpu_alloc_hours", Jv::F(*cpu_alloc_hours)),
+            ("tasks_total", Jv::U(*tasks_total as u64)),
+            ("tasks_no_cop", Jv::U(*tasks_no_cop as u64)),
+            ("cops_created", Jv::U(*cops_created)),
+            ("cops_used", Jv::U(*cops_used)),
+            ("cop_bytes", Jv::U(cop_bytes.as_u64())),
+            ("unique_generated_bytes", Jv::U(unique_generated.as_u64())),
+            ("node_storage_bytes", Jv::Arr(node_storage_bytes.iter().map(|&v| Jv::F(v)).collect())),
+            ("node_cpu_seconds", Jv::Arr(node_cpu_seconds.iter().map(|&v| Jv::F(v)).collect())),
+            ("peak_replica_bytes", Jv::F(*peak_replica_bytes)),
+            ("cross_rack_bytes", Jv::F(*cross_rack_bytes)),
+            ("node_crashes", Jv::U(*node_crashes)),
+            ("link_degrades", Jv::U(*link_degrades)),
+            ("task_failures", Jv::U(*task_failures)),
+            ("tasks_rerun", Jv::U(*tasks_rerun)),
+            ("cops_aborted", Jv::U(*cops_aborted)),
+            ("wasted_compute_hours", Jv::F(*wasted_compute_hours)),
+            ("recovery_bytes", Jv::U(recovery_bytes.as_u64())),
+            ("tenants", Jv::Arr(tenant_rows)),
+            ("tenants_rejected", Jv::U(*tenants_rejected)),
+            ("tenants_queued", Jv::U(*tenants_queued)),
+            ("preemptions", Jv::U(*preemptions)),
+            ("preempted_compute_hours", Jv::F(*preempted_compute_hours)),
+            ("dedup_bytes", Jv::U(dedup_bytes.as_u64())),
+            ("latency_p50_s", Jv::F(*latency_p50_s)),
+            ("latency_p99_s", Jv::F(*latency_p99_s)),
+            ("throughput_per_min", Jv::F(*throughput_per_min)),
+            ("slo_attainment_pct", Jv::F(*slo_attainment_pct)),
+            ("fingerprint", Jv::S(format!("{:016x}", self.fingerprint()))),
+        ])
+    }
+
     /// Order-stable 64-bit FNV-1a digest over every field, with floats
     /// hashed by bit pattern: equal fingerprints ⇔ bit-identical
     /// metrics. `bench_scale` uses it to prove the incremental and
@@ -375,6 +485,24 @@ mod tests {
         assert_eq!(m.pct_tasks_no_cop(), 0.0);
         assert_eq!(m.pct_cops_used(), 0.0);
         assert_eq!(m.data_overhead_pct(), 0.0);
+    }
+
+    #[test]
+    fn to_json_is_valid_and_carries_the_fingerprint() {
+        let mut a = m();
+        a.tenants.push(TenantMetrics {
+            name: "t0".into(),
+            arrival: SimTime::ZERO,
+            first_start: None,
+            makespan: SimTime::from_secs_f64(3.0),
+            completion: SimTime::from_secs_f64(4.0),
+            tasks: 7,
+            rejected: false,
+        });
+        let s = a.to_json();
+        assert!(crate::util::json::validate(&s).is_ok(), "{s}");
+        assert!(s.contains(&format!("\"fingerprint\": \"{:016x}\"", a.fingerprint())));
+        assert!(s.contains("\"first_start_s\": null"));
     }
 
     #[test]

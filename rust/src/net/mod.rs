@@ -213,6 +213,12 @@ pub struct FlowNet {
     /// folded whenever no flows are live; call [`Self::sync`] before
     /// reading it mid-run.
     pub bytes_through: Vec<f64>,
+
+    // Self-profiling counters ([`crate::trace::SimProfile`]): plain
+    // increments on the respective paths, never read by the simulation.
+    prof_recomputes: u64,
+    prof_replay_folds: u64,
+    prof_replay_steps: u64,
 }
 
 impl FlowNet {
@@ -544,6 +550,7 @@ impl FlowNet {
     /// deferred segments at the old rates, re-run progressive filling,
     /// re-anchor finish times where rates changed, and regroup it.
     fn recompute_component(&mut self, seed: usize) {
+        self.prof_recomputes += 1;
         // Flood fill: seed resource → its flows → those flows' other
         // resources, transitively. The work lists are persistent
         // scratch (taken and handed back) so the hot path never
@@ -722,6 +729,8 @@ impl FlowNet {
         };
         let from = (cursor - self.steps_base) as usize;
         if from < self.steps.len() {
+            self.prof_replay_folds += 1;
+            self.prof_replay_steps += (self.steps.len() - from) as u64;
             let mut live = std::mem::take(&mut self.scratch_slots);
             live.clear();
             for id in &members {
@@ -783,6 +792,37 @@ impl FlowNet {
         for gid in gids {
             self.sync_group(gid);
         }
+    }
+
+    /// Self-profiling counters `(component recomputes, lazy-replay
+    /// folds, replayed timeline steps, MinTimeSet mutations)` — feeds
+    /// [`crate::trace::SimProfile`]; purely observational.
+    pub fn profile_counters(&self) -> (u64, u64, u64, u64) {
+        (
+            self.prof_recomputes,
+            self.prof_replay_folds,
+            self.prof_replay_steps,
+            self.horizons.ops() + self.loose.ops(),
+        )
+    }
+
+    /// Current aggregate rate through a resource in bytes/s — the sum of
+    /// its live flows' max-min shares. A pure read of cached rates
+    /// (rates are always current after a recompute; only `remaining` is
+    /// deferred), used by the trace interval sampler for utilization
+    /// tracks.
+    pub fn resource_rate(&self, r: ResourceId) -> f64 {
+        self.res_flows[r.0]
+            .iter()
+            .map(|fid| {
+                let f = &self.flows[self.id_slot[fid]];
+                if f.rate.is_finite() {
+                    f.rate
+                } else {
+                    0.0
+                }
+            })
+            .sum()
     }
 
     /// Earliest finish and live-member count of a group.

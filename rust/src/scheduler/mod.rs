@@ -126,6 +126,54 @@ impl SchedView<'_> {
     }
 }
 
+/// Which scheduling rule produced a decision — the trace vocabulary for
+/// "why did this task land here" (see [`DecisionExplain`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecisionKind {
+    /// A plain placement by a strategy without per-decision cost terms
+    /// (the Orig/CWS baselines).
+    Place,
+    /// WOW step 1: ILP assignment of a prepared/startable task.
+    WowStart,
+    /// WOW step 2: COP preparing an unassigned task on the
+    /// cheapest-missing-bytes node with free resources.
+    WowPrepFree,
+    /// WOW step 3: speculative COP for an unprepared task, picked by
+    /// plan price then replica affinity.
+    WowPrepSpec,
+}
+
+impl DecisionKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            DecisionKind::Place => "place",
+            DecisionKind::WowStart => "wow-start",
+            DecisionKind::WowPrepFree => "wow-prep-free",
+            DecisionKind::WowPrepSpec => "wow-prep-spec",
+        }
+    }
+}
+
+/// One explained scheduler decision: the action plus the terms that
+/// selected the winner. Collected only when the executor traces a run
+/// (via [`Scheduler::iterate_explained`]); strategies must produce the
+/// *identical* action stream — and in particular the identical RNG draw
+/// sequence — with explanation on or off.
+#[derive(Debug, Clone)]
+pub struct DecisionExplain {
+    pub task: TaskId,
+    pub node: NodeId,
+    pub kind: DecisionKind,
+    /// Candidate nodes weighed before picking `node`.
+    pub candidates: u64,
+    /// The scalar the winner minimized/maximized: effective priority
+    /// (step 1), missing bytes (step 2), plan price (step 3); 0 for
+    /// baselines.
+    pub cost: f64,
+    /// Replica-affinity tiebreak term where one applies (step 3).
+    pub affinity: f64,
+}
+
 /// A scheduling strategy.
 pub trait Scheduler {
     fn name(&self) -> &'static str;
@@ -140,6 +188,35 @@ pub trait Scheduler {
     /// One scheduling iteration (§III-B: runs whenever a task finishes,
     /// a COP finishes, or a new task is submitted).
     fn iterate(&mut self, view: &SchedView<'_>, dps: &mut Dps) -> Vec<Action>;
+
+    /// [`Self::iterate`] plus decision explanations, used by traced
+    /// runs. Must decide exactly what `iterate` would: same actions,
+    /// same RNG draws. The default synthesizes bare `Place` records
+    /// from the action stream; strategies with real cost terms (WOW)
+    /// override it.
+    fn iterate_explained(
+        &mut self,
+        view: &SchedView<'_>,
+        dps: &mut Dps,
+        explain: &mut Vec<DecisionExplain>,
+    ) -> Vec<Action> {
+        let actions = self.iterate(view, dps);
+        for a in &actions {
+            let (task, node) = match *a {
+                Action::Start { task, node } => (task, node),
+                Action::StartCop { task, dst } => (task, dst),
+            };
+            explain.push(DecisionExplain {
+                task,
+                node,
+                kind: DecisionKind::Place,
+                candidates: 0,
+                cost: 0.0,
+                affinity: 0.0,
+            });
+        }
+        actions
+    }
 }
 
 /// How ready tasks of *different* tenants are ordered against each

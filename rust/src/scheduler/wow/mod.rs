@@ -33,7 +33,7 @@
 
 pub mod ilp;
 
-use super::{Action, SchedView, Scheduler};
+use super::{Action, DecisionExplain, DecisionKind, SchedView, Scheduler};
 use crate::cluster::NodeId;
 use crate::dps::cost::{CostEval, NativeCost};
 use crate::dps::Dps;
@@ -90,6 +90,31 @@ impl Scheduler for WowScheduler {
     }
 
     fn iterate(&mut self, view: &SchedView<'_>, dps: &mut Dps) -> Vec<Action> {
+        self.run_iter(view, dps, None)
+    }
+
+    fn iterate_explained(
+        &mut self,
+        view: &SchedView<'_>,
+        dps: &mut Dps,
+        explain: &mut Vec<DecisionExplain>,
+    ) -> Vec<Action> {
+        self.run_iter(view, dps, Some(explain))
+    }
+}
+
+impl WowScheduler {
+    /// The three steps. `explain` is collected for traced runs only and
+    /// must never alter behaviour: explanation reuses values the steps
+    /// compute anyway (ILP candidates, missing bytes, plan prices) plus
+    /// RNG-free filter re-runs — zero extra [`Dps::plan`] calls, so the
+    /// placement RNG stream is identical with tracing on or off.
+    fn run_iter(
+        &mut self,
+        view: &SchedView<'_>,
+        dps: &mut Dps,
+        mut explain: Option<&mut Vec<DecisionExplain>>,
+    ) -> Vec<Action> {
         let mut actions = Vec::new();
         // Only alive nodes may start tasks or receive COPs; a crashed
         // node's replicas were already invalidated by the DPS, so the
@@ -144,6 +169,16 @@ impl Scheduler for WowScheduler {
                 free[ni].0 -= view.ready[ti].cores;
                 free[ni].1 = free[ni].1.saturating_sub(view.ready[ti].mem);
                 actions.push(Action::Start { task: view.ready[ti].id, node: workers[ni] });
+                if let Some(ex) = explain.as_deref_mut() {
+                    ex.push(DecisionExplain {
+                        task: view.ready[ti].id,
+                        node: workers[ni],
+                        kind: DecisionKind::WowStart,
+                        candidates: ilp_tasks[ti].candidate_nodes.len() as u64,
+                        cost: ilp_tasks[ti].priority,
+                        affinity: 0.0,
+                    });
+                }
             }
         }
 
@@ -184,23 +219,23 @@ impl Scheduler for WowScheduler {
             // Candidate: node with free capacity, not already prepared,
             // under the c_node limit, no COP for this task in flight
             // there. Earliest start ≈ least missing bytes (§IV-C step 2).
-            let cand = (0..workers.len())
-                .filter(|&ni| {
-                    free[ni].0 >= t.cores
-                        && free[ni].1 >= t.mem
-                        && !costs.is_prepared(ti, ni)
-                        && dps.node_cop_count(workers[ni])
-                            + queued_node.get(&workers[ni]).copied().unwrap_or(0)
-                            < self.params.c_node
-                        && !dps.cop_in_flight(t.id, workers[ni])
-                })
-                .min_by(|&a, &b| {
-                    costs
-                        .missing(ti, a)
-                        .partial_cmp(&costs.missing(ti, b))
-                        .unwrap()
-                        .then(a.cmp(&b))
-                });
+            let eligible = |ni: usize| {
+                free[ni].0 >= t.cores
+                    && free[ni].1 >= t.mem
+                    && !costs.is_prepared(ti, ni)
+                    && dps.node_cop_count(workers[ni])
+                        + queued_node.get(&workers[ni]).copied().unwrap_or(0)
+                        < self.params.c_node
+                    && !dps.cop_in_flight(t.id, workers[ni])
+            };
+            let cand = (0..workers.len()).filter(|&ni| eligible(ni)).min_by(|&a, &b| {
+                costs.missing(ti, a).partial_cmp(&costs.missing(ti, b)).unwrap().then(a.cmp(&b))
+            });
+            // Counted before the notional reservation below mutates
+            // `free`; a pure re-run of the filter, so explaining cannot
+            // perturb the decision (or the RNG stream).
+            let n_cand =
+                explain.as_ref().map(|_| (0..workers.len()).filter(|&ni| eligible(ni)).count());
             if let Some(ni) = cand {
                 if dps.plan(&t.intermediate_inputs, workers[ni]).is_some() {
                     // Notionally reserve the capacity so step 2 spreads
@@ -210,6 +245,16 @@ impl Scheduler for WowScheduler {
                     *queued_node.entry(workers[ni]).or_insert(0) += 1;
                     *queued_task.entry(t.id).or_insert(0) += 1;
                     actions.push(Action::StartCop { task: t.id, dst: workers[ni] });
+                    if let Some(ex) = explain.as_deref_mut() {
+                        ex.push(DecisionExplain {
+                            task: t.id,
+                            node: workers[ni],
+                            kind: DecisionKind::WowPrepFree,
+                            candidates: n_cand.unwrap_or(0) as u64,
+                            cost: costs.missing(ti, ni),
+                            affinity: 0.0,
+                        });
+                    }
                 }
             }
         }
@@ -245,6 +290,7 @@ impl Scheduler for WowScheduler {
             // mean path penalty). On flat every penalty is 1, so the
             // tie-break reduces to the original keep-first behaviour.
             let mut best: Option<(f64, f64, usize)> = None;
+            let mut n_planned: u64 = 0;
             for ni in 0..workers.len() {
                 let node = workers[ni];
                 if costs.is_prepared(ti, ni)
@@ -255,6 +301,7 @@ impl Scheduler for WowScheduler {
                     continue;
                 }
                 if let Some(plan) = dps.plan(&t.intermediate_inputs, node) {
+                    n_planned += 1;
                     let price = plan.price();
                     let affinity = plan.mean_penalty();
                     let better = match best {
@@ -266,11 +313,21 @@ impl Scheduler for WowScheduler {
                     }
                 }
             }
-            if let Some((_, _, ni)) = best {
+            if let Some((price, affinity, ni)) = best {
                 let node = workers[ni];
                 *queued_node.entry(node).or_insert(0) += 1;
                 *queued_task.entry(t.id).or_insert(0) += 1;
                 actions.push(Action::StartCop { task: t.id, dst: node });
+                if let Some(ex) = explain.as_deref_mut() {
+                    ex.push(DecisionExplain {
+                        task: t.id,
+                        node,
+                        kind: DecisionKind::WowPrepSpec,
+                        candidates: n_planned,
+                        cost: price,
+                        affinity,
+                    });
+                }
             }
         }
 
@@ -336,6 +393,25 @@ mod tests {
         let mut s = WowScheduler::new(WowParams::default());
         let actions = s.iterate(&view, &mut dps);
         assert_eq!(starts(&actions), vec![(0, 1)], "must start on the data-holding node");
+    }
+
+    #[test]
+    fn explained_iteration_matches_plain() {
+        let (_n, c) = fixture(2);
+        let ready = vec![rt(0, 1, vec![FileId(0)])];
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready, tenant_prec: &[] };
+        let mut dps = Dps::new(1);
+        dps.register_output(FileId(0), Bytes::from_gb(1.0), NodeId(1));
+        let plain = WowScheduler::new(WowParams::default()).iterate(&view, &mut dps);
+        let mut dps = Dps::new(1);
+        dps.register_output(FileId(0), Bytes::from_gb(1.0), NodeId(1));
+        let mut ex = Vec::new();
+        let explained =
+            WowScheduler::new(WowParams::default()).iterate_explained(&view, &mut dps, &mut ex);
+        assert_eq!(plain, explained, "explanation must not alter decisions");
+        assert_eq!(ex.len(), explained.len(), "one explanation per action");
+        assert_eq!(ex[0].kind, crate::scheduler::DecisionKind::WowStart);
+        assert_eq!(ex[0].candidates, 1, "only the data-holding node was startable");
     }
 
     #[test]

@@ -91,11 +91,15 @@ impl<E> EventQueue<E> {
 #[derive(Debug)]
 pub struct MinTimeSet<K: Ord + Copy> {
     set: BTreeSet<(SimTime, K)>,
+    /// Mutation count (inserts + removes + pops) since construction —
+    /// a self-profiling observable ([`crate::trace::SimProfile`]); it
+    /// never feeds back into simulation behaviour.
+    ops: u64,
 }
 
 impl<K: Ord + Copy> Default for MinTimeSet<K> {
     fn default() -> Self {
-        MinTimeSet { set: BTreeSet::new() }
+        MinTimeSet { set: BTreeSet::new(), ops: 0 }
     }
 }
 
@@ -107,12 +111,14 @@ impl<K: Ord + Copy> MinTimeSet<K> {
     /// Insert `(time, key)`. Returns false if that exact pair was
     /// already present.
     pub fn insert(&mut self, time: SimTime, key: K) -> bool {
+        self.ops += 1;
         self.set.insert((time, key))
     }
 
     /// Remove `(time, key)` if present. Tolerates absent pairs so the
     /// caller can remove-then-reinsert without tracking liveness.
     pub fn remove(&mut self, time: SimTime, key: K) -> bool {
+        self.ops += 1;
         self.set.remove(&(time, key))
     }
 
@@ -123,7 +129,13 @@ impl<K: Ord + Copy> MinTimeSet<K> {
 
     /// Pop the earliest `(time, key)` pair.
     pub fn pop_first(&mut self) -> Option<(SimTime, K)> {
+        self.ops += 1;
         self.set.pop_first()
+    }
+
+    /// Total mutations performed on this set (see [`Self::ops`] field).
+    pub fn ops(&self) -> u64 {
+        self.ops
     }
 
     pub fn len(&self) -> usize {
@@ -182,6 +194,17 @@ mod tests {
         assert_eq!(s.pop_first(), Some((SimTime(10), 9)));
         assert_eq!(s.pop_first(), Some((SimTime(20), 1)));
         assert_eq!(s.pop_first(), None);
+    }
+
+    #[test]
+    fn min_time_set_counts_ops() {
+        let mut s: MinTimeSet<u64> = MinTimeSet::new();
+        assert_eq!(s.ops(), 0);
+        s.insert(SimTime(1), 1);
+        s.remove(SimTime(1), 1);
+        s.insert(SimTime(2), 2);
+        s.pop_first();
+        assert_eq!(s.ops(), 4, "insert + remove + insert + pop all count");
     }
 
     #[test]

@@ -1,0 +1,776 @@
+//! Deterministic, observation-only run tracing and simulator
+//! self-profiling (DESIGN.md §13).
+//!
+//! A [`Tracer`] is threaded through the executor. It is **inert by
+//! default**: the disabled path is a branch on a `None` sink — no
+//! allocation, no RNG draws, no float arithmetic — so a traced run and
+//! an untraced run produce bit-identical [`crate::metrics::RunMetrics`]
+//! fingerprints (enforced by `rust/tests/trace.rs` across all four
+//! [`crate::exec::SimCore`]s). Events record *what the simulator did*
+//! — task/COP lifecycle, scheduler decisions with their cost terms,
+//! admission verdicts, faults — plus interval samples of queue depths
+//! and utilization taken on a sim-time grid. Because every observable
+//! is piecewise-constant between events, samples are stamped at grid
+//! times but read from the state at the preceding event: no extra
+//! network advances, no perturbation of the lazy-replay timeline.
+//!
+//! Two exporters: [`Trace::to_jsonl`] (one JSON object per line) and
+//! [`Trace::to_chrome`] (Chrome trace-event JSON — open it at
+//! <https://ui.perfetto.dev>; pid = node, tid = core slot, task-phase
+//! spans, COP lanes, counter tracks, control-plane instants).
+//!
+//! [`SimProfile`] is the companion self-profile: how much work the
+//! simulator itself did (events, component recomputes, lazy-replay
+//! folds, `MinTimeSet` ops, wall time per section). Counters are
+//! plain integers kept unconditionally; wall clocks only tick when
+//! profiling is requested, and none of it ever feeds back into
+//! simulation state.
+
+use crate::util::json::{self, Jv};
+use crate::util::units::SimTime;
+
+/// Tracing options (see `wow run --trace`).
+#[derive(Debug, Clone, Default)]
+pub struct TraceConfig {
+    /// Interval-sampler period in sim-seconds; 0 disables sampling.
+    pub sample_every_s: f64,
+}
+
+/// Trace export format (`--trace-format`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TraceFormat {
+    /// Chrome trace-event JSON, loadable in Perfetto / chrome://tracing.
+    #[default]
+    Chrome,
+    /// One JSON object per line.
+    Jsonl,
+}
+
+impl std::str::FromStr for TraceFormat {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "chrome" | "perfetto" => Ok(TraceFormat::Chrome),
+            "jsonl" => Ok(TraceFormat::Jsonl),
+            other => anyhow::bail!("unknown trace format '{other}' (expected chrome|jsonl)"),
+        }
+    }
+}
+
+/// One structured trace event. Ids are the namespaced u64s the
+/// executor uses; nodes are cluster indexes.
+#[derive(Debug, Clone)]
+pub enum TraceEvent {
+    /// A task entered the ready queue (first submission or resubmit).
+    TaskSubmit { task: u64, tenant: u64 },
+    /// A task-lifecycle phase began on a node: "stage-in", "compute",
+    /// "stage-out". Re-emitted when a crash restarts a phase.
+    PhaseStart { task: u64, node: usize, phase: &'static str },
+    TaskComplete { task: u64, node: usize },
+    /// A compute attempt failed (injected transient task failure) and
+    /// reruns on the same node. Count == `RunMetrics::task_failures`.
+    TaskRetry { task: u64 },
+    /// A task was killed and resubmitted. Reasons: "crash" (its node
+    /// died), "lineage" (producer revived to heal lost files). Count
+    /// plus preempt count == `RunMetrics::tasks_rerun`.
+    TaskRerun { task: u64, reason: &'static str },
+    /// Fair-share preemption evicted the task. Count ==
+    /// `RunMetrics::preemptions`.
+    TaskPreempt { task: u64, node: usize, tenant: u64 },
+    /// A COP was created (setup window starts). Count ==
+    /// `RunMetrics::cops_created`.
+    CopStart { cop: u64, task: u64, dst: usize, bytes: u64 },
+    CopFinish { cop: u64, dst: usize, bytes: u64 },
+    /// A task starting on the COP's destination read its files.
+    CopUsed { cop: u64, task: u64, node: usize },
+    /// Reasons: "sources-lost" (replicas vanished in the setup
+    /// window), "node-crash".
+    CopAbort { cop: u64, reason: &'static str },
+    /// A scheduler decision with its explanation: which rule fired,
+    /// how many candidate nodes were weighed, and the cost/affinity
+    /// terms that picked the winner (see
+    /// [`crate::scheduler::DecisionExplain`]).
+    Decision {
+        task: u64,
+        node: usize,
+        kind: &'static str,
+        candidates: u64,
+        cost: f64,
+        affinity: f64,
+    },
+    /// Admission-controller verdict: "admit", "queue", "reject". A
+    /// queued tenant shows "queue" at arrival and a second event,
+    /// "admit", when its slot frees up. Reject count ==
+    /// `RunMetrics::tenants_rejected`.
+    Admission { tenant: String, decision: &'static str },
+    /// An injected fault fired ("node-crash", "node-recover",
+    /// "link-degrade", "link-restore", "rack-degrade", "rack-restore");
+    /// `subject` is the node or rack index.
+    Fault { kind: &'static str, subject: u64 },
+    /// Interval sample: piecewise-constant observables on the sampling
+    /// grid. Utilizations are fractions in [0, 1] per worker / rack
+    /// uplink.
+    Sample {
+        running: u64,
+        ready: u64,
+        admit_queue: u64,
+        replica_gb: f64,
+        node_util: Vec<f64>,
+        rack_util: Vec<f64>,
+    },
+}
+
+/// Event-count summary for reconciliation against `RunMetrics`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TraceCounts {
+    pub submits: u64,
+    pub completes: u64,
+    pub retries: u64,
+    pub reruns: u64,
+    pub preempts: u64,
+    pub cops_started: u64,
+    pub cops_finished: u64,
+    pub cops_used: u64,
+    pub cops_aborted: u64,
+    pub decisions: u64,
+    pub admits: u64,
+    pub queued: u64,
+    pub rejected: u64,
+    pub faults: u64,
+    pub samples: u64,
+}
+
+struct TraceBuf {
+    events: Vec<(SimTime, TraceEvent)>,
+    sample_every: SimTime,
+    next_sample: SimTime,
+}
+
+/// The tracing handle threaded through the executor. Disabled (the
+/// default) it holds no buffer: [`Tracer::emit`] is a branch on `None`
+/// and the event-constructing closure never runs.
+pub struct Tracer {
+    buf: Option<Box<TraceBuf>>,
+}
+
+impl Tracer {
+    /// The inert tracer every ordinary run carries.
+    pub fn off() -> Self {
+        Tracer { buf: None }
+    }
+
+    pub fn new(cfg: &TraceConfig) -> Self {
+        Tracer {
+            buf: Some(Box::new(TraceBuf {
+                events: Vec::new(),
+                sample_every: SimTime::from_secs_f64(cfg.sample_every_s.max(0.0)),
+                next_sample: SimTime::ZERO,
+            })),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.buf.is_some()
+    }
+
+    /// Number of events recorded so far (0 when disabled).
+    pub fn len(&self) -> usize {
+        self.buf.as_ref().map_or(0, |b| b.events.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Record an event at sim-time `t`. The closure only runs when
+    /// tracing is enabled, so the disabled path pays one branch.
+    #[inline]
+    pub fn emit(&mut self, t: SimTime, f: impl FnOnce() -> TraceEvent) {
+        if let Some(b) = self.buf.as_mut() {
+            b.events.push((t, f()));
+        }
+    }
+
+    /// Next sampling grid point strictly before `horizon`, if sampling
+    /// is on. The executor calls this before advancing time: state is
+    /// piecewise-constant until `horizon`, so the sample read *now* is
+    /// exact for the grid instant.
+    pub fn due_sample(&self, horizon: SimTime) -> Option<SimTime> {
+        let b = self.buf.as_ref()?;
+        if b.sample_every == SimTime::ZERO || b.next_sample >= horizon {
+            return None;
+        }
+        Some(b.next_sample)
+    }
+
+    /// Record a sample at grid point `t` and advance the grid.
+    pub fn record_sample(&mut self, t: SimTime, ev: TraceEvent) {
+        let b = self.buf.as_mut().expect("sampling on a disabled tracer");
+        b.events.push((t, ev));
+        b.next_sample = t + b.sample_every;
+    }
+
+    /// Consume the tracer, yielding the finished trace (if enabled).
+    /// `n_nodes` names the Chrome process rows.
+    pub fn finish(self, n_nodes: usize) -> Option<Trace> {
+        self.buf.map(|b| Trace { n_nodes, events: b.events })
+    }
+}
+
+/// A finished event trace, ready for export.
+pub struct Trace {
+    pub n_nodes: usize,
+    pub events: Vec<(SimTime, TraceEvent)>,
+}
+
+impl Trace {
+    /// Count events per kind for reconciliation with `RunMetrics`.
+    pub fn counts(&self) -> TraceCounts {
+        let mut c = TraceCounts::default();
+        for (_, ev) in &self.events {
+            match ev {
+                TraceEvent::TaskSubmit { .. } => c.submits += 1,
+                TraceEvent::PhaseStart { .. } => {}
+                TraceEvent::TaskComplete { .. } => c.completes += 1,
+                TraceEvent::TaskRetry { .. } => c.retries += 1,
+                TraceEvent::TaskRerun { .. } => c.reruns += 1,
+                TraceEvent::TaskPreempt { .. } => c.preempts += 1,
+                TraceEvent::CopStart { .. } => c.cops_started += 1,
+                TraceEvent::CopFinish { .. } => c.cops_finished += 1,
+                TraceEvent::CopUsed { .. } => c.cops_used += 1,
+                TraceEvent::CopAbort { .. } => c.cops_aborted += 1,
+                TraceEvent::Decision { .. } => c.decisions += 1,
+                TraceEvent::Admission { decision, .. } => match *decision {
+                    "admit" => c.admits += 1,
+                    "queue" => c.queued += 1,
+                    "reject" => c.rejected += 1,
+                    _ => {}
+                },
+                TraceEvent::Fault { .. } => c.faults += 1,
+                TraceEvent::Sample { .. } => c.samples += 1,
+            }
+        }
+        c
+    }
+
+    /// One JSON object per line, in event order.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for (t, ev) in &self.events {
+            out.push_str(&jsonl_line(*t, ev));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Chrome trace-event JSON (the `{"traceEvents": [...]}` envelope),
+    /// loadable in Perfetto. Layout: one process per node (task-phase
+    /// spans on core-slot threads, COP spans on a `cop` lane group), a
+    /// `control` process for scheduler/admission/fault instants, and
+    /// counter tracks from the interval samples. Timestamps are sim-µs.
+    pub fn to_chrome(&self) -> String {
+        ChromeExport::new(self).render()
+    }
+}
+
+fn jsonl_line(t: SimTime, ev: &TraceEvent) -> String {
+    let ts = ("t", Jv::F(t.as_secs_f64()));
+    match ev {
+        TraceEvent::TaskSubmit { task, tenant } => json::object_s(&[
+            ts,
+            ("type", Jv::S("task-submit".into())),
+            ("task", Jv::U(*task)),
+            ("tenant", Jv::U(*tenant)),
+        ]),
+        TraceEvent::PhaseStart { task, node, phase } => json::object_s(&[
+            ts,
+            ("type", Jv::S("phase-start".into())),
+            ("task", Jv::U(*task)),
+            ("node", Jv::U(*node as u64)),
+            ("phase", Jv::S((*phase).into())),
+        ]),
+        TraceEvent::TaskComplete { task, node } => json::object_s(&[
+            ts,
+            ("type", Jv::S("task-complete".into())),
+            ("task", Jv::U(*task)),
+            ("node", Jv::U(*node as u64)),
+        ]),
+        TraceEvent::TaskRetry { task } => {
+            json::object_s(&[ts, ("type", Jv::S("task-retry".into())), ("task", Jv::U(*task))])
+        }
+        TraceEvent::TaskRerun { task, reason } => json::object_s(&[
+            ts,
+            ("type", Jv::S("task-rerun".into())),
+            ("task", Jv::U(*task)),
+            ("reason", Jv::S((*reason).into())),
+        ]),
+        TraceEvent::TaskPreempt { task, node, tenant } => json::object_s(&[
+            ts,
+            ("type", Jv::S("task-preempt".into())),
+            ("task", Jv::U(*task)),
+            ("node", Jv::U(*node as u64)),
+            ("tenant", Jv::U(*tenant)),
+        ]),
+        TraceEvent::CopStart { cop, task, dst, bytes } => json::object_s(&[
+            ts,
+            ("type", Jv::S("cop-start".into())),
+            ("cop", Jv::U(*cop)),
+            ("task", Jv::U(*task)),
+            ("dst", Jv::U(*dst as u64)),
+            ("bytes", Jv::U(*bytes)),
+        ]),
+        TraceEvent::CopFinish { cop, dst, bytes } => json::object_s(&[
+            ts,
+            ("type", Jv::S("cop-finish".into())),
+            ("cop", Jv::U(*cop)),
+            ("dst", Jv::U(*dst as u64)),
+            ("bytes", Jv::U(*bytes)),
+        ]),
+        TraceEvent::CopUsed { cop, task, node } => json::object_s(&[
+            ts,
+            ("type", Jv::S("cop-used".into())),
+            ("cop", Jv::U(*cop)),
+            ("task", Jv::U(*task)),
+            ("node", Jv::U(*node as u64)),
+        ]),
+        TraceEvent::CopAbort { cop, reason } => json::object_s(&[
+            ts,
+            ("type", Jv::S("cop-abort".into())),
+            ("cop", Jv::U(*cop)),
+            ("reason", Jv::S((*reason).into())),
+        ]),
+        TraceEvent::Decision { task, node, kind, candidates, cost, affinity } => json::object_s(&[
+            ts,
+            ("type", Jv::S("decision".into())),
+            ("kind", Jv::S((*kind).into())),
+            ("task", Jv::U(*task)),
+            ("node", Jv::U(*node as u64)),
+            ("candidates", Jv::U(*candidates)),
+            ("cost", Jv::F(*cost)),
+            ("affinity", Jv::F(*affinity)),
+        ]),
+        TraceEvent::Admission { tenant, decision } => json::object_s(&[
+            ts,
+            ("type", Jv::S("admission".into())),
+            ("tenant", Jv::S(tenant.clone())),
+            ("decision", Jv::S((*decision).into())),
+        ]),
+        TraceEvent::Fault { kind, subject } => json::object_s(&[
+            ts,
+            ("type", Jv::S("fault".into())),
+            ("kind", Jv::S((*kind).into())),
+            ("subject", Jv::U(*subject)),
+        ]),
+        TraceEvent::Sample { running, ready, admit_queue, replica_gb, node_util, rack_util } => {
+            json::object_s(&[
+                ts,
+                ("type", Jv::S("sample".into())),
+                ("running", Jv::U(*running)),
+                ("ready", Jv::U(*ready)),
+                ("admit_queue", Jv::U(*admit_queue)),
+                ("replica_gb", Jv::F(*replica_gb)),
+                ("node_util", Jv::Arr(node_util.iter().map(|&x| Jv::F(x)).collect())),
+                ("rack_util", Jv::Arr(rack_util.iter().map(|&x| Jv::F(x)).collect())),
+            ])
+        }
+    }
+}
+
+/// Pid hosting the control-plane rows (one past the last node).
+const CONTROL_TID_DECISIONS: u64 = 0;
+const CONTROL_TID_ADMISSION: u64 = 1;
+const CONTROL_TID_FAULTS: u64 = 2;
+/// Task-phase spans occupy tids [0, COP_TID_BASE); COP spans start at
+/// COP_TID_BASE so the two lane pools can never collide.
+const COP_TID_BASE: u64 = 1000;
+
+struct OpenSpan {
+    name: &'static str,
+    t0: SimTime,
+    pid: usize,
+    tid: u64,
+}
+
+struct ChromeExport<'a> {
+    trace: &'a Trace,
+    /// Rendered trace-event objects.
+    out: Vec<String>,
+    /// Open task-phase span per task (one per task at a time).
+    open: crate::util::fxmap::FastMap<u64, OpenSpan>,
+    /// Busy task lanes per node.
+    lanes: Vec<Vec<bool>>,
+    /// Open COP span: cop id → (t0, dst, bytes, lane).
+    cops: crate::util::fxmap::FastMap<u64, (SimTime, usize, u64, u64)>,
+    /// Busy COP lanes per node.
+    cop_lanes: Vec<Vec<bool>>,
+}
+
+impl<'a> ChromeExport<'a> {
+    fn new(trace: &'a Trace) -> Self {
+        ChromeExport {
+            trace,
+            out: Vec::new(),
+            open: Default::default(),
+            lanes: vec![Vec::new(); trace.n_nodes],
+            cops: Default::default(),
+            cop_lanes: vec![Vec::new(); trace.n_nodes],
+        }
+    }
+
+    fn alloc(pool: &mut [Vec<bool>], node: usize) -> u64 {
+        let lanes = &mut pool[node];
+        match lanes.iter().position(|&b| !b) {
+            Some(i) => {
+                lanes[i] = true;
+                i as u64
+            }
+            None => {
+                lanes.push(true);
+                (lanes.len() - 1) as u64
+            }
+        }
+    }
+
+    fn push_span(&mut self, name: &str, pid: usize, tid: u64, t0: SimTime, t1: SimTime) {
+        self.out.push(json::object_s(&[
+            ("name", Jv::S(name.into())),
+            ("cat", Jv::S("sim".into())),
+            ("ph", Jv::S("X".into())),
+            ("ts", Jv::U(t0.as_micros())),
+            ("dur", Jv::U((t1.saturating_sub(t0)).as_micros())),
+            ("pid", Jv::U(pid as u64)),
+            ("tid", Jv::U(tid)),
+        ]));
+    }
+
+    fn push_instant(&mut self, name: &str, tid: u64, t: SimTime, args: Vec<(String, Jv)>) {
+        self.out.push(json::object_s(&[
+            ("name", Jv::S(name.into())),
+            ("cat", Jv::S("sim".into())),
+            ("ph", Jv::S("i".into())),
+            ("s", Jv::S("g".into())),
+            ("ts", Jv::U(t.as_micros())),
+            ("pid", Jv::U(self.trace.n_nodes as u64)),
+            ("tid", Jv::U(tid)),
+            ("args", Jv::Obj(args)),
+        ]));
+    }
+
+    fn push_counter(&mut self, name: &str, t: SimTime, series: Vec<(String, Jv)>) {
+        self.out.push(json::object_s(&[
+            ("name", Jv::S(name.into())),
+            ("ph", Jv::S("C".into())),
+            ("ts", Jv::U(t.as_micros())),
+            ("pid", Jv::U(self.trace.n_nodes as u64)),
+            ("args", Jv::Obj(series)),
+        ]));
+    }
+
+    /// Close the open phase span of `task` at `t`, if any. Returns the
+    /// (pid, tid) lane it occupied.
+    fn close_task(&mut self, task: u64, t: SimTime, suffix: &str) -> Option<(usize, u64)> {
+        let span = self.open.remove(&task)?;
+        let name = if suffix.is_empty() {
+            format!("{} t{}", span.name, task)
+        } else {
+            format!("{} t{} {}", span.name, task, suffix)
+        };
+        self.push_span(&name, span.pid, span.tid, span.t0, t);
+        Some((span.pid, span.tid))
+    }
+
+    fn free_lane(&mut self, pid: usize, tid: u64) {
+        self.lanes[pid][tid as usize] = false;
+    }
+
+    fn render(mut self) -> String {
+        // Process-name metadata rows.
+        for n in 0..self.trace.n_nodes {
+            self.out.push(json::object_s(&[
+                ("name", Jv::S("process_name".into())),
+                ("ph", Jv::S("M".into())),
+                ("pid", Jv::U(n as u64)),
+                ("args", Jv::Obj(vec![("name".into(), Jv::S(format!("node {n}")))])),
+            ]));
+        }
+        self.out.push(json::object_s(&[
+            ("name", Jv::S("process_name".into())),
+            ("ph", Jv::S("M".into())),
+            ("pid", Jv::U(self.trace.n_nodes as u64)),
+            ("args", Jv::Obj(vec![("name".into(), Jv::S("control".into()))])),
+        ]));
+
+        let mut last_t = SimTime::ZERO;
+        // `trace` outlives `self`'s mutable method calls below.
+        let trace = self.trace;
+        for (t, ev) in &trace.events {
+            let t = *t;
+            last_t = t;
+            match *ev {
+                TraceEvent::PhaseStart { task, node, phase } => {
+                    let tid = match self.close_task(task, t, "") {
+                        // Same execution continues: keep the lane.
+                        Some((_, tid)) => tid,
+                        None => Self::alloc(&mut self.lanes, node),
+                    };
+                    self.open.insert(task, OpenSpan { name: phase, t0: t, pid: node, tid });
+                }
+                TraceEvent::TaskComplete { task, .. } => {
+                    if let Some((pid, tid)) = self.close_task(task, t, "") {
+                        self.free_lane(pid, tid);
+                    }
+                }
+                TraceEvent::TaskPreempt { task, .. } => {
+                    if let Some((pid, tid)) = self.close_task(task, t, "(preempted)") {
+                        self.free_lane(pid, tid);
+                    }
+                }
+                TraceEvent::TaskRerun { task, .. } => {
+                    if let Some((pid, tid)) = self.close_task(task, t, "(killed)") {
+                        self.free_lane(pid, tid);
+                    }
+                }
+                TraceEvent::CopStart { cop, dst, bytes, .. } => {
+                    let lane = Self::alloc(&mut self.cop_lanes, dst);
+                    self.cops.insert(cop, (t, dst, bytes, lane));
+                }
+                TraceEvent::CopFinish { cop, .. } | TraceEvent::CopAbort { cop, .. } => {
+                    if let Some((t0, dst, bytes, lane)) = self.cops.remove(&cop) {
+                        let name = format!("cop {cop} ({:.2} GB)", bytes as f64 / 1e9);
+                        self.push_span(&name, dst, COP_TID_BASE + lane, t0, t);
+                        self.cop_lanes[dst][lane as usize] = false;
+                    }
+                }
+                TraceEvent::Decision { task, node, kind, candidates, cost, affinity } => {
+                    self.push_instant(
+                        kind,
+                        CONTROL_TID_DECISIONS,
+                        t,
+                        vec![
+                            ("task".into(), Jv::U(task)),
+                            ("node".into(), Jv::U(node as u64)),
+                            ("candidates".into(), Jv::U(candidates)),
+                            ("cost".into(), Jv::F(cost)),
+                            ("affinity".into(), Jv::F(affinity)),
+                        ],
+                    );
+                }
+                TraceEvent::Admission { ref tenant, decision } => {
+                    self.push_instant(
+                        &format!("admission:{decision}"),
+                        CONTROL_TID_ADMISSION,
+                        t,
+                        vec![("tenant".into(), Jv::S(tenant.clone()))],
+                    );
+                }
+                TraceEvent::Fault { kind, subject } => {
+                    self.push_instant(
+                        kind,
+                        CONTROL_TID_FAULTS,
+                        t,
+                        vec![("subject".into(), Jv::U(subject))],
+                    );
+                }
+                TraceEvent::Sample {
+                    running,
+                    ready,
+                    admit_queue,
+                    replica_gb,
+                    ref node_util,
+                    ref rack_util,
+                } => {
+                    self.push_counter("running", t, vec![("tasks".into(), Jv::U(running))]);
+                    self.push_counter("ready_queue", t, vec![("tasks".into(), Jv::U(ready))]);
+                    self.push_counter(
+                        "admit_queue",
+                        t,
+                        vec![("tenants".into(), Jv::U(admit_queue))],
+                    );
+                    self.push_counter("replica_gb", t, vec![("gb".into(), Jv::F(replica_gb))]);
+                    if !node_util.is_empty() {
+                        let series =
+                            node_util.iter().enumerate().map(|(n, &u)| (format!("n{n}"), Jv::F(u)));
+                        self.push_counter("node_util", t, series.collect());
+                    }
+                    if !rack_util.is_empty() {
+                        let series =
+                            rack_util.iter().enumerate().map(|(r, &u)| (format!("r{r}"), Jv::F(u)));
+                        self.push_counter("rack_uplink_util", t, series.collect());
+                    }
+                }
+                TraceEvent::TaskSubmit { .. }
+                | TraceEvent::TaskRetry { .. }
+                | TraceEvent::CopUsed { .. } => {}
+            }
+        }
+        // Close anything still open (a run can end with recovery flows
+        // or rejected remainders in flight).
+        let open_tasks: Vec<u64> = {
+            let mut v: Vec<u64> = self.open.keys().copied().collect();
+            v.sort_unstable();
+            v
+        };
+        for task in open_tasks {
+            self.close_task(task, last_t, "(open)");
+        }
+        let open_cops: Vec<u64> = {
+            let mut v: Vec<u64> = self.cops.keys().copied().collect();
+            v.sort_unstable();
+            v
+        };
+        for cop in open_cops {
+            if let Some((t0, dst, bytes, lane)) = self.cops.remove(&cop) {
+                let name = format!("cop {cop} ({:.2} GB, open)", bytes as f64 / 1e9);
+                self.push_span(&name, dst, COP_TID_BASE + lane, t0, last_t);
+            }
+        }
+
+        format!(
+            "{{\"displayTimeUnit\": \"ms\", \"traceEvents\": [\n{}\n]}}\n",
+            self.out.join(",\n")
+        )
+    }
+}
+
+/// Simulator self-metrics: how much work the simulation engine itself
+/// did during a run. Purely observational — every counter lives outside
+/// [`crate::metrics::RunMetrics`] and its fingerprint; wall-clock
+/// sections are nondeterministic by nature and only measured when
+/// profiling is requested.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SimProfile {
+    /// Timed events popped from the executor's event queue.
+    pub events_processed: u64,
+    /// Flow completions delivered by the network.
+    pub flow_completions: u64,
+    /// Scheduling iterations (strategy invocations).
+    pub sched_iterations: u64,
+    /// Actions those iterations produced.
+    pub sched_actions: u64,
+    /// Connected-component max-min recomputes in the flow network.
+    pub net_recomputes: u64,
+    /// Lazy-replay folds (deferred-segment catch-ups) and the total
+    /// timeline steps they applied.
+    pub replay_folds: u64,
+    pub replay_steps: u64,
+    /// MinTimeSet mutations (completion-horizon maintenance).
+    pub mts_ops: u64,
+    /// Trace events recorded (0 unless tracing).
+    pub trace_events: u64,
+    /// Wall-clock seconds: whole run, network sections (advance +
+    /// completion drain), scheduler sections.
+    pub wall_total_s: f64,
+    pub wall_net_s: f64,
+    pub wall_sched_s: f64,
+}
+
+impl SimProfile {
+    /// One-line JSON object (used by `wow run --profile` and the
+    /// bench_scale rows).
+    pub fn to_json(&self) -> String {
+        json::object_s(&self.fields())
+    }
+
+    /// Field list in declaration order — shared by the JSON export and
+    /// the bench columns so they can never drift.
+    pub fn fields(&self) -> Vec<(&'static str, Jv)> {
+        let SimProfile {
+            events_processed,
+            flow_completions,
+            sched_iterations,
+            sched_actions,
+            net_recomputes,
+            replay_folds,
+            replay_steps,
+            mts_ops,
+            trace_events,
+            wall_total_s,
+            wall_net_s,
+            wall_sched_s,
+        } = self;
+        vec![
+            ("events_processed", Jv::U(*events_processed)),
+            ("flow_completions", Jv::U(*flow_completions)),
+            ("sched_iterations", Jv::U(*sched_iterations)),
+            ("sched_actions", Jv::U(*sched_actions)),
+            ("net_recomputes", Jv::U(*net_recomputes)),
+            ("replay_folds", Jv::U(*replay_folds)),
+            ("replay_steps", Jv::U(*replay_steps)),
+            ("mts_ops", Jv::U(*mts_ops)),
+            ("trace_events", Jv::U(*trace_events)),
+            ("wall_total_s", Jv::F(*wall_total_s)),
+            ("wall_net_s", Jv::F(*wall_net_s)),
+            ("wall_sched_s", Jv::F(*wall_sched_s)),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let mut t = Tracer::off();
+        assert!(!t.enabled());
+        t.emit(SimTime(5), || panic!("closure must not run on a disabled tracer"));
+        assert_eq!(t.len(), 0);
+        assert!(t.due_sample(SimTime::FAR_FUTURE).is_none());
+        assert!(t.finish(4).is_none());
+    }
+
+    #[test]
+    fn sampling_grid_advances() {
+        let mut t = Tracer::new(&TraceConfig { sample_every_s: 10.0 });
+        let horizon = SimTime::from_secs_f64(25.0);
+        let mut got = Vec::new();
+        while let Some(g) = t.due_sample(horizon) {
+            got.push(g.as_secs_f64());
+            t.record_sample(
+                g,
+                TraceEvent::Sample {
+                    running: 0,
+                    ready: 0,
+                    admit_queue: 0,
+                    replica_gb: 0.0,
+                    node_util: vec![],
+                    rack_util: vec![],
+                },
+            );
+        }
+        assert_eq!(got, vec![0.0, 10.0, 20.0]);
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn jsonl_and_chrome_are_valid_json() {
+        let mut tr = Tracer::new(&TraceConfig::default());
+        tr.emit(SimTime(0), || TraceEvent::TaskSubmit { task: 1, tenant: 0 });
+        tr.emit(SimTime(10), || TraceEvent::PhaseStart { task: 1, node: 0, phase: "stage-in" });
+        tr.emit(SimTime(30), || TraceEvent::PhaseStart { task: 1, node: 0, phase: "compute" });
+        tr.emit(SimTime(40), || TraceEvent::CopStart { cop: 0, task: 2, dst: 1, bytes: 1 << 30 });
+        tr.emit(SimTime(90), || TraceEvent::CopFinish { cop: 0, dst: 1, bytes: 1 << 30 });
+        tr.emit(SimTime(95), || TraceEvent::PhaseStart { task: 1, node: 0, phase: "stage-out" });
+        tr.emit(SimTime(99), || TraceEvent::TaskComplete { task: 1, node: 0 });
+        let trace = tr.finish(2).unwrap();
+        for line in trace.to_jsonl().lines() {
+            assert!(crate::util::json::validate(line).is_ok(), "{line}");
+        }
+        let chrome = trace.to_chrome();
+        assert!(crate::util::json::validate(&chrome).is_ok(), "{chrome}");
+        assert!(chrome.contains("\"ph\": \"X\""));
+        let counts = trace.counts();
+        assert_eq!(counts.submits, 1);
+        assert_eq!(counts.completes, 1);
+        assert_eq!(counts.cops_started, 1);
+        assert_eq!(counts.cops_finished, 1);
+    }
+
+    #[test]
+    fn sim_profile_json_is_valid() {
+        let p = SimProfile { events_processed: 3, wall_total_s: 0.25, ..Default::default() };
+        let s = p.to_json();
+        assert!(crate::util::json::validate(&s).is_ok(), "{s}");
+        assert!(s.contains("\"events_processed\": 3"));
+    }
+}

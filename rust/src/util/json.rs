@@ -1,0 +1,346 @@
+//! Dependency-free JSON emission and validation.
+//!
+//! The crate deliberately carries no serde: every machine-readable
+//! artifact (`BENCH_*.json`, `SERVE_*.json`, `wow run --json`, trace
+//! exports) is assembled from these helpers instead of ad-hoc
+//! `format!` strings scattered per call site. Emission is
+//! deterministic — field order is whatever the caller supplies — and
+//! non-finite floats render as `null` so output is always valid JSON.
+//! [`validate`] is a minimal recursive-descent checker used by tests
+//! (and mirrored in CI by `python3 -m json.tool`).
+
+/// A JSON value. Floats carry an optional fixed precision so report
+/// writers can keep their historical column formatting.
+pub enum Jv {
+    /// Float rendered with Rust's shortest round-trip formatting.
+    F(f64),
+    /// Float rendered with a fixed number of decimals.
+    Fx(f64, usize),
+    U(u64),
+    I(i64),
+    S(String),
+    B(bool),
+    Null,
+    Arr(Vec<Jv>),
+    Obj(Vec<(String, Jv)>),
+}
+
+impl Jv {
+    pub fn render(&self) -> String {
+        match self {
+            // JSON has no NaN/inf; be explicit rather than emit an
+            // invalid file.
+            Jv::F(x) if x.is_finite() => format!("{x}"),
+            Jv::F(_) => "null".into(),
+            Jv::Fx(x, p) if x.is_finite() => format!("{x:.prec$}", prec = *p),
+            Jv::Fx(..) => "null".into(),
+            Jv::U(x) => format!("{x}"),
+            Jv::I(x) => format!("{x}"),
+            Jv::S(s) => format!("\"{}\"", escape(s)),
+            Jv::B(b) => format!("{b}"),
+            Jv::Null => "null".into(),
+            Jv::Arr(xs) => {
+                let parts: Vec<String> = xs.iter().map(Jv::render).collect();
+                format!("[{}]", parts.join(", "))
+            }
+            Jv::Obj(fields) => object(fields),
+        }
+    }
+}
+
+/// Escape a string for inclusion inside JSON quotes.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render `fields` as a one-line JSON object, order preserved.
+pub fn object(fields: &[(String, Jv)]) -> String {
+    let parts: Vec<String> =
+        fields.iter().map(|(k, v)| format!("\"{}\": {}", escape(k), v.render())).collect();
+    format!("{{{}}}", parts.join(", "))
+}
+
+/// [`object`] over `&str` keys (the common literal-key case).
+pub fn object_s(fields: &[(&str, Jv)]) -> String {
+    let parts: Vec<String> =
+        fields.iter().map(|(k, v)| format!("\"{}\": {}", escape(k), v.render())).collect();
+    format!("{{{}}}", parts.join(", "))
+}
+
+/// Accumulates one-line row objects and renders them as a single
+/// pretty document `{"<kind>": "<name>", "rows": [ ... ]}` — the shape
+/// shared by every bench report and experiment artifact.
+pub struct RowsDoc {
+    kind: &'static str,
+    name: String,
+    rows: Vec<String>,
+}
+
+impl RowsDoc {
+    pub fn new(kind: &'static str, name: &str) -> Self {
+        RowsDoc { kind, name: name.to_string(), rows: Vec::new() }
+    }
+
+    /// Append one pre-rendered row object (see [`object_s`]).
+    pub fn push_row(&mut self, row: String) {
+        self.rows.push(row);
+    }
+
+    /// Append one row built from fields, order preserved.
+    pub fn row(&mut self, fields: &[(&str, Jv)]) {
+        self.rows.push(object_s(fields));
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render the full document.
+    pub fn render(&self) -> String {
+        let body: Vec<String> = self.rows.iter().map(|r| format!("    {r}")).collect();
+        format!(
+            "{{\n  \"{}\": \"{}\",\n  \"rows\": [\n{}\n  ]\n}}\n",
+            escape(self.kind),
+            escape(&self.name),
+            body.join(",\n")
+        )
+    }
+
+    /// Write the document to `path`, announcing the file on stdout.
+    pub fn write(&self, path: &str) {
+        match std::fs::write(path, self.render()) {
+            Ok(()) => println!("\nwrote {path} ({} rows)", self.rows.len()),
+            Err(e) => eprintln!("warn: could not write {path}: {e}"),
+        }
+    }
+}
+
+/// Minimal JSON validity check: parses the full grammar (objects,
+/// arrays, strings with escapes, numbers, literals) and requires the
+/// input to be exactly one value plus whitespace. Returns the byte
+/// offset of the first error.
+pub fn validate(s: &str) -> Result<(), usize> {
+    let b = s.as_bytes();
+    let mut i = 0usize;
+    skip_ws(b, &mut i);
+    parse_value(b, &mut i)?;
+    skip_ws(b, &mut i);
+    if i == b.len() {
+        Ok(())
+    } else {
+        Err(i)
+    }
+}
+
+fn skip_ws(b: &[u8], i: &mut usize) {
+    while *i < b.len() && matches!(b[*i], b' ' | b'\t' | b'\n' | b'\r') {
+        *i += 1;
+    }
+}
+
+fn parse_value(b: &[u8], i: &mut usize) -> Result<(), usize> {
+    match b.get(*i) {
+        Some(b'{') => parse_object(b, i),
+        Some(b'[') => parse_array(b, i),
+        Some(b'"') => parse_string(b, i),
+        Some(b't') => parse_lit(b, i, b"true"),
+        Some(b'f') => parse_lit(b, i, b"false"),
+        Some(b'n') => parse_lit(b, i, b"null"),
+        Some(c) if *c == b'-' || c.is_ascii_digit() => parse_number(b, i),
+        _ => Err(*i),
+    }
+}
+
+fn parse_object(b: &[u8], i: &mut usize) -> Result<(), usize> {
+    *i += 1; // '{'
+    skip_ws(b, i);
+    if b.get(*i) == Some(&b'}') {
+        *i += 1;
+        return Ok(());
+    }
+    loop {
+        skip_ws(b, i);
+        parse_string(b, i)?;
+        skip_ws(b, i);
+        if b.get(*i) != Some(&b':') {
+            return Err(*i);
+        }
+        *i += 1;
+        skip_ws(b, i);
+        parse_value(b, i)?;
+        skip_ws(b, i);
+        match b.get(*i) {
+            Some(b',') => *i += 1,
+            Some(b'}') => {
+                *i += 1;
+                return Ok(());
+            }
+            _ => return Err(*i),
+        }
+    }
+}
+
+fn parse_array(b: &[u8], i: &mut usize) -> Result<(), usize> {
+    *i += 1; // '['
+    skip_ws(b, i);
+    if b.get(*i) == Some(&b']') {
+        *i += 1;
+        return Ok(());
+    }
+    loop {
+        skip_ws(b, i);
+        parse_value(b, i)?;
+        skip_ws(b, i);
+        match b.get(*i) {
+            Some(b',') => *i += 1,
+            Some(b']') => {
+                *i += 1;
+                return Ok(());
+            }
+            _ => return Err(*i),
+        }
+    }
+}
+
+fn parse_string(b: &[u8], i: &mut usize) -> Result<(), usize> {
+    if b.get(*i) != Some(&b'"') {
+        return Err(*i);
+    }
+    *i += 1;
+    while let Some(&c) = b.get(*i) {
+        match c {
+            b'"' => {
+                *i += 1;
+                return Ok(());
+            }
+            b'\\' => {
+                *i += 1;
+                match b.get(*i) {
+                    Some(b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't') => *i += 1,
+                    Some(b'u') => {
+                        *i += 1;
+                        for _ in 0..4 {
+                            if !b.get(*i).is_some_and(u8::is_ascii_hexdigit) {
+                                return Err(*i);
+                            }
+                            *i += 1;
+                        }
+                    }
+                    _ => return Err(*i),
+                }
+            }
+            0x00..=0x1f => return Err(*i),
+            _ => *i += 1,
+        }
+    }
+    Err(*i)
+}
+
+fn parse_number(b: &[u8], i: &mut usize) -> Result<(), usize> {
+    let start = *i;
+    if b.get(*i) == Some(&b'-') {
+        *i += 1;
+    }
+    let mut digits = 0;
+    while b.get(*i).is_some_and(u8::is_ascii_digit) {
+        *i += 1;
+        digits += 1;
+    }
+    if digits == 0 {
+        return Err(start);
+    }
+    if b.get(*i) == Some(&b'.') {
+        *i += 1;
+        let mut frac = 0;
+        while b.get(*i).is_some_and(u8::is_ascii_digit) {
+            *i += 1;
+            frac += 1;
+        }
+        if frac == 0 {
+            return Err(*i);
+        }
+    }
+    if matches!(b.get(*i), Some(b'e' | b'E')) {
+        *i += 1;
+        if matches!(b.get(*i), Some(b'+' | b'-')) {
+            *i += 1;
+        }
+        let mut exp = 0;
+        while b.get(*i).is_some_and(u8::is_ascii_digit) {
+            *i += 1;
+            exp += 1;
+        }
+        if exp == 0 {
+            return Err(*i);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_scalars() {
+        assert_eq!(Jv::F(1.5).render(), "1.5");
+        assert_eq!(Jv::F(f64::NAN).render(), "null");
+        assert_eq!(Jv::Fx(1.23456, 3).render(), "1.235");
+        assert_eq!(Jv::U(7).render(), "7");
+        assert_eq!(Jv::I(-2).render(), "-2");
+        assert_eq!(Jv::B(true).render(), "true");
+        assert_eq!(Jv::Null.render(), "null");
+        assert_eq!(Jv::S("a\"b".into()).render(), "\"a\\\"b\"");
+    }
+
+    #[test]
+    fn renders_nested() {
+        let v = Jv::Obj(vec![
+            ("xs".into(), Jv::Arr(vec![Jv::U(1), Jv::U(2)])),
+            ("ok".into(), Jv::B(false)),
+        ]);
+        let s = v.render();
+        assert_eq!(s, "{\"xs\": [1, 2], \"ok\": false}");
+        assert!(validate(&s).is_ok());
+    }
+
+    #[test]
+    fn rows_doc_shape() {
+        let mut doc = RowsDoc::new("bench", "demo");
+        doc.row(&[("label", Jv::S("a".into())), ("x", Jv::Fx(0.5, 2))]);
+        doc.row(&[("label", Jv::S("b".into())), ("x", Jv::F(1.0))]);
+        let s = doc.render();
+        assert!(s.contains("\"bench\": \"demo\""));
+        assert!(s.contains("\"x\": 0.50"));
+        assert!(validate(&s).is_ok(), "{s}");
+    }
+
+    #[test]
+    fn validator_accepts_and_rejects() {
+        for good in [
+            "null",
+            "-1.5e-3",
+            "[]",
+            "{}",
+            "{\"a\": [1, {\"b\": \"c\\n\"}], \"d\": true}",
+            "  [1, 2, 3]  ",
+        ] {
+            assert!(validate(good).is_ok(), "{good}");
+        }
+        for bad in
+            ["", "{", "[1,]", "{\"a\" 1}", "nul", "1.", "\"unterminated", "[1] extra", "{1: 2}"]
+        {
+            assert!(validate(bad).is_err(), "{bad}");
+        }
+    }
+}

@@ -1,6 +1,7 @@
-//! Shared utilities: deterministic PRNG, units, statistics.
+//! Shared utilities: deterministic PRNG, units, statistics, JSON.
 
 pub mod fxmap;
+pub mod json;
 pub mod rng;
 pub mod stats;
 pub mod units;

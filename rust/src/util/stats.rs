@@ -14,7 +14,9 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return f64::NAN;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: NaN-safe (orders NaN after +inf) where the former
+    // partial_cmp().unwrap() panicked on NaN input.
+    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -43,13 +45,13 @@ pub fn gini(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
-    debug_assert!(xs.iter().all(|&x| x >= 0.0), "gini needs non-negative values");
+    debug_assert!(xs.iter().all(|&x| x >= 0.0 || x.is_nan()), "gini needs non-negative values");
     let total: f64 = xs.iter().sum();
     if total <= 0.0 {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let n = v.len() as f64;
     let weighted: f64 = v.iter().enumerate().map(|(i, &x)| (i as f64 + 1.0) * x).sum();
     (2.0 * weighted) / (n * total) - (n + 1.0) / n
@@ -113,6 +115,25 @@ mod tests {
     fn gini_in_unit_interval() {
         let g = gini(&[1.0, 2.0, 3.0, 10.0]);
         assert!((0.0..1.0).contains(&g));
+    }
+
+    #[test]
+    fn percentile_tolerates_nan() {
+        // Regression: the old partial_cmp().unwrap() comparator panicked
+        // on NaN. total_cmp sorts NaN past +inf, so finite percentiles
+        // of a mostly-finite slice stay sensible and nothing panics.
+        let xs = [2.0, f64::NAN, 1.0, 3.0];
+        let p0 = percentile(&xs, 0.0);
+        assert_eq!(p0, 1.0);
+        let p100 = percentile(&xs, 100.0);
+        assert!(p100.is_nan(), "NaN sorts last, p100={p100}");
+    }
+
+    #[test]
+    fn gini_tolerates_nan() {
+        // Must not panic; the value itself is garbage-in-garbage-out.
+        let g = gini(&[1.0, f64::NAN, 2.0]);
+        let _ = g;
     }
 
     #[test]

@@ -1,0 +1,183 @@
+//! Observability integration tests (DESIGN.md §13). The load-bearing
+//! contract: tracing and profiling are **observation-only** — a run
+//! with the tracer and profiler attached produces a bit-identical
+//! `RunMetrics` fingerprint to the same run without them, on every
+//! simulation core, under the nastiest regime the simulator has
+//! (open arrivals, bounded-queue admission, fair-share preemption,
+//! dedup, a node crash, and injected transient task failures).
+//!
+//! On top of that: trace event counts must reconcile exactly with the
+//! `RunMetrics` counters (the trace is an itemized receipt for the
+//! aggregates), and both exporters must emit valid JSON.
+
+use wow::dfs::DfsKind;
+use wow::dps::cost::NativeCost;
+use wow::exec::{run_workload, run_workload_observed, ObserveConfig, RunConfig, RunOutput, SimCore};
+use wow::fault::FaultConfig;
+use wow::scheduler::{Strategy, TenantPolicy};
+use wow::serve::{self, AdmissionPolicy, DequeueOrder, ServeConfig};
+use wow::trace::TraceConfig;
+use wow::util::json::validate;
+use wow::util::units::Bytes;
+use wow::workflow::spec::{ComputeModel, OutputSize, Rule, StageSpec, WorkflowSpec};
+use wow::workflow::task::StageId;
+use wow::workload::WorkloadSpec;
+
+/// The saturating tenant workflow from `rust/tests/serve.rs`: map
+/// tasks occupy full nodes, so the serving regime really preempts.
+fn hog() -> WorkflowSpec {
+    WorkflowSpec {
+        name: "hog".into(),
+        stages: vec![
+            StageSpec {
+                name: "map".into(),
+                rule: Rule::Source { count: 4, inputs_per_task: 1 },
+                cores: 16,
+                mem: Bytes::from_gb(4.0),
+                compute: ComputeModel::fixed(45.0),
+                out_count: 1,
+                out_size: OutputSize::FixedGb(0.3),
+            },
+            StageSpec {
+                name: "reduce".into(),
+                rule: Rule::PerTask { from: StageId(0) },
+                cores: 2,
+                mem: Bytes::from_gb(2.0),
+                compute: ComputeModel::fixed(10.0),
+                out_count: 1,
+                out_size: OutputSize::RatioOfInput(0.5),
+            },
+        ],
+        input_files_gb: vec![0.5; 4],
+    }
+}
+
+/// The serving + fault regime proven eventful by `rust/tests/serve.rs`
+/// (preemptions > 0 on this exact workload/config/seed).
+fn stormy() -> (WorkloadSpec, RunConfig) {
+    let wl = serve::open_stream("stream", &[hog()], 30.0, 300.0, 3);
+    let cfg = RunConfig {
+        strategy: Strategy::Wow,
+        dfs: DfsKind::Ceph,
+        seed: 3,
+        tenant_policy: TenantPolicy::FairShare,
+        serve: ServeConfig {
+            admission: AdmissionPolicy::Queue { active: 6, depth: 8, order: DequeueOrder::Fifo },
+            preempt: true,
+            slo_s: 400.0,
+            horizon_s: 300.0,
+            dedup: true,
+        },
+        fault: FaultConfig {
+            node_crashes: 1,
+            crash_window_s: (40.0, 200.0),
+            recovery_s: Some(60.0),
+            task_fail_prob: 0.05,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    (wl, cfg)
+}
+
+fn observe(wl: &WorkloadSpec, cfg: &RunConfig, sample_every_s: f64) -> RunOutput {
+    let obs = ObserveConfig { trace: Some(TraceConfig { sample_every_s }), profile: true };
+    run_workload_observed(wl, cfg, Box::new(NativeCost), &obs)
+}
+
+/// The tentpole property: attaching the tracer (with interval sampling
+/// on) and the profiler changes NOTHING about the simulation — the
+/// fingerprint is bit-identical to the untraced run on all four cores,
+/// and all four cores agree with each other.
+#[test]
+fn tracing_and_profiling_are_observation_only_on_every_core() {
+    let (wl, cfg) = stormy();
+    let mut prints = Vec::new();
+    for core in [SimCore::Incremental, SimCore::Checked, SimCore::Eager, SimCore::Naive] {
+        let mut c = cfg.clone();
+        c.core = core;
+        let plain = run_workload(&wl, &c).fingerprint();
+        let out = observe(&wl, &c, 25.0);
+        assert_eq!(
+            out.metrics.fingerprint(),
+            plain,
+            "{core:?}: tracing/profiling perturbed the run"
+        );
+        let trace = out.trace.expect("tracing was requested");
+        assert!(!trace.events.is_empty(), "{core:?}: an eventful run must trace events");
+        let prof = out.profile.expect("profiling was requested");
+        assert_eq!(prof.trace_events, trace.events.len() as u64);
+        assert!(prof.events_processed > 0 && prof.sched_iterations > 0);
+        assert!(prof.wall_total_s > 0.0);
+        prints.push((core, plain));
+    }
+    let (_, first) = prints[0];
+    for (core, fp) in &prints {
+        assert_eq!(*fp, first, "{core:?} fingerprint diverged from Incremental");
+    }
+}
+
+/// The trace is an itemized receipt for the `RunMetrics` aggregates:
+/// every lifecycle counter must reconcile exactly against the event
+/// counts, on a run exercising preemption, faults, retries and
+/// admission queueing all at once.
+#[test]
+fn trace_counts_reconcile_with_run_metrics() {
+    let (wl, cfg) = stormy();
+    let out = observe(&wl, &cfg, 20.0);
+    let m = &out.metrics;
+    let c = out.trace.expect("tracing was requested").counts();
+    assert_eq!(c.cops_started, m.cops_created);
+    assert_eq!(c.cops_used, m.cops_used);
+    assert_eq!(c.cops_aborted, m.cops_aborted);
+    assert_eq!(c.preempts, m.preemptions);
+    assert_eq!(c.reruns + c.preempts, m.tasks_rerun);
+    assert_eq!(c.retries, m.task_failures);
+    assert_eq!(c.rejected, m.tenants_rejected);
+    assert_eq!(c.queued, m.tenants_queued);
+    assert!(c.preempts > 0, "scenario must actually preempt");
+    assert!(c.faults >= m.node_crashes, "each crash shows at least its fault instant");
+    assert!(c.decisions > 0, "scheduler decisions must be explained");
+    assert!(c.samples > 0, "interval sampler must fire on a 300 s+ run");
+    assert!(c.submits >= c.completes, "every completion was submitted first");
+    assert!(c.completes > 0);
+}
+
+/// Admission shedding shows up in the trace: flood one active slot and
+/// one queue slot, and the reject verdicts must match the shed count.
+#[test]
+fn flooded_admission_reconciles_rejects() {
+    let wl = serve::open_stream("flood", &[hog()], 10.0, 60.0, 0);
+    let (_, mut cfg) = stormy();
+    cfg.seed = 0;
+    cfg.fault = FaultConfig::default();
+    cfg.serve.admission = AdmissionPolicy::Queue { active: 1, depth: 1, order: DequeueOrder::Fifo };
+    cfg.serve.horizon_s = 60.0;
+    let out = observe(&wl, &cfg, 0.0);
+    let m = &out.metrics;
+    let c = out.trace.expect("tracing was requested").counts();
+    assert!(m.tenants_rejected > 0, "flood must shed");
+    assert_eq!(c.rejected, m.tenants_rejected);
+    assert_eq!(c.queued, m.tenants_queued);
+    assert_eq!(c.samples, 0, "sample_every_s = 0 disables the sampler");
+}
+
+/// Both exporters emit parseable JSON: every JSONL line validates, and
+/// the Chrome export validates as one document with the expected span,
+/// counter and metadata rows.
+#[test]
+fn exporters_emit_valid_json() {
+    let (wl, cfg) = stormy();
+    let out = observe(&wl, &cfg, 30.0);
+    let trace = out.trace.expect("tracing was requested");
+    for line in trace.to_jsonl().lines() {
+        assert!(validate(line).is_ok(), "invalid JSONL line: {line}");
+    }
+    let chrome = trace.to_chrome();
+    assert!(validate(&chrome).is_ok(), "invalid chrome trace JSON");
+    assert!(chrome.contains("\"traceEvents\""));
+    assert!(chrome.contains("\"ph\": \"X\""), "task/COP spans present");
+    assert!(chrome.contains("\"ph\": \"C\""), "counter tracks present");
+    assert!(chrome.contains("\"ph\": \"M\""), "process-name metadata present");
+    assert!(chrome.contains("\"name\": \"running\""));
+}
