@@ -200,6 +200,12 @@ impl TopoView {
     pub fn same_rack(&self, a: NodeId, b: NodeId) -> bool {
         self.node_rack[a.0] == self.node_rack[b.0]
     }
+
+    /// The rack index of a node — the failure domain hedged COPs
+    /// diversify across (see [`crate::dps::Dps::plan_hedge`]).
+    pub fn rack_of(&self, n: NodeId) -> usize {
+        self.node_rack[n.0]
+    }
 }
 
 /// The cluster: all nodes plus convenience accessors. The bandwidth

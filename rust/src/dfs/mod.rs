@@ -105,11 +105,29 @@ pub struct Ceph {
     /// file → logical size (pre-inflation), for re-replication traffic.
     sizes: HashMap<FileId, Bytes>,
     replica_factor: usize,
+    /// CRUSH-style failure-domain awareness (opt-in): steer the
+    /// secondary replica into a different rack than the primary, and
+    /// prefer cross-rack targets when healing. Spreading is draw-free
+    /// and healing still draws exactly once per object, so enabling it
+    /// never shifts the placement rng stream — only the picked nodes.
+    rack_aware: bool,
 }
 
 impl Ceph {
     pub fn new() -> Self {
-        Ceph { placement: HashMap::new(), sizes: HashMap::new(), replica_factor: 2 }
+        Ceph {
+            placement: HashMap::new(),
+            sizes: HashMap::new(),
+            replica_factor: 2,
+            rack_aware: false,
+        }
+    }
+
+    /// Enable CRUSH-style rack-aware replica spreading (no-op on the
+    /// flat topology, which has no racks).
+    pub fn with_rack_awareness(mut self, on: bool) -> Self {
+        self.rack_aware = on;
+        self
     }
 
     fn place(&mut self, file: FileId, cluster: &Cluster, rng: &mut Rng) -> [NodeId; 2] {
@@ -126,6 +144,26 @@ impl Ceph {
                 a
             };
             let mut reps = [NodeId(a), NodeId(b)];
+            // CRUSH-style spreading: when both picks share a rack, walk
+            // the OSD ring from `b` for an alive worker in a different
+            // failure domain. Deterministic and draw-free, so the rng
+            // stream is identical with or without awareness.
+            if self.rack_aware && n > 1 {
+                if let Some(ra) = cluster.rack_of(reps[0]) {
+                    if cluster.rack_of(reps[1]) == Some(ra) {
+                        for off in 1..n {
+                            let cand = NodeId((b + off) % n);
+                            if cand != reps[0]
+                                && cluster.node(cand).alive
+                                && cluster.rack_of(cand) != Some(ra)
+                            {
+                                reps[1] = cand;
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
             // Redirect picks that landed on crashed OSDs, keeping the
             // replicas on distinct nodes whenever enough alive OSDs
             // exist. On a healthy cluster this path draws nothing,
@@ -258,7 +296,23 @@ impl Dfs for Ceph {
             let new_holder = if candidates.is_empty() {
                 survivor // degenerate tiny cluster: collapse to one holder
             } else {
-                candidates[rng.index(candidates.len())]
+                let mut pool = candidates;
+                // Rack-aware healing: restore domain diversity by
+                // preferring targets outside the survivor's rack. Still
+                // exactly one draw per healed object.
+                if self.rack_aware {
+                    if let Some(rs) = cluster.rack_of(survivor) {
+                        let cross: Vec<NodeId> = pool
+                            .iter()
+                            .copied()
+                            .filter(|c| cluster.rack_of(*c) != Some(rs))
+                            .collect();
+                        if !cross.is_empty() {
+                            pool = cross;
+                        }
+                    }
+                }
+                pool[rng.index(pool.len())]
             };
             let healed = self.placement.get_mut(&file).expect("affected file placed");
             for r in healed.iter_mut() {
@@ -471,6 +525,80 @@ mod tests {
                 assert!(c.node(r).alive, "file {f} placed on dead node {r:?}");
             }
             assert_ne!(reps[0], reps[1], "two alive OSDs left → replicas stay distinct");
+        }
+    }
+
+    fn racked_setup(rack_aware: bool) -> (FlowNet, Cluster, Rng, Ceph) {
+        let mut net = FlowNet::new();
+        let c = Cluster::build_topo(
+            &mut net,
+            8,
+            NodeSpec::paper_worker(1.0),
+            None,
+            crate::cluster::Topology::Racks { racks: 2, oversub: 4.0 },
+        );
+        (net, c, Rng::new(99), Ceph::new().with_rack_awareness(rack_aware))
+    }
+
+    #[test]
+    fn crush_spreads_replicas_across_racks() {
+        let (_n, c, mut rng, mut ceph) = racked_setup(true);
+        for f in 0..64u64 {
+            ceph.register_input(FileId(f), Bytes(10), &c, &mut rng);
+            let reps = ceph.placement[&FileId(f)];
+            assert_ne!(
+                c.rack_of(reps[0]),
+                c.rack_of(reps[1]),
+                "file {f}: both replicas in rack {:?}",
+                c.rack_of(reps[0])
+            );
+        }
+    }
+
+    #[test]
+    fn crush_spreading_is_draw_free() {
+        // Awareness must only change *which* nodes are picked, never how
+        // many values the placement stream consumes.
+        let (_n, c, mut rng_a, mut aware) = racked_setup(true);
+        let (_n2, _c2, mut rng_p, mut plain) = racked_setup(false);
+        for f in 0..32u64 {
+            aware.register_input(FileId(f), Bytes(10), &c, &mut rng_a);
+            plain.register_input(FileId(f), Bytes(10), &c, &mut rng_p);
+            // The primary pick is shared; only the secondary may differ.
+            assert_eq!(aware.placement[&FileId(f)][0], plain.placement[&FileId(f)][0]);
+        }
+        assert_eq!(rng_a.index(1 << 20), rng_p.index(1 << 20), "streams stayed in lockstep");
+    }
+
+    #[test]
+    fn crush_is_inert_on_flat_topology() {
+        let (_n, c, mut rng_a) = setup();
+        let (_n2, _c2, mut rng_p) = setup();
+        let mut aware = Ceph::new().with_rack_awareness(true);
+        let mut plain = Ceph::new();
+        for f in 0..32u64 {
+            aware.register_input(FileId(f), Bytes(10), &c, &mut rng_a);
+            plain.register_input(FileId(f), Bytes(10), &c, &mut rng_p);
+            assert_eq!(aware.placement[&FileId(f)], plain.placement[&FileId(f)]);
+        }
+    }
+
+    #[test]
+    fn crush_healing_prefers_cross_rack_targets() {
+        let (_n, mut c, mut rng, mut ceph) = racked_setup(true);
+        for f in 0..32u64 {
+            ceph.register_input(FileId(f), Bytes::from_gb(1.0), &c, &mut rng);
+        }
+        let dead = NodeId(0);
+        c.set_alive(dead, false);
+        ceph.fail_node(dead, &c, &mut rng);
+        for (f, reps) in &ceph.placement {
+            assert!(!reps.contains(&dead));
+            assert_ne!(
+                c.rack_of(reps[0]),
+                c.rack_of(reps[1]),
+                "file {f:?} lost rack diversity after healing"
+            );
         }
     }
 

@@ -141,6 +141,15 @@ pub struct Dps {
     pub cops_completed: u64,
     /// COPs aborted mid-flight by node crashes (fault injection).
     pub cops_aborted: u64,
+    /// Failure-domain index per worker (racks on a hierarchical
+    /// topology, node identity on flat) for hedged-COP diversity.
+    /// Empty unless resilience hedging is enabled — the disabled path
+    /// never reads it.
+    domains: Vec<usize>,
+    /// Per-worker hazard estimate (expected crash exposure) for
+    /// availability-aware placement. Empty unless hazard pricing is
+    /// enabled; [`Self::hazard_of`] reads 0 then.
+    hazard: Vec<f64>,
     rng: Rng,
 }
 
@@ -165,6 +174,8 @@ impl Dps {
             cops_created: 0,
             cops_completed: 0,
             cops_aborted: 0,
+            domains: Vec::new(),
+            hazard: Vec::new(),
             rng: Rng::new(seed ^ 0x5DEE_CE66_D1CE_5EED),
         }
     }
@@ -338,6 +349,83 @@ impl Dps {
             Some(t) => parts.iter().map(|(_, src, b)| b.as_f64() * t.penalty(*src, dst)).sum(),
         };
         Some(CopPlan { parts, total_bytes: total, max_source_load: max_load, weighted_bytes })
+    }
+
+    /// Declare the failure domain of every worker (rack index on a
+    /// hierarchical topology, node identity on flat) — enables hedged
+    /// COPs. Only called when `ResilienceConfig::hedge_k ≥ 1`; the
+    /// disabled path never reads the map.
+    pub fn set_failure_domains(&mut self, domains: Vec<usize>) {
+        self.domains = domains;
+    }
+
+    /// The failure domain of `n`: the declared rack, or the node itself
+    /// when no map was set (every node its own domain).
+    pub fn domain_of(&self, n: NodeId) -> usize {
+        self.domains.get(n.0).copied().unwrap_or(n.0)
+    }
+
+    /// Plan the cheapest domain-diverse hedge replica of `file`: among
+    /// `candidates` whose failure domain differs from every current
+    /// holder's (and from every node in `also_covered` — hedge COPs
+    /// already in flight), pick the destination with the lowest plan
+    /// price (ties by node id). Reuses [`Self::plan`], so the hedge is
+    /// priced through the same presence-matrix path penalties as any
+    /// COP. Returns `None` when the file has no replica yet or every
+    /// candidate domain is already covered.
+    pub fn plan_hedge(
+        &mut self,
+        file: FileId,
+        candidates: &[NodeId],
+        also_covered: &[NodeId],
+    ) -> Option<(NodeId, CopPlan)> {
+        if self.locations(file).is_empty() {
+            return None;
+        }
+        let covered: FastSet<usize> = self
+            .locations(file)
+            .iter()
+            .chain(also_covered)
+            .map(|n| self.domain_of(*n))
+            .collect();
+        let inputs = [file];
+        let mut best: Option<(f64, NodeId, CopPlan)> = None;
+        for &cand in candidates {
+            if covered.contains(&self.domain_of(cand)) {
+                continue;
+            }
+            if let Some(plan) = self.plan(&inputs, cand) {
+                let price = plan.price();
+                let better = match &best {
+                    Some((bp, bn, _)) => price < *bp || (price == *bp && cand < *bn),
+                    None => true,
+                };
+                if better {
+                    best = Some((price, cand, plan));
+                }
+            }
+        }
+        best.map(|(_, n, p)| (n, p))
+    }
+
+    /// Seed the per-worker hazard estimates (availability-aware
+    /// placement). Only called when `ResilienceConfig::hazard_weight >
+    /// 0`; [`Self::hazard_of`] answers 0 for every node otherwise.
+    pub fn set_hazard(&mut self, hazard: Vec<f64>) {
+        self.hazard = hazard;
+    }
+
+    /// Current hazard estimate of `n` (0 when hazard pricing is off).
+    pub fn hazard_of(&self, n: NodeId) -> f64 {
+        self.hazard.get(n.0).copied().unwrap_or(0.0)
+    }
+
+    /// Fold an observed crash of `n` into its hazard estimate:
+    /// deterministic EWMA toward 1 with smoothing `alpha`.
+    pub fn observe_crash_hazard(&mut self, n: NodeId, alpha: f64) {
+        if let Some(h) = self.hazard.get_mut(n.0) {
+            *h = (1.0 - alpha) * *h + alpha;
+        }
     }
 
     /// Turn a plan into an active COP for `task` → `dst`.
@@ -1006,5 +1094,56 @@ mod tests {
         let plan = d.plan(&[FileId(1)], NodeId(1)).unwrap();
         assert_eq!(plan.weighted_bytes, plan.total_bytes.as_f64());
         assert!((plan.mean_penalty() - 1.0).abs() < 1e-12);
+    }
+
+    // ---- resilience: hedged COPs and hazard estimates ----
+
+    #[test]
+    fn hedge_plan_picks_cheapest_uncovered_domain() {
+        let mut d = dps();
+        d.set_topology(topo_view());
+        // 4 workers in 2 racks: {0,1} and {2,3}.
+        d.set_failure_domains(vec![0, 0, 1, 1]);
+        d.register_output(FileId(1), Bytes::from_gb(1.0), NodeId(0));
+        let cands = [NodeId(0), NodeId(1), NodeId(2), NodeId(3)];
+        let (dst, plan) = d.plan_hedge(FileId(1), &cands, &[]).expect("rack 1 uncovered");
+        assert!(
+            dst == NodeId(2) || dst == NodeId(3),
+            "hedge must land in the other failure domain"
+        );
+        assert_eq!(plan.parts[0].0, FileId(1));
+        // Once a hedge to rack 1 is in flight, every domain is covered.
+        assert!(d.plan_hedge(FileId(1), &cands, &[dst]).is_none());
+        // Same if a real replica already lives there.
+        d.register_output(FileId(1), Bytes::from_gb(1.0), NodeId(3));
+        assert!(d.plan_hedge(FileId(1), &cands, &[]).is_none());
+    }
+
+    #[test]
+    fn hedge_plan_none_without_replica_or_domains() {
+        let mut d = dps();
+        d.set_failure_domains(vec![0, 0, 1, 1]);
+        assert!(d.plan_hedge(FileId(9), &[NodeId(2)], &[]).is_none(), "no replica yet");
+        // Without a domain map every node is its own domain: any other
+        // node is a valid hedge target.
+        let mut flat = dps();
+        flat.register_output(FileId(1), Bytes(100), NodeId(0));
+        let (dst, _) = flat.plan_hedge(FileId(1), &[NodeId(0), NodeId(1)], &[]).unwrap();
+        assert_eq!(dst, NodeId(1));
+    }
+
+    #[test]
+    fn hazard_ewma_updates_only_seeded_nodes() {
+        let mut d = dps();
+        assert_eq!(d.hazard_of(NodeId(0)), 0.0, "disabled: no hazard anywhere");
+        d.observe_crash_hazard(NodeId(0), 0.25);
+        assert_eq!(d.hazard_of(NodeId(0)), 0.0, "no-op without a seeded vector");
+        d.set_hazard(vec![0.0, 1.0]);
+        d.observe_crash_hazard(NodeId(0), 0.25);
+        assert!((d.hazard_of(NodeId(0)) - 0.25).abs() < 1e-12);
+        d.observe_crash_hazard(NodeId(0), 0.25);
+        assert!((d.hazard_of(NodeId(0)) - 0.4375).abs() < 1e-12);
+        assert_eq!(d.hazard_of(NodeId(1)), 1.0);
+        assert_eq!(d.hazard_of(NodeId(5)), 0.0, "out of range reads as safe");
     }
 }

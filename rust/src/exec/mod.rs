@@ -28,8 +28,8 @@
 use crate::cluster::{Cluster, NodeId, NodeSpec, Topology};
 use crate::dfs::{Ceph, Dfs, DfsKind, Nfs};
 use crate::dps::cost::{CostEval, NativeCost};
-use crate::dps::{CopId, Dps};
-use crate::fault::{FaultConfig, FaultEvent, FaultPlan};
+use crate::dps::{CopId, CopPlan, Dps};
+use crate::fault::{FaultConfig, FaultEvent, FaultPlan, ResilienceConfig};
 use crate::lcs::Lcs;
 use crate::metrics::{RunMetrics, TenantMetrics};
 use crate::net::{FlowId, FlowNet};
@@ -144,6 +144,11 @@ pub struct RunConfig {
     /// take exactly the pre-serve code path, with no extra events and
     /// no extra RNG draws (the serve analogue of `fault`).
     pub serve: ServeConfig,
+    /// Proactive resilience (failure-domain-aware replica hedging,
+    /// checkpoint/restart, availability-aware placement). The default
+    /// disables all three and takes exactly the pre-resilience code
+    /// path: no extra events, flows, or RNG draws.
+    pub resil: ResilienceConfig,
     /// Simulation-core selection (incremental / checked / naive); the
     /// choice never changes results, only how fast they are produced.
     pub core: SimCore,
@@ -166,6 +171,7 @@ impl Default for RunConfig {
             fault: FaultConfig::default(),
             tenant_policy: TenantPolicy::Fifo,
             serve: ServeConfig::default(),
+            resil: ResilienceConfig::default(),
             core: SimCore::Incremental,
         }
     }
@@ -256,6 +262,42 @@ struct Running {
     attempt: u64,
     cores: u32,
     mem: Bytes,
+    /// Base-equivalent compute seconds per wall second of this attempt
+    /// (speed / inflation). Only maintained when checkpointing is on.
+    rate: f64,
+    /// Committed (checkpointed) base seconds when this attempt began —
+    /// the point the attempt resumed from.
+    base_offset: f64,
+    /// Wall seconds of this attempt's compute covered by the last
+    /// *committed* checkpoint; the salvage in `kill_running`. Always 0
+    /// with checkpointing off, keeping the wasted-work split inert.
+    ckpt_wall: f64,
+}
+
+/// Sentinel task id owning hedge COPs: never collides with namespaced
+/// task ids (tenant counts stay far below 2^24) and never appears in
+/// the ready queue, so hedge COPs share the DPS COP machinery without
+/// touching any per-task scheduling state.
+const HEDGE_TASK: TaskId = TaskId(u64::MAX);
+
+/// The DFS object a task's checkpoints are written to. High bit set:
+/// disjoint from every namespaced workflow file, and stable per task so
+/// Ceph places it once and overwrites thereafter.
+fn ckpt_file(task: TaskId) -> FileId {
+    FileId((1u64 << 63) | task.0)
+}
+
+/// A checkpoint write in flight: committed only when all of its DFS
+/// flows finish while the same attempt is still computing.
+#[derive(Debug)]
+struct CkptPending {
+    attempt: u64,
+    flows: usize,
+    /// Total committed base seconds if this checkpoint lands.
+    base_done: f64,
+    /// Wall seconds into the attempt's compute at the cut.
+    cut_wall: f64,
+    bytes: Bytes,
 }
 
 #[derive(Debug)]
@@ -270,6 +312,10 @@ enum Event {
     /// A tenant's workflow arrives: its inputs register in the DFS and
     /// its source tasks materialize.
     TenantArrive(usize),
+    /// Periodic checkpoint tick for a computing attempt (stale attempts
+    /// are ignored, like `ComputeDone`). Only ever scheduled when
+    /// `ResilienceConfig::checkpoint_every_s > 0`.
+    Checkpoint(TaskId, u64),
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -278,6 +324,9 @@ enum FlowOwner {
     StageOut(TaskId),
     /// DFS re-replication after a crash (fire-and-forget; traffic only).
     Recovery,
+    /// A checkpoint write of a computing task (checkpointing only; does
+    /// not gate any phase barrier).
+    Checkpoint(TaskId),
 }
 
 /// Runtime state of one tenant: its dynamic engine plus per-tenant
@@ -388,6 +437,24 @@ struct Executor {
     /// Active brownouts per rack uplink (rack-link fault injection).
     degraded_racks: FastMap<usize, u32>,
 
+    // Proactive-resilience state (inert when `cfg.resil` is default:
+    // every map stays empty and every counter zero).
+    /// Hedge COPs in flight per file (destination nodes), so coverage
+    /// checks count hedges already launched but not yet landed.
+    hedged: FastMap<FileId, Vec<NodeId>>,
+    /// COP id → hedged file, marking which COPs are hedges.
+    hedge_cop_ids: FastMap<CopId, FileId>,
+    hedge_bytes: Bytes,
+    n_hedge_cops: u64,
+    /// Durably checkpointed base-equivalent compute seconds per task
+    /// (survives kills; the restart point of the next attempt).
+    ckpt_committed: FastMap<TaskId, f64>,
+    /// Checkpoint writes whose DFS flows are still draining.
+    ckpt_pending: FastMap<TaskId, CkptPending>,
+    n_checkpoints: u64,
+    checkpoint_bytes: Bytes,
+    salvaged_core_seconds: f64,
+
     // Serving-regime state (inert when `cfg.serve` is default).
     /// Tenants waiting for an admission slot, in arrival order.
     admit_queue: Vec<usize>,
@@ -440,7 +507,9 @@ impl Executor {
             cluster.node_mut(crate::cluster::NodeId(i)).spec.speed = f;
         }
         let dfs: Box<dyn Dfs> = match cfg.dfs {
-            DfsKind::Ceph => Box::new(Ceph::new()),
+            // Resilience opts Ceph into CRUSH-style rack-aware replica
+            // spreading; the default placement stream is untouched.
+            DfsKind::Ceph => Box::new(Ceph::new().with_rack_awareness(cfg.resil.enabled())),
             DfsKind::Nfs => Box::new(Nfs::new(cluster.nfs_server().expect("server"))),
         };
         // The row cache is bit-identical to the full rebuild only for
@@ -454,6 +523,7 @@ impl Executor {
             c_task: cfg.c_task,
             backend,
             incremental,
+            hazard_weight: cfg.resil.hazard_weight,
         };
         let scheduler = cfg.strategy.build(params);
         let mut dps = Dps::new(cfg.seed);
@@ -532,6 +602,15 @@ impl Executor {
             task_failures: 0,
             tasks_rerun: 0,
             degraded_racks: FastMap::default(),
+            hedged: FastMap::default(),
+            hedge_cop_ids: FastMap::default(),
+            hedge_bytes: Bytes::ZERO,
+            n_hedge_cops: 0,
+            ckpt_committed: FastMap::default(),
+            ckpt_pending: FastMap::default(),
+            n_checkpoints: 0,
+            checkpoint_bytes: Bytes::ZERO,
+            salvaged_core_seconds: 0.0,
             admit_queue: Vec::new(),
             active_tenants: 0,
             outstanding_work_s: 0.0,
@@ -561,6 +640,28 @@ impl Executor {
             self.cluster.rack_zones(),
             self.cfg.seed,
         );
+        // Resilience seeding (enabled-only; both calls are pure — zero
+        // RNG draws, so the disabled path is untouched).
+        if self.cfg.resil.hedge_k > 0 {
+            // Failure domains for hedge diversity: racks on hierarchical
+            // topologies, node identity on flat (every node its own
+            // domain, so hedging degenerates to plain replication).
+            let racks = self.cluster.worker_racks();
+            let domains = if racks.is_empty() {
+                (0..self.cluster.n_workers()).collect()
+            } else {
+                racks.to_vec()
+            };
+            self.dps.set_failure_domains(domains);
+        }
+        if self.cfg.resil.hazard_weight > 0.0 {
+            // Hazard priors from the compiled schedule: c planned
+            // crashes → c/(c+1), i.e. 0 for never-crashing nodes.
+            // Observed crashes sharpen these online (EWMA toward 1).
+            let crashes = plan.planned_crashes(self.cluster.n_workers());
+            self.dps
+                .set_hazard(crashes.iter().map(|&c| c as f64 / (c as f64 + 1.0)).collect());
+        }
         for (t, ev) in plan.events {
             self.events.push(t, Event::Fault(ev));
         }
@@ -655,7 +756,8 @@ impl Executor {
                             if sources_ok && self.cluster.node(cop.dst).alive {
                                 self.lcs.start_cop(&cop, &self.cluster, &mut self.net);
                             } else {
-                                if self.dps.abort_cop(id).is_some() {
+                                if let Some(aborted) = self.dps.abort_cop(id) {
+                                    self.note_cop_aborted(id, aborted.dst);
                                     self.tracer.emit(t, || TraceEvent::CopAbort {
                                         cop: id.0,
                                         reason: "sources-lost",
@@ -671,6 +773,9 @@ impl Executor {
                     Event::TenantArrive(i) => {
                         self.on_tenant_arrival(i);
                         need_schedule = true;
+                    }
+                    Event::Checkpoint(task, attempt) => {
+                        self.on_checkpoint(task, attempt, t);
                     }
                 }
             }
@@ -1100,10 +1205,15 @@ impl Executor {
             let _ = self.disown_flow(f);
             self.net.cancel(f);
         }
+        self.ckpt_pending.remove(&task);
         let wall = (now - r.started).as_secs_f64();
         self.cpu_core_seconds += wall * r.cores as f64;
         self.node_cpu_seconds[r.node.0] += wall * r.cores as f64;
-        self.wasted_core_seconds += wall * r.cores as f64;
+        // Same wasted/salvaged split as `kill_running`: an evicted task
+        // also resumes from its last committed checkpoint.
+        let salvaged = r.ckpt_wall.min(wall);
+        self.wasted_core_seconds += (wall - salvaged) * r.cores as f64;
+        self.salvaged_core_seconds += salvaged * r.cores as f64;
         self.preempted_core_seconds += wall * r.cores as f64;
         self.n_preempted += 1;
         *self.preempt_counts.entry(task).or_insert(0) += 1;
@@ -1201,6 +1311,9 @@ impl Executor {
                 attempt: self.exec_seq,
                 cores,
                 mem,
+                rate: 0.0,
+                base_offset: 0.0,
+                ckpt_wall: 0.0,
             },
         );
         if n_flows == 0 {
@@ -1290,17 +1403,118 @@ impl Executor {
         // Heterogeneous speeds: slower nodes stretch compute (§VIII).
         let speed = self.cluster.node(node).spec.speed;
         // Retried attempts run inflated (DynamicCloudSim's runtime
-        // variation on re-execution).
+        // variation on re-execution), under the configurable backoff
+        // model — at the defaults `retry_factor` reproduces the flat
+        // `retry_inflation^tries` bit-exactly. The salt is pure
+        // arithmetic over (seed, task, attempt): no RNG stream.
         let tries = self.retries.get(&task).copied().unwrap_or(0);
-        let infl = if tries > 0 { self.cfg.fault.retry_inflation.powi(tries as i32) } else { 1.0 };
+        let salt = self.cfg.seed ^ task.0.rotate_left(17) ^ attempt;
+        let infl = self.cfg.fault.retry_factor(tries, salt);
         let tn = workload::task_tenant(task);
         let base = self.tenants[tn].engine.task(workload::local_task(task)).compute;
-        let dur = if speed == 1.0 && infl == 1.0 {
+        // Checkpoint/restart: resume from the durably committed compute
+        // progress instead of t=0. `ckpt_committed` can only be
+        // non-empty when checkpointing is on, so the `done == 0` branch
+        // below is the exact pre-resilience duration expression.
+        let done = self.ckpt_committed.get(&task).copied().unwrap_or(0.0);
+        let dur = if done > 0.0 {
+            let remaining = (base.as_secs_f64() - done).max(0.0);
+            SimTime::from_secs_f64(remaining / speed * infl)
+        } else if speed == 1.0 && infl == 1.0 {
             base
         } else {
             SimTime::from_secs_f64(base.as_secs_f64() / speed * infl)
         };
+        if self.cfg.resil.checkpoint_every_s > 0.0 {
+            let remaining = (base.as_secs_f64() - done).max(0.0);
+            let r = self.running.get_mut(&task).expect("running");
+            r.base_offset = done;
+            r.rate = if dur > SimTime::ZERO { remaining / dur.as_secs_f64() } else { 0.0 };
+            let iv = SimTime::from_secs_f64(self.cfg.resil.checkpoint_every_s);
+            if iv < dur {
+                self.events.push(now + iv, Event::Checkpoint(task, attempt));
+            }
+        }
         self.events.push(now + dur, Event::ComputeDone(task, attempt));
+    }
+
+    /// A checkpoint tick fired. If the attempt is still computing, cut
+    /// its current progress and persist `checkpoint_gb` through the DFS
+    /// (real flows on the resolved path); the cut commits only when all
+    /// flows land (see [`FlowOwner::Checkpoint`]). The cadence re-arms
+    /// itself until the attempt leaves the compute phase.
+    fn on_checkpoint(&mut self, task: TaskId, attempt: u64, now: SimTime) {
+        let valid = matches!(
+            self.running.get(&task),
+            Some(r) if r.attempt == attempt && r.phase == Phase::Compute
+        );
+        if !valid {
+            return;
+        }
+        let iv = SimTime::from_secs_f64(self.cfg.resil.checkpoint_every_s);
+        self.events.push(now + iv, Event::Checkpoint(task, attempt));
+        if self.ckpt_pending.contains_key(&task) {
+            return; // previous write still draining; skip this tick
+        }
+        let (node, cut_wall, base_done) = {
+            let r = &self.running[&task];
+            let w = (now - r.compute_started).as_secs_f64();
+            (r.node, w, r.base_offset + w * r.rate)
+        };
+        let bytes = Bytes::from_gb(self.cfg.resil.checkpoint_gb);
+        let mut n_flows = 0;
+        for part in self.dfs.write(ckpt_file(task), bytes, node, &self.cluster, &mut self.rng) {
+            let id = self.net.add_flow(part.bytes, part.resources);
+            self.own_flow(id, FlowOwner::Checkpoint(task));
+            n_flows += 1;
+        }
+        if n_flows == 0 {
+            self.commit_checkpoint(task, base_done, cut_wall, bytes, now);
+        } else {
+            self.ckpt_pending.insert(
+                task,
+                CkptPending { attempt, flows: n_flows, base_done, cut_wall, bytes },
+            );
+        }
+    }
+
+    /// All flows of a checkpoint landed while its attempt still
+    /// computes: the cut becomes the task's durable restart point.
+    fn commit_checkpoint(
+        &mut self,
+        task: TaskId,
+        base_done: f64,
+        cut_wall: f64,
+        bytes: Bytes,
+        now: SimTime,
+    ) {
+        self.ckpt_committed.insert(task, base_done);
+        let node = {
+            let r = self.running.get_mut(&task).expect("committing for a running task");
+            r.ckpt_wall = cut_wall;
+            r.node
+        };
+        self.n_checkpoints += 1;
+        self.checkpoint_bytes += bytes;
+        self.tracer.emit(now, || TraceEvent::Checkpoint {
+            task: task.0,
+            node: node.0,
+            bytes: bytes.as_u64(),
+        });
+    }
+
+    /// Drop an in-flight checkpoint write (compute ended or the task
+    /// died): cancel its remaining flows without committing the cut.
+    fn abort_checkpoint(&mut self, task: TaskId) {
+        if self.ckpt_pending.remove(&task).is_none() {
+            return;
+        }
+        for f in self.flows_of_task(task) {
+            if matches!(self.flow_owner.get(&f), Some(FlowOwner::Checkpoint(_))) {
+                let _ = self.disown_flow(f);
+                self.net.cancel(f);
+            }
+        }
     }
 
     /// Sample whether the compute attempt that just ended was an
@@ -1330,6 +1544,10 @@ impl Executor {
     }
 
     fn start_stage_out(&mut self, task: TaskId, now: SimTime) {
+        // Compute is done: an in-flight checkpoint write is pointless.
+        if self.cfg.resil.checkpoint_every_s > 0.0 {
+            self.abort_checkpoint(task);
+        }
         let local_mode = self.scheduler.uses_local_data();
         let node = self.running[&task].node;
         self.tracer.emit(now, || TraceEvent::PhaseStart {
@@ -1388,6 +1606,22 @@ impl Executor {
             }
             // Re-replication finished; nothing waits on it.
             FlowOwner::Recovery => false,
+            FlowOwner::Checkpoint(task) => {
+                if let Some(p) = self.ckpt_pending.get_mut(&task) {
+                    p.flows -= 1;
+                    if p.flows == 0 {
+                        let p = self.ckpt_pending.remove(&task).expect("pending checkpoint");
+                        let valid = matches!(
+                            self.running.get(&task),
+                            Some(r) if r.attempt == p.attempt && r.phase == Phase::Compute
+                        );
+                        if valid {
+                            self.commit_checkpoint(task, p.base_done, p.cut_wall, p.bytes, now);
+                        }
+                    }
+                }
+                false
+            }
         }
     }
 
@@ -1395,6 +1629,7 @@ impl Executor {
         let r = self.running.remove(&task).expect("running");
         self.cluster.release(r.node, r.cores, r.mem);
         self.retries.remove(&task);
+        self.ckpt_committed.remove(&task);
         let wall = (now - r.started).as_secs_f64();
         self.cpu_core_seconds += wall * r.cores as f64;
         self.node_cpu_seconds[r.node.0] += wall * r.cores as f64;
@@ -1414,6 +1649,13 @@ impl Executor {
                 self.node_replica_bytes[r.node.0] += size.as_f64();
             }
             self.update_peak();
+            // k-resilient hedging: every fresh intermediate gets
+            // replicas across 1 + hedge_k failure domains.
+            if self.cfg.resil.hedge_k > 0 {
+                for (f, _) in self.tenants[tn].engine.task(lid).outputs.clone() {
+                    self.ensure_hedged(workload::ns_file(tn, f), None);
+                }
+            }
         }
         let newly_ready = self.tenants[tn].engine.complete_task(lid);
         // Replica GC (§III-A): free intermediate files no task can read
@@ -1471,6 +1713,14 @@ impl Executor {
         });
         self.pending_cops.insert(cop.id, cop.clone());
         self.events.push(launch_at, Event::CopLaunch(cop.id));
+        // k-resilient hedging: a task-prep COP marks its files hot;
+        // make sure each spans enough failure domains (the just-planned
+        // destination counts as about-to-be-covered).
+        if self.cfg.resil.hedge_k > 0 {
+            for f in inputs {
+                self.ensure_hedged(f, Some(dst));
+            }
+        }
         true
     }
 
@@ -1486,10 +1736,93 @@ impl Executor {
             dst: cop.dst.0,
             bytes: cop.total_bytes().as_u64(),
         });
+        // A landed hedge is accounted separately and skips usefulness
+        // attribution — it exists to survive a domain failure, not to
+        // prepare a task.
+        if let Some(file) = self.hedge_cop_ids.remove(&id) {
+            self.n_hedge_cops += 1;
+            self.hedge_bytes += cop.total_bytes();
+            self.forget_hedge_in_flight(file, cop.dst);
+            return;
+        }
         let files = cop.parts.iter().map(|(f, _, _)| *f).collect();
         let idx = self.completed_cops.len();
         self.completed_cops.push(CompletedCop { id, dst: cop.dst, files, used: false });
         self.unused_cops_by_node.entry(cop.dst).or_default().push(idx);
+    }
+
+    /// Ensure `file`'s replicas — plus hedges already in flight and an
+    /// optional about-to-land destination — span at least `1 + hedge_k`
+    /// distinct failure domains, launching the cheapest domain-diverse
+    /// hedge COP per missing domain. Enabled-only (`hedge_k ≥ 1`).
+    fn ensure_hedged(&mut self, file: FileId, landing: Option<NodeId>) {
+        if !self.scheduler.uses_local_data() {
+            return;
+        }
+        let target = 1 + self.cfg.resil.hedge_k as usize;
+        loop {
+            let mut covered: Vec<NodeId> = self.hedged.get(&file).cloned().unwrap_or_default();
+            covered.extend(landing);
+            let domains: FastSet<usize> = self
+                .dps
+                .locations(file)
+                .iter()
+                .chain(covered.iter())
+                .map(|n| self.dps.domain_of(*n))
+                .collect();
+            if domains.is_empty() || domains.len() >= target {
+                return;
+            }
+            let candidates: Vec<NodeId> = self.cluster.alive_workers().collect();
+            let Some((dst, plan)) = self.dps.plan_hedge(file, &candidates, &covered) else {
+                return;
+            };
+            self.launch_hedge(file, dst, plan);
+        }
+    }
+
+    /// Launch one hedge COP through the regular COP machinery (setup
+    /// latency, LCS flows, c_node occupancy) under the sentinel task.
+    fn launch_hedge(&mut self, file: FileId, dst: NodeId, plan: CopPlan) {
+        let cop = self.dps.start_cop(HEDGE_TASK, dst, plan);
+        let now = self.net.now();
+        let (cid, total) = (cop.id, cop.total_bytes());
+        self.tracer.emit(now, || TraceEvent::CopStart {
+            cop: cid.0,
+            task: HEDGE_TASK.0,
+            dst: dst.0,
+            bytes: total.as_u64(),
+        });
+        self.tracer.emit(now, || TraceEvent::HedgeCopy {
+            cop: cid.0,
+            file: file.0,
+            dst: dst.0,
+            bytes: total.as_u64(),
+        });
+        self.hedge_cop_ids.insert(cid, file);
+        self.hedged.entry(file).or_default().push(dst);
+        let launch_at = now + SimTime::from_secs_f64(self.cfg.cop_setup_s);
+        self.pending_cops.insert(cid, cop);
+        self.events.push(launch_at, Event::CopLaunch(cid));
+    }
+
+    /// Drop the in-flight record of a hedge toward `dst` (landed or
+    /// aborted).
+    fn forget_hedge_in_flight(&mut self, file: FileId, dst: NodeId) {
+        if let Some(v) = self.hedged.get_mut(&file) {
+            v.retain(|n| *n != dst);
+            if v.is_empty() {
+                self.hedged.remove(&file);
+            }
+        }
+    }
+
+    /// A COP was aborted: if it was a hedge, clean its tracking so the
+    /// domain can be re-hedged later.
+    fn note_cop_aborted(&mut self, id: CopId, dst: NodeId) {
+        if let Some(file) = self.hedge_cop_ids.remove(&id) {
+            self.forget_hedge_in_flight(file, dst);
+        }
     }
 
     // ---- fault injection & recovery --------------------------------
@@ -1586,6 +1919,11 @@ impl Executor {
     fn on_node_crash(&mut self, node: NodeId, now: SimTime) {
         self.n_crashes += 1;
         self.cluster.set_alive(node, false);
+        // Availability-aware placement: fold the observed crash into the
+        // node's hazard estimate (deterministic EWMA toward 1).
+        if self.cfg.resil.hazard_weight > 0.0 {
+            self.dps.observe_crash_hazard(node, self.cfg.resil.hazard_alpha);
+        }
         if Some(node) == self.cluster.nfs_server() {
             for r in self.cluster.resources_of(node) {
                 self.net.set_capacity(r, Bandwidth(1.0));
@@ -1607,7 +1945,8 @@ impl Executor {
         for id in self.dps.cops_touching(node) {
             self.lcs.cancel_cop(id, &mut self.net);
             self.pending_cops.remove(&id);
-            if self.dps.abort_cop(id).is_some() {
+            if let Some(aborted) = self.dps.abort_cop(id) {
+                self.note_cop_aborted(id, aborted.dst);
                 self.tracer.emit(now, || TraceEvent::CopAbort { cop: id.0, reason: "node-crash" });
             }
         }
@@ -1628,6 +1967,14 @@ impl Executor {
                 Some(FlowOwner::Recovery) => {
                     let _ = self.disown_flow(f);
                     self.net.cancel(f);
+                }
+                Some(FlowOwner::Checkpoint(t)) => {
+                    // The checkpoint write lost a leg: the cut fails.
+                    // Sibling flows keep draining as traffic; their
+                    // completions find no pending entry and are ignored.
+                    let _ = self.disown_flow(f);
+                    self.net.cancel(f);
+                    self.ckpt_pending.remove(&t);
                 }
                 None => {}
             }
@@ -1653,7 +2000,17 @@ impl Executor {
             }
         }
 
-        // 7. Lineage healing: re-run producers of lost intermediates
+        // 7. Re-hedge survivors: a file that lost its replica on the
+        //    dead node but survives elsewhere must regain failure-domain
+        //    coverage (files with no replica left fall through to
+        //    lineage healing below — `ensure_hedged` skips them).
+        if self.cfg.resil.hedge_k > 0 {
+            for (f, _) in &lost {
+                self.ensure_hedged(*f, None);
+            }
+        }
+
+        // 8. Lineage healing: re-run producers of lost intermediates
         //    that someone still needs (WOW mode only — baselines keep
         //    intermediates in the DFS, which just self-healed).
         self.heal_lost_files(lost);
@@ -1677,7 +2034,7 @@ impl Executor {
     /// index for stage-in/out flows.
     fn own_flow(&mut self, id: FlowId, owner: FlowOwner) {
         self.flow_owner.insert(id, owner);
-        if let FlowOwner::StageIn(t) | FlowOwner::StageOut(t) = owner {
+        if let FlowOwner::StageIn(t) | FlowOwner::StageOut(t) | FlowOwner::Checkpoint(t) = owner {
             self.task_flows.entry(t).or_default().push(id);
         }
     }
@@ -1686,7 +2043,7 @@ impl Executor {
     /// keeping the reverse index in sync. Returns the owner, if any.
     fn disown_flow(&mut self, id: FlowId) -> Option<FlowOwner> {
         let owner = self.flow_owner.remove(&id)?;
-        if let FlowOwner::StageIn(t) | FlowOwner::StageOut(t) = owner {
+        if let FlowOwner::StageIn(t) | FlowOwner::StageOut(t) | FlowOwner::Checkpoint(t) = owner {
             if let Some(flows) = self.task_flows.get_mut(&t) {
                 flows.retain(|f| *f != id);
                 if flows.is_empty() {
@@ -1716,10 +2073,16 @@ impl Executor {
             let _ = self.disown_flow(f);
             self.net.cancel(f);
         }
+        self.ckpt_pending.remove(&task);
         let wall = (now - r.started).as_secs_f64();
         self.cpu_core_seconds += wall * r.cores as f64;
         self.node_cpu_seconds[r.node.0] += wall * r.cores as f64;
-        self.wasted_core_seconds += wall * r.cores as f64;
+        // Checkpointed progress is not wasted — the rerun resumes from
+        // it. `ckpt_wall` is 0 with checkpointing off, so the disabled
+        // split is arithmetically identical to `wall * cores`.
+        let salvaged = r.ckpt_wall.min(wall);
+        self.wasted_core_seconds += (wall - salvaged) * r.cores as f64;
+        self.salvaged_core_seconds += salvaged * r.cores as f64;
         self.tasks_rerun += 1;
         self.tracer.emit(now, || TraceEvent::TaskRerun { task: task.0, reason: "crash" });
         self.retries.remove(&task);
@@ -1928,6 +2291,11 @@ impl Executor {
             latency_p99_s,
             throughput_per_min,
             slo_attainment_pct,
+            hedge_cops: self.n_hedge_cops,
+            hedge_bytes: self.hedge_bytes,
+            checkpoints: self.n_checkpoints,
+            checkpoint_bytes: self.checkpoint_bytes,
+            salvaged_compute_hours: self.salvaged_core_seconds / 3600.0,
         }
     }
 }

@@ -8,6 +8,7 @@ pub mod chaos;
 pub mod fig4;
 pub mod fig5;
 pub mod gini;
+pub mod resil;
 pub mod serve;
 pub mod table1;
 pub mod table2;

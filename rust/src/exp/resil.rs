@@ -1,0 +1,361 @@
+//! Resilience experiment (`wow resil`): the proactive-resilience
+//! tentpole under correlated rack outages — failure-domain-aware
+//! replica hedging, checkpoint/restart, and availability-aware
+//! placement (DESIGN.md §14).
+//!
+//! Sweeps rack-crash counts × resilience mode over the pattern
+//! workflows (plus Chip-Seq in full mode) on Ceph, 8 nodes in 2 racks
+//! at 4:1 oversubscription, for all three strategies. The modes:
+//!
+//! - **plain** — `ResilienceConfig::default()`: the pre-resilience
+//!   code path (the control group);
+//! - **hedge** — `hedge_k = 1` + hazard-aware WOW placement: every
+//!   WOW-managed file keeps one extra replica in a different rack, so
+//!   a whole-rack outage cannot erase its last copy;
+//! - **ckpt** — `checkpoint_every_s > 0`: long tasks persist partial
+//!   state through the DFS and restart from the last checkpoint
+//!   instead of t=0;
+//! - **hedge+ckpt** — both.
+//!
+//! Per cell: faulted makespan and its degradation vs the same
+//! strategy's fault-free plain run, wasted vs salvaged compute,
+//! hedge/checkpoint overhead traffic, recovery traffic, and the peak
+//! temporary-storage premium the hedges cost. The headline comparison
+//! is WOW hedge+ckpt vs WOW plain at the same crash count: resilience
+//! must buy back faulted makespan at a bounded storage increase.
+//!
+//! Protocol as everywhere (§V-C): three seeds, median makespan run
+//! reported. `RESIL_sweep.json` carries the full grid for PR-over-PR
+//! tracking.
+
+use super::{median_run, ExpOpts};
+use crate::cluster::Topology;
+use crate::dfs::DfsKind;
+use crate::exec::RunConfig;
+use crate::fault::{FaultConfig, FaultDomain, ResilienceConfig};
+use crate::metrics::RunMetrics;
+use crate::report::{pct, Table};
+use crate::scheduler::Strategy;
+use crate::util::stats::rel_change_pct;
+use crate::workflow::spec::WorkflowSpec;
+
+/// Rack-outage counts swept (0 = fault-free baseline row).
+pub const CRASH_COUNTS: [usize; 3] = [0, 1, 2];
+/// Injected outages land in this window.
+pub const CRASH_WINDOW_S: (f64, f64) = (60.0, 300.0);
+/// Downtime before a crashed rack rejoins.
+pub const RECOVERY_S: f64 = 120.0;
+/// Checkpoint cadence for the ckpt modes, sim-seconds.
+pub const CKPT_EVERY_S: f64 = 60.0;
+/// Checkpoint state size, GB.
+pub const CKPT_GB: f64 = 0.5;
+/// Hazard surcharge weight for the hedge modes (availability-aware
+/// WOW step 3).
+pub const HAZARD_WEIGHT: f64 = 1.0;
+
+/// The resilience mode of one sweep cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResilMode {
+    Plain,
+    Hedge,
+    Ckpt,
+    Full,
+}
+
+impl ResilMode {
+    pub const ALL: [ResilMode; 4] =
+        [ResilMode::Plain, ResilMode::Hedge, ResilMode::Ckpt, ResilMode::Full];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ResilMode::Plain => "plain",
+            ResilMode::Hedge => "hedge",
+            ResilMode::Ckpt => "ckpt",
+            ResilMode::Full => "hedge+ckpt",
+        }
+    }
+
+    /// The `ResilienceConfig` this mode runs under.
+    pub fn resil(self) -> ResilienceConfig {
+        let hedge = matches!(self, ResilMode::Hedge | ResilMode::Full);
+        let ckpt = matches!(self, ResilMode::Ckpt | ResilMode::Full);
+        ResilienceConfig {
+            hedge_k: if hedge { 1 } else { 0 },
+            hazard_weight: if hedge { HAZARD_WEIGHT } else { 0.0 },
+            checkpoint_every_s: if ckpt { CKPT_EVERY_S } else { 0.0 },
+            checkpoint_gb: CKPT_GB,
+            ..Default::default()
+        }
+    }
+}
+
+/// Workflows in this experiment.
+pub fn workflows(opts: &ExpOpts) -> Vec<WorkflowSpec> {
+    if opts.quick {
+        vec![crate::workflow::patterns::chain(), crate::workflow::patterns::group()]
+    } else {
+        let mut v = crate::workflow::patterns::all_patterns();
+        v.push(crate::workflow::realworld::chipseq());
+        v
+    }
+}
+
+fn crash_counts(opts: &ExpOpts) -> &'static [usize] {
+    let all: &'static [usize] = &CRASH_COUNTS;
+    if opts.quick {
+        &all[..2]
+    } else {
+        all
+    }
+}
+
+/// The configuration of one sweep cell: Ceph on 2 racks @ 4:1, with
+/// correlated whole-rack crashes.
+pub fn cell_cfg(strategy: Strategy, crashes: usize, mode: ResilMode) -> RunConfig {
+    RunConfig {
+        n_nodes: 8,
+        link_gbit: 1.0,
+        dfs: DfsKind::Ceph,
+        strategy,
+        topology: Topology::Racks { racks: 2, oversub: 4.0 },
+        fault: FaultConfig {
+            node_crashes: crashes,
+            crash_window_s: CRASH_WINDOW_S,
+            recovery_s: Some(RECOVERY_S),
+            domain: FaultDomain::Rack,
+            ..Default::default()
+        },
+        resil: mode.resil(),
+        ..Default::default()
+    }
+}
+
+/// One sweep cell.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub workflow: String,
+    pub strategy: Strategy,
+    pub crashes: usize,
+    pub mode: ResilMode,
+    pub metrics: RunMetrics,
+    /// Fault-free plain makespan of the same (workflow, strategy), min.
+    pub baseline_makespan_min: f64,
+    /// Same-crash-count plain-mode makespan (the resilience payoff
+    /// reference), minutes.
+    pub plain_makespan_min: f64,
+    /// Same-crash-count plain-mode storage peak (the hedging premium
+    /// reference), GB.
+    pub plain_peak_gb: f64,
+}
+
+impl Row {
+    /// Makespan degradation vs the fault-free plain run, in percent.
+    pub fn degradation_pct(&self) -> f64 {
+        rel_change_pct(self.baseline_makespan_min, self.metrics.makespan_min())
+    }
+
+    /// Faulted-makespan change vs plain mode at the same crash count,
+    /// in percent (negative = resilience paid off).
+    pub fn vs_plain_pct(&self) -> f64 {
+        rel_change_pct(self.plain_makespan_min, self.metrics.makespan_min())
+    }
+
+    /// Peak-storage change vs plain mode at the same crash count, in
+    /// percent (the bounded premium the hedges cost).
+    pub fn storage_premium_pct(&self) -> f64 {
+        rel_change_pct(self.plain_peak_gb, self.metrics.peak_replica_gb())
+    }
+}
+
+/// Run the full resilience grid.
+pub fn collect(opts: &ExpOpts) -> Vec<Row> {
+    let mut rows = Vec::new();
+    for spec in workflows(opts) {
+        for strategy in [Strategy::Orig, Strategy::Cws, Strategy::Wow] {
+            eprintln!("resil: {} / {} ...", spec.name, strategy.label());
+            let base =
+                median_run(&spec, &cell_cfg(strategy, 0, ResilMode::Plain), opts).makespan_min();
+            for &crashes in crash_counts(opts) {
+                let plain = median_run(&spec, &cell_cfg(strategy, crashes, ResilMode::Plain), opts);
+                let plain_min = plain.makespan_min();
+                let plain_peak = plain.peak_replica_gb();
+                rows.push(Row {
+                    workflow: spec.name.clone(),
+                    strategy,
+                    crashes,
+                    mode: ResilMode::Plain,
+                    metrics: plain,
+                    baseline_makespan_min: base,
+                    plain_makespan_min: plain_min,
+                    plain_peak_gb: plain_peak,
+                });
+                for mode in [ResilMode::Hedge, ResilMode::Ckpt, ResilMode::Full] {
+                    let m = median_run(&spec, &cell_cfg(strategy, crashes, mode), opts);
+                    rows.push(Row {
+                        workflow: spec.name.clone(),
+                        strategy,
+                        crashes,
+                        mode,
+                        metrics: m,
+                        baseline_makespan_min: base,
+                        plain_makespan_min: plain_min,
+                        plain_peak_gb: plain_peak,
+                    });
+                }
+            }
+        }
+    }
+    rows
+}
+
+/// Render the resilience table.
+pub fn render(rows: &[Row]) -> Table {
+    let mut t = Table::new(
+        "Resilience — hedging + checkpoint/restart under rack outages (Ceph, 8 nodes, \
+         2 racks @4:1; racks recover after 120 s)",
+        &[
+            "Workflow",
+            "Strategy",
+            "Crashes",
+            "Mode",
+            "Makespan [min]",
+            "Degradation",
+            "vs plain",
+            "Wasted [h]",
+            "Salvaged [h]",
+            "Hedge [GB]",
+            "Ckpt [GB]",
+            "Recovery [GB]",
+            "Peak repl [GB]",
+            "Storage Δ",
+            "Reruns",
+        ],
+    );
+    for r in rows {
+        t.row(vec![
+            r.workflow.clone(),
+            r.strategy.label().into(),
+            r.crashes.to_string(),
+            r.mode.label().into(),
+            format!("{:.1}", r.metrics.makespan_min()),
+            pct(r.degradation_pct()),
+            pct(r.vs_plain_pct()),
+            format!("{:.2}", r.metrics.wasted_compute_hours),
+            format!("{:.2}", r.metrics.salvaged_compute_hours),
+            format!("{:.1}", r.metrics.hedge_bytes.as_gb()),
+            format!("{:.1}", r.metrics.checkpoint_bytes.as_gb()),
+            format!("{:.1}", r.metrics.recovery_gb()),
+            format!("{:.1}", r.metrics.peak_replica_gb()),
+            pct(r.storage_premium_pct()),
+            r.metrics.tasks_rerun.to_string(),
+        ]);
+    }
+    t
+}
+
+/// JSON artifact (`RESIL_sweep.json`) for PR-over-PR tracking, in the
+/// shared [`crate::util::json::RowsDoc`] shape.
+pub fn to_json(rows: &[Row]) -> String {
+    use crate::util::json::{Jv, RowsDoc};
+    let mut doc = RowsDoc::new("experiment", "resil");
+    for r in rows {
+        let m = &r.metrics;
+        doc.row(&[
+            ("workflow", Jv::S(r.workflow.clone())),
+            ("strategy", Jv::S(r.strategy.label().into())),
+            ("crashes", Jv::U(r.crashes as u64)),
+            ("mode", Jv::S(r.mode.label().into())),
+            ("seed", Jv::U(m.seed)),
+            ("makespan_min", Jv::Fx(m.makespan_min(), 3)),
+            ("degradation_pct", Jv::Fx(r.degradation_pct(), 3)),
+            ("vs_plain_pct", Jv::Fx(r.vs_plain_pct(), 3)),
+            ("wasted_compute_hours", Jv::Fx(m.wasted_compute_hours, 6)),
+            ("salvaged_compute_hours", Jv::Fx(m.salvaged_compute_hours, 6)),
+            ("hedge_cops", Jv::U(m.hedge_cops)),
+            ("hedge_gb", Jv::Fx(m.hedge_bytes.as_gb(), 6)),
+            ("checkpoints", Jv::U(m.checkpoints)),
+            ("checkpoint_gb", Jv::Fx(m.checkpoint_bytes.as_gb(), 6)),
+            ("recovery_gb", Jv::Fx(m.recovery_gb(), 6)),
+            ("peak_replica_gb", Jv::Fx(m.peak_replica_gb(), 6)),
+            ("storage_premium_pct", Jv::Fx(r.storage_premium_pct(), 3)),
+            ("tasks_rerun", Jv::U(m.tasks_rerun)),
+            ("node_crashes", Jv::U(m.node_crashes)),
+        ]);
+    }
+    doc.render()
+}
+
+pub fn run(opts: &ExpOpts) -> (Vec<Row>, String) {
+    let rows = collect(opts);
+    let s = render(&rows).render();
+    (rows, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::run as run_sim;
+    use crate::workflow::engine::WorkflowEngine;
+    use crate::workflow::patterns;
+
+    #[test]
+    fn all_modes_complete_under_rack_outage() {
+        let spec = patterns::group();
+        let expect = WorkflowEngine::dry_run_counts(&spec, 0).physical_tasks;
+        for mode in ResilMode::ALL {
+            let mut cfg = cell_cfg(Strategy::Wow, 1, mode);
+            cfg.fault.crash_window_s = (10.0, 25.0);
+            let m = run_sim(&spec, &cfg);
+            assert_eq!(m.tasks_total, expect, "{mode:?} must complete every task");
+            assert_eq!(m.node_crashes, 4, "{mode:?}: one rack = four workers");
+            let b = run_sim(&spec, &cfg);
+            assert_eq!(m, b, "{mode:?} runs stay deterministic");
+        }
+    }
+
+    #[test]
+    fn hedge_mode_moves_hedge_bytes_and_ckpt_mode_checkpoints() {
+        let spec = patterns::chain();
+        let hedged = run_sim(&spec, &cell_cfg(Strategy::Wow, 0, ResilMode::Hedge));
+        assert!(hedged.hedge_cops > 0, "hedge mode must launch hedge COPs");
+        assert!(hedged.hedge_bytes.as_u64() > 0);
+        assert_eq!(hedged.checkpoints, 0);
+        let mut cfg = cell_cfg(Strategy::Wow, 0, ResilMode::Ckpt);
+        // Chain stages run ~30 s; checkpoint faster so cuts commit.
+        cfg.resil.checkpoint_every_s = 10.0;
+        let ckpt = run_sim(&spec, &cfg);
+        assert!(ckpt.checkpoints > 0, "ckpt mode must commit checkpoints");
+        assert!(ckpt.checkpoint_bytes.as_u64() > 0);
+        assert_eq!(ckpt.hedge_cops, 0);
+    }
+
+    #[test]
+    fn plain_mode_is_the_disabled_config() {
+        assert!(!ResilMode::Plain.resil().enabled());
+        assert_eq!(ResilMode::Plain.resil(), ResilienceConfig::default());
+        for mode in [ResilMode::Hedge, ResilMode::Ckpt, ResilMode::Full] {
+            assert!(mode.resil().enabled(), "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn json_artifact_is_valid() {
+        let opts = ExpOpts { seeds: vec![0], quick: true, ..Default::default() };
+        let metrics =
+            median_run(&patterns::chain(), &cell_cfg(Strategy::Wow, 0, ResilMode::Plain), &opts);
+        let rows = vec![Row {
+            workflow: "chain".into(),
+            strategy: Strategy::Wow,
+            crashes: 1,
+            mode: ResilMode::Full,
+            metrics,
+            baseline_makespan_min: 10.0,
+            plain_makespan_min: 12.0,
+            plain_peak_gb: 5.0,
+        }];
+        let s = to_json(&rows);
+        assert!(crate::util::json::validate(&s).is_ok(), "{s}");
+        assert!(s.contains("\"mode\": \"hedge+ckpt\""));
+        assert!(render(&rows).render().contains("Salvaged"));
+    }
+}

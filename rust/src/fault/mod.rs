@@ -101,9 +101,22 @@ pub struct FaultConfig {
     /// this many transient failures the task's next attempt runs clean,
     /// so workflows always terminate.
     pub max_task_retries: u32,
-    /// Multiplicative compute-time inflation per retry attempt
+    /// Base of the exponential retry-inflation model: the attempt after
+    /// `t` injected failures runs `retry_inflation^t` slower
     /// (DynamicCloudSim models straggler re-executions as slower).
     pub retry_inflation: f64,
+    /// Upper bound on the exponential retry-inflation factor. The
+    /// default (`f64::INFINITY`) leaves the growth uncapped, which is
+    /// bit-identical to the pre-backoff flat `powi` model.
+    pub retry_backoff_cap: f64,
+    /// Fractional deterministic salted jitter on the retry-inflation
+    /// factor: attempt `a` of task `t` is additionally inflated by
+    /// `1 + retry_jitter·u` where `u ∈ [0,1)` is a pure hash of
+    /// `(seed, task, attempt)` — no RNG stream is consumed, so enabling
+    /// jitter never perturbs placement or fault draws. 0 (default)
+    /// skips the multiply entirely and reproduces the flat model
+    /// bit-exactly.
+    pub retry_jitter: f64,
     /// Number of link brownouts to inject.
     pub link_degrades: usize,
     /// NIC capacity multiplier during a brownout.
@@ -129,6 +142,8 @@ impl Default for FaultConfig {
             task_fail_prob: 0.0,
             max_task_retries: 3,
             retry_inflation: 1.1,
+            retry_backoff_cap: f64::INFINITY,
+            retry_jitter: 0.0,
             link_degrades: 0,
             degrade_factor: 0.1,
             degrade_duration_s: 120.0,
@@ -145,6 +160,83 @@ impl FaultConfig {
             || self.task_fail_prob > 0.0
             || self.link_degrades > 0
             || self.rack_degrades > 0
+    }
+
+    /// Compute-time inflation for the attempt following `tries` injected
+    /// failures: exponential backoff `retry_inflation^tries`, clamped at
+    /// `retry_backoff_cap`, with deterministic salted jitter. At the
+    /// defaults (cap = ∞, jitter = 0) this is exactly the historical
+    /// flat `retry_inflation.powi(tries)` — bit for bit.
+    pub fn retry_factor(&self, tries: u32, salt: u64) -> f64 {
+        if tries == 0 {
+            return 1.0;
+        }
+        let mut infl = self.retry_inflation.powi(tries as i32);
+        if infl > self.retry_backoff_cap {
+            infl = self.retry_backoff_cap;
+        }
+        if self.retry_jitter > 0.0 {
+            infl *= 1.0 + self.retry_jitter * salted_unit(salt);
+        }
+        infl
+    }
+}
+
+/// Pure hash of `salt` onto `[0, 1)` (splitmix64 finalizer over the 53
+/// high bits). Used for retry jitter: deterministic per `(seed, task,
+/// attempt)` and independent of every RNG stream.
+pub fn salted_unit(salt: u64) -> f64 {
+    let mut z = salt.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    (z >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Proactive-resilience knobs (hedged replicas, checkpoint/restart,
+/// availability-aware placement). All off by default; a disabled config
+/// takes exactly the pre-resilience code path — zero extra RNG draws,
+/// zero extra events, bit-identical [`crate::metrics::RunMetrics`]
+/// fingerprints on every [`crate::exec::SimCore`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResilienceConfig {
+    /// Hedged COPs: keep up to `hedge_k` extra replicas of every
+    /// COP-copied file in failure domains distinct from all existing
+    /// holders (racks when the topology has them, otherwise nodes).
+    /// 0 disables hedging.
+    pub hedge_k: u32,
+    /// Checkpoint interval in seconds of compute: a running task
+    /// persists partial state through the DFS every `checkpoint_every_s`
+    /// seconds, and a crash rerun restarts from the last *completed*
+    /// checkpoint instead of t=0. 0 disables checkpointing.
+    pub checkpoint_every_s: f64,
+    /// Size of one persisted checkpoint (GB of DFS write traffic).
+    pub checkpoint_gb: f64,
+    /// Weight of the expected-rework term hazard pricing adds to WOW
+    /// step 3's plan price: `price · (1 + hazard_weight · hazard(dst))`.
+    /// 0 disables availability-aware placement.
+    pub hazard_weight: f64,
+    /// EWMA smoothing factor for online per-node hazard updates from
+    /// observed crashes.
+    pub hazard_alpha: f64,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> Self {
+        ResilienceConfig {
+            hedge_k: 0,
+            checkpoint_every_s: 0.0,
+            checkpoint_gb: 0.5,
+            hazard_weight: 0.0,
+            hazard_alpha: 0.25,
+        }
+    }
+}
+
+impl ResilienceConfig {
+    /// Does this configuration change anything at all?
+    pub fn enabled(&self) -> bool {
+        self.hedge_k > 0 || self.checkpoint_every_s > 0.0 || self.hazard_weight > 0.0
     }
 }
 
@@ -277,6 +369,21 @@ impl FaultPlan {
 
     pub fn len(&self) -> usize {
         self.events.len()
+    }
+
+    /// Scheduled crash count per worker — the hazard-estimate seed for
+    /// availability-aware placement. Pure arithmetic over the compiled
+    /// plan (no RNG): reading it never perturbs a run.
+    pub fn planned_crashes(&self, n_workers: usize) -> Vec<u32> {
+        let mut counts = vec![0u32; n_workers];
+        for (_, e) in &self.events {
+            if let FaultEvent::NodeCrash(n) = e {
+                if n.0 < n_workers {
+                    counts[n.0] += 1;
+                }
+            }
+        }
+        counts
     }
 }
 
@@ -502,6 +609,71 @@ mod tests {
         victims.sort_unstable();
         victims.dedup();
         assert_eq!(victims.len(), 2, "no rack map: two independent node crashes");
+    }
+
+    #[test]
+    fn default_retry_factor_is_the_flat_powi_model_bit_exactly() {
+        // The backoff/jitter generalization must reproduce the
+        // historical flat model at the defaults, bit for bit, for every
+        // retry count the executor can reach.
+        let cfg = FaultConfig::default();
+        for tries in 0..=16u32 {
+            let flat = if tries > 0 { cfg.retry_inflation.powi(tries as i32) } else { 1.0 };
+            for salt in [0u64, 1, 42, u64::MAX] {
+                assert_eq!(cfg.retry_factor(tries, salt).to_bits(), flat.to_bits());
+            }
+        }
+        // And with a non-default base, still powi at default cap/jitter.
+        let cfg = FaultConfig { retry_inflation: 1.37, ..Default::default() };
+        assert_eq!(cfg.retry_factor(5, 9).to_bits(), 1.37f64.powi(5).to_bits());
+    }
+
+    #[test]
+    fn retry_backoff_cap_clamps_growth() {
+        let cfg = FaultConfig {
+            retry_inflation: 2.0,
+            retry_backoff_cap: 3.0,
+            ..Default::default()
+        };
+        assert_eq!(cfg.retry_factor(1, 0), 2.0);
+        assert_eq!(cfg.retry_factor(2, 0), 3.0, "4.0 clamped to the cap");
+        assert_eq!(cfg.retry_factor(10, 0), 3.0);
+    }
+
+    #[test]
+    fn retry_jitter_is_salted_and_deterministic() {
+        let cfg = FaultConfig { retry_jitter: 0.5, ..Default::default() };
+        let a = cfg.retry_factor(2, 77);
+        let b = cfg.retry_factor(2, 77);
+        assert_eq!(a.to_bits(), b.to_bits(), "same salt, same factor");
+        let c = cfg.retry_factor(2, 78);
+        assert_ne!(a.to_bits(), c.to_bits(), "different salt, different jitter");
+        let base = cfg.retry_inflation.powi(2);
+        assert!(a >= base && a < base * 1.5, "jitter bounded by the fraction");
+        for salt in 0..256u64 {
+            let u = salted_unit(salt);
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn resilience_default_is_disabled() {
+        let r = ResilienceConfig::default();
+        assert!(!r.enabled());
+        assert!(ResilienceConfig { hedge_k: 1, ..Default::default() }.enabled());
+        assert!(
+            ResilienceConfig { checkpoint_every_s: 60.0, ..Default::default() }.enabled()
+        );
+        assert!(ResilienceConfig { hazard_weight: 1.0, ..Default::default() }.enabled());
+    }
+
+    #[test]
+    fn planned_crashes_counts_per_worker() {
+        let plan = FaultPlan::compile(&crashy(3), 8, None, 7);
+        let counts = plan.planned_crashes(8);
+        assert_eq!(counts.iter().map(|&c| c as usize).sum::<usize>(), 3);
+        assert!(counts.iter().all(|&c| c <= 1), "distinct victims crash once each");
+        assert!(FaultPlan::default().planned_crashes(4).iter().all(|&c| c == 0));
     }
 
     #[test]

@@ -6,6 +6,8 @@
 //!         [--topology flat|racks|zones] [--racks N] [--zones Z] [--oversub F]
 //!         [--crashes N] [--fail-prob P] [--recovery S] [--degrades N]
 //!         [--nfs-outage] [--fault-domain node|rack|zone]
+//!         [--hedge-k K] [--checkpoint-every S] [--checkpoint-gb G]
+//!         [--hazard-weight W]
 //!         [--tenants N] [--mix wf1,wf2] [--arrival SPEC] [--policy P]
 //!         [--weights 2,1,1] [--core incremental|checked|eager|naive]
 //!         [--admission all|queue:A:D[:fifo|sjf]|shed:W] [--preempt]
@@ -18,6 +20,7 @@
 //!                       # fault-injection sweep (crashes × fail rates)
 //! wow tenants           # multi-tenant sweep (arrivals × mixes × strategies)
 //! wow serve             # open-serving knee sweep (rates × admission policies)
+//! wow resil             # resilience sweep (rack outages × hedge/ckpt modes)
 //! wow topo              # topology sweep (oversubscription × strategies)
 //! wow ablate            # c_node / c_task sweep on the pattern set
 //! ```
@@ -178,6 +181,14 @@ fn real_main() -> Result<()> {
             println!("{out}");
             Ok(())
         }
+        "resil" => {
+            let (rows, out) = exp::resil::run(&args.opts()?);
+            std::fs::write("RESIL_sweep.json", exp::resil::to_json(&rows))
+                .context("writing RESIL_sweep.json")?;
+            eprintln!("wrote RESIL_sweep.json ({} rows)", rows.len());
+            println!("{out}");
+            Ok(())
+        }
         "topo" => {
             let (_, out) = exp::topo::run(&args.opts()?);
             println!("{out}");
@@ -208,6 +219,9 @@ fn real_main() -> Result<()> {
                  [--topology flat|racks|zones] [--racks N] [--zones Z] [--oversub F]\n          \
                  [--crashes N] [--fail-prob P] [--recovery S] [--degrades N] [--nfs-outage]\n          \
                  [--fault-domain node|rack|zone]   correlated crashes on a topology\n          \
+                 [--hedge-k K] [--checkpoint-every S] [--checkpoint-gb G] [--hazard-weight W]\n          \
+                 proactive resilience: domain-diverse hedge replicas, checkpoint/restart,\n          \
+                 availability-aware placement (all off by default)\n          \
                  [--tenants N] [--mix wf1,wf2,..] [--arrival all|staggered:G|poisson:G|bursty:BxG]\n          \
                  [--policy fifo|fair] [--weights 2,1,..]   multi-tenant run when N > 1 or --mix\n          \
                  [--admission all|queue:A:D[:fifo|sjf]|shed:W] [--preempt] [--slo S] [--dedup]\n          \
@@ -224,6 +238,8 @@ fn real_main() -> Result<()> {
                  tenants multi-tenant sweep: arrivals x mixes x strategies x DFS (DESIGN.md \u{a7}8)\n  \
                  serve   open-serving sweep: arrival rates x admission policies past the\n          \
                  saturation knee, writes SERVE_knee.json (DESIGN.md \u{a7}12)\n  \
+                 resil   resilience sweep: rack outages x hedge/checkpoint modes x strategies,\n          \
+                 writes RESIL_sweep.json (DESIGN.md \u{a7}14)\n  \
                  topo    topology sweep: rack oversubscription x strategies (DESIGN.md \u{a7}11)\n  \
                  ablate  c_node/c_task sweep over the pattern workflows"
             );
@@ -270,6 +286,13 @@ fn cmd_run(args: &Args) -> Result<()> {
                 let rec = args.get("recovery", 120.0f64)?;
                 (rec > 0.0).then_some(rec)
             },
+            ..Default::default()
+        },
+        resil: wow::fault::ResilienceConfig {
+            hedge_k: args.get("hedge-k", 0u32)?,
+            checkpoint_every_s: args.get("checkpoint-every", 0.0f64)?,
+            checkpoint_gb: args.get("checkpoint-gb", 0.5f64)?,
+            hazard_weight: args.get("hazard-weight", 0.0f64)?,
             ..Default::default()
         },
         serve: wow::serve::ServeConfig {
@@ -441,6 +464,13 @@ fn cmd_run(args: &Args) -> Result<()> {
             "wasted compute".into(),
             format!("{:.2} h ({:.1}%)", m.wasted_compute_hours, m.wasted_compute_pct()),
         ]);
+    }
+    if cfg.resil.enabled() {
+        t.row(vec!["hedge COPs".into(), m.hedge_cops.to_string()]);
+        t.row(vec!["hedge traffic".into(), format!("{:.2} GB", m.hedge_bytes.as_gb())]);
+        t.row(vec!["checkpoints".into(), m.checkpoints.to_string()]);
+        t.row(vec!["checkpoint traffic".into(), format!("{:.2} GB", m.checkpoint_bytes.as_gb())]);
+        t.row(vec!["salvaged compute".into(), format!("{:.2} h", m.salvaged_compute_hours)]);
     }
     if cfg.serve.enabled() {
         t.row(vec!["admission".into(), cfg.serve.admission.label()]);

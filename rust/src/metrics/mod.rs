@@ -99,6 +99,20 @@ pub struct RunMetrics {
     /// DFS re-replication traffic triggered by crashes (recovery
     /// traffic; Ceph object healing).
     pub recovery_bytes: Bytes,
+    /// Failure-domain-diverse hedge COPs launched (proactive replica
+    /// hedging; zero unless `ResilienceConfig::hedge_k > 0`).
+    pub hedge_cops: u64,
+    /// Bytes moved by hedge COPs (the hedging storage/network premium).
+    pub hedge_bytes: Bytes,
+    /// Checkpoints committed through the DFS (zero unless
+    /// `ResilienceConfig::checkpoint_every_s > 0`).
+    pub checkpoints: u64,
+    /// Bytes of checkpoint state written through the DFS.
+    pub checkpoint_bytes: Bytes,
+    /// Core-hours of killed/preempted work recovered by restarting from
+    /// a committed checkpoint instead of t=0 (the complement of
+    /// `wasted_compute_hours` for checkpointed tasks).
+    pub salvaged_compute_hours: f64,
 
     // --- multi-tenant workloads ---
     /// Per-tenant outcomes, in tenant-index order. Single-tenant runs
@@ -230,6 +244,11 @@ impl RunMetrics {
             cops_aborted,
             wasted_compute_hours,
             recovery_bytes,
+            hedge_cops,
+            hedge_bytes,
+            checkpoints,
+            checkpoint_bytes,
+            salvaged_compute_hours,
             tenants,
             tenants_rejected,
             tenants_queued,
@@ -293,6 +312,11 @@ impl RunMetrics {
             ("cops_aborted", Jv::U(*cops_aborted)),
             ("wasted_compute_hours", Jv::F(*wasted_compute_hours)),
             ("recovery_bytes", Jv::U(recovery_bytes.as_u64())),
+            ("hedge_cops", Jv::U(*hedge_cops)),
+            ("hedge_bytes", Jv::U(hedge_bytes.as_u64())),
+            ("checkpoints", Jv::U(*checkpoints)),
+            ("checkpoint_bytes", Jv::U(checkpoint_bytes.as_u64())),
+            ("salvaged_compute_hours", Jv::F(*salvaged_compute_hours)),
             ("tenants", Jv::Arr(tenant_rows)),
             ("tenants_rejected", Jv::U(*tenants_rejected)),
             ("tenants_queued", Jv::U(*tenants_queued)),
@@ -342,6 +366,11 @@ impl RunMetrics {
             cops_aborted,
             wasted_compute_hours,
             recovery_bytes,
+            hedge_cops,
+            hedge_bytes,
+            checkpoints,
+            checkpoint_bytes,
+            salvaged_compute_hours,
             tenants,
             tenants_rejected,
             tenants_queued,
@@ -385,6 +414,11 @@ impl RunMetrics {
         h.u64(*cops_aborted);
         h.u64(wasted_compute_hours.to_bits());
         h.u64(recovery_bytes.0);
+        h.u64(*hedge_cops);
+        h.u64(hedge_bytes.0);
+        h.u64(*checkpoints);
+        h.u64(checkpoint_bytes.0);
+        h.u64(salvaged_compute_hours.to_bits());
         h.u64(tenants.len() as u64);
         for t in tenants {
             let TenantMetrics {

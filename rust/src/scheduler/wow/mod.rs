@@ -54,11 +54,24 @@ pub struct WowParams {
     /// a tiled backend (XLA artifact) may differ in the last ULP because
     /// its per-tile float grouping depends on the batch's file universe.
     pub incremental: bool,
+    /// Availability-aware step 3 (PR 8): weight of the per-node hazard
+    /// estimate in the speculative-COP price. A destination with hazard
+    /// `h` has its plan price multiplied by `1 + hazard_weight·h`,
+    /// pricing the expected rework of placing data on a crash-prone
+    /// node. 0 (the default) disables the term — step 3's comparisons
+    /// and the whole decision stream are then bit-identical to pre-PR.
+    pub hazard_weight: f64,
 }
 
 impl Default for WowParams {
     fn default() -> Self {
-        WowParams { c_node: 1, c_task: 2, backend: Box::new(NativeCost), incremental: true }
+        WowParams {
+            c_node: 1,
+            c_task: 2,
+            backend: Box::new(NativeCost),
+            incremental: true,
+            hazard_weight: 0.0,
+        }
     }
 }
 
@@ -302,7 +315,16 @@ impl WowScheduler {
                 }
                 if let Some(plan) = dps.plan(&t.intermediate_inputs, node) {
                     n_planned += 1;
-                    let price = plan.price();
+                    let mut price = plan.price();
+                    // Availability-aware placement: surcharge flaky
+                    // destinations by their expected-rework factor. The
+                    // guard keeps the disabled path float-for-float
+                    // identical (no `* 1.0` rounding concerns, no
+                    // behaviour change when hazard data exists but the
+                    // weight is 0).
+                    if self.params.hazard_weight > 0.0 {
+                        price *= 1.0 + self.params.hazard_weight * dps.hazard_of(node);
+                    }
                     let affinity = plan.mean_penalty();
                     let better = match best {
                         Some((bp, ba, _)) => price < bp || (price == bp && affinity < ba),
@@ -560,6 +582,43 @@ mod tests {
         // served first and takes the cheaper destination.
         let cs = cops(&actions);
         assert!(cs.iter().any(|&(task, _)| task == 1), "high-priority first: {cs:?}");
+    }
+
+    #[test]
+    fn step3_hazard_weight_steers_away_from_flaky_nodes() {
+        // Two equally-priced speculative destinations; only hazard
+        // pricing separates them.
+        let build = || {
+            let (_n, mut c) = fixture(3);
+            for n in 0..3 {
+                c.reserve(NodeId(n), 16, Bytes::ZERO);
+            }
+            let mut dps = Dps::new(1);
+            // Inputs split across nodes 0 and 1: task prepared nowhere,
+            // and destinations 0 and 1 are symmetric (each must fetch
+            // the other's file); node 2 must fetch both.
+            dps.register_output(FileId(0), Bytes::from_gb(1.0), NodeId(0));
+            dps.register_output(FileId(1), Bytes::from_gb(1.0), NodeId(1));
+            (c, dps)
+        };
+        let ready = vec![rt(0, 5, vec![FileId(0), FileId(1)])];
+        // Baseline: price tie between nodes 0 and 1 keeps the first.
+        let (c, mut dps) = build();
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready, tenant_prec: &[] };
+        let mut s = WowScheduler::new(WowParams::default());
+        assert_eq!(cops(&s.iterate(&view, &mut dps)), vec![(0, 0)]);
+        // Hazard on node 0: the surcharge breaks the tie toward node 1.
+        let (c, mut dps) = build();
+        dps.set_hazard(vec![1.0, 0.0, 0.0]);
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready, tenant_prec: &[] };
+        let mut s = WowScheduler::new(WowParams { hazard_weight: 2.0, ..Default::default() });
+        assert_eq!(cops(&s.iterate(&view, &mut dps)), vec![(0, 1)]);
+        // Weight 0 ignores hazard data entirely.
+        let (c, mut dps) = build();
+        dps.set_hazard(vec![1.0, 0.0, 0.0]);
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready, tenant_prec: &[] };
+        let mut s = WowScheduler::new(WowParams::default());
+        assert_eq!(cops(&s.iterate(&view, &mut dps)), vec![(0, 0)]);
     }
 
     #[test]

@@ -103,6 +103,13 @@ pub enum TraceEvent {
     /// "admit", when its slot frees up. Reject count ==
     /// `RunMetrics::tenants_rejected`.
     Admission { tenant: String, decision: &'static str },
+    /// A running task committed a checkpoint of its partial state to
+    /// the DFS (resilience; `ResilienceConfig::checkpoint_every_s`).
+    /// Count == `RunMetrics::checkpoints`.
+    Checkpoint { task: u64, node: usize, bytes: u64 },
+    /// A failure-domain-diverse hedge replica COP was launched for
+    /// `file` toward `dst` (resilience; `ResilienceConfig::hedge_k`).
+    HedgeCopy { cop: u64, file: u64, dst: usize, bytes: u64 },
     /// An injected fault fired ("node-crash", "node-recover",
     /// "link-degrade", "link-restore", "rack-degrade", "rack-restore");
     /// `subject` is the node or rack index.
@@ -138,6 +145,8 @@ pub struct TraceCounts {
     pub rejected: u64,
     pub faults: u64,
     pub samples: u64,
+    pub checkpoints: u64,
+    pub hedge_copies: u64,
 }
 
 struct TraceBuf {
@@ -246,6 +255,8 @@ impl Trace {
                     "reject" => c.rejected += 1,
                     _ => {}
                 },
+                TraceEvent::Checkpoint { .. } => c.checkpoints += 1,
+                TraceEvent::HedgeCopy { .. } => c.hedge_copies += 1,
                 TraceEvent::Fault { .. } => c.faults += 1,
                 TraceEvent::Sample { .. } => c.samples += 1,
             }
@@ -355,6 +366,21 @@ fn jsonl_line(t: SimTime, ev: &TraceEvent) -> String {
             ("tenant", Jv::S(tenant.clone())),
             ("decision", Jv::S((*decision).into())),
         ]),
+        TraceEvent::Checkpoint { task, node, bytes } => json::object_s(&[
+            ts,
+            ("type", Jv::S("checkpoint".into())),
+            ("task", Jv::U(*task)),
+            ("node", Jv::U(*node as u64)),
+            ("bytes", Jv::U(*bytes)),
+        ]),
+        TraceEvent::HedgeCopy { cop, file, dst, bytes } => json::object_s(&[
+            ts,
+            ("type", Jv::S("hedge-copy".into())),
+            ("cop", Jv::U(*cop)),
+            ("file", Jv::U(*file)),
+            ("dst", Jv::U(*dst as u64)),
+            ("bytes", Jv::U(*bytes)),
+        ]),
         TraceEvent::Fault { kind, subject } => json::object_s(&[
             ts,
             ("type", Jv::S("fault".into())),
@@ -380,6 +406,7 @@ fn jsonl_line(t: SimTime, ev: &TraceEvent) -> String {
 const CONTROL_TID_DECISIONS: u64 = 0;
 const CONTROL_TID_ADMISSION: u64 = 1;
 const CONTROL_TID_FAULTS: u64 = 2;
+const CONTROL_TID_RESIL: u64 = 3;
 /// Task-phase spans occupy tids [0, COP_TID_BASE); COP spans start at
 /// COP_TID_BASE so the two lane pools can never collide.
 const COP_TID_BASE: u64 = 1000;
@@ -561,6 +588,31 @@ impl<'a> ChromeExport<'a> {
                         CONTROL_TID_ADMISSION,
                         t,
                         vec![("tenant".into(), Jv::S(tenant.clone()))],
+                    );
+                }
+                TraceEvent::Checkpoint { task, node, bytes } => {
+                    self.push_instant(
+                        "checkpoint",
+                        CONTROL_TID_RESIL,
+                        t,
+                        vec![
+                            ("task".into(), Jv::U(task)),
+                            ("node".into(), Jv::U(node as u64)),
+                            ("bytes".into(), Jv::U(bytes)),
+                        ],
+                    );
+                }
+                TraceEvent::HedgeCopy { cop, file, dst, bytes } => {
+                    self.push_instant(
+                        "hedge-copy",
+                        CONTROL_TID_RESIL,
+                        t,
+                        vec![
+                            ("cop".into(), Jv::U(cop)),
+                            ("file".into(), Jv::U(file)),
+                            ("dst".into(), Jv::U(dst as u64)),
+                            ("bytes".into(), Jv::U(bytes)),
+                        ],
                     );
                 }
                 TraceEvent::Fault { kind, subject } => {
@@ -764,6 +816,27 @@ mod tests {
         assert_eq!(counts.completes, 1);
         assert_eq!(counts.cops_started, 1);
         assert_eq!(counts.cops_finished, 1);
+    }
+
+    #[test]
+    fn resilience_events_export_and_count() {
+        let mut tr = Tracer::new(&TraceConfig::default());
+        tr.emit(SimTime(5), || TraceEvent::Checkpoint { task: 7, node: 2, bytes: 1 << 29 });
+        tr.emit(SimTime(9), || TraceEvent::HedgeCopy { cop: 3, file: 11, dst: 1, bytes: 1 << 28 });
+        let trace = tr.finish(4).unwrap();
+        let counts = trace.counts();
+        assert_eq!(counts.checkpoints, 1);
+        assert_eq!(counts.hedge_copies, 1);
+        for line in trace.to_jsonl().lines() {
+            assert!(crate::util::json::validate(line).is_ok(), "{line}");
+        }
+        let jsonl = trace.to_jsonl();
+        assert!(jsonl.contains("\"type\": \"checkpoint\""));
+        assert!(jsonl.contains("\"type\": \"hedge-copy\""));
+        let chrome = trace.to_chrome();
+        assert!(crate::util::json::validate(&chrome).is_ok(), "{chrome}");
+        assert!(chrome.contains("\"name\": \"checkpoint\""));
+        assert!(chrome.contains("\"name\": \"hedge-copy\""));
     }
 
     #[test]

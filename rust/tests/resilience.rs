@@ -1,0 +1,254 @@
+//! Proactive-resilience integration tests (DESIGN.md §14). The
+//! load-bearing contracts:
+//!
+//! 1. **Hedging property**: with `hedge_k = 1`, killing every node in
+//!    one failure domain never forces a from-scratch lineage rerun of
+//!    a hedged file's consumers — the domain-diverse hedge replica
+//!    survives, so `heal_lost_files` short-circuits instead of
+//!    re-executing producers.
+//! 2. **Checkpoint/restart**: a crashed checkpointed task restarts
+//!    from its last committed cut, salvaging compute and finishing
+//!    earlier than the same faulted run without checkpoints.
+//! 3. **Cross-core identity**: a hedged + checkpointed + faulted run
+//!    produces bit-identical fingerprints on all four `SimCore`s.
+//! 4. **Inertness**: `ResilienceConfig::default()` reports zero
+//!    resilience metrics under the nastiest fault + serving regimes —
+//!    the disabled path is exactly the pre-resilience code path.
+
+use wow::cluster::Topology;
+use wow::dfs::DfsKind;
+use wow::dps::cost::NativeCost;
+use wow::exec::{run_workload, run_workload_observed, ObserveConfig, RunConfig, RunOutput, SimCore};
+use wow::fault::{FaultConfig, FaultDomain, ResilienceConfig};
+use wow::scheduler::Strategy;
+use wow::trace::{TraceConfig, TraceEvent};
+use wow::util::units::Bytes;
+use wow::workflow::spec::{ComputeModel, OutputSize, Rule, StageSpec, WorkflowSpec};
+use wow::workflow::task::StageId;
+use wow::workload::WorkloadSpec;
+
+/// Three-stage per-task chain: 8 parallel chains, one per node, so a
+/// rack outage always kills chains mid-flight. Small outputs keep the
+/// hedge transfers well inside the inter-stage window.
+fn chains() -> WorkflowSpec {
+    let stage = |name: &str, rule: Rule| StageSpec {
+        name: name.into(),
+        rule,
+        cores: 2,
+        mem: Bytes::from_gb(2.0),
+        compute: ComputeModel::fixed(30.0),
+        out_count: 1,
+        out_size: OutputSize::FixedGb(0.05),
+    };
+    WorkflowSpec {
+        name: "chains".into(),
+        stages: vec![
+            stage("s0", Rule::Source { count: 8, inputs_per_task: 1 }),
+            stage("s1", Rule::PerTask { from: StageId(0) }),
+            stage("s2", Rule::PerTask { from: StageId(1) }),
+        ],
+        input_files_gb: vec![0.1; 8],
+    }
+}
+
+/// One 60 s node-hogging stage, one task per node: every crash victim
+/// is guaranteed to be computing, and reruns must queue for a slot.
+fn hogs() -> WorkflowSpec {
+    WorkflowSpec {
+        name: "hogs".into(),
+        stages: vec![StageSpec {
+            name: "hog".into(),
+            rule: Rule::Source { count: 8, inputs_per_task: 1 },
+            cores: 16,
+            mem: Bytes::from_gb(4.0),
+            compute: ComputeModel::fixed(60.0),
+            out_count: 1,
+            out_size: OutputSize::FixedGb(0.1),
+        }],
+        input_files_gb: vec![0.5; 8],
+    }
+}
+
+/// WOW on Ceph, 8 nodes in 2 racks, one whole-rack outage landing
+/// while the middle chain stage is computing (s0 outputs exist and are
+/// hedged; s1 is mid-flight on every node).
+fn rack_outage_cfg() -> RunConfig {
+    RunConfig {
+        n_nodes: 8,
+        strategy: Strategy::Wow,
+        dfs: DfsKind::Ceph,
+        topology: Topology::Racks { racks: 2, oversub: 4.0 },
+        fault: FaultConfig {
+            node_crashes: 1,
+            domain: FaultDomain::Rack,
+            crash_window_s: (45.0, 50.0),
+            recovery_s: Some(120.0),
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn traced(wl: &WorkloadSpec, cfg: &RunConfig) -> RunOutput {
+    let obs =
+        ObserveConfig { trace: Some(TraceConfig { sample_every_s: 0.0 }), profile: false };
+    run_workload_observed(wl, cfg, Box::new(NativeCost), &obs)
+}
+
+fn lineage_reruns(out: &RunOutput) -> u64 {
+    out.trace
+        .as_ref()
+        .expect("tracing was requested")
+        .events
+        .iter()
+        .filter(|(_, ev)| matches!(ev, TraceEvent::TaskRerun { reason: "lineage", .. }))
+        .count() as u64
+}
+
+/// The tentpole property: a whole-rack outage cannot force from-scratch
+/// lineage re-execution once every produced file carries a hedge in the
+/// other rack. Without hedging the same outage erases the dead rack's
+/// node-local outputs and WOW must re-run their producers.
+#[test]
+fn hedged_rack_outage_needs_no_lineage_reruns() {
+    let wl = WorkloadSpec::solo(chains());
+    let plain = traced(&wl, &rack_outage_cfg());
+    let mut cfg = rack_outage_cfg();
+    cfg.resil.hedge_k = 1;
+    let hedged = traced(&wl, &cfg);
+
+    assert_eq!(plain.metrics.tasks_total, 24, "all chains complete despite the outage");
+    assert_eq!(hedged.metrics.tasks_total, 24);
+    assert_eq!(plain.metrics.node_crashes, 4, "one rack = four workers");
+    assert!(
+        lineage_reruns(&plain) > 0,
+        "without hedges the outage must erase node-local outputs and re-run producers"
+    );
+    assert!(hedged.metrics.hedge_cops > 0, "hedging must actually replicate");
+    assert!(hedged.metrics.hedge_bytes.as_u64() > 0);
+    assert_eq!(
+        lineage_reruns(&hedged),
+        0,
+        "every lost file had a domain-diverse hedge: no from-scratch rerun"
+    );
+}
+
+/// Checkpoint/restart under a node crash: checkpoints commit, the
+/// killed task's pre-cut compute is salvaged rather than wasted, and
+/// restarting from the cut finishes the faulted run strictly earlier
+/// than the same run without checkpoints.
+#[test]
+fn checkpointed_crash_salvages_compute_and_finishes_earlier() {
+    let wl = WorkloadSpec::solo(hogs());
+    let cfg = |every: f64| {
+        let mut c = RunConfig {
+            n_nodes: 8,
+            strategy: Strategy::Wow,
+            dfs: DfsKind::Ceph,
+            fault: FaultConfig {
+                node_crashes: 1,
+                crash_window_s: (25.0, 35.0),
+                recovery_s: None,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        c.resil.checkpoint_every_s = every;
+        c.resil.checkpoint_gb = 0.1;
+        c
+    };
+    let plain = run_workload(&wl, &cfg(0.0));
+    let ckpt = run_workload(&wl, &cfg(8.0));
+
+    assert_eq!(plain.node_crashes, 1);
+    assert_eq!(ckpt.tasks_total, 8);
+    assert!(ckpt.checkpoints > 0, "8 s cadence over 60 s tasks must commit checkpoints");
+    assert!(ckpt.checkpoint_bytes.as_u64() > 0);
+    assert!(
+        ckpt.salvaged_compute_hours > 0.0,
+        "the killed task had committed cuts: compute must be salvaged"
+    );
+    assert!(
+        ckpt.wasted_compute_hours < plain.wasted_compute_hours,
+        "salvage must shrink wasted compute: {} vs {}",
+        ckpt.wasted_compute_hours,
+        plain.wasted_compute_hours
+    );
+    assert!(
+        ckpt.makespan < plain.makespan,
+        "restart-from-cut must beat restart-from-scratch: {} vs {}",
+        ckpt.makespan,
+        plain.makespan
+    );
+}
+
+/// A hedged + checkpointed + rack-faulted run is bit-identical across
+/// all four simulation cores, and deterministic across repeats.
+#[test]
+fn resilient_faulted_run_agrees_across_cores() {
+    let wl = WorkloadSpec::solo(chains());
+    let mut cfg = rack_outage_cfg();
+    cfg.resil = ResilienceConfig {
+        hedge_k: 1,
+        checkpoint_every_s: 10.0,
+        checkpoint_gb: 0.1,
+        hazard_weight: 1.0,
+        ..Default::default()
+    };
+    let base = run_workload(&wl, &cfg);
+    assert_eq!(base, run_workload(&wl, &cfg), "repeat runs are bit-identical");
+    for core in [SimCore::Checked, SimCore::Eager, SimCore::Naive] {
+        let mut c = cfg.clone();
+        c.core = core;
+        let m = run_workload(&wl, &c);
+        assert_eq!(
+            m.fingerprint(),
+            base.fingerprint(),
+            "{core:?} diverged from Incremental on the resilient faulted run"
+        );
+    }
+}
+
+/// Trace reconciliation on a fault-free hedged + checkpointed run:
+/// every hedge COP launch and checkpoint commit shows up in the trace
+/// exactly as often as the metrics count them.
+#[test]
+fn resilience_trace_counts_reconcile() {
+    let wl = WorkloadSpec::solo(chains());
+    let mut cfg = rack_outage_cfg();
+    cfg.fault = FaultConfig::default();
+    cfg.resil.hedge_k = 1;
+    cfg.resil.checkpoint_every_s = 10.0;
+    cfg.resil.checkpoint_gb = 0.1;
+    let out = traced(&wl, &cfg);
+    let counts = out.trace.as_ref().expect("tracing was requested").counts();
+    assert!(out.metrics.hedge_cops > 0);
+    assert!(out.metrics.checkpoints > 0);
+    assert_eq!(
+        counts.hedge_copies, out.metrics.hedge_cops,
+        "fault-free: every launched hedge finishes and is counted once"
+    );
+    assert_eq!(counts.checkpoints, out.metrics.checkpoints);
+}
+
+/// Inertness: the default (disabled) resilience config reports zero
+/// resilience metrics on every core, for every strategy, even under
+/// faults — the knobs-off path is exactly the pre-resilience one.
+#[test]
+fn disabled_resilience_reports_zero_everywhere() {
+    let wl = WorkloadSpec::solo(chains());
+    for strategy in [Strategy::Orig, Strategy::Cws, Strategy::Wow] {
+        for core in [SimCore::Incremental, SimCore::Checked, SimCore::Eager, SimCore::Naive] {
+            let mut cfg = rack_outage_cfg();
+            cfg.strategy = strategy;
+            cfg.core = core;
+            assert_eq!(cfg.resil, ResilienceConfig::default());
+            let m = run_workload(&wl, &cfg);
+            assert_eq!(m.hedge_cops, 0, "{strategy:?}/{core:?}");
+            assert_eq!(m.hedge_bytes.as_u64(), 0, "{strategy:?}/{core:?}");
+            assert_eq!(m.checkpoints, 0, "{strategy:?}/{core:?}");
+            assert_eq!(m.checkpoint_bytes.as_u64(), 0, "{strategy:?}/{core:?}");
+            assert_eq!(m.salvaged_compute_hours, 0.0, "{strategy:?}/{core:?}");
+        }
+    }
+}
