@@ -24,6 +24,13 @@
 //! of the same size — and proves the cores stay bit-identical with
 //! rack links in the flow paths.
 //!
+//! Every cell also runs the incremental core with a 2-worker pool
+//! (`threads=2`) and asserts the fingerprint bit-identical to the
+//! sequential run, reports peak RSS, and enforces a wall-clock budget
+//! (`WOW_BENCH_BUDGET_S` overrides). The full sweep ends with the
+//! million-task top tier — 1 000 064 tasks × 10 000 nodes × 64 tenants
+//! at threads=1 vs threads=max (see [`million_task_tier`]).
+//!
 //! `cargo bench --bench bench_scale` — full sweep (the largest naive
 //! cell is deliberately expensive; that is the point).
 //! `BENCH_SMOKE=1 cargo bench --bench bench_scale` (or `-- --smoke`) —
@@ -96,6 +103,22 @@ fn main() {
                 1,
                 || fp_naive = run_workload(&wl, &cfg(SimCore::Naive)).fingerprint(),
             );
+            // Parallel column: same incremental core with a 2-worker
+            // pool (component fan-out, replay folds, cost rows). The
+            // fingerprint must not move — parallelism is a cost-model
+            // choice, never a result change (DESIGN.md §15).
+            let mut fp_par = 0u64;
+            let (par_s, _) = common::bench_n(&format!("par(2)      {shape}"), 1, || {
+                let par_cfg = RunConfig { threads: 2, ..cfg(SimCore::Incremental) };
+                fp_par = run_workload(&wl, &par_cfg).fingerprint()
+            });
+            assert_eq!(
+                fp_inc, fp_par,
+                "threads=2 drifted from threads=1 on {nodes}n x {tenants}t / {strategy:?} ({})",
+                topology.label()
+            );
+            let budget_s = if smoke { 300.0 } else { 3600.0 };
+            common::assert_budget(&shape, inc_s.max(eager_s).max(naive_s).max(par_s), budget_s);
             assert_eq!(
                 fp_inc, fp_eager,
                 "incremental vs eager disagree on {nodes}n x {tenants}t / {strategy:?} ({})",
@@ -139,6 +162,8 @@ fn main() {
                 ("incremental_s", Jv::F(inc_s)),
                 ("eager_s", Jv::F(eager_s)),
                 ("naive_s", Jv::F(naive_s)),
+                ("parallel2_s", Jv::F(par_s)),
+                ("peak_rss_gb", Jv::F(common::peak_rss_gb())),
                 ("speedup", Jv::F(speedup)),
                 ("speedup_vs_eager", Jv::F(speedup_vs_eager)),
                 ("fingerprint", Jv::S(format!("{fp_inc:016x}"))),
@@ -148,5 +173,71 @@ fn main() {
             report.row(&format!("{nodes}n-{tenants}t-{}{key_topo}", strategy.label()), &fields);
         }
     }
+    if !smoke {
+        million_task_tier(&mut report);
+    }
     report.write("BENCH_scale.json");
+}
+
+/// The million-task top tier: 64 tenants × `chain_n(7813)` (15 626
+/// physical tasks each = 1 000 064 total) on 10 000 flat nodes under
+/// `Strategy::Orig` — FIFO + round-robin, no cost matrix, so the row
+/// isolates the event core and network substrate at scale. Runs the
+/// incremental core at threads=1 and threads=max and asserts the
+/// fingerprints bit-identical *before* the row is written; the
+/// wall-clock budget (default 7200 s per run, `WOW_BENCH_BUDGET_S`
+/// overrides) and the peak-RSS column keep the tier honest PR-over-PR.
+/// Full mode only — never part of the CI smoke.
+fn million_task_tier(report: &mut common::JsonReport) {
+    let nodes = 10_000;
+    let tenants = 64;
+    let mix = vec![patterns::chain_n(7813)];
+    let wl = WorkloadSpec::from_mix(
+        "scale-1m",
+        &mix,
+        tenants,
+        &Arrival::Poisson { mean_gap_s: 60.0 },
+        0,
+    );
+    let cfg = |threads: usize| RunConfig {
+        n_nodes: nodes,
+        strategy: Strategy::Orig,
+        core: SimCore::Incremental,
+        threads,
+        ..Default::default()
+    };
+    let shape = format!("{nodes}n x {tenants}t / {} [1M tasks]", Strategy::Orig.label());
+    let mut fp_seq = 0u64;
+    let (seq_s, _) = common::bench_n(&format!("incremental {shape}"), 1, || {
+        fp_seq = run_workload(&wl, &cfg(1)).fingerprint()
+    });
+    common::assert_budget(&shape, seq_s, 7200.0);
+    let par_threads = wow::sim::pool::max_threads();
+    let mut fp_par = 0u64;
+    let (par_s, _) = common::bench_n(&format!("par({par_threads})     {shape}"), 1, || {
+        fp_par = run_workload(&wl, &cfg(par_threads)).fingerprint()
+    });
+    common::assert_budget(&shape, par_s, 7200.0);
+    assert_eq!(fp_seq, fp_par, "threads={par_threads} drifted from threads=1 on the 1M tier");
+    let rss = common::peak_rss_gb();
+    println!(
+        "  -> {:>6.2}x parallel speedup, peak RSS {rss:.2} GB \
+         (fingerprint {fp_seq:016x} identical)\n",
+        seq_s / par_s
+    );
+    report.row(
+        "1m-tasks-10000n-64t-orig",
+        &[
+            ("nodes", Jv::U(nodes as u64)),
+            ("tenants", Jv::U(tenants as u64)),
+            ("tasks", Jv::U(1_000_064)),
+            ("strategy", Jv::S(Strategy::Orig.label().to_string())),
+            ("threads_par", Jv::U(par_threads as u64)),
+            ("sequential_s", Jv::F(seq_s)),
+            ("parallel_s", Jv::F(par_s)),
+            ("peak_rss_gb", Jv::F(rss)),
+            ("fingerprint", Jv::S(format!("{fp_seq:016x}"))),
+            ("smoke", Jv::B(false)),
+        ],
+    );
 }

@@ -30,6 +30,40 @@ pub fn bench_n(label: &str, iters: usize, mut f: impl FnMut()) -> (f64, f64) {
     (min, mean)
 }
 
+/// Peak resident set size of this process in GB, parsed from
+/// `/proc/self/status` (`VmHWM`, in kB). Returns 0.0 where the proc
+/// file is unavailable (non-Linux), so bench rows stay well-formed on
+/// every platform. Note this is a process-lifetime high-water mark:
+/// on a multi-row bench it reflects the largest row so far.
+pub fn peak_rss_gb() -> f64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0.0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: f64 = rest.trim().trim_end_matches("kB").trim().parse().unwrap_or(0.0);
+            return kb / (1024.0 * 1024.0);
+        }
+    }
+    0.0
+}
+
+/// Assert one bench measurement stayed inside its wall-clock budget.
+/// `WOW_BENCH_BUDGET_S` overrides `default_budget_s` globally (handy on
+/// slow shared runners); a budget of `0` disables the check.
+pub fn assert_budget(label: &str, elapsed_s: f64, default_budget_s: f64) {
+    let budget = std::env::var("WOW_BENCH_BUDGET_S")
+        .ok()
+        .and_then(|v| v.trim().parse::<f64>().ok())
+        .unwrap_or(default_budget_s);
+    if budget > 0.0 {
+        assert!(
+            elapsed_s <= budget,
+            "{label}: wall clock {elapsed_s:.1}s exceeded budget {budget:.1}s"
+        );
+    }
+}
+
 /// Accumulates bench rows and writes them as a single JSON document:
 /// `{"bench": NAME, "rows": [{"label": L, ...fields}, ...]}` — a thin
 /// label-first wrapper over [`wow::util::json::RowsDoc`].

@@ -150,6 +150,106 @@ impl CostEval for NativeCost {
     }
 }
 
+/// Minimum estimated multiply-accumulate count before [`ParallelCost`]
+/// fans out; below this the spawn/steal overhead of the pool dwarfs the
+/// row loops and the inline path wins.
+const PAR_COST_MIN_WORK: usize = 65_536;
+
+/// Deterministic row-parallel wrapper around [`NativeCost`].
+///
+/// Task rows are split into contiguous chunks, each chunk is evaluated
+/// by the *exact* [`NativeCost`] row loops on a scoped worker, and the
+/// chunk outputs are concatenated back in chunk order. Rows never share
+/// accumulator state (each row owns its `missing`/`local` slice), so
+/// per-row f32 accumulation order is untouched and the result is
+/// bit-identical to [`NativeCost`] at any thread count.
+///
+/// [`CostEval::backend_name`] still reports `"native"`: the executor
+/// keys its incremental-core decision on that name, and this wrapper is
+/// observationally the native backend — only the wall clock differs.
+#[derive(Debug)]
+pub struct ParallelCost {
+    threads: usize,
+}
+
+impl ParallelCost {
+    pub fn new(threads: usize) -> Self {
+        Self { threads }
+    }
+
+    /// Contiguous `(start, len)` row chunks, one per prospective worker.
+    fn chunks(&self, t: usize) -> Vec<(usize, usize)> {
+        let n_chunks = self.threads.clamp(1, t.max(1));
+        let per = t.div_ceil(n_chunks);
+        let mut out = Vec::with_capacity(n_chunks);
+        let mut start = 0;
+        while start < t {
+            let len = per.min(t - start);
+            out.push((start, len));
+            start += len;
+        }
+        out
+    }
+}
+
+impl CostEval for ParallelCost {
+    fn missing_local(
+        &mut self,
+        req: &[f32],
+        present: &[f32],
+        sizes: &[f32],
+        t: usize,
+        f: usize,
+        n: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let work = t.saturating_mul(f).saturating_mul(n);
+        if self.threads <= 1 || t < 2 || work < PAR_COST_MIN_WORK {
+            return NativeCost.missing_local(req, present, sizes, t, f, n);
+        }
+        let parts = crate::sim::pool::par_map(self.threads, self.chunks(t), |_, (start, len)| {
+            let rows = &req[start * f..(start + len) * f];
+            NativeCost.missing_local(rows, present, sizes, len, f, n)
+        });
+        let mut missing = Vec::with_capacity(t * n);
+        let mut local = Vec::with_capacity(t * n);
+        for (m, l) in parts {
+            missing.extend_from_slice(&m);
+            local.extend_from_slice(&l);
+        }
+        (missing, local)
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+
+    fn missing_local_sparse(
+        &mut self,
+        task_files: &[Vec<usize>],
+        present: &[f32],
+        sizes: &[f32],
+        f: usize,
+        n: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let t = task_files.len();
+        let nnz: usize = task_files.iter().map(|fs| fs.len()).sum();
+        if self.threads <= 1 || t < 2 || nnz.saturating_mul(n) < PAR_COST_MIN_WORK {
+            return NativeCost.missing_local_sparse(task_files, present, sizes, f, n);
+        }
+        let parts = crate::sim::pool::par_map(self.threads, self.chunks(t), |_, (start, len)| {
+            let rows = &task_files[start..start + len];
+            NativeCost.missing_local_sparse(rows, present, sizes, f, n)
+        });
+        let mut missing = Vec::with_capacity(t * n);
+        let mut local = Vec::with_capacity(t * n);
+        for (m, l) in parts {
+            missing.extend_from_slice(&m);
+            local.extend_from_slice(&l);
+        }
+        (missing, local)
+    }
+}
+
 /// Helper shared by backends that process in fixed tiles: pad `src`
 /// (rows × cols) into a `tr × tc` zero matrix.
 pub fn pad_tile(src: &[f32], rows: usize, cols: usize, tr: usize, tc: usize) -> Vec<f32> {
@@ -202,6 +302,37 @@ mod tests {
                 assert!((got - total).abs() < 1e-3, "t{ti} n{ni}: {got} vs {total}");
             }
         }
+    }
+
+    #[test]
+    fn parallel_cost_is_bit_identical_to_native() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(17);
+        // Big enough to clear PAR_COST_MIN_WORK (t·f·n = 96·64·24).
+        let (t, f, n) = (96, 64, 24);
+        let req: Vec<f32> = (0..t * f).map(|_| (rng.next_f64() < 0.2) as u8 as f32).collect();
+        let present: Vec<f32> = (0..f * n).map(|_| rng.next_f64() as f32).collect();
+        let sizes: Vec<f32> = (0..f).map(|_| rng.range_f64(0.1, 4.0) as f32).collect();
+        let task_files: Vec<Vec<usize>> = (0..t)
+            .map(|ti| (0..f).filter(|fi| req[ti * f + fi] != 0.0).collect())
+            .collect();
+        let (m0, l0) = NativeCost.missing_local(&req, &present, &sizes, t, f, n);
+        let (sm0, sl0) = NativeCost.missing_local_sparse(&task_files, &present, &sizes, f, n);
+        for threads in [2, 3, 7] {
+            let mut par = ParallelCost::new(threads);
+            let (m, l) = par.missing_local(&req, &present, &sizes, t, f, n);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&m), bits(&m0), "dense missing, threads={threads}");
+            assert_eq!(bits(&l), bits(&l0), "dense local, threads={threads}");
+            let (sm, sl) = par.missing_local_sparse(&task_files, &present, &sizes, f, n);
+            assert_eq!(bits(&sm), bits(&sm0), "sparse missing, threads={threads}");
+            assert_eq!(bits(&sl), bits(&sl0), "sparse local, threads={threads}");
+        }
+        // Below-threshold shapes fall back inline and still agree.
+        let mut par = ParallelCost::new(4);
+        let small = par.missing_local(&req[..2 * f], &present, &sizes, 2, f, n);
+        let native = NativeCost.missing_local(&req[..2 * f], &present, &sizes, 2, f, n);
+        assert_eq!(small, native);
     }
 
     #[test]

@@ -27,7 +27,7 @@
 
 use crate::cluster::{Cluster, NodeId, NodeSpec, Topology};
 use crate::dfs::{Ceph, Dfs, DfsKind, Nfs};
-use crate::dps::cost::{CostEval, NativeCost};
+use crate::dps::cost::{CostEval, NativeCost, ParallelCost};
 use crate::dps::{CopId, CopPlan, Dps};
 use crate::fault::{FaultConfig, FaultEvent, FaultPlan, ResilienceConfig};
 use crate::lcs::Lcs;
@@ -152,6 +152,13 @@ pub struct RunConfig {
     /// Simulation-core selection (incremental / checked / naive); the
     /// choice never changes results, only how fast they are produced.
     pub core: SimCore,
+    /// Worker threads for the deterministic parallel core (component
+    /// fan-out, replay folds, cost-row batches). `0` consults the
+    /// `WOW_THREADS` env var (default 1); `1` is fully sequential. Like
+    /// `core`, the choice never changes results — every fan-out folds
+    /// back in a pinned order (DESIGN.md §15), so any thread count
+    /// yields bit-identical metrics.
+    pub threads: usize,
 }
 
 impl Default for RunConfig {
@@ -173,6 +180,7 @@ impl Default for RunConfig {
             serve: ServeConfig::default(),
             resil: ResilienceConfig::default(),
             core: SimCore::Incremental,
+            threads: 0,
         }
     }
 }
@@ -356,15 +364,16 @@ struct TenantRt {
     workflow_name: String,
 }
 
-/// A finished COP awaiting (or past) its usefulness attribution: `used`
-/// flips when a task starting on `dst` reads any of `files` (Table II's
-/// "used" column).
+/// A finished COP awaiting usefulness attribution, indexed by its
+/// destination node: the record is dropped — and `n_cops_used` bumped —
+/// when a task starting on that node reads any of `files` (Table II's
+/// "used" column). Streaming fold: attributed COPs leave no resident
+/// record, so memory tracks the unused backlog, not every COP ever
+/// completed.
 #[derive(Debug)]
 struct CompletedCop {
     id: CopId,
-    dst: NodeId,
     files: Vec<FileId>,
-    used: bool,
 }
 
 struct Executor {
@@ -402,12 +411,18 @@ struct Executor {
     last_finish: SimTime,
     cpu_core_seconds: f64,
     node_cpu_seconds: Vec<f64>,
-    cops_per_task: FastMap<TaskId, u32>,
-    completed_cops: Vec<CompletedCop>,
+    /// Tasks that ever had a COP created for them (`tasks_no_cop` is
+    /// its complement). A set, not a count map — the metric only asks
+    /// "any COP?", so per-task counters would grow resident memory with
+    /// the task count for no observable.
+    tasks_with_cops: FastSet<TaskId>,
     /// Not-yet-used completed COPs indexed by destination node, so the
     /// usefulness attribution in `start_task` touches only that node's
-    /// candidates instead of every COP ever completed.
-    unused_cops_by_node: FastMap<NodeId, Vec<usize>>,
+    /// candidates instead of every COP ever completed. Attributed COPs
+    /// are dropped on the spot (see [`CompletedCop`]).
+    unused_cops_by_node: FastMap<NodeId, Vec<CompletedCop>>,
+    /// COPs whose data a task read on the destination (Table II "used").
+    n_cops_used: u64,
     /// COPs in their setup-latency window, not yet flowing.
     pending_cops: FastMap<CopId, crate::dps::Cop>,
     tasks_done: usize,
@@ -486,7 +501,9 @@ struct Executor {
 impl Executor {
     fn new(workload: WorkloadSpec, cfg: RunConfig, backend: Box<dyn CostEval>) -> Self {
         assert!(!workload.tenants.is_empty(), "workload needs at least one tenant");
+        let threads = crate::sim::pool::resolve_threads(cfg.threads);
         let mut net = FlowNet::new();
+        net.set_threads(threads);
         match cfg.core {
             SimCore::Incremental => {}
             SimCore::Checked => net.enable_reference_check(),
@@ -511,6 +528,16 @@ impl Executor {
             // spreading; the default placement stream is untouched.
             DfsKind::Ceph => Box::new(Ceph::new().with_rack_awareness(cfg.resil.enabled())),
             DfsKind::Nfs => Box::new(Nfs::new(cluster.nfs_server().expect("server"))),
+        };
+        // Deterministic parallel cost rows: wrap the native backend so
+        // row batches fan out on the pool with bit-identical results
+        // (`ParallelCost` also reports "native" — observationally it is
+        // the native backend). Non-native backends are left alone; their
+        // accumulation contract belongs to the artifact.
+        let backend: Box<dyn CostEval> = if threads > 1 && backend.backend_name() == "native" {
+            Box::new(ParallelCost::new(threads))
+        } else {
+            backend
         };
         // The row cache is bit-identical to the full rebuild only for
         // the native backend (tiled backends fold per-tile partial sums,
@@ -584,9 +611,9 @@ impl Executor {
             last_finish: SimTime::ZERO,
             cpu_core_seconds: 0.0,
             node_cpu_seconds: vec![0.0; n_workers],
-            cops_per_task: FastMap::default(),
-            completed_cops: Vec::new(),
+            tasks_with_cops: FastSet::default(),
             unused_cops_by_node: FastMap::default(),
+            n_cops_used: 0,
             pending_cops: FastMap::default(),
             tasks_done: 0,
             node_replica_bytes: vec![0.0; n_workers],
@@ -1229,7 +1256,7 @@ impl Executor {
         self.tenants[tn].running_cores -= r.cores as u64;
         if self.scheduler.uses_local_data() {
             let lid = workload::local_task(task);
-            for (f, size) in self.tenants[tn].engine.task(lid).outputs.clone() {
+            for &(f, size) in &self.tenants[tn].engine.task(lid).outputs {
                 for node in self.dps.release_file(workload::ns_file(tn, f)) {
                     self.node_replica_bytes[node.0] -= size.as_f64();
                 }
@@ -1277,10 +1304,9 @@ impl Executor {
                 .iter()
                 .map(|&f| workload::ns_file(tn, f))
                 .collect();
-            candidates.retain(|&idx| {
-                let cop = &mut self.completed_cops[idx];
+            candidates.retain(|cop| {
                 if cop.files.iter().any(|f| inputs_g.contains(f)) {
-                    cop.used = true;
+                    self.n_cops_used += 1;
                     let cop_id = cop.id;
                     self.tracer.emit(now, || TraceEvent::CopUsed {
                         cop: cop_id.0,
@@ -1330,11 +1356,16 @@ impl Executor {
         let local_mode = self.scheduler.uses_local_data();
         let tn = workload::task_tenant(task);
         let lid = workload::local_task(task);
-        let inputs = self.tenants[tn].engine.task(lid).inputs.clone();
+        // Indexed walk instead of cloning the input list: the loop body
+        // needs `&mut self` (flows, ownership records), so a borrow of
+        // the engine cannot live across it.
+        let n_inputs = self.tenants[tn].engine.task(lid).inputs.len();
         let mut n_flows = 0;
-        for lf in inputs {
-            let size = self.tenants[tn].engine.file(lf).size;
-            let is_input = self.tenants[tn].engine.file(lf).is_workflow_input();
+        for ii in 0..n_inputs {
+            let eng = &self.tenants[tn].engine;
+            let lf = eng.task(lid).inputs[ii];
+            let size = eng.file(lf).size;
+            let is_input = eng.file(lf).is_workflow_input();
             let gf = workload::ns_file(tn, lf);
             if local_mode && !is_input {
                 // Intermediate input: must be local (node is prepared).
@@ -1389,7 +1420,7 @@ impl Executor {
         if self.cfg.serve.dedup {
             let tn = workload::task_tenant(task);
             let lid = workload::local_task(task);
-            for lf in self.tenants[tn].engine.task(lid).inputs.clone() {
+            for &lf in &self.tenants[tn].engine.task(lid).inputs {
                 if !self.tenants[tn].engine.file(lf).is_workflow_input() {
                     continue;
                 }
@@ -1556,9 +1587,13 @@ impl Executor {
             phase: "stage-out",
         });
         let tn = workload::task_tenant(task);
-        let outputs = self.tenants[tn].engine.task(workload::local_task(task)).outputs.clone();
+        let lid = workload::local_task(task);
+        // Indexed walk, mirroring `issue_stage_in_flows`: no per-task
+        // clone of the output list on this hot path.
+        let n_out = self.tenants[tn].engine.task(lid).outputs.len();
         let mut n_flows = 0;
-        for (f, size) in outputs {
+        for oi in 0..n_out {
+            let (f, size) = self.tenants[tn].engine.task(lid).outputs[oi];
             if local_mode {
                 let n = self.cluster.node(node);
                 let id = self.net.add_flow(size, vec![n.disk_write]);
@@ -1644,7 +1679,7 @@ impl Executor {
         // Outputs become visible; in WOW mode they are DPS-managed local
         // files.
         if self.scheduler.uses_local_data() {
-            for (f, size) in self.tenants[tn].engine.task(lid).outputs.clone() {
+            for &(f, size) in &self.tenants[tn].engine.task(lid).outputs {
                 self.dps.register_output(workload::ns_file(tn, f), size, r.node);
                 self.node_replica_bytes[r.node.0] += size.as_f64();
             }
@@ -1652,7 +1687,9 @@ impl Executor {
             // k-resilient hedging: every fresh intermediate gets
             // replicas across 1 + hedge_k failure domains.
             if self.cfg.resil.hedge_k > 0 {
-                for (f, _) in self.tenants[tn].engine.task(lid).outputs.clone() {
+                let n_out = self.tenants[tn].engine.task(lid).outputs.len();
+                for oi in 0..n_out {
+                    let f = self.tenants[tn].engine.task(lid).outputs[oi].0;
                     self.ensure_hedged(workload::ns_file(tn, f), None);
                 }
             }
@@ -1691,33 +1728,37 @@ impl Executor {
 
     fn start_cop(&mut self, task: TaskId, dst: NodeId) -> bool {
         // The scheduler checked feasibility; re-plan for fresh sources.
-        let inputs = match self.ready_pos.get(&task) {
-            Some(&pos) => self.ready[pos].intermediate_inputs.clone(),
+        // The input list is read in place from the ready entry (`dps`
+        // and `ready` are disjoint fields) — no per-COP clone.
+        let pos = match self.ready_pos.get(&task) {
+            Some(&p) => p,
             None => return false, // task started in the same batch
         };
-        let plan = match self.dps.plan(&inputs, dst) {
+        let plan = match self.dps.plan(&self.ready[pos].intermediate_inputs, dst) {
             Some(p) => p,
             None => return false,
         };
         let cop = self.dps.start_cop(task, dst, plan);
-        *self.cops_per_task.entry(task).or_insert(0) += 1;
+        self.tasks_with_cops.insert(task);
         // Setup latency before bytes move; the COP occupies its c_node /
         // c_task slots for the whole window (reserved at creation).
         let launch_at = self.net.now() + SimTime::from_secs_f64(self.cfg.cop_setup_s);
         let now = self.net.now();
+        let (cid, total) = (cop.id, cop.total_bytes());
         self.tracer.emit(now, || TraceEvent::CopStart {
-            cop: cop.id.0,
+            cop: cid.0,
             task: task.0,
             dst: dst.0,
-            bytes: cop.total_bytes().as_u64(),
+            bytes: total.as_u64(),
         });
-        self.pending_cops.insert(cop.id, cop.clone());
-        self.events.push(launch_at, Event::CopLaunch(cop.id));
+        self.pending_cops.insert(cid, cop);
+        self.events.push(launch_at, Event::CopLaunch(cid));
         // k-resilient hedging: a task-prep COP marks its files hot;
         // make sure each spans enough failure domains (the just-planned
         // destination counts as about-to-be-covered).
         if self.cfg.resil.hedge_k > 0 {
-            for f in inputs {
+            for i in 0..self.ready[pos].intermediate_inputs.len() {
+                let f = self.ready[pos].intermediate_inputs[i];
                 self.ensure_hedged(f, Some(dst));
             }
         }
@@ -1746,9 +1787,7 @@ impl Executor {
             return;
         }
         let files = cop.parts.iter().map(|(f, _, _)| *f).collect();
-        let idx = self.completed_cops.len();
-        self.completed_cops.push(CompletedCop { id, dst: cop.dst, files, used: false });
-        self.unused_cops_by_node.entry(cop.dst).or_default().push(idx);
+        self.unused_cops_by_node.entry(cop.dst).or_default().push(CompletedCop { id, files });
     }
 
     /// Ensure `file`'s replicas — plus hedges already in flight and an
@@ -2159,7 +2198,7 @@ impl Executor {
             let now = self.net.now();
             self.tracer.emit(now, || TraceEvent::TaskRerun { task: gid.0, reason: "lineage" });
             revived.push(gid);
-            for inp in self.tenants[tn].engine.task(prod).inputs.clone() {
+            for &inp in &self.tenants[tn].engine.task(prod).inputs {
                 if !self.tenants[tn].engine.file(inp).is_workflow_input() {
                     stack.push(workload::ns_file(tn, inp));
                 }
@@ -2190,12 +2229,12 @@ impl Executor {
                 (0..t.engine.n_tasks_materialized())
                     .filter(|i| {
                         let id = workload::ns_task(tn, TaskId(*i as u64));
-                        !self.cops_per_task.contains_key(&id)
+                        !self.tasks_with_cops.contains(&id)
                     })
                     .count()
             })
             .sum();
-        let cops_used = self.completed_cops.iter().filter(|c| c.used).count() as u64;
+        let cops_used = self.n_cops_used;
 
         // Per-node storage: total bytes written to each worker's disk.
         let node_storage_bytes: Vec<f64> = self
@@ -2271,7 +2310,7 @@ impl Executor {
             cop_bytes: self.dps.bytes_copied,
             unique_generated,
             node_storage_bytes,
-            node_cpu_seconds: self.node_cpu_seconds.clone(),
+            node_cpu_seconds: std::mem::take(&mut self.node_cpu_seconds),
             peak_replica_bytes: self.peak_replica_bytes,
             cross_rack_bytes,
             node_crashes: self.n_crashes,

@@ -10,6 +10,8 @@
 //!         [--hazard-weight W]
 //!         [--tenants N] [--mix wf1,wf2] [--arrival SPEC] [--policy P]
 //!         [--weights 2,1,1] [--core incremental|checked|eager|naive]
+//!         [--threads N]     # 0 = WOW_THREADS env (default 1); results
+//!                           # are bit-identical at any thread count
 //!         [--admission all|queue:A:D[:fifo|sjf]|shed:W] [--preempt]
 //!         [--slo S] [--dedup] [--json]
 //!         [--trace out.json] [--trace-format chrome|jsonl] [--sample-every S]
@@ -255,6 +257,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let cfg = RunConfig {
         tenant_policy: args.get("policy", TenantPolicy::Fifo)?,
         core: args.get("core", SimCore::Incremental)?,
+        threads: args.get("threads", 0usize)?,
         n_nodes: args.get("nodes", 8usize)?,
         link_gbit: args.get("gbit", 1.0f64)?,
         topology: args.topology()?,

@@ -1,3 +1,4 @@
 //! Discrete-event simulation primitives.
 
 pub mod event;
+pub mod pool;

@@ -1,0 +1,122 @@
+//! Deterministic worker-pool fan-out for the simulation hot paths.
+//!
+//! The parallel kernels in this codebase (component-restricted max-min
+//! filling, lazy-timeline replay, cost-matrix row batches) all follow
+//! the same contract: independent work items are computed in isolation
+//! on a scoped thread pool and the results are **folded back in item
+//! order** by the caller. Nothing here is allowed to influence the
+//! simulation result: [`par_map`] returns exactly what the inline
+//! `items.map(f)` loop would, in the same order, for any thread count —
+//! the scheduling of items onto workers is load-balanced (an atomic
+//! work counter) but the output placement is positional.
+//!
+//! Implemented on `std::thread::scope` only — no extra dependencies, no
+//! `unsafe`. Each item sits in a `Mutex<Option<T>>` slot a worker takes
+//! exactly once; results travel back as `(index, result)` pairs and are
+//! scattered into a positional vector.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Resolve an effective worker count from a config request: `0` means
+/// "consult the `WOW_THREADS` environment variable, default 1". The
+/// result is clamped to at least 1; `1` disables all fan-out (the
+/// bit-identical sequential paths run instead — by construction they
+/// produce the same results, so this is purely a cost-model choice).
+pub fn resolve_threads(requested: usize) -> usize {
+    let n = if requested == 0 {
+        std::env::var("WOW_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .unwrap_or(1)
+    } else {
+        requested
+    };
+    n.max(1)
+}
+
+/// The machine's available parallelism (≥ 1); the `threads=max` arm of
+/// the invariance tests and the scale bench use this.
+pub fn max_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Map `f` over `items` on up to `threads` scoped workers and return
+/// the results **in item order** — bit-identical to the sequential
+/// `items.into_iter().enumerate().map(|(i, x)| f(i, x)).collect()`,
+/// which is exactly what runs when `threads <= 1` or there is at most
+/// one item. `f` must be a pure function of its arguments (plus shared
+/// read-only captures) for the determinism contract to hold; the type
+/// system enforces `Sync` but purity is on the caller.
+pub fn par_map<T, R, F>(threads: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    if threads <= 1 || n <= 1 {
+        return items.into_iter().enumerate().map(|(i, x)| f(i, x)).collect();
+    }
+    let slots: Vec<Mutex<Option<T>>> = items.into_iter().map(|x| Mutex::new(Some(x))).collect();
+    let next = AtomicUsize::new(0);
+    let workers = threads.min(n);
+    let per_worker: Vec<Vec<(usize, R)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut got: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let item = slots[i].lock().unwrap().take().expect("par_map item taken twice");
+                        got.push((i, f(i, item)));
+                    }
+                    got
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("par_map worker panicked")).collect()
+    });
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    for batch in per_worker {
+        for (i, r) in batch {
+            debug_assert!(out[i].is_none(), "par_map produced index {i} twice");
+            out[i] = Some(r);
+        }
+    }
+    out.into_iter().map(|r| r.expect("par_map lost an item")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order_at_any_thread_count() {
+        let items: Vec<usize> = (0..257).collect();
+        let want: Vec<usize> = items.iter().map(|&x| x * 3 + 1).collect();
+        for threads in [1, 2, 3, 8] {
+            let got = par_map(threads, items.clone(), |i, x| {
+                assert_eq!(i, x);
+                x * 3 + 1
+            });
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_map_handles_empty_and_single() {
+        assert_eq!(par_map(4, Vec::<u32>::new(), |_, x| x), Vec::<u32>::new());
+        assert_eq!(par_map(4, vec![7u32], |i, x| x + i as u32), vec![7]);
+    }
+
+    #[test]
+    fn resolve_threads_clamps_and_defaults() {
+        assert_eq!(resolve_threads(3), 3);
+        assert!(resolve_threads(0) >= 1);
+        assert!(max_threads() >= 1);
+    }
+}

@@ -64,10 +64,18 @@ pub fn all_in_one() -> WorkflowSpec {
 
 /// "Chain": 100 A tasks, each followed by its own B task.
 pub fn chain() -> WorkflowSpec {
+    chain_n(100)
+}
+
+/// Chain pattern with a configurable width: `count` A tasks, each
+/// followed by its own B task (`2 * count` physical tasks). The scale
+/// bench uses this to build million-task workloads; `chain()` is
+/// `chain_n(100)`, the paper's Table I shape.
+pub fn chain_n(count: usize) -> WorkflowSpec {
     WorkflowSpec {
         name: "Chain".into(),
         stages: vec![
-            stage_a(100),
+            stage_a(count),
             merge_stage("B", Rule::PerTask { from: StageId(0) }),
         ],
         input_files_gb: vec![],
@@ -160,6 +168,14 @@ mod tests {
     fn patterns_have_no_input_data() {
         for spec in all_patterns() {
             assert_eq!(spec.total_input_gb(), 0.0, "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn chain_n_scales_physical_tasks() {
+        for count in [1, 7, 500] {
+            let s = WorkflowEngine::dry_run_counts(&chain_n(count), 1);
+            assert_eq!(s.physical_tasks, 2 * count);
         }
     }
 

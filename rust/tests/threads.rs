@@ -1,0 +1,142 @@
+//! Thread-count invariance (DESIGN.md §15). The load-bearing contract
+//! of the parallel simulation core: the worker-pool fan-outs
+//! (component-restricted max-min recompute, lazy-timeline replay
+//! folds, cost-matrix row batches) are pure per-item computations
+//! folded back in pinned order, so `threads` is a cost-model knob and
+//! nothing else — `RunMetrics` fingerprints are bit-identical at every
+//! thread count.
+//!
+//! The scenario is deliberately the nastiest regime the simulator has:
+//! open arrivals with bounded-queue admission, fair-share preemption,
+//! dedup, a node crash with recovery, injected transient task
+//! failures, replica hedging and periodic checkpointing — all at once,
+//! on both the incremental core and the checked (lockstep-verifying)
+//! core.
+
+use wow::dfs::DfsKind;
+use wow::exec::{run_workload, RunConfig, SimCore};
+use wow::fault::{FaultConfig, ResilienceConfig};
+use wow::scheduler::{Strategy, TenantPolicy};
+use wow::serve::{self, AdmissionPolicy, DequeueOrder, ServeConfig};
+use wow::sim::pool;
+use wow::util::units::Bytes;
+use wow::workflow::spec::{ComputeModel, OutputSize, Rule, StageSpec, WorkflowSpec};
+use wow::workflow::task::StageId;
+use wow::workload::WorkloadSpec;
+
+/// The saturating tenant workflow from `rust/tests/serve.rs`: map
+/// tasks occupy full nodes, so the serving regime really preempts.
+fn hog() -> WorkflowSpec {
+    WorkflowSpec {
+        name: "hog".into(),
+        stages: vec![
+            StageSpec {
+                name: "map".into(),
+                rule: Rule::Source { count: 4, inputs_per_task: 1 },
+                cores: 16,
+                mem: Bytes::from_gb(4.0),
+                compute: ComputeModel::fixed(45.0),
+                out_count: 1,
+                out_size: OutputSize::FixedGb(0.3),
+            },
+            StageSpec {
+                name: "reduce".into(),
+                rule: Rule::PerTask { from: StageId(0) },
+                cores: 2,
+                mem: Bytes::from_gb(2.0),
+                compute: ComputeModel::fixed(10.0),
+                out_count: 1,
+                out_size: OutputSize::RatioOfInput(0.5),
+            },
+        ],
+        input_files_gb: vec![0.5; 4],
+    }
+}
+
+/// The serving + fault regime of `rust/tests/trace.rs`, plus replica
+/// hedging and periodic checkpointing so the resilience machinery is
+/// in the loop too.
+fn stormy_resilient() -> (WorkloadSpec, RunConfig) {
+    let wl = serve::open_stream("stream", &[hog()], 30.0, 300.0, 3);
+    let cfg = RunConfig {
+        strategy: Strategy::Wow,
+        dfs: DfsKind::Ceph,
+        seed: 3,
+        tenant_policy: TenantPolicy::FairShare,
+        serve: ServeConfig {
+            admission: AdmissionPolicy::Queue { active: 6, depth: 8, order: DequeueOrder::Fifo },
+            preempt: true,
+            slo_s: 400.0,
+            horizon_s: 300.0,
+            dedup: true,
+        },
+        fault: FaultConfig {
+            node_crashes: 1,
+            crash_window_s: (40.0, 200.0),
+            recovery_s: Some(60.0),
+            task_fail_prob: 0.05,
+            ..Default::default()
+        },
+        resil: ResilienceConfig {
+            hedge_k: 1,
+            checkpoint_every_s: 20.0,
+            checkpoint_gb: 0.1,
+            hazard_weight: 1.0,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    (wl, cfg)
+}
+
+/// The tentpole property: `threads ∈ {1, 2, max}` produce bit-identical
+/// `RunMetrics` fingerprints on the incremental core and on the checked
+/// core (which lockstep-verifies the incremental substrate against the
+/// reference model on every event while it runs).
+#[test]
+fn thread_count_never_changes_results() {
+    let (wl, cfg) = stormy_resilient();
+    let mut counts = vec![2, pool::max_threads()];
+    counts.dedup();
+    for core in [SimCore::Incremental, SimCore::Checked] {
+        let mut base_cfg = cfg.clone();
+        base_cfg.core = core;
+        base_cfg.threads = 1;
+        let base = run_workload(&wl, &base_cfg);
+        assert!(base.makespan > 0.0);
+        assert!(
+            base.preemptions + base.task_failures + base.hedge_cops + base.checkpoints > 0,
+            "{core:?}: the invariance scenario must actually be eventful"
+        );
+        for &threads in &counts {
+            let mut c = base_cfg.clone();
+            c.threads = threads;
+            let m = run_workload(&wl, &c);
+            assert_eq!(
+                m.fingerprint(),
+                base.fingerprint(),
+                "{core:?}: threads={threads} diverged from threads=1"
+            );
+        }
+    }
+}
+
+/// `threads = 0` defers to the `WOW_THREADS` environment variable
+/// (default 1) — the CI matrix leg that exports `WOW_THREADS=2` runs
+/// the whole suite through this path, so here it is enough to pin that
+/// the env-resolved run matches an explicit `threads = 1` run.
+#[test]
+fn env_resolved_threads_match_explicit() {
+    let (wl, cfg) = stormy_resilient();
+    let mut explicit = cfg.clone();
+    explicit.threads = 1;
+    let base = run_workload(&wl, &explicit);
+    let mut env_resolved = cfg.clone();
+    env_resolved.threads = 0;
+    let m = run_workload(&wl, &env_resolved);
+    assert_eq!(
+        m.fingerprint(),
+        base.fingerprint(),
+        "WOW_THREADS-resolved run diverged from explicit threads=1"
+    );
+}
