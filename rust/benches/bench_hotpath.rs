@@ -102,6 +102,40 @@ fn main() {
         }
     }
 
+    // Max-min filling kernel, alloc-per-component vs per-worker scratch
+    // reuse: the same synthetic batch of 2-resource components is filled
+    // either with fresh cap/users/frozen buffers per job (the
+    // pre-scratch allocation pattern) or with one `FillScratch` reused
+    // across the batch (the production path in `recompute_batch`). The
+    // checksum pins the two rows to identical work.
+    {
+        let (n_jobs, flows) = if smoke { (2_000usize, 16usize) } else { (20_000, 16) };
+        let mut sums = [0.0f64; 2];
+        for (slot, reuse) in [false, true].into_iter().enumerate() {
+            let mode = if reuse { "scratch" } else { "alloc  " };
+            let label = format!("fill rates {mode} ({n_jobs:>6} comps x {flows} flows)");
+            let iters = if smoke { 3 } else { 10 };
+            let (min, mean) = common::bench_n(&label, iters, || {
+                sums[slot] = wow::net::bench_fill_rates(n_jobs, flows, reuse);
+            });
+            let per_comp_us = min / n_jobs as f64 * 1e6;
+            println!("    -> {per_comp_us:.3} µs/component");
+            let key = if reuse { "scratch" } else { "alloc" };
+            report.row(
+                &format!("fill-rates-{key}"),
+                &[
+                    ("components", Jv::U(n_jobs as u64)),
+                    ("flows_per_component", Jv::U(flows as u64)),
+                    ("min_s", Jv::F(min)),
+                    ("mean_s", Jv::F(mean)),
+                    ("per_component_us", Jv::F(per_comp_us)),
+                ],
+            );
+        }
+        // Buffer reuse must be bitwise invisible to the computed rates.
+        assert_eq!(sums[0].to_bits(), sums[1].to_bits());
+    }
+
     let mut rng = Rng::new(1);
     let shapes: &[(usize, usize, usize)] = if smoke {
         &[(32, 256, 8), (64, 512, 8)]

@@ -49,6 +49,7 @@ fn instance(
                 intermediate_inputs: vec![f0, f1],
                 submitted_seq: seq,
                 tenant,
+                est_compute_s: 0.0,
             });
             seq += 1;
         }

@@ -12,6 +12,14 @@
 //! node, with the per-file source chosen greedily — files sorted by
 //! descending size, each assigned to the replica holder with the least
 //! load already assigned for this COP (ties resolved randomly).
+//!
+//! Runtime-truth audit (DESIGN.md §16): the DPS never consumes task
+//! runtimes — every input to pricing and source selection is a byte
+//! count, a replica location, a path penalty, or a hazard score. Under
+//! runtime uncertainty this module therefore needs no oracle seam; it
+//! cannot leak ground-truth durations to the scheduler by construction.
+//! (Tenant precedence in serving is likewise runtime-free: it orders on
+//! arrival time, weight and running cores.)
 
 pub mod cost;
 

@@ -38,6 +38,7 @@ use crate::scheduler::{Action, ReadyTask, SchedView, Scheduler, Strategy, Tenant
 use crate::serve::{self, AdmissionPolicy, DequeueOrder, ServeConfig};
 use crate::sim::event::EventQueue;
 use crate::trace::{SimProfile, Trace, TraceConfig, TraceEvent, Tracer};
+use crate::uncertain::{RuntimeOracle, UncEvent, UncPlan, UncertaintyConfig};
 use crate::util::fxmap::{FastMap, FastSet};
 use crate::util::rng::Rng;
 use crate::util::units::{Bandwidth, Bytes, SimTime};
@@ -149,6 +150,12 @@ pub struct RunConfig {
     /// disables all three and takes exactly the pre-resilience code
     /// path: no extra events, flows, or RNG draws.
     pub resil: ResilienceConfig,
+    /// Runtime uncertainty: truth-vs-estimate runtime noise, node speed
+    /// classes and mid-run degradation, the online re-estimator, and
+    /// speculative straggler backups. The default is inert — no extra
+    /// events, no extra RNG draws, and bit-identical fingerprints to
+    /// the pre-uncertainty simulator on every core and thread count.
+    pub uncertain: UncertaintyConfig,
     /// Simulation-core selection (incremental / checked / naive); the
     /// choice never changes results, only how fast they are produced.
     pub core: SimCore,
@@ -179,6 +186,7 @@ impl Default for RunConfig {
             tenant_policy: TenantPolicy::Fifo,
             serve: ServeConfig::default(),
             resil: ResilienceConfig::default(),
+            uncertain: UncertaintyConfig::default(),
             core: SimCore::Incremental,
             threads: 0,
         }
@@ -280,6 +288,10 @@ struct Running {
     /// *committed* checkpoint; the salvage in `kill_running`. Always 0
     /// with checkpointing off, keeping the wasted-work split inert.
     ckpt_wall: f64,
+    /// Lognormal truth factor of this attempt's compute draw (runtime
+    /// uncertainty); exactly 1.0 when the subsystem is off. Fed back
+    /// to the re-estimator when the attempt's compute succeeds.
+    unc_tfac: f64,
 }
 
 /// Sentinel task id owning hedge COPs: never collides with namespaced
@@ -324,6 +336,15 @@ enum Event {
     /// are ignored, like `ComputeDone`). Only ever scheduled when
     /// `ResilienceConfig::checkpoint_every_s > 0`.
     Checkpoint(TaskId, u64),
+    /// Straggler probe for a computing attempt (stale attempts are
+    /// ignored, like `ComputeDone`). Only ever scheduled when
+    /// speculation is on.
+    StragglerCheck(TaskId, u64),
+    /// A worker enters a compiled performance-degradation window
+    /// (runtime-uncertainty plan, not fault injection).
+    UncDegrade(usize),
+    /// One degradation window on the worker ends.
+    UncRestore(usize),
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -362,6 +383,9 @@ struct TenantRt {
     /// Workflow-spec name, kept for cross-tenant content keys (the
     /// engine consumes the spec).
     workflow_name: String,
+    /// Per-stage static core-second estimates — the oracle's admission
+    /// repricing basis. Empty unless runtime uncertainty is on.
+    stage_est: Vec<f64>,
 }
 
 /// A finished COP awaiting usefulness attribution, indexed by its
@@ -488,6 +512,26 @@ struct Executor {
     /// DFS reads avoided by cross-tenant reference-replica sharing.
     dedup_bytes: Bytes,
 
+    // Runtime-uncertainty state (inert when `cfg.uncertain` is default:
+    // the plan is empty, the oracle is `None`, no events are queued and
+    // every counter stays zero).
+    /// Static per-worker speed classes from the compiled plan (empty on
+    /// disabled runs — every node implicitly class 1.0).
+    unc_class: Vec<f64>,
+    /// Active degradation windows per worker.
+    unc_degraded: Vec<u32>,
+    /// The online runtime re-estimator; `Some` exactly when the
+    /// uncertainty subsystem is enabled.
+    oracle: Option<RuntimeOracle>,
+    /// Canonical ids of tasks with an unresolved speculative backup.
+    spec_pending: FastSet<TaskId>,
+    n_spec_launches: u64,
+    n_spec_wins: u64,
+    /// Core-seconds burned by losing speculative copies.
+    spec_wasted_core_seconds: f64,
+    /// Degradation windows opened (the `node_degrades` metric).
+    n_unc_degrades: u64,
+
     // Observability (inert by default: the tracer is a `None` branch and
     // the profile counters are plain increments; neither touches RNG or
     // any state that feeds `RunMetrics`).
@@ -562,6 +606,7 @@ impl Executor {
             dps.set_topology(tv);
         }
         let workload_name = workload.name;
+        let unc_on = cfg.uncertain.enabled();
         let tenants: Vec<TenantRt> = workload
             .tenants
             .into_iter()
@@ -570,6 +615,8 @@ impl Executor {
                 // Price the workflow before the engine consumes the spec
                 // (pure arithmetic — the estimator draws no randomness).
                 let work_est_s = serve::estimate_core_s(&ts.workflow);
+                let stage_est =
+                    if unc_on { serve::estimate_stage_core_s(&ts.workflow) } else { Vec::new() };
                 let workflow_name = ts.workflow.name.clone();
                 TenantRt {
                     engine: WorkflowEngine::new(ts.workflow, workload::tenant_seed(cfg.seed, i)),
@@ -584,6 +631,7 @@ impl Executor {
                     finished: false,
                     work_est_s,
                     workflow_name,
+                    stage_est,
                 }
             })
             .collect();
@@ -647,6 +695,14 @@ impl Executor {
             preempted_core_seconds: 0.0,
             preempt_counts: FastMap::default(),
             dedup_bytes: Bytes::ZERO,
+            unc_class: Vec::new(),
+            unc_degraded: vec![0; n_workers],
+            oracle: unc_on.then(|| RuntimeOracle::new(&cfg.uncertain)),
+            spec_pending: FastSet::default(),
+            n_spec_launches: 0,
+            n_spec_wins: 0,
+            spec_wasted_core_seconds: 0.0,
+            n_unc_degrades: 0,
             tracer: Tracer::off(),
             prof: SimProfile::default(),
             prof_wall: false,
@@ -691,6 +747,21 @@ impl Executor {
         }
         for (t, ev) in plan.events {
             self.events.push(t, Event::Fault(ev));
+        }
+        // Compile and enqueue the runtime-uncertainty plan (node speed
+        // classes + degradation windows). Skipped outright on disabled
+        // configs: no plan, no RNG, no events.
+        if self.cfg.uncertain.enabled() {
+            let unc =
+                UncPlan::compile(&self.cfg.uncertain, self.cluster.n_workers(), self.cfg.seed);
+            self.unc_class = unc.node_speed;
+            for (t, ev) in unc.events {
+                let ev = match ev {
+                    UncEvent::Degrade(n) => Event::UncDegrade(n),
+                    UncEvent::Restore(n) => Event::UncRestore(n),
+                };
+                self.events.push(t, ev);
+            }
         }
         // Tenants arriving at t = 0 submit immediately (register inputs
         // in the DFS — pre-fetched per §V-A — and materialize source
@@ -769,6 +840,13 @@ impl Executor {
                         if self.compute_attempt_fails(task) {
                             self.retry_compute(task, t);
                         } else {
+                            // The uncertainty hook lives here — not in
+                            // `start_stage_out`, which restarts also
+                            // re-enter — so each successful compute is
+                            // observed exactly once and a speculative
+                            // pair resolves before either copy writes
+                            // outputs.
+                            self.on_compute_success(task, t);
                             self.start_stage_out(task, t);
                         }
                     }
@@ -804,6 +882,11 @@ impl Executor {
                     Event::Checkpoint(task, attempt) => {
                         self.on_checkpoint(task, attempt, t);
                     }
+                    Event::StragglerCheck(task, attempt) => {
+                        need_schedule |= self.on_straggler_check(task, attempt, t);
+                    }
+                    Event::UncDegrade(n) => self.on_unc_degrade(n, t),
+                    Event::UncRestore(n) => self.on_unc_restore(n, t),
                 }
             }
             // A scheduling iteration is observably a no-op when nothing
@@ -873,6 +956,22 @@ impl Executor {
     /// The default `AdmitAll` submits immediately — byte for byte the
     /// closed-batch path (the counters it bumps are pure bookkeeping).
     fn on_tenant_arrival(&mut self, tenant: usize) {
+        // Runtime uncertainty on: admission prices the tenant from the
+        // oracle's current per-stage estimates, never the truth. Early
+        // arrivals see the static bias; later ones benefit from EWMA
+        // corrections learned so far.
+        if let Some(o) = self.oracle.as_ref() {
+            let t = &self.tenants[tenant];
+            let est: f64 = t
+                .stage_est
+                .iter()
+                .enumerate()
+                .map(|(si, &s)| {
+                    s * o.estimate_factor(crate::uncertain::type_key(&t.workflow_name, si as u32))
+                })
+                .sum();
+            self.tenants[tenant].work_est_s = est;
+        }
         match self.cfg.serve.admission {
             AdmissionPolicy::AdmitAll => self.admit_tenant(tenant),
             AdmissionPolicy::Queue { active, depth, .. } => {
@@ -1034,6 +1133,19 @@ impl Executor {
             .filter(|f| !eng.file(*f).is_workflow_input())
             .map(|f| workload::ns_file(tenant, f))
             .collect();
+        // Schedulers see the oracle's *estimate* of compute seconds,
+        // never the truth draw; 0.0 (ignored by every policy) when the
+        // uncertainty subsystem is off.
+        let est_compute_s = match self.oracle.as_ref() {
+            Some(o) => {
+                let key = crate::uncertain::type_key(
+                    &self.tenants[tenant].workflow_name,
+                    t.stage.0 as u32,
+                );
+                o.estimate_s(key, t.compute.as_secs_f64())
+            }
+            None => 0.0,
+        };
         let rt = ReadyTask {
             id: workload::ns_task(tenant, lid),
             cores: t.cores,
@@ -1043,6 +1155,7 @@ impl Executor {
             intermediate_inputs: intermediate,
             submitted_seq: self.submitted_seq,
             tenant,
+            est_compute_s,
         };
         // `tenant` and the id's namespace are two encodings of the same
         // fact; policy code reads the field, id-keyed maps the high bits.
@@ -1139,6 +1252,7 @@ impl Executor {
                     candidates: e.candidates,
                     cost: e.cost,
                     affinity: e.affinity,
+                    est: e.est,
                 });
             }
             acts
@@ -1197,6 +1311,12 @@ impl Executor {
         let best_prec = prec[b_tenant];
         let mut victim: Option<(u64, SimTime, TaskId)> = None;
         for (&t, r) in &self.running {
+            if workload::is_spec_task(t) {
+                // Backups resolve through the speculation path (win or
+                // kill), never through tenant preemption — evicting one
+                // would resubmit it as a second canonical copy.
+                continue;
+            }
             let vp = prec[workload::task_tenant(t)];
             if vp <= best_prec {
                 continue; // only strictly lower-precedence tenants yield
@@ -1270,6 +1390,21 @@ impl Executor {
             Some(&p) => p,
             None => return false, // already started (stale action)
         };
+        // A speculative copy must land on a *different* node than its
+        // straggling original — co-located backups hit the same slow
+        // hardware and waste cores. The scheduler is oblivious to the
+        // pairing, so the guard lives at start time: the action is
+        // dropped and the backup stays queued for a later iteration.
+        if self.cfg.uncertain.speculate {
+            let peer = if workload::is_spec_task(task) {
+                workload::canonical_task(task)
+            } else {
+                workload::spec_task(task)
+            };
+            if self.running.get(&peer).is_some_and(|r| r.node == node) {
+                return false;
+            }
+        }
         debug_assert!(!self.ready_dead[pos] && self.ready[pos].id == task);
         let (cores, mem) = (self.ready[pos].cores, self.ready[pos].mem);
         self.ready_dead[pos] = true;
@@ -1340,6 +1475,7 @@ impl Executor {
                 rate: 0.0,
                 base_offset: 0.0,
                 ckpt_wall: 0.0,
+                unc_tfac: 1.0,
             },
         );
         if n_flows == 0 {
@@ -1443,6 +1579,19 @@ impl Executor {
         let infl = self.cfg.fault.retry_factor(tries, salt);
         let tn = workload::task_tenant(task);
         let base = self.tenants[tn].engine.task(workload::local_task(task)).compute;
+        // Runtime uncertainty: the executor runs the *truth* — the
+        // nominal duration times a per-attempt lognormal draw, divided
+        // by the node's dynamic speed class. Both factors are exactly
+        // 1.0 when the subsystem is off (multiplying a finite positive
+        // f64 by 1.0 is bit-exact, and the fast branch below still
+        // fires), so disabled runs reproduce the pre-uncertainty bits.
+        let (tfac, uspeed) = if self.cfg.uncertain.enabled() {
+            let sigma = self.cfg.uncertain.noise_sigma;
+            let tf = crate::uncertain::truth_factor(sigma, self.cfg.seed, task.0, attempt);
+            (tf, self.unc_speed_of(node))
+        } else {
+            (1.0, 1.0)
+        };
         // Checkpoint/restart: resume from the durably committed compute
         // progress instead of t=0. `ckpt_committed` can only be
         // non-empty when checkpointing is on, so the `done == 0` branch
@@ -1450,11 +1599,11 @@ impl Executor {
         let done = self.ckpt_committed.get(&task).copied().unwrap_or(0.0);
         let dur = if done > 0.0 {
             let remaining = (base.as_secs_f64() - done).max(0.0);
-            SimTime::from_secs_f64(remaining / speed * infl)
-        } else if speed == 1.0 && infl == 1.0 {
+            SimTime::from_secs_f64(remaining * tfac / (speed * uspeed) * infl)
+        } else if speed == 1.0 && infl == 1.0 && tfac == 1.0 && uspeed == 1.0 {
             base
         } else {
-            SimTime::from_secs_f64(base.as_secs_f64() / speed * infl)
+            SimTime::from_secs_f64(base.as_secs_f64() * tfac / (speed * uspeed) * infl)
         };
         if self.cfg.resil.checkpoint_every_s > 0.0 {
             let remaining = (base.as_secs_f64() - done).max(0.0);
@@ -1467,6 +1616,22 @@ impl Executor {
             }
         }
         self.events.push(now + dur, Event::ComputeDone(task, attempt));
+        if self.cfg.uncertain.enabled() {
+            // Remember the truth factor so the re-estimator can observe
+            // it on success, and arm the straggler probe: fire when the
+            // attempt has run `spec_factor`× its *estimated* wall time.
+            self.running.get_mut(&task).expect("running").unc_tfac = tfac;
+            if self.cfg.uncertain.speculate && !workload::is_spec_task(task) {
+                let remaining = (base.as_secs_f64() - done).max(0.0);
+                let lid = workload::local_task(task);
+                let key = self.type_key_of(tn, lid);
+                let fac = self.oracle.as_ref().map(|o| o.estimate_factor(key)).unwrap_or(1.0);
+                let est_wall = remaining * fac / (speed * uspeed) * infl;
+                let wait = (est_wall * self.cfg.uncertain.spec_factor).max(1.0);
+                let at = now + SimTime::from_secs_f64(wait);
+                self.events.push(at, Event::StragglerCheck(task, attempt));
+            }
+        }
     }
 
     /// A checkpoint tick fired. If the attempt is still computing, cut
@@ -1864,6 +2029,208 @@ impl Executor {
         }
     }
 
+    // ---- runtime uncertainty ---------------------------------------
+    //
+    // Everything below is dead code on a default config: the single
+    // call site in the `ComputeDone` handler early-returns before any
+    // state is touched, the probe/degrade events are never scheduled,
+    // and no method draws randomness (the truth factor is a pure hash).
+
+    /// A compute attempt finished successfully: feed its truth factor
+    /// to the re-estimator and, if it is one half of an open
+    /// speculative race, resolve the race *before* stage-out — so the
+    /// loser never writes outputs into the DPS or the engine.
+    fn on_compute_success(&mut self, task: TaskId, now: SimTime) {
+        if !self.cfg.uncertain.enabled() {
+            return;
+        }
+        let tn = workload::task_tenant(task);
+        let lid = workload::local_task(task);
+        let key = self.type_key_of(tn, lid);
+        let tfac = self.running[&task].unc_tfac;
+        let (err, est) = self.oracle.as_mut().expect("oracle").observe(key, tfac);
+        self.tracer.emit(now, || TraceEvent::EstimateUpdate { task: task.0, err, est });
+        if self.cfg.uncertain.speculate {
+            self.resolve_speculation(task, now);
+        }
+    }
+
+    /// First successful finisher of a speculative pair wins; the peer
+    /// is killed and its partial work written off as speculation waste.
+    fn resolve_speculation(&mut self, task: TaskId, now: SimTime) {
+        let canon = workload::canonical_task(task);
+        if !self.spec_pending.remove(&canon) {
+            return; // no open race for this task
+        }
+        let peer = if task == canon { workload::spec_task(canon) } else { canon };
+        self.kill_spec_peer(peer, now);
+        if task != canon {
+            // The backup beat the straggler: it carries on under its
+            // spec id (completion maps back to the canonical engine
+            // task via `local_task`).
+            self.n_spec_wins += 1;
+            let node = self.running[&task].node;
+            self.tracer.emit(now, || TraceEvent::SpeculativeWin { task: canon.0, node: node.0 });
+        }
+    }
+
+    /// Kill the losing copy of a speculative race: cancel its flows,
+    /// release its resources, invalidate any partial outputs in the
+    /// DPS, and account the burned core-seconds as speculation waste.
+    /// The loser is *not* resubmitted — the winner covers the task. A
+    /// still-queued loser is tombstoned instead.
+    fn kill_spec_peer(&mut self, peer: TaskId, now: SimTime) {
+        if let Some(r) = self.running.remove(&peer) {
+            for f in self.flows_of_task(peer) {
+                let _ = self.disown_flow(f);
+                self.net.cancel(f);
+            }
+            self.ckpt_pending.remove(&peer);
+            self.ckpt_committed.remove(&peer);
+            self.retries.remove(&peer);
+            let wall = (now - r.started).as_secs_f64();
+            self.cpu_core_seconds += wall * r.cores as f64;
+            self.node_cpu_seconds[r.node.0] += wall * r.cores as f64;
+            self.spec_wasted_core_seconds += wall * r.cores as f64;
+            // A loser killed *by* a crash has no ledger to return — the
+            // node's capacity resets wholesale on recovery.
+            if self.cluster.node(r.node).alive {
+                self.cluster.release(r.node, r.cores, r.mem);
+            }
+            let tn = workload::task_tenant(peer);
+            self.tenants[tn].running_cores -= r.cores as u64;
+            // Defensive DPS invalidation, mirroring `preempt_task`:
+            // outputs register only at completion, so nothing should be
+            // here — but a loser must never leave replicas behind.
+            if self.scheduler.uses_local_data() {
+                let lid = workload::local_task(peer);
+                for &(f, size) in &self.tenants[tn].engine.task(lid).outputs {
+                    for node in self.dps.release_file(workload::ns_file(tn, f)) {
+                        self.node_replica_bytes[node.0] -= size.as_f64();
+                    }
+                }
+            }
+            self.tracer.emit(now, || TraceEvent::SpeculativeLoss {
+                task: peer.0,
+                node: r.node.0,
+                ran: true,
+            });
+        } else if let Some(&pos) = self.ready_pos.get(&peer) {
+            self.ready_dead[pos] = true;
+            self.n_ready_dead += 1;
+            self.ready_pos.remove(&peer);
+            self.tracer.emit(now, || TraceEvent::SpeculativeLoss {
+                task: peer.0,
+                node: 0,
+                ran: false,
+            });
+        }
+    }
+
+    /// The straggler probe fired for a computing attempt that has now
+    /// run `spec_factor`× its estimated wall time. Launch a backup copy
+    /// through the regular ready queue if the evidence supports it:
+    /// siblings of the same task type have finished (the estimate is
+    /// grounded in observations, not just the static bias) and another
+    /// alive worker exists to host it. Returns whether a scheduling
+    /// pass is warranted.
+    fn on_straggler_check(&mut self, task: TaskId, attempt: u64, now: SimTime) -> bool {
+        let valid = matches!(
+            self.running.get(&task),
+            Some(r) if r.attempt == attempt && r.phase == Phase::Compute
+        );
+        if !valid || self.spec_pending.contains(&task) {
+            return false;
+        }
+        let tn = workload::task_tenant(task);
+        let lid = workload::local_task(task);
+        let key = self.type_key_of(tn, lid);
+        let cur = self.running[&task].node;
+        if self.oracle.as_ref().expect("oracle").observations(key) == 0 {
+            // No finished sibling to compare against — the attempt may
+            // be long because the *type* is long. Re-probe later.
+            let base = self.tenants[tn].engine.task(lid).compute.as_secs_f64();
+            let wait = (base * self.cfg.uncertain.spec_factor).max(1.0);
+            let at = now + SimTime::from_secs_f64(wait);
+            self.events.push(at, Event::StragglerCheck(task, attempt));
+            return false;
+        }
+        if !self.cluster.alive_workers().any(|n| n != cur) {
+            return false; // nowhere else to run a backup
+        }
+        let spec = workload::spec_task(task);
+        let eng = &self.tenants[tn].engine;
+        let t = eng.task(lid);
+        let intermediate: Vec<FileId> = t
+            .inputs
+            .iter()
+            .copied()
+            .filter(|f| !eng.file(*f).is_workflow_input())
+            .map(|f| workload::ns_file(tn, f))
+            .collect();
+        let est_compute_s = self
+            .oracle
+            .as_ref()
+            .expect("oracle")
+            .estimate_s(key, t.compute.as_secs_f64());
+        let rt = ReadyTask {
+            id: spec,
+            cores: t.cores,
+            mem: t.mem,
+            rank: eng.rank_of(lid),
+            input_bytes: t.input_bytes(eng.files()),
+            intermediate_inputs: intermediate,
+            submitted_seq: self.submitted_seq,
+            tenant: tn,
+            est_compute_s,
+        };
+        self.submitted_seq += 1;
+        self.ready_pos.insert(spec, self.ready.len());
+        self.ready.push(rt);
+        self.ready_dead.push(false);
+        self.spec_pending.insert(task);
+        self.n_spec_launches += 1;
+        self.tracer.emit(now, || TraceEvent::SpeculativeLaunch { task: task.0, spec: spec.0 });
+        true
+    }
+
+    /// Effective uncertainty speed multiplier of a node: its static
+    /// class times the degradation factor while a window is open.
+    /// Exactly 1.0 on disabled runs (the class table is empty).
+    fn unc_speed_of(&self, node: NodeId) -> f64 {
+        if self.unc_class.is_empty() {
+            return 1.0;
+        }
+        let mut s = self.unc_class[node.0];
+        if self.unc_degraded[node.0] > 0 {
+            s *= self.cfg.uncertain.degrade_factor;
+        }
+        s
+    }
+
+    /// The oracle's task-type key for one engine-local task: workflow
+    /// name × stage index.
+    fn type_key_of(&self, tenant: usize, lid: TaskId) -> u64 {
+        let t = &self.tenants[tenant];
+        crate::uncertain::type_key(&t.workflow_name, t.engine.task(lid).stage.0 as u32)
+    }
+
+    /// A degradation window opens on a worker. Attempts already
+    /// computing keep their stretched-or-not duration — degradation
+    /// applies at compute start, like the static speed classes.
+    fn on_unc_degrade(&mut self, node: usize, now: SimTime) {
+        self.unc_degraded[node] += 1;
+        self.n_unc_degrades += 1;
+        let factor = self.cfg.uncertain.degrade_factor;
+        self.tracer.emit(now, || TraceEvent::NodeDegrade { node, factor, restore: false });
+    }
+
+    /// One degradation window on the worker ends.
+    fn on_unc_restore(&mut self, node: usize, now: SimTime) {
+        self.unc_degraded[node] -= 1;
+        self.tracer.emit(now, || TraceEvent::NodeDegrade { node, factor: 1.0, restore: true });
+    }
+
     // ---- fault injection & recovery --------------------------------
 
     /// Apply one injected fault. Returns true if a scheduling iteration
@@ -2106,6 +2473,16 @@ impl Executor {
     /// capacity ledger is not released — it resets wholesale when (if)
     /// the node recovers.
     fn kill_running(&mut self, task: TaskId, now: SimTime) {
+        // A crashed speculative backup with the race still open is
+        // simply discarded — the canonical copy keeps running and the
+        // pair dissolves. (A backup that already *won* fell through to
+        // the normal path below: it resubmits under the canonical id.)
+        if workload::is_spec_task(task)
+            && self.spec_pending.remove(&workload::canonical_task(task))
+        {
+            self.kill_spec_peer(task, now);
+            return;
+        }
         let r = self.running.remove(&task).expect("running victim");
         let flows = self.flows_of_task(task);
         for f in flows {
@@ -2126,7 +2503,10 @@ impl Executor {
         self.tracer.emit(now, || TraceEvent::TaskRerun { task: task.0, reason: "crash" });
         self.retries.remove(&task);
         self.tenants[workload::task_tenant(task)].running_cores -= r.cores as u64;
-        self.submit_global(vec![task]);
+        // `canonical_task` strips the speculation bit (identity on
+        // normal ids — a pure bit-and, so the disabled path is
+        // unchanged): a crashed winner resubmits as its canonical self.
+        self.submit_global(vec![workload::canonical_task(task)]);
     }
 
     /// A task's current stage-in/out lost flows to a crash elsewhere
@@ -2335,6 +2715,12 @@ impl Executor {
             checkpoints: self.n_checkpoints,
             checkpoint_bytes: self.checkpoint_bytes,
             salvaged_compute_hours: self.salvaged_core_seconds / 3600.0,
+            speculative_launches: self.n_spec_launches,
+            speculative_wins: self.n_spec_wins,
+            speculative_wasted_compute_hours: self.spec_wasted_core_seconds / 3600.0,
+            estimate_updates: self.oracle.as_ref().map(|o| o.updates()).unwrap_or(0),
+            estimate_mae: self.oracle.as_ref().map(|o| o.estimate_mae()).unwrap_or(0.0),
+            node_degrades: self.n_unc_degrades,
         }
     }
 }

@@ -15,6 +15,7 @@ pub mod table2;
 pub mod table3;
 pub mod tenants;
 pub mod topo;
+pub mod uncertain;
 
 use crate::dfs::DfsKind;
 use crate::exec::{run_with_backend, RunConfig};

@@ -1,0 +1,350 @@
+//! Runtime-uncertainty experiment (`wow uncertain`): the straggler-
+//! mitigation tentpole under truth-vs-estimate runtime noise and node
+//! heterogeneity (DESIGN.md §16).
+//!
+//! Sweeps noise level × heterogeneity × mitigation mode over the
+//! pattern workflows (plus Chip-Seq in full mode) on Ceph, 8 nodes,
+//! for all three strategies. The modes:
+//!
+//! - **none** — noise and heterogeneity on, mitigation off: every
+//!   consumer of runtimes sees the statically biased estimate and
+//!   stragglers run to completion (the control group);
+//! - **ewma** — the online re-estimator on: observed runtimes feed
+//!   per-task-type EWMA corrections back into scheduling and
+//!   admission mid-run;
+//! - **ewma+spec** — re-estimation plus speculative backups: attempts
+//!   running `spec_factor`× past their (re-)estimate get a backup copy
+//!   on a different node; first finisher wins, the loser is killed and
+//!   its compute written off as speculation waste.
+//!
+//! Each cell also carries two references: the *perfect* makespan of
+//! the same (workflow, strategy) with the uncertainty subsystem off
+//! entirely, and the *none*-mode makespan at the same (noise, hetero)
+//! point. The headline is `recovered`: the fraction of the
+//! none-vs-perfect makespan gap that the mitigation buys back, against
+//! the speculative compute it burns.
+//!
+//! Protocol as everywhere (§V-C): three seeds, median makespan run
+//! reported. `UNCERTAIN_sweep.json` carries the full grid for
+//! PR-over-PR tracking.
+
+use super::{median_run, ExpOpts};
+use crate::dfs::DfsKind;
+use crate::exec::RunConfig;
+use crate::metrics::RunMetrics;
+use crate::report::{pct, Table};
+use crate::scheduler::Strategy;
+use crate::uncertain::UncertaintyConfig;
+use crate::util::stats::rel_change_pct;
+use crate::workflow::spec::WorkflowSpec;
+
+/// Lognormal sigmas swept (≥ 0.5 per the acceptance bar: mitigation
+/// must pay off at 50%+ runtime noise).
+pub const NOISE_LEVELS: [f64; 2] = [0.5, 1.0];
+/// Heterogeneous-node fractions swept (0 = uniform cluster).
+pub const HETERO_FRACS: [f64; 2] = [0.0, 0.5];
+/// Static per-type estimate bias: estimates start 50% high/low by
+/// type, so the EWMA has a real error to learn away.
+pub const EST_BIAS: f64 = 0.5;
+/// EWMA smoothing for the re-estimator modes.
+pub const EWMA_ALPHA: f64 = 0.3;
+
+/// The mitigation mode of one sweep cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mitigation {
+    /// Uncertainty on, mitigation off.
+    Off,
+    /// Online EWMA re-estimation only.
+    Ewma,
+    /// Re-estimation + speculative straggler backups.
+    Spec,
+}
+
+impl Mitigation {
+    pub const ALL: [Mitigation; 3] = [Mitigation::Off, Mitigation::Ewma, Mitigation::Spec];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Mitigation::Off => "none",
+            Mitigation::Ewma => "ewma",
+            Mitigation::Spec => "ewma+spec",
+        }
+    }
+
+    /// The `UncertaintyConfig` this mode runs under at one
+    /// (noise, hetero) sweep point.
+    pub fn uncertain(self, noise: f64, hetero: f64) -> UncertaintyConfig {
+        UncertaintyConfig {
+            noise_sigma: noise,
+            est_bias: EST_BIAS,
+            hetero_frac: hetero,
+            ewma_alpha: if self == Mitigation::Off { 0.0 } else { EWMA_ALPHA },
+            speculate: self == Mitigation::Spec,
+            ..Default::default()
+        }
+    }
+}
+
+/// Workflows in this experiment.
+pub fn workflows(opts: &ExpOpts) -> Vec<WorkflowSpec> {
+    if opts.quick {
+        vec![crate::workflow::patterns::chain(), crate::workflow::patterns::group()]
+    } else {
+        let mut v = crate::workflow::patterns::all_patterns();
+        v.push(crate::workflow::realworld::chipseq());
+        v
+    }
+}
+
+fn noise_levels(opts: &ExpOpts) -> &'static [f64] {
+    let all: &'static [f64] = &NOISE_LEVELS;
+    if opts.quick {
+        &all[1..] // σ = 1.0 only: the headline high-noise point
+    } else {
+        all
+    }
+}
+
+fn hetero_fracs(opts: &ExpOpts) -> &'static [f64] {
+    let all: &'static [f64] = &HETERO_FRACS;
+    if opts.quick {
+        &all[1..] // heterogeneous only
+    } else {
+        all
+    }
+}
+
+/// The configuration of one sweep cell (Ceph, 8 nodes, flat fabric —
+/// uncertainty is the only perturbation in this experiment).
+pub fn cell_cfg(strategy: Strategy, noise: f64, hetero: f64, mode: Mitigation) -> RunConfig {
+    RunConfig {
+        n_nodes: 8,
+        link_gbit: 1.0,
+        dfs: DfsKind::Ceph,
+        strategy,
+        uncertain: mode.uncertain(noise, hetero),
+        ..Default::default()
+    }
+}
+
+/// The perfect-information reference: the same (workflow, strategy)
+/// with the uncertainty subsystem off entirely.
+pub fn perfect_cfg(strategy: Strategy) -> RunConfig {
+    RunConfig { n_nodes: 8, link_gbit: 1.0, dfs: DfsKind::Ceph, strategy, ..Default::default() }
+}
+
+/// One sweep cell.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub workflow: String,
+    pub strategy: Strategy,
+    pub noise: f64,
+    pub hetero: f64,
+    pub mode: Mitigation,
+    pub metrics: RunMetrics,
+    /// Uncertainty-off makespan of the same (workflow, strategy), min.
+    pub perfect_makespan_min: f64,
+    /// No-mitigation makespan at the same (noise, hetero) point, min.
+    pub none_makespan_min: f64,
+}
+
+impl Row {
+    /// Makespan degradation vs the perfect-information run, percent.
+    pub fn degradation_pct(&self) -> f64 {
+        rel_change_pct(self.perfect_makespan_min, self.metrics.makespan_min())
+    }
+
+    /// Makespan change vs no-mitigation at the same sweep point, in
+    /// percent (negative = the mitigation paid off).
+    pub fn vs_none_pct(&self) -> f64 {
+        rel_change_pct(self.none_makespan_min, self.metrics.makespan_min())
+    }
+
+    /// Fraction of the none-vs-perfect makespan gap recovered by the
+    /// mitigation, in percent (0 for the none rows themselves; can go
+    /// negative if a mitigation hurts, or exceed 100 on a lucky seed).
+    pub fn recovered_pct(&self) -> f64 {
+        let gap = self.none_makespan_min - self.perfect_makespan_min;
+        if gap.abs() < 1e-9 {
+            return 0.0;
+        }
+        (self.none_makespan_min - self.metrics.makespan_min()) / gap * 100.0
+    }
+}
+
+/// Run the full uncertainty grid.
+pub fn collect(opts: &ExpOpts) -> Vec<Row> {
+    let mut rows = Vec::new();
+    for spec in workflows(opts) {
+        for strategy in [Strategy::Orig, Strategy::Cws, Strategy::Wow] {
+            eprintln!("uncertain: {} / {} ...", spec.name, strategy.label());
+            let perfect = median_run(&spec, &perfect_cfg(strategy), opts).makespan_min();
+            for &noise in noise_levels(opts) {
+                for &hetero in hetero_fracs(opts) {
+                    let off = cell_cfg(strategy, noise, hetero, Mitigation::Off);
+                    let none = median_run(&spec, &off, opts);
+                    let none_min = none.makespan_min();
+                    rows.push(Row {
+                        workflow: spec.name.clone(),
+                        strategy,
+                        noise,
+                        hetero,
+                        mode: Mitigation::Off,
+                        metrics: none,
+                        perfect_makespan_min: perfect,
+                        none_makespan_min: none_min,
+                    });
+                    for mode in [Mitigation::Ewma, Mitigation::Spec] {
+                        let m = median_run(&spec, &cell_cfg(strategy, noise, hetero, mode), opts);
+                        rows.push(Row {
+                            workflow: spec.name.clone(),
+                            strategy,
+                            noise,
+                            hetero,
+                            mode,
+                            metrics: m,
+                            perfect_makespan_min: perfect,
+                            none_makespan_min: none_min,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    rows
+}
+
+/// Render the uncertainty table.
+pub fn render(rows: &[Row]) -> Table {
+    let mut t = Table::new(
+        "Runtime uncertainty — EWMA re-estimation + speculative backups under runtime \
+         noise and node heterogeneity (Ceph, 8 nodes, 1 Gbit)",
+        &[
+            "Workflow",
+            "Strategy",
+            "Noise",
+            "Hetero",
+            "Mode",
+            "Makespan [min]",
+            "Degradation",
+            "vs none",
+            "Recovered",
+            "Spec L/W",
+            "Spec waste [h]",
+            "Est MAE",
+            "Est updates",
+        ],
+    );
+    for r in rows {
+        let m = &r.metrics;
+        t.row(vec![
+            r.workflow.clone(),
+            r.strategy.label().into(),
+            format!("{:.1}", r.noise),
+            format!("{:.1}", r.hetero),
+            r.mode.label().into(),
+            format!("{:.1}", m.makespan_min()),
+            pct(r.degradation_pct()),
+            pct(r.vs_none_pct()),
+            pct(r.recovered_pct()),
+            format!("{}/{}", m.speculative_launches, m.speculative_wins),
+            format!("{:.2}", m.speculative_wasted_compute_hours),
+            format!("{:.3}", m.estimate_mae),
+            m.estimate_updates.to_string(),
+        ]);
+    }
+    t
+}
+
+/// JSON artifact (`UNCERTAIN_sweep.json`) for PR-over-PR tracking, in
+/// the shared [`crate::util::json::RowsDoc`] shape.
+pub fn to_json(rows: &[Row]) -> String {
+    use crate::util::json::{Jv, RowsDoc};
+    let mut doc = RowsDoc::new("experiment", "uncertain");
+    for r in rows {
+        let m = &r.metrics;
+        doc.row(&[
+            ("workflow", Jv::S(r.workflow.clone())),
+            ("strategy", Jv::S(r.strategy.label().into())),
+            ("noise", Jv::Fx(r.noise, 3)),
+            ("hetero", Jv::Fx(r.hetero, 3)),
+            ("mode", Jv::S(r.mode.label().into())),
+            ("seed", Jv::U(m.seed)),
+            ("makespan_min", Jv::Fx(m.makespan_min(), 3)),
+            ("perfect_makespan_min", Jv::Fx(r.perfect_makespan_min, 3)),
+            ("none_makespan_min", Jv::Fx(r.none_makespan_min, 3)),
+            ("degradation_pct", Jv::Fx(r.degradation_pct(), 3)),
+            ("vs_none_pct", Jv::Fx(r.vs_none_pct(), 3)),
+            ("recovered_pct", Jv::Fx(r.recovered_pct(), 3)),
+            ("speculative_launches", Jv::U(m.speculative_launches)),
+            ("speculative_wins", Jv::U(m.speculative_wins)),
+            ("speculative_wasted_compute_hours", Jv::Fx(m.speculative_wasted_compute_hours, 6)),
+            ("estimate_updates", Jv::U(m.estimate_updates)),
+            ("estimate_mae", Jv::Fx(m.estimate_mae, 6)),
+            ("node_degrades", Jv::U(m.node_degrades)),
+            ("tasks_rerun", Jv::U(m.tasks_rerun)),
+        ]);
+    }
+    doc.render()
+}
+
+pub fn run(opts: &ExpOpts) -> (Vec<Row>, String) {
+    let rows = collect(opts);
+    let s = render(&rows).render();
+    (rows, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::run as run_sim;
+    use crate::workflow::engine::WorkflowEngine;
+    use crate::workflow::patterns;
+
+    #[test]
+    fn off_mode_still_enables_uncertainty_but_no_mitigation() {
+        let c = Mitigation::Off.uncertain(1.0, 0.5);
+        assert!(c.enabled(), "noise is on in every sweep cell");
+        assert_eq!(c.ewma_alpha, 0.0);
+        assert!(!c.speculate);
+        let s = Mitigation::Spec.uncertain(1.0, 0.5);
+        assert!(s.speculate && s.ewma_alpha > 0.0);
+    }
+
+    #[test]
+    fn all_modes_complete_and_stay_deterministic() {
+        let spec = patterns::group();
+        let expect = WorkflowEngine::dry_run_counts(&spec, 0).physical_tasks;
+        for mode in Mitigation::ALL {
+            let cfg = cell_cfg(Strategy::Wow, 1.0, 0.5, mode);
+            let m = run_sim(&spec, &cfg);
+            assert_eq!(m.tasks_total, expect, "{mode:?} must complete every task");
+            let b = run_sim(&spec, &cfg);
+            assert_eq!(m, b, "{mode:?} runs stay deterministic");
+        }
+    }
+
+    #[test]
+    fn json_artifact_is_valid() {
+        let opts = ExpOpts { seeds: vec![0], quick: true, ..Default::default() };
+        let metrics = median_run(
+            &patterns::chain(),
+            &cell_cfg(Strategy::Wow, 1.0, 0.5, Mitigation::Spec),
+            &opts,
+        );
+        let rows = vec![Row {
+            workflow: "chain".into(),
+            strategy: Strategy::Wow,
+            noise: 1.0,
+            hetero: 0.5,
+            mode: Mitigation::Spec,
+            metrics,
+            perfect_makespan_min: 10.0,
+            none_makespan_min: 14.0,
+        }];
+        let s = to_json(&rows);
+        assert!(crate::util::json::validate(&s).is_ok(), "{s}");
+        assert!(s.contains("\"mode\": \"ewma+spec\""));
+        assert!(render(&rows).render().contains("Recovered"));
+    }
+}

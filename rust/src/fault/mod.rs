@@ -193,6 +193,17 @@ pub fn salted_unit(salt: u64) -> f64 {
     (z >> 11) as f64 / (1u64 << 53) as f64
 }
 
+/// Pure standard-normal deviate: Box–Muller over two decorrelated
+/// [`salted_unit`] draws. Same contract as `salted_unit` — a hash, not
+/// a stream — so callers (the uncertainty subsystem's per-attempt
+/// runtime noise) stay deterministic on every core and thread count.
+pub fn salted_gauss(salt: u64) -> f64 {
+    let u1 = salted_unit(salt);
+    let u2 = salted_unit(salt ^ 0x6A09_E667_F3BC_C909);
+    // 1 - u1 is in (0, 1], so the log is finite.
+    (-2.0 * (1.0 - u1).ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+}
+
 /// Proactive-resilience knobs (hedged replicas, checkpoint/restart,
 /// availability-aware placement). All off by default; a disabled config
 /// takes exactly the pre-resilience code path — zero extra RNG draws,

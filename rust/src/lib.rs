@@ -38,6 +38,7 @@ pub mod scheduler;
 pub mod serve;
 pub mod sim;
 pub mod trace;
+pub mod uncertain;
 pub mod util;
 pub mod workflow;
 pub mod workload;

@@ -14,6 +14,8 @@
 //!                           # are bit-identical at any thread count
 //!         [--admission all|queue:A:D[:fifo|sjf]|shed:W] [--preempt]
 //!         [--slo S] [--dedup] [--json]
+//!         [--noise SIGMA] [--est-bias B] [--hetero F] [--ewma A]
+//!         [--speculate] [--degrade-events N]
 //!         [--trace out.json] [--trace-format chrome|jsonl] [--sample-every S]
 //!         [--profile]
 //! wow table1 | table2 | table3 | fig4 | fig5 | gini | all
@@ -23,6 +25,7 @@
 //! wow tenants           # multi-tenant sweep (arrivals × mixes × strategies)
 //! wow serve             # open-serving knee sweep (rates × admission policies)
 //! wow resil             # resilience sweep (rack outages × hedge/ckpt modes)
+//! wow uncertain         # runtime-uncertainty sweep (noise × mitigation modes)
 //! wow topo              # topology sweep (oversubscription × strategies)
 //! wow ablate            # c_node / c_task sweep on the pattern set
 //! ```
@@ -66,8 +69,18 @@ impl Args {
                 .with_context(|| format!("expected --flag, got '{k}'"))?
                 .to_string();
             // Boolean flags.
-            if ["quick", "xla", "gc", "nfs-outage", "preempt", "dedup", "json", "profile"]
-                .contains(&key.as_str())
+            if [
+                "quick",
+                "xla",
+                "gc",
+                "nfs-outage",
+                "preempt",
+                "dedup",
+                "json",
+                "profile",
+                "speculate",
+            ]
+            .contains(&key.as_str())
             {
                 flags.insert(key, "true".into());
                 continue;
@@ -191,6 +204,14 @@ fn real_main() -> Result<()> {
             println!("{out}");
             Ok(())
         }
+        "uncertain" => {
+            let (rows, out) = exp::uncertain::run(&args.opts()?);
+            std::fs::write("UNCERTAIN_sweep.json", exp::uncertain::to_json(&rows))
+                .context("writing UNCERTAIN_sweep.json")?;
+            eprintln!("wrote UNCERTAIN_sweep.json ({} rows)", rows.len());
+            println!("{out}");
+            Ok(())
+        }
         "topo" => {
             let (_, out) = exp::topo::run(&args.opts()?);
             println!("{out}");
@@ -242,6 +263,10 @@ fn real_main() -> Result<()> {
                  saturation knee, writes SERVE_knee.json (DESIGN.md \u{a7}12)\n  \
                  resil   resilience sweep: rack outages x hedge/checkpoint modes x strategies,\n          \
                  writes RESIL_sweep.json (DESIGN.md \u{a7}14)\n  \
+                 uncertain runtime-uncertainty sweep: noise x heterogeneity x mitigation\n          \
+                 (none | ewma | ewma+speculation) x strategies, writes\n          \
+                 UNCERTAIN_sweep.json (DESIGN.md \u{a7}16); run knobs: [--noise SIGMA]\n          \
+                 [--est-bias B] [--hetero F] [--ewma A] [--speculate] [--degrade-events N]\n  \
                  topo    topology sweep: rack oversubscription x strategies (DESIGN.md \u{a7}11)\n  \
                  ablate  c_node/c_task sweep over the pattern workflows"
             );
@@ -304,6 +329,15 @@ fn cmd_run(args: &Args) -> Result<()> {
             slo_s: args.get("slo", 0.0f64)?,
             horizon_s: 0.0,
             dedup: args.has("dedup"),
+        },
+        uncertain: wow::uncertain::UncertaintyConfig {
+            noise_sigma: args.get("noise", 0.0f64)?,
+            est_bias: args.get("est-bias", 0.0f64)?,
+            hetero_frac: args.get("hetero", 0.0f64)?,
+            degrade_events: args.get("degrade-events", 0usize)?,
+            ewma_alpha: args.get("ewma", 0.0f64)?,
+            speculate: args.has("speculate"),
+            ..Default::default()
         },
     };
     // A correlated fault domain needs a topology that has that domain —
@@ -474,6 +508,21 @@ fn cmd_run(args: &Args) -> Result<()> {
         t.row(vec!["checkpoints".into(), m.checkpoints.to_string()]);
         t.row(vec!["checkpoint traffic".into(), format!("{:.2} GB", m.checkpoint_bytes.as_gb())]);
         t.row(vec!["salvaged compute".into(), format!("{:.2} h", m.salvaged_compute_hours)]);
+    }
+    if cfg.uncertain.enabled() {
+        t.row(vec![
+            "spec launches/wins".into(),
+            format!("{} / {}", m.speculative_launches, m.speculative_wins),
+        ]);
+        t.row(vec![
+            "spec wasted compute".into(),
+            format!("{:.2} h", m.speculative_wasted_compute_hours),
+        ]);
+        t.row(vec![
+            "estimate updates/MAE".into(),
+            format!("{} / {:.3}", m.estimate_updates, m.estimate_mae),
+        ]);
+        t.row(vec!["node degrades".into(), m.node_degrades.to_string()]);
     }
     if cfg.serve.enabled() {
         t.row(vec!["admission".into(), cfg.serve.admission.label()]);

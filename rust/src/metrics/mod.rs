@@ -146,6 +146,21 @@ pub struct RunMetrics {
     /// Share of tenants that ran and met the latency SLO, in percent
     /// (0 when no SLO is configured).
     pub slo_attainment_pct: f64,
+    // --- runtime uncertainty (all zero when UncertaintyConfig is off) ---
+    /// Speculative backup copies launched for detected stragglers.
+    pub speculative_launches: u64,
+    /// Backup copies that finished before their canonical original.
+    pub speculative_wins: u64,
+    /// Core-hours burned by speculative losers (either copy that was
+    /// killed after the race resolved) — the price of the mitigation.
+    pub speculative_wasted_compute_hours: f64,
+    /// Runtime observations fed back into the `RuntimeOracle`.
+    pub estimate_updates: u64,
+    /// Mean absolute relative error of the runtime estimate at
+    /// observation time (how wrong the scheduler's beliefs were).
+    pub estimate_mae: f64,
+    /// Mid-run node performance-degradation onsets delivered.
+    pub node_degrades: u64,
 }
 
 impl RunMetrics {
@@ -259,6 +274,12 @@ impl RunMetrics {
             latency_p99_s,
             throughput_per_min,
             slo_attainment_pct,
+            speculative_launches,
+            speculative_wins,
+            speculative_wasted_compute_hours,
+            estimate_updates,
+            estimate_mae,
+            node_degrades,
         } = self;
         let tenant_rows: Vec<Jv> = tenants
             .iter()
@@ -327,6 +348,15 @@ impl RunMetrics {
             ("latency_p99_s", Jv::F(*latency_p99_s)),
             ("throughput_per_min", Jv::F(*throughput_per_min)),
             ("slo_attainment_pct", Jv::F(*slo_attainment_pct)),
+            ("speculative_launches", Jv::U(*speculative_launches)),
+            ("speculative_wins", Jv::U(*speculative_wins)),
+            (
+                "speculative_wasted_compute_hours",
+                Jv::F(*speculative_wasted_compute_hours),
+            ),
+            ("estimate_updates", Jv::U(*estimate_updates)),
+            ("estimate_mae", Jv::F(*estimate_mae)),
+            ("node_degrades", Jv::U(*node_degrades)),
             ("fingerprint", Jv::S(format!("{:016x}", self.fingerprint()))),
         ])
     }
@@ -381,6 +411,12 @@ impl RunMetrics {
             latency_p99_s,
             throughput_per_min,
             slo_attainment_pct,
+            speculative_launches,
+            speculative_wins,
+            speculative_wasted_compute_hours,
+            estimate_updates,
+            estimate_mae,
+            node_degrades,
         } = self;
         let mut h = Fnv1a::new();
         h.bytes(workflow.as_bytes());
@@ -453,6 +489,12 @@ impl RunMetrics {
         h.u64(latency_p99_s.to_bits());
         h.u64(throughput_per_min.to_bits());
         h.u64(slo_attainment_pct.to_bits());
+        h.u64(*speculative_launches);
+        h.u64(*speculative_wins);
+        h.u64(speculative_wasted_compute_hours.to_bits());
+        h.u64(*estimate_updates);
+        h.u64(estimate_mae.to_bits());
+        h.u64(*node_degrades);
         h.finish()
     }
 }

@@ -251,8 +251,21 @@ fn run_replay(job: &mut ReplayJob, steps: &[TimeStep]) {
     }
 }
 
+/// Reusable per-worker buffers for [`fill_rates`]: one instance per
+/// pool worker (or one for the whole sequential loop) hoists the
+/// capacity/users/frozen allocations out of the per-component loop.
+/// Every element is fully rewritten at the top of each call, so reuse
+/// is bitwise invisible to the computed rates.
+#[derive(Debug, Default)]
+pub struct FillScratch {
+    cap: Vec<f64>,
+    users: Vec<u32>,
+    frozen: Vec<bool>,
+}
+
 /// Progressive filling restricted to one component, as a pure function
-/// of the component description and the shared topology columns. The
+/// of the component description and the shared topology columns (the
+/// scratch is an allocation cache, overwritten before use). The
 /// iteration orders (ascending resource ids for the bottleneck scan,
 /// arrival-ordered slots for the freeze pass, the member's own resource
 /// order for the subtraction) and every float operation match
@@ -263,21 +276,28 @@ fn fill_rates(
     capacities: &[f64],
     f_res: &[(u32, u32)],
     res_arena: &[u32],
+    scratch: &mut FillScratch,
 ) -> Vec<f64> {
     fn local(res: &[usize], r: u32) -> usize {
         res.binary_search(&(r as usize)).expect("resource in component")
     }
     let n = job.flows.len();
     let mut rates = vec![0.0f64; n];
-    let mut cap: Vec<f64> = job.res.iter().map(|&r| capacities[r]).collect();
-    let mut users: Vec<u32> = vec![0; job.res.len()];
+    scratch.cap.clear();
+    scratch.cap.extend(job.res.iter().map(|&r| capacities[r]));
+    scratch.users.clear();
+    scratch.users.resize(job.res.len(), 0);
+    scratch.frozen.clear();
+    scratch.frozen.resize(n, false);
+    let cap = &mut scratch.cap;
+    let users = &mut scratch.users;
+    let frozen = &mut scratch.frozen;
     for &slot in &job.flows {
         let (s, l) = f_res[slot];
         for k in s as usize..(s + l) as usize {
             users[local(&job.res, res_arena[k])] += 1;
         }
     }
-    let mut frozen = vec![false; n];
     let mut unfrozen = n;
     while unfrozen > 0 {
         // Bottleneck: min share = cap / users; ties to the lowest
@@ -315,6 +335,45 @@ fn fill_rates(
         }
     }
     rates
+}
+
+/// Bench-only probe (`bench_hotpath`): run the pure max-min filling
+/// kernel over a synthetic batch of components, either reallocating the
+/// working buffers per job (`reuse = false`, the pre-scratch allocation
+/// pattern) or reusing one [`FillScratch`] across the batch
+/// (`reuse = true`, the production path). Returns a rate checksum so
+/// the work cannot be optimized away. Not part of the public API.
+#[doc(hidden)]
+pub fn bench_fill_rates(n_jobs: usize, flows_per_job: usize, reuse: bool) -> f64 {
+    let mut capacities: Vec<f64> = Vec::new();
+    let mut f_res: Vec<(u32, u32)> = Vec::new();
+    let mut res_arena: Vec<u32> = Vec::new();
+    let mut jobs: Vec<CompJob> = Vec::new();
+    for _ in 0..n_jobs {
+        let r0 = capacities.len();
+        capacities.push(125_000_000.0);
+        capacities.push(125_000_000.0);
+        let mut job = CompJob { res: vec![r0, r0 + 1], ..Default::default() };
+        for _ in 0..flows_per_job {
+            job.flows.push(f_res.len());
+            f_res.push((res_arena.len() as u32, 2));
+            res_arena.push(r0 as u32);
+            res_arena.push(r0 as u32 + 1);
+        }
+        jobs.push(job);
+    }
+    let mut sum = 0.0;
+    let mut shared = FillScratch::default();
+    for job in &jobs {
+        let rates = if reuse {
+            fill_rates(job, &capacities, &f_res, &res_arena, &mut shared)
+        } else {
+            let mut fresh = FillScratch::default();
+            fill_rates(job, &capacities, &f_res, &res_arena, &mut fresh)
+        };
+        sum += rates.iter().sum::<f64>();
+    }
+    sum
 }
 
 /// The shared bandwidth substrate.
@@ -1086,11 +1145,17 @@ impl FlowNet {
         let res_arena: &[u32] = &self.res_arena;
         let rates: Vec<Vec<f64>> = if run_par {
             let refs: Vec<&CompJob> = jobs.iter().collect();
-            pool::par_map(self.threads, refs, |_, job| {
-                fill_rates(job, capacities, f_res, res_arena)
+            // One FillScratch per pool worker: the per-job cap/users/
+            // frozen buffers are reused across every job a worker picks
+            // up instead of being reallocated per component.
+            pool::par_map_scratch(self.threads, refs, FillScratch::default, |_, job, scratch| {
+                fill_rates(job, capacities, f_res, res_arena, scratch)
             })
         } else {
-            jobs.iter().map(|job| fill_rates(job, capacities, f_res, res_arena)).collect()
+            let mut scratch = FillScratch::default();
+            jobs.iter()
+                .map(|job| fill_rates(job, capacities, f_res, res_arena, &mut scratch))
+                .collect()
         };
         // Phase 4: apply + re-anchor + regroup + retire, in job order.
         let now = self.now;

@@ -25,13 +25,17 @@ impl Scheduler for CwsScheduler {
         let mut actions = Vec::new();
         // Tenant precedence first (a no-op on single-tenant runs), then
         // the CWS priority: rank first, input size second (descending),
-        // FIFO as the final deterministic tie-break.
+        // then the oracle's runtime estimate (longest-estimated first —
+        // all zeros with the uncertainty subsystem off, so the term is
+        // inert on exact-runtime runs), FIFO as the final deterministic
+        // tie-break.
         let mut queue: Vec<&super::ReadyTask> = view.ready.iter().collect();
         queue.sort_by(|a, b| {
             view.prec(a)
                 .cmp(&view.prec(b))
                 .then(b.rank.cmp(&a.rank))
                 .then(b.input_bytes.cmp(&a.input_bytes))
+                .then(b.est_compute_s.total_cmp(&a.est_compute_s))
                 .then(a.submitted_seq.cmp(&b.submitted_seq))
         });
 
@@ -87,7 +91,25 @@ mod tests {
             intermediate_inputs: vec![],
             submitted_seq: seq,
             tenant: 0,
+            est_compute_s: 0.0,
         }
+    }
+
+    #[test]
+    fn estimate_breaks_rank_and_size_ties() {
+        let (_n, c) = fixture(1); // 16 cores, 8 per task → 2 fit
+        let mut short = rt(0, 1, 1.0);
+        short.est_compute_s = 10.0;
+        let mut long = rt(1, 1, 1.0);
+        long.est_compute_s = 500.0;
+        let ready = vec![short, long];
+        let view = SchedView { now: SimTime::ZERO, cluster: &c, ready: &ready, tenant_prec: &[] };
+        let actions = CwsScheduler::new().iterate(&view, &mut Dps::new(0));
+        let first = match actions[0] {
+            Action::Start { task, .. } => task.0,
+            _ => panic!(),
+        };
+        assert_eq!(first, 1, "longest-estimated task scheduled first within a tie");
     }
 
     #[test]

@@ -37,6 +37,11 @@ pub struct ReadyTask {
     /// Tenant index of the workflow this task belongs to (0 on
     /// single-tenant runs).
     pub tenant: usize,
+    /// Oracle-estimated compute seconds (the `RuntimeOracle` seam):
+    /// what the scheduler *believes* this task costs, never the truth
+    /// the executor runs. Exactly 0.0 when the uncertainty subsystem is
+    /// off, so every strategy's ordering is unchanged on disabled runs.
+    pub est_compute_s: f64,
 }
 
 impl ReadyTask {
@@ -172,6 +177,10 @@ pub struct DecisionExplain {
     pub cost: f64,
     /// Replica-affinity tiebreak term where one applies (step 3).
     pub affinity: f64,
+    /// The estimated compute seconds the decision was priced with
+    /// (0.0 when the uncertainty subsystem is off) — makes the trace
+    /// auditable as a pure function of estimates, never truth.
+    pub est: f64,
 }
 
 /// A scheduling strategy.
@@ -206,6 +215,12 @@ pub trait Scheduler {
                 Action::Start { task, node } => (task, node),
                 Action::StartCop { task, dst } => (task, dst),
             };
+            let est = view
+                .ready
+                .iter()
+                .find(|r| r.id == task)
+                .map(|r| r.est_compute_s)
+                .unwrap_or(0.0);
             explain.push(DecisionExplain {
                 task,
                 node,
@@ -213,6 +228,7 @@ pub trait Scheduler {
                 candidates: 0,
                 cost: 0.0,
                 affinity: 0.0,
+                est,
             });
         }
         actions
@@ -341,6 +357,7 @@ mod tests {
             intermediate_inputs: vec![],
             submitted_seq: seq,
             tenant: 0,
+            est_compute_s: 0.0,
         }
     }
 

@@ -27,7 +27,9 @@ impl Scheduler for OrigScheduler {
     fn iterate(&mut self, view: &SchedView<'_>, _dps: &mut Dps) -> Vec<Action> {
         let mut actions = Vec::new();
         // Tenant precedence first (a no-op on single-tenant runs), then
-        // FIFO order = submission order.
+        // FIFO order = submission order. Orig deliberately ignores
+        // `est_compute_s`: Nextflow's stock scheduler is runtime-blind,
+        // so it is trivially estimate-pure under the uncertainty model.
         let mut queue: Vec<&super::ReadyTask> = view.ready.iter().collect();
         queue.sort_by_key(|t| (view.prec(t), t.submitted_seq));
 
@@ -90,6 +92,7 @@ mod tests {
             intermediate_inputs: vec![],
             submitted_seq: seq,
             tenant: 0,
+            est_compute_s: 0.0,
         }
     }
 

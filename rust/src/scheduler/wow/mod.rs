@@ -161,7 +161,17 @@ impl WowScheduler {
                 // Tenant-precedence-boosted priority: on multi-tenant
                 // runs the ILP serves preferred tenants first; on
                 // single-tenant runs this is exactly `t.priority()`.
-                priority: view.eff_priority(t),
+                // Under the uncertainty model the oracle's runtime
+                // estimate adds a bounded longest-estimated-first nudge
+                // (never the truth — the RuntimeOracle seam). The guard
+                // keeps the disabled path float-for-float identical.
+                priority: {
+                    let mut p = view.eff_priority(t);
+                    if t.est_compute_s > 0.0 {
+                        p += 1e-3 * t.est_compute_s / (t.est_compute_s + 1.0);
+                    }
+                    p
+                },
                 cores: t.cores,
                 mem: t.mem,
                 candidate_nodes: (0..workers.len())
@@ -190,6 +200,7 @@ impl WowScheduler {
                         candidates: ilp_tasks[ti].candidate_nodes.len() as u64,
                         cost: ilp_tasks[ti].priority,
                         affinity: 0.0,
+                        est: view.ready[ti].est_compute_s,
                     });
                 }
             }
@@ -266,6 +277,7 @@ impl WowScheduler {
                             candidates: n_cand.unwrap_or(0) as u64,
                             cost: costs.missing(ti, ni),
                             affinity: 0.0,
+                            est: t.est_compute_s,
                         });
                     }
                 }
@@ -348,6 +360,7 @@ impl WowScheduler {
                         candidates: n_planned,
                         cost: price,
                         affinity,
+                        est: t.est_compute_s,
                     });
                 }
             }
@@ -382,6 +395,7 @@ mod tests {
             intermediate_inputs: inputs,
             submitted_seq: seq,
             tenant: 0,
+            est_compute_s: 0.0,
         }
     }
 

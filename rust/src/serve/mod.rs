@@ -197,6 +197,17 @@ pub fn open_stream(
 /// distribution means in place of draws, so it ranks workflows by true
 /// demand even though any individual instance jitters around it.
 pub fn estimate_core_s(spec: &WorkflowSpec) -> f64 {
+    estimate_stage_core_s(spec).iter().sum()
+}
+
+/// Per-stage breakdown of [`estimate_core_s`] (same arithmetic, one
+/// entry per stage, summing to the total bit-for-bit). This is the
+/// runtime-uncertainty seam for admission control: the executor
+/// re-weights each stage by the `RuntimeOracle`'s current estimate
+/// factor for that task type, so admission prices what the scheduler
+/// *believes* — never the truth — and corrected beliefs reprice
+/// later arrivals mid-run.
+pub fn estimate_stage_core_s(spec: &WorkflowSpec) -> Vec<f64> {
     let mean_input_gb = if spec.input_files_gb.is_empty() {
         0.0
     } else {
@@ -207,7 +218,7 @@ pub fn estimate_core_s(spec: &WorkflowSpec) -> f64 {
     let mut counts: Vec<f64> = Vec::with_capacity(spec.stages.len());
     let mut out_file_gb: Vec<f64> = Vec::with_capacity(spec.stages.len());
     let mut out_total_gb: Vec<f64> = Vec::with_capacity(spec.stages.len());
-    let mut total_core_s = 0.0;
+    let mut stage_core_s: Vec<f64> = Vec::with_capacity(spec.stages.len());
     for st in &spec.stages {
         let (n, in_gb) = match &st.rule {
             Rule::Source { count, inputs_per_task } => {
@@ -236,12 +247,12 @@ pub fn estimate_core_s(spec: &WorkflowSpec) -> f64 {
             OutputSize::FixedGb(gb) => *gb,
         };
         let compute_s = st.compute.base_s + st.compute.per_input_gb_s * in_gb;
-        total_core_s += n * compute_s.max(0.05) * st.cores as f64;
+        stage_core_s.push(n * compute_s.max(0.05) * st.cores as f64);
         counts.push(n);
         out_file_gb.push(per_file);
         out_total_gb.push(per_file * st.out_count as f64);
     }
-    total_core_s
+    stage_core_s
 }
 
 /// Content key of a workflow-input (reference) file: two tenants running

@@ -71,8 +71,64 @@ where
                         if i >= n {
                             break;
                         }
-                        let item = slots[i].lock().unwrap().take().expect("par_map item taken twice");
+                        let item =
+                            slots[i].lock().unwrap().take().expect("par_map item taken twice");
                         got.push((i, f(i, item)));
+                    }
+                    got
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("par_map worker panicked")).collect()
+    });
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    for batch in per_worker {
+        for (i, r) in batch {
+            debug_assert!(out[i].is_none(), "par_map produced index {i} twice");
+            out[i] = Some(r);
+        }
+    }
+    out.into_iter().map(|r| r.expect("par_map lost an item")).collect()
+}
+
+/// [`par_map`] with one reusable scratch buffer per worker: `mk` builds
+/// a fresh scratch for each worker thread (and one for the sequential
+/// path), and `f` receives it mutably alongside each item. The hot
+/// kernels use this to hoist per-item allocations out of the item loop
+/// (e.g. the max-min fill's capacity/users/frozen buffers). Same
+/// determinism contract as [`par_map`]: results are positional and `f`
+/// must be a pure function of `(index, item)` — the scratch is an
+/// allocation cache, and `f` must fully overwrite whatever state it
+/// reads from it.
+pub fn par_map_scratch<T, R, S, M, F>(threads: usize, items: Vec<T>, mk: M, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    M: Fn() -> S + Sync,
+    F: Fn(usize, T, &mut S) -> R + Sync,
+{
+    let n = items.len();
+    if threads <= 1 || n <= 1 {
+        let mut scratch = mk();
+        return items.into_iter().enumerate().map(|(i, x)| f(i, x, &mut scratch)).collect();
+    }
+    let slots: Vec<Mutex<Option<T>>> = items.into_iter().map(|x| Mutex::new(Some(x))).collect();
+    let next = AtomicUsize::new(0);
+    let workers = threads.min(n);
+    let per_worker: Vec<Vec<(usize, R)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut scratch = mk();
+                    let mut got: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let item =
+                            slots[i].lock().unwrap().take().expect("par_map item taken twice");
+                        got.push((i, f(i, item, &mut scratch)));
                     }
                     got
                 })
@@ -111,6 +167,38 @@ mod tests {
     fn par_map_handles_empty_and_single() {
         assert_eq!(par_map(4, Vec::<u32>::new(), |_, x| x), Vec::<u32>::new());
         assert_eq!(par_map(4, vec![7u32], |i, x| x + i as u32), vec![7]);
+    }
+
+    #[test]
+    fn par_map_scratch_matches_par_map_at_any_thread_count() {
+        let items: Vec<usize> = (0..131).collect();
+        let want: Vec<usize> = items.iter().map(|&x| x * 2 + 5).collect();
+        for threads in [1, 2, 3, 8] {
+            // The scratch accumulates garbage across items on purpose:
+            // a correct kernel overwrites what it reads, so stale
+            // contents must never leak into results.
+            let got = par_map_scratch(
+                threads,
+                items.clone(),
+                Vec::<usize>::new,
+                |i, x, scratch| {
+                    scratch.push(x);
+                    assert_eq!(i, x);
+                    x * 2 + 5
+                },
+            );
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_map_scratch_reuses_one_scratch_per_worker() {
+        // Sequential path: every item sees the same buffer.
+        let trace = par_map_scratch(1, vec![0usize, 1, 2], Vec::<usize>::new, |_, x, s| {
+            s.push(x);
+            s.len()
+        });
+        assert_eq!(trace, vec![1, 2, 3], "one shared scratch grows across items");
     }
 
     #[test]

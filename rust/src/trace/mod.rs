@@ -97,6 +97,10 @@ pub enum TraceEvent {
         candidates: u64,
         cost: f64,
         affinity: f64,
+        /// Estimated compute seconds the decision was priced with (0
+        /// with the uncertainty subsystem off) — the audit trail that
+        /// scheduling consumed estimates, never truth.
+        est: f64,
     },
     /// Admission-controller verdict: "admit", "queue", "reject". A
     /// queued tenant shows "queue" at arrival and a second event,
@@ -110,6 +114,29 @@ pub enum TraceEvent {
     /// A failure-domain-diverse hedge replica COP was launched for
     /// `file` toward `dst` (resilience; `ResilienceConfig::hedge_k`).
     HedgeCopy { cop: u64, file: u64, dst: usize, bytes: u64 },
+    /// Straggler mitigation launched a speculative backup copy of
+    /// `task` (the canonical id); the backup runs as `spec` through the
+    /// regular scheduling path. Count ==
+    /// `RunMetrics::speculative_launches`.
+    SpeculativeLaunch { task: u64, spec: u64 },
+    /// The speculative backup finished before the canonical copy.
+    /// Count == `RunMetrics::speculative_wins`.
+    SpeculativeWin { task: u64, node: usize },
+    /// The losing copy of a speculative race was killed (`ran` = it had
+    /// started on `node`; a never-started loser reports node 0,
+    /// ran = false). Every race kills exactly one loser, so
+    /// launches == losses when the run drains; wins (backup finished
+    /// first) are a subset of launches.
+    SpeculativeLoss { task: u64, node: usize, ran: bool },
+    /// The RuntimeOracle absorbed one observed runtime: `err` is the
+    /// absolute relative error of the prior estimate, `est` the
+    /// post-update estimate factor. Count ==
+    /// `RunMetrics::estimate_updates`.
+    EstimateUpdate { task: u64, err: f64, est: f64 },
+    /// A node's effective speed changed mid-run (uncertainty plan):
+    /// `factor` is the multiplier now in effect (< 1 while degraded,
+    /// 1.0 on restore). Onset count == `RunMetrics::node_degrades`.
+    NodeDegrade { node: usize, factor: f64, restore: bool },
     /// An injected fault fired ("node-crash", "node-recover",
     /// "link-degrade", "link-restore", "rack-degrade", "rack-restore");
     /// `subject` is the node or rack index.
@@ -147,6 +174,11 @@ pub struct TraceCounts {
     pub samples: u64,
     pub checkpoints: u64,
     pub hedge_copies: u64,
+    pub spec_launches: u64,
+    pub spec_wins: u64,
+    pub spec_losses: u64,
+    pub estimate_updates: u64,
+    pub node_degrades: u64,
 }
 
 struct TraceBuf {
@@ -257,6 +289,15 @@ impl Trace {
                 },
                 TraceEvent::Checkpoint { .. } => c.checkpoints += 1,
                 TraceEvent::HedgeCopy { .. } => c.hedge_copies += 1,
+                TraceEvent::SpeculativeLaunch { .. } => c.spec_launches += 1,
+                TraceEvent::SpeculativeWin { .. } => c.spec_wins += 1,
+                TraceEvent::SpeculativeLoss { .. } => c.spec_losses += 1,
+                TraceEvent::EstimateUpdate { .. } => c.estimate_updates += 1,
+                TraceEvent::NodeDegrade { restore, .. } => {
+                    if !restore {
+                        c.node_degrades += 1;
+                    }
+                }
                 TraceEvent::Fault { .. } => c.faults += 1,
                 TraceEvent::Sample { .. } => c.samples += 1,
             }
@@ -350,16 +391,19 @@ fn jsonl_line(t: SimTime, ev: &TraceEvent) -> String {
             ("cop", Jv::U(*cop)),
             ("reason", Jv::S((*reason).into())),
         ]),
-        TraceEvent::Decision { task, node, kind, candidates, cost, affinity } => json::object_s(&[
-            ts,
-            ("type", Jv::S("decision".into())),
-            ("kind", Jv::S((*kind).into())),
-            ("task", Jv::U(*task)),
-            ("node", Jv::U(*node as u64)),
-            ("candidates", Jv::U(*candidates)),
-            ("cost", Jv::F(*cost)),
-            ("affinity", Jv::F(*affinity)),
-        ]),
+        TraceEvent::Decision { task, node, kind, candidates, cost, affinity, est } => {
+            json::object_s(&[
+                ts,
+                ("type", Jv::S("decision".into())),
+                ("kind", Jv::S((*kind).into())),
+                ("task", Jv::U(*task)),
+                ("node", Jv::U(*node as u64)),
+                ("candidates", Jv::U(*candidates)),
+                ("cost", Jv::F(*cost)),
+                ("affinity", Jv::F(*affinity)),
+                ("est", Jv::F(*est)),
+            ])
+        }
         TraceEvent::Admission { tenant, decision } => json::object_s(&[
             ts,
             ("type", Jv::S("admission".into())),
@@ -380,6 +424,39 @@ fn jsonl_line(t: SimTime, ev: &TraceEvent) -> String {
             ("file", Jv::U(*file)),
             ("dst", Jv::U(*dst as u64)),
             ("bytes", Jv::U(*bytes)),
+        ]),
+        TraceEvent::SpeculativeLaunch { task, spec } => json::object_s(&[
+            ts,
+            ("type", Jv::S("spec-launch".into())),
+            ("task", Jv::U(*task)),
+            ("spec", Jv::U(*spec)),
+        ]),
+        TraceEvent::SpeculativeWin { task, node } => json::object_s(&[
+            ts,
+            ("type", Jv::S("spec-win".into())),
+            ("task", Jv::U(*task)),
+            ("node", Jv::U(*node as u64)),
+        ]),
+        TraceEvent::SpeculativeLoss { task, node, ran } => json::object_s(&[
+            ts,
+            ("type", Jv::S("spec-loss".into())),
+            ("task", Jv::U(*task)),
+            ("node", Jv::U(*node as u64)),
+            ("ran", Jv::B(*ran)),
+        ]),
+        TraceEvent::EstimateUpdate { task, err, est } => json::object_s(&[
+            ts,
+            ("type", Jv::S("estimate-update".into())),
+            ("task", Jv::U(*task)),
+            ("err", Jv::F(*err)),
+            ("est", Jv::F(*est)),
+        ]),
+        TraceEvent::NodeDegrade { node, factor, restore } => json::object_s(&[
+            ts,
+            ("type", Jv::S("node-degrade".into())),
+            ("node", Jv::U(*node as u64)),
+            ("factor", Jv::F(*factor)),
+            ("restore", Jv::B(*restore)),
         ]),
         TraceEvent::Fault { kind, subject } => json::object_s(&[
             ts,
@@ -407,6 +484,7 @@ const CONTROL_TID_DECISIONS: u64 = 0;
 const CONTROL_TID_ADMISSION: u64 = 1;
 const CONTROL_TID_FAULTS: u64 = 2;
 const CONTROL_TID_RESIL: u64 = 3;
+const CONTROL_TID_UNC: u64 = 4;
 /// Task-phase spans occupy tids [0, COP_TID_BASE); COP spans start at
 /// COP_TID_BASE so the two lane pools can never collide.
 const COP_TID_BASE: u64 = 1000;
@@ -568,7 +646,7 @@ impl<'a> ChromeExport<'a> {
                         self.cop_lanes[dst][lane as usize] = false;
                     }
                 }
-                TraceEvent::Decision { task, node, kind, candidates, cost, affinity } => {
+                TraceEvent::Decision { task, node, kind, candidates, cost, affinity, est } => {
                     self.push_instant(
                         kind,
                         CONTROL_TID_DECISIONS,
@@ -579,6 +657,7 @@ impl<'a> ChromeExport<'a> {
                             ("candidates".into(), Jv::U(candidates)),
                             ("cost".into(), Jv::F(cost)),
                             ("affinity".into(), Jv::F(affinity)),
+                            ("est".into(), Jv::F(est)),
                         ],
                     );
                 }
@@ -612,6 +691,63 @@ impl<'a> ChromeExport<'a> {
                             ("file".into(), Jv::U(file)),
                             ("dst".into(), Jv::U(dst as u64)),
                             ("bytes".into(), Jv::U(bytes)),
+                        ],
+                    );
+                }
+                TraceEvent::SpeculativeLaunch { task, spec } => {
+                    self.push_instant(
+                        "spec-launch",
+                        CONTROL_TID_UNC,
+                        t,
+                        vec![("task".into(), Jv::U(task)), ("spec".into(), Jv::U(spec))],
+                    );
+                }
+                TraceEvent::SpeculativeWin { task, node } => {
+                    self.push_instant(
+                        "spec-win",
+                        CONTROL_TID_UNC,
+                        t,
+                        vec![("task".into(), Jv::U(task)), ("node".into(), Jv::U(node as u64))],
+                    );
+                }
+                TraceEvent::SpeculativeLoss { task, node, ran } => {
+                    // The losing copy's open phase span ends here.
+                    if ran {
+                        if let Some((pid, tid)) = self.close_task(task, t, "(spec-loss)") {
+                            self.free_lane(pid, tid);
+                        }
+                    }
+                    self.push_instant(
+                        "spec-loss",
+                        CONTROL_TID_UNC,
+                        t,
+                        vec![
+                            ("task".into(), Jv::U(task)),
+                            ("node".into(), Jv::U(node as u64)),
+                            ("ran".into(), Jv::B(ran)),
+                        ],
+                    );
+                }
+                TraceEvent::EstimateUpdate { task, err, est } => {
+                    self.push_instant(
+                        "estimate-update",
+                        CONTROL_TID_UNC,
+                        t,
+                        vec![
+                            ("task".into(), Jv::U(task)),
+                            ("err".into(), Jv::F(err)),
+                            ("est".into(), Jv::F(est)),
+                        ],
+                    );
+                }
+                TraceEvent::NodeDegrade { node, factor, restore } => {
+                    self.push_instant(
+                        if restore { "node-restore" } else { "node-degrade" },
+                        CONTROL_TID_UNC,
+                        t,
+                        vec![
+                            ("node".into(), Jv::U(node as u64)),
+                            ("factor".into(), Jv::F(factor)),
                         ],
                     );
                 }

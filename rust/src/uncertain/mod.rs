@@ -1,0 +1,393 @@
+//! Runtime uncertainty: noisy estimates, heterogeneous/degrading nodes,
+//! and the `RuntimeOracle` estimate seam.
+//!
+//! Production schedulers never see exact task runtimes (CWS interface
+//! papers; DynamicCloudSim's inaccurate-estimate model). This module
+//! makes the simulator honest about that split:
+//!
+//! - The **truth** a task actually runs for is its nominal engine
+//!   runtime scaled by a per-(task, attempt) lognormal factor
+//!   ([`truth_factor`]) and by the node's speed class / degradation
+//!   state compiled in an [`UncPlan`]. Only the executor sees truth.
+//! - Every runtime **consumer** (WOW's ILP priorities, CWS tie-breaks,
+//!   serve's admission estimator) sees the oracle's *estimate*: the
+//!   nominal runtime times a per-task-type a-priori bias factor
+//!   ([`bias_factor`]), corrected online by a per-type EWMA over
+//!   observed runtimes ([`RuntimeOracle::observe`]) normalized by node
+//!   speed — so mid-run arrivals and later stages benefit from what
+//!   earlier completions taught us.
+//!
+//! Determinism contract (same as `fault`/`serve`/`resil`): the default
+//! config is inert — `enabled()` is false, [`UncPlan::compile`] returns
+//! without constructing an RNG, and every executor hook is gated so the
+//! disabled path is bit-identical to a build without this module.
+//! Enabled runs draw from their own salted stream (`UNC_SALT`) plus
+//! pure splitmix hashes per (task, attempt), so they are deterministic
+//! per seed, independent of thread count and simulation core, and a
+//! speculative re-execution of the same task redraws its noise factor.
+
+use crate::fault::{salted_gauss, salted_unit};
+use crate::util::fxmap::FastMap;
+use crate::util::rng::Rng;
+use crate::util::units::SimTime;
+
+/// Salt for the uncertainty plan's private RNG stream (node speed
+/// classes, degradation events). Disjoint from the fault plan's
+/// `0xFA17...` and serve's arrival stream.
+pub const UNC_SALT: u64 = 0xE571_4A7E_5A17_ED00;
+
+/// Decorrelates the second Box–Muller draw inside [`truth_factor`].
+const TRUTH_SALT: u64 = 0x7AC7_0123_B1A5_ED42;
+
+/// Salt for the per-task-type a-priori estimate bias direction.
+const BIAS_SALT: u64 = 0xB1A5_FAC7_0C0F_FEE5;
+
+/// Runtime-uncertainty model. Inert by default: `enabled()` is false,
+/// no RNG stream is created, and the executor takes exactly the
+/// pre-uncertainty code path (bit-identical fingerprints).
+#[derive(Debug, Clone, PartialEq)]
+pub struct UncertaintyConfig {
+    /// Sigma of the lognormal truth-vs-nominal runtime factor
+    /// (`exp(sigma*z - sigma^2/2)`, mean 1). 0 = runtimes are exact.
+    pub noise_sigma: f64,
+    /// A-priori per-task-type estimate bias: each type's initial
+    /// estimate is off by a factor in `[1/(1+b), 1+b]`, direction
+    /// hashed from the type key. 0 = a-priori estimates are unbiased.
+    pub est_bias: f64,
+    /// Fraction of workers assigned a non-normal speed class
+    /// (alternating slow/fast over a shuffled node order). 0 = all
+    /// nodes run at class speed 1.0.
+    pub hetero_frac: f64,
+    /// Speed multiplier of the fast class.
+    pub fast_speed: f64,
+    /// Speed multiplier of the slow class.
+    pub slow_speed: f64,
+    /// Number of mid-run performance-degradation events to draw
+    /// (node loses `degrade_factor` of its speed for a window).
+    pub degrade_events: usize,
+    /// Speed multiplier applied while a node is degraded.
+    pub degrade_factor: f64,
+    /// Window `[lo, hi]` (seconds) in which degradation onsets fall.
+    pub degrade_window_s: (f64, f64),
+    /// How long each degradation lasts (seconds).
+    pub degrade_duration_s: f64,
+    /// EWMA smoothing for the online re-estimator. 0 = re-estimation
+    /// off (the oracle serves the a-priori biased estimate forever).
+    pub ewma_alpha: f64,
+    /// Launch speculative backup copies of detected stragglers.
+    pub speculate: bool,
+    /// A running task is a straggler candidate once its wall time
+    /// exceeds `spec_factor` times its estimated wall time.
+    pub spec_factor: f64,
+}
+
+impl Default for UncertaintyConfig {
+    fn default() -> Self {
+        UncertaintyConfig {
+            noise_sigma: 0.0,
+            est_bias: 0.0,
+            hetero_frac: 0.0,
+            fast_speed: 1.5,
+            slow_speed: 0.5,
+            degrade_events: 0,
+            degrade_factor: 0.4,
+            degrade_window_s: (60.0, 600.0),
+            degrade_duration_s: 300.0,
+            ewma_alpha: 0.0,
+            speculate: false,
+            spec_factor: 1.5,
+        }
+    }
+}
+
+impl UncertaintyConfig {
+    /// True when any part of the subsystem is active. When false the
+    /// executor must not touch this module at all.
+    pub fn enabled(&self) -> bool {
+        self.noise_sigma > 0.0
+            || self.est_bias > 0.0
+            || self.hetero_frac > 0.0
+            || self.degrade_events > 0
+            || self.ewma_alpha > 0.0
+            || self.speculate
+    }
+}
+
+/// A scheduled node-speed change, delivered through the executor's
+/// event queue like fault-plan events.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UncEvent {
+    /// Node enters a degraded window (speed multiplied by
+    /// `degrade_factor` while at least one window is active).
+    Degrade(usize),
+    /// One degraded window on the node ends.
+    Restore(usize),
+}
+
+/// Compiled per-run uncertainty plan: static node speed classes plus a
+/// time-sorted schedule of degradation events.
+#[derive(Debug, Clone, Default)]
+pub struct UncPlan {
+    /// Static speed-class multiplier per worker (empty when the plan
+    /// is inert — treat as all 1.0).
+    pub node_speed: Vec<f64>,
+    /// Time-sorted degradation onsets/offsets.
+    pub events: Vec<(SimTime, UncEvent)>,
+}
+
+impl UncPlan {
+    /// Compile the plan for a run. Returns the inert default — without
+    /// constructing an RNG — when the config is disabled.
+    pub fn compile(cfg: &UncertaintyConfig, n_workers: usize, seed: u64) -> UncPlan {
+        if !cfg.enabled() || n_workers == 0 {
+            return UncPlan::default();
+        }
+        let mut rng = Rng::new(seed ^ UNC_SALT);
+        let mut node_speed = vec![1.0; n_workers];
+        if cfg.hetero_frac > 0.0 {
+            let k = ((n_workers as f64 * cfg.hetero_frac).round() as usize).min(n_workers);
+            let mut order: Vec<usize> = (0..n_workers).collect();
+            rng.shuffle(&mut order);
+            for (i, &node) in order.iter().take(k).enumerate() {
+                node_speed[node] = if i % 2 == 0 { cfg.slow_speed } else { cfg.fast_speed };
+            }
+        }
+        let mut events = Vec::new();
+        if cfg.degrade_events > 0 {
+            let (lo, hi) = cfg.degrade_window_s;
+            for _ in 0..cfg.degrade_events {
+                let node = rng.index(n_workers);
+                let at = SimTime::from_secs_f64(rng.range_f64(lo, hi.max(lo)));
+                let until = at + SimTime::from_secs_f64(cfg.degrade_duration_s);
+                events.push((at, UncEvent::Degrade(node)));
+                events.push((until, UncEvent::Restore(node)));
+            }
+            // Stable sort keeps the Degrade-before-Restore pairing of
+            // zero-length windows deterministic.
+            events.sort_by_key(|&(t, _)| t);
+        }
+        UncPlan { node_speed, events }
+    }
+}
+
+/// The lognormal truth factor for one execution attempt of a task:
+/// `exp(sigma*z - sigma^2/2)` (mean 1). A pure hash of
+/// (seed, task, attempt) — zero draws from any RNG stream, identical
+/// on every core and at every thread count, and a speculative or
+/// retried copy (different attempt / task id) redraws it.
+pub fn truth_factor(sigma: f64, seed: u64, task_id: u64, attempt: u64) -> f64 {
+    if sigma <= 0.0 {
+        return 1.0;
+    }
+    let salt = seed ^ task_id.rotate_left(23) ^ attempt.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let z = salted_gauss(salt ^ TRUTH_SALT);
+    (sigma * z - 0.5 * sigma * sigma).exp()
+}
+
+/// The a-priori estimate bias factor for a task type: a deterministic
+/// factor in `[1/(1+b), 1+b]` whose direction and magnitude are hashed
+/// from the type key. This is what the scheduler believes before any
+/// observation corrects it.
+pub fn bias_factor(est_bias: f64, type_key: u64) -> f64 {
+    if est_bias <= 0.0 {
+        return 1.0;
+    }
+    let u = salted_unit(type_key ^ BIAS_SALT);
+    (1.0 + est_bias).powf(2.0 * u - 1.0)
+}
+
+/// Identity of a task type for estimation purposes: one workflow
+/// stage. FNV-1a over the workflow name plus the stage index, so the
+/// same pattern instantiated by several tenants shares one estimator.
+pub fn type_key(workflow_name: &str, stage: u32) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in workflow_name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    for b in stage.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// The estimate seam: everything outside the executor's truth path
+/// asks the oracle what a task of a given type is expected to cost,
+/// and the executor feeds completed runtimes back through
+/// [`RuntimeOracle::observe`].
+#[derive(Debug, Clone)]
+pub struct RuntimeOracle {
+    est_bias: f64,
+    ewma_alpha: f64,
+    /// Per-type (EWMA of observed truth/nominal ratio, observations).
+    ewma: FastMap<u64, (f64, u64)>,
+    mae_sum: f64,
+    mae_n: u64,
+}
+
+impl RuntimeOracle {
+    pub fn new(cfg: &UncertaintyConfig) -> RuntimeOracle {
+        RuntimeOracle {
+            est_bias: cfg.est_bias,
+            ewma_alpha: cfg.ewma_alpha,
+            ewma: FastMap::default(),
+            mae_sum: 0.0,
+            mae_n: 0,
+        }
+    }
+
+    /// Current estimated truth/nominal runtime factor for a type:
+    /// the EWMA once the re-estimator has observations, the a-priori
+    /// bias factor before that (or always, with the EWMA off).
+    pub fn estimate_factor(&self, key: u64) -> f64 {
+        if self.ewma_alpha > 0.0 {
+            if let Some(&(f, n)) = self.ewma.get(&key) {
+                if n > 0 {
+                    return f;
+                }
+            }
+        }
+        bias_factor(self.est_bias, key)
+    }
+
+    /// Estimated compute seconds for a task given its nominal runtime.
+    pub fn estimate_s(&self, key: u64, nominal_s: f64) -> f64 {
+        nominal_s * self.estimate_factor(key)
+    }
+
+    /// How many completed runtimes of this type have been observed.
+    pub fn observations(&self, key: u64) -> u64 {
+        self.ewma.get(&key).map(|&(_, n)| n).unwrap_or(0)
+    }
+
+    /// Feed back one observed truth/nominal ratio (already normalized
+    /// by node speed class and retry inflation). Returns
+    /// `(abs_rel_error_of_prior_estimate, new_estimate_factor)` for
+    /// tracing. Always scores the prior estimate (the MAE metric);
+    /// only moves the estimate when the EWMA is on.
+    pub fn observe(&mut self, key: u64, ratio: f64) -> (f64, f64) {
+        let prior = self.estimate_factor(key);
+        let err = (prior - ratio).abs() / ratio.max(1e-9);
+        self.mae_sum += err;
+        self.mae_n += 1;
+        if self.ewma_alpha > 0.0 {
+            let e = self.ewma.entry(key).or_insert((0.0, 0));
+            e.0 = if e.1 == 0 {
+                ratio
+            } else {
+                self.ewma_alpha * ratio + (1.0 - self.ewma_alpha) * e.0
+            };
+            e.1 += 1;
+        }
+        (err, self.estimate_factor(key))
+    }
+
+    /// Mean absolute relative error of the estimate at observation
+    /// time, over all observations so far (0 before any).
+    pub fn estimate_mae(&self) -> f64 {
+        if self.mae_n == 0 {
+            0.0
+        } else {
+            self.mae_sum / self.mae_n as f64
+        }
+    }
+
+    /// Number of observations fed back so far.
+    pub fn updates(&self) -> u64 {
+        self.mae_n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_inert() {
+        let cfg = UncertaintyConfig::default();
+        assert!(!cfg.enabled());
+        let plan = UncPlan::compile(&cfg, 16, 42);
+        assert!(plan.node_speed.is_empty());
+        assert!(plan.events.is_empty());
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_respects_shape() {
+        let cfg = UncertaintyConfig {
+            hetero_frac: 0.5,
+            degrade_events: 3,
+            ..Default::default()
+        };
+        let a = UncPlan::compile(&cfg, 8, 7);
+        let b = UncPlan::compile(&cfg, 8, 7);
+        assert_eq!(a.node_speed, b.node_speed);
+        assert_eq!(a.events, b.events);
+        let off_class = a.node_speed.iter().filter(|&&s| s != 1.0).count();
+        assert_eq!(off_class, 4, "hetero_frac 0.5 of 8 workers");
+        assert!(a.node_speed.iter().all(|&s| s > 0.0));
+        // 3 degrade windows -> 6 time-sorted events.
+        assert_eq!(a.events.len(), 6);
+        assert!(a.events.windows(2).all(|w| w[0].0 <= w[1].0));
+        let c = UncPlan::compile(&cfg, 8, 8);
+        assert!(c.node_speed != a.node_speed || c.events != a.events, "seed must matter");
+    }
+
+    #[test]
+    fn truth_factor_is_pure_and_attempt_sensitive() {
+        let f = truth_factor(0.5, 1, 99, 0);
+        assert_eq!(f, truth_factor(0.5, 1, 99, 0));
+        assert!(f > 0.0);
+        assert_ne!(f, truth_factor(0.5, 1, 99, 1), "retry/backup redraws");
+        assert_ne!(f, truth_factor(0.5, 2, 99, 0));
+        assert_eq!(truth_factor(0.0, 1, 99, 0), 1.0);
+        // Mean-1 lognormal: the empirical mean over many tasks is near 1.
+        let mean: f64 = (0..4000).map(|t| truth_factor(0.5, 3, t, 0)).sum::<f64>() / 4000.0;
+        assert!((mean - 1.0).abs() < 0.05, "mean {mean} should be ~1");
+    }
+
+    #[test]
+    fn bias_is_bounded_and_keyed() {
+        let b = 0.5;
+        for k in 0..100u64 {
+            let f = bias_factor(b, k);
+            assert!(f >= 1.0 / (1.0 + b) - 1e-12 && f <= 1.0 + b + 1e-12);
+        }
+        assert_eq!(bias_factor(0.0, 7), 1.0);
+        assert_ne!(type_key("chain", 0), type_key("chain", 1));
+        assert_ne!(type_key("chain", 0), type_key("fork", 0));
+    }
+
+    #[test]
+    fn ewma_converges_onto_observations() {
+        let cfg = UncertaintyConfig {
+            est_bias: 1.0,
+            ewma_alpha: 0.5,
+            noise_sigma: 0.0,
+            ..Default::default()
+        };
+        let mut o = RuntimeOracle::new(&cfg);
+        let k = type_key("w", 0);
+        let prior = o.estimate_factor(k);
+        assert_ne!(prior, 1.0, "a-priori estimate is biased");
+        // Exact runtimes (ratio 1.0): first observation pays the bias
+        // error, every later one is exact, and the estimate jumps to 1.
+        let (err0, est0) = o.observe(k, 1.0);
+        assert!((err0 - (prior - 1.0).abs()).abs() < 1e-12);
+        assert_eq!(est0, 1.0);
+        let (err1, _) = o.observe(k, 1.0);
+        assert_eq!(err1, 0.0);
+        assert!(o.estimate_mae() < err0, "MAE decreases as the EWMA learns");
+        assert_eq!(o.updates(), 2);
+        assert_eq!(o.observations(k), 2);
+        // With the EWMA off the oracle never learns.
+        let mut off = RuntimeOracle::new(&UncertaintyConfig {
+            est_bias: 1.0,
+            ..Default::default()
+        });
+        off.observe(k, 1.0);
+        off.observe(k, 1.0);
+        assert!(off.estimate_mae() > o.estimate_mae());
+        assert_eq!(off.estimate_factor(k), prior);
+    }
+}

@@ -36,6 +36,29 @@ use crate::workflow::task::{FileId, TaskId};
 pub const TENANT_SHIFT: u32 = 40;
 const LOCAL_MASK: u64 = (1u64 << TENANT_SHIFT) - 1;
 
+/// High bit marking a *speculative backup copy* of a task (straggler
+/// mitigation). A backup shares the canonical task's tenant and local
+/// id — only this bit differs — so the two copies are distinct keys in
+/// every executor/DPS map while [`task_tenant`] / [`local_task`] still
+/// resolve to the same logical task.
+pub const SPEC_BIT: u64 = 1 << 63;
+
+/// The speculative-backup id for a canonical task id.
+pub fn spec_task(id: TaskId) -> TaskId {
+    debug_assert!(id.0 & SPEC_BIT == 0, "task already speculative");
+    TaskId(id.0 | SPEC_BIT)
+}
+
+/// Whether an id names a speculative backup copy.
+pub fn is_spec_task(id: TaskId) -> bool {
+    id.0 & SPEC_BIT != 0
+}
+
+/// The canonical (non-speculative) id for any task id.
+pub fn canonical_task(id: TaskId) -> TaskId {
+    TaskId(id.0 & !SPEC_BIT)
+}
+
 /// Namespace an engine-local task id into the shared id space.
 /// Identity for tenant 0.
 pub fn ns_task(tenant: usize, local: TaskId) -> TaskId {
@@ -50,12 +73,14 @@ pub fn ns_file(tenant: usize, local: FileId) -> FileId {
     FileId(((tenant as u64) << TENANT_SHIFT) | local.0)
 }
 
-/// The tenant index a namespaced task id belongs to.
+/// The tenant index a namespaced task id belongs to. Transparent to
+/// the speculative-copy bit.
 pub fn task_tenant(id: TaskId) -> usize {
-    (id.0 >> TENANT_SHIFT) as usize
+    ((id.0 & !SPEC_BIT) >> TENANT_SHIFT) as usize
 }
 
-/// The engine-local part of a namespaced task id.
+/// The engine-local part of a namespaced task id. Transparent to the
+/// speculative-copy bit (`SPEC_BIT` sits above `LOCAL_MASK`).
 pub fn local_task(id: TaskId) -> TaskId {
     TaskId(id.0 & LOCAL_MASK)
 }
@@ -285,6 +310,19 @@ mod tests {
         let b = ns_task(2, TaskId(0));
         assert_ne!(a, b);
         assert!(ns_task(1, TaskId(LOCAL_MASK)) < ns_task(2, TaskId(0)));
+    }
+
+    #[test]
+    fn speculative_ids_share_tenant_and_local() {
+        let canonical = ns_task(3, TaskId(17));
+        let spec = spec_task(canonical);
+        assert_ne!(spec, canonical);
+        assert!(is_spec_task(spec));
+        assert!(!is_spec_task(canonical));
+        assert_eq!(canonical_task(spec), canonical);
+        assert_eq!(canonical_task(canonical), canonical);
+        assert_eq!(task_tenant(spec), 3);
+        assert_eq!(local_task(spec), TaskId(17));
     }
 
     #[test]

@@ -1,0 +1,312 @@
+//! Runtime-uncertainty integration tests (DESIGN.md §16). The
+//! load-bearing contracts:
+//!
+//! 1. A disabled `UncertaintyConfig` (the default) is **inert**: the
+//!    executor takes exactly the pre-uncertainty code path, so all four
+//!    simulation cores and every thread count produce bit-identical
+//!    `RunMetrics` fingerprints on an eventful serving + fault +
+//!    resilience scenario.
+//! 2. Speculative backups really launch, resolve first-finisher-wins,
+//!    and the loser's outputs are never registered — `unique_generated`
+//!    matches the same run with speculation off, and the trace is an
+//!    itemized receipt (every launch resolves with exactly one loss).
+//! 3. The EWMA re-estimator learns: on a biased-estimate run its
+//!    mean absolute estimate error is strictly below the no-mitigation
+//!    run's.
+//! 4. Decision paths consume **estimates, never truth**: admission
+//!    verdicts are invariant to the noise level, and every traced
+//!    scheduler decision prices work from nominal×estimate-factor
+//!    values.
+
+use wow::dfs::DfsKind;
+use wow::dps::cost::NativeCost;
+use wow::exec::{run_workload, run_workload_observed, ObserveConfig, RunConfig, SimCore};
+use wow::fault::{FaultConfig, ResilienceConfig};
+use wow::scheduler::{Strategy, TenantPolicy};
+use wow::serve::{self, AdmissionPolicy, DequeueOrder, ServeConfig};
+use wow::trace::{TraceConfig, TraceEvent};
+use wow::uncertain::UncertaintyConfig;
+use wow::util::units::Bytes;
+use wow::workflow::spec::{ComputeModel, OutputSize, Rule, StageSpec, WorkflowSpec};
+use wow::workflow::task::StageId;
+use wow::workload::WorkloadSpec;
+
+/// The saturating tenant workflow from `rust/tests/serve.rs`.
+fn hog() -> WorkflowSpec {
+    WorkflowSpec {
+        name: "hog".into(),
+        stages: vec![
+            StageSpec {
+                name: "map".into(),
+                rule: Rule::Source { count: 4, inputs_per_task: 1 },
+                cores: 16,
+                mem: Bytes::from_gb(4.0),
+                compute: ComputeModel::fixed(45.0),
+                out_count: 1,
+                out_size: OutputSize::FixedGb(0.3),
+            },
+            StageSpec {
+                name: "reduce".into(),
+                rule: Rule::PerTask { from: StageId(0) },
+                cores: 2,
+                mem: Bytes::from_gb(2.0),
+                compute: ComputeModel::fixed(10.0),
+                out_count: 1,
+                out_size: OutputSize::RatioOfInput(0.5),
+            },
+        ],
+        input_files_gb: vec![0.5; 4],
+    }
+}
+
+/// A wide two-stage workflow: 16 parallel tasks per stage, so every
+/// task type accumulates observations fast and a high-noise run almost
+/// surely produces detectable stragglers.
+fn wide() -> WorkflowSpec {
+    WorkflowSpec {
+        name: "wide".into(),
+        stages: vec![
+            StageSpec {
+                name: "map".into(),
+                rule: Rule::Source { count: 16, inputs_per_task: 1 },
+                cores: 2,
+                mem: Bytes::from_gb(2.0),
+                compute: ComputeModel::fixed(30.0),
+                out_count: 1,
+                out_size: OutputSize::FixedGb(0.2),
+            },
+            StageSpec {
+                name: "reduce".into(),
+                rule: Rule::PerTask { from: StageId(0) },
+                cores: 2,
+                mem: Bytes::from_gb(2.0),
+                compute: ComputeModel::fixed(15.0),
+                out_count: 1,
+                out_size: OutputSize::RatioOfInput(0.5),
+            },
+        ],
+        input_files_gb: vec![0.3; 16],
+    }
+}
+
+/// The serving + fault + resilience regime from `rust/tests/threads.rs`
+/// — the nastiest scenario the simulator has, with the uncertainty
+/// subsystem left at its inert default.
+fn stormy_resilient() -> (WorkloadSpec, RunConfig) {
+    let wl = serve::open_stream("stream", &[hog()], 30.0, 300.0, 3);
+    let cfg = RunConfig {
+        strategy: Strategy::Wow,
+        dfs: DfsKind::Ceph,
+        seed: 3,
+        tenant_policy: TenantPolicy::FairShare,
+        serve: ServeConfig {
+            admission: AdmissionPolicy::Queue { active: 6, depth: 8, order: DequeueOrder::Fifo },
+            preempt: true,
+            slo_s: 400.0,
+            horizon_s: 300.0,
+            dedup: true,
+        },
+        fault: FaultConfig {
+            node_crashes: 1,
+            crash_window_s: (40.0, 200.0),
+            recovery_s: Some(60.0),
+            task_fail_prob: 0.05,
+            ..Default::default()
+        },
+        resil: ResilienceConfig {
+            hedge_k: 1,
+            checkpoint_every_s: 20.0,
+            checkpoint_gb: 0.1,
+            hazard_weight: 1.0,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    (wl, cfg)
+}
+
+/// Contract 1: the default `UncertaintyConfig` is inert — zero extra
+/// RNG draws, zero extra events — so the disabled path stays
+/// bit-identical across all four cores and thread counts on the most
+/// eventful scenario available.
+#[test]
+fn disabled_uncertainty_is_inert_on_every_core_and_thread_count() {
+    assert!(!UncertaintyConfig::default().enabled());
+    let (wl, cfg) = stormy_resilient();
+    assert!(!cfg.uncertain.enabled(), "the scenario leaves uncertainty at the inert default");
+    let mut prints = Vec::new();
+    for core in [SimCore::Incremental, SimCore::Checked, SimCore::Eager, SimCore::Naive] {
+        for threads in [1usize, 2] {
+            let mut c = cfg.clone();
+            c.core = core;
+            c.threads = threads;
+            let m = run_workload(&wl, &c);
+            assert_eq!(m.speculative_launches, 0);
+            assert_eq!(m.estimate_updates, 0);
+            assert_eq!(m.node_degrades, 0);
+            assert_eq!(m.estimate_mae, 0.0);
+            prints.push((core, threads, m.fingerprint()));
+        }
+    }
+    let (_, _, first) = prints[0];
+    for (core, threads, fp) in &prints {
+        assert_eq!(*fp, first, "{core:?}/threads={threads} diverged from Incremental/1");
+    }
+}
+
+fn spec_cfg(seed: u64) -> RunConfig {
+    RunConfig {
+        strategy: Strategy::Wow,
+        dfs: DfsKind::Ceph,
+        seed,
+        uncertain: UncertaintyConfig {
+            noise_sigma: 1.0,
+            ewma_alpha: 0.3,
+            speculate: true,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// Contract 2: speculation launches backups, first finisher wins, the
+/// loser is killed with its outputs invalidated (`unique_generated`
+/// matches the speculation-off run exactly), and the trace reconciles
+/// with the metrics counters. Repeated runs at a fixed seed and
+/// threads ∈ {1, 2} stay bit-identical.
+#[test]
+fn speculation_resolves_races_without_output_pollution() {
+    let wl = WorkloadSpec::solo(wide());
+    let obs = ObserveConfig { trace: Some(TraceConfig { sample_every_s: 0.0 }), profile: false };
+    let mut total_launches = 0;
+    for seed in 0..3u64 {
+        let cfg = spec_cfg(seed);
+        let out = run_workload_observed(&wl, &cfg, Box::new(NativeCost), &obs);
+        let m = &out.metrics;
+        let c = out.trace.expect("tracing was requested").counts();
+        assert!(m.speculative_wins <= m.speculative_launches, "seed {seed}");
+        assert_eq!(c.spec_launches, m.speculative_launches, "seed {seed}");
+        assert_eq!(c.spec_wins, m.speculative_wins, "seed {seed}");
+        // Every race resolves by killing exactly one loser; wins count
+        // only the races the *backup* won, so they are a subset.
+        assert_eq!(
+            c.spec_launches, c.spec_losses,
+            "seed {seed}: every race must resolve by killing exactly one loser"
+        );
+        assert!(c.spec_wins <= c.spec_launches, "seed {seed}");
+        assert_eq!(c.estimate_updates, m.estimate_updates, "seed {seed}");
+        assert!(
+            m.speculative_wins == 0 || m.speculative_wasted_compute_hours > 0.0,
+            "seed {seed}: a won race means a killed straggler with sunk compute"
+        );
+        // Loser outputs are invalidated, never consumed: the distinct
+        // bytes generated match the same run with speculation off.
+        let mut off = cfg.clone();
+        off.uncertain.speculate = false;
+        let plain = run_workload(&wl, &off);
+        assert_eq!(m.tasks_total, plain.tasks_total, "seed {seed}");
+        assert_eq!(
+            m.unique_generated, plain.unique_generated,
+            "seed {seed}: speculation must not change what data exists"
+        );
+        // Determinism: repeat and thread-count invariance.
+        let again = run_workload(&wl, &cfg);
+        assert_eq!(again.fingerprint(), m.fingerprint(), "seed {seed}: rerun diverged");
+        let mut two = cfg.clone();
+        two.threads = 2;
+        assert_eq!(
+            run_workload(&wl, &two).fingerprint(),
+            m.fingerprint(),
+            "seed {seed}: threads=2 diverged"
+        );
+        total_launches += m.speculative_launches;
+    }
+    assert!(total_launches > 0, "σ=1.0 on 32 tasks must produce stragglers across 3 seeds");
+}
+
+/// Contract 3: the EWMA re-estimator learns a static bias away — its
+/// mean absolute estimate error lands strictly below the no-mitigation
+/// run's on the same biased workload.
+#[test]
+fn ewma_reestimation_reduces_estimate_error() {
+    let wl = WorkloadSpec::solo(wide());
+    let biased = |alpha: f64| RunConfig {
+        strategy: Strategy::Wow,
+        dfs: DfsKind::Ceph,
+        uncertain: UncertaintyConfig { est_bias: 1.0, ewma_alpha: alpha, ..Default::default() },
+        ..Default::default()
+    };
+    let off = run_workload(&wl, &biased(0.0));
+    let ewma = run_workload(&wl, &biased(0.3));
+    assert!(off.estimate_updates > 0 && ewma.estimate_updates > 0);
+    assert_eq!(off.estimate_updates, ewma.estimate_updates, "same completions observed");
+    assert!(off.estimate_mae > 0.0, "a biased estimate must score a real error");
+    assert!(
+        ewma.estimate_mae < off.estimate_mae,
+        "EWMA must learn: mae {} !< {}",
+        ewma.estimate_mae,
+        off.estimate_mae
+    );
+}
+
+/// Contract 4a: admission verdicts are a pure function of estimates.
+/// With unbiased estimates and the EWMA off, the load-shed decision
+/// stream cannot move with the noise level — truth never reaches it.
+#[test]
+fn admission_verdicts_are_invariant_to_truth_noise() {
+    let mix = vec![hog()];
+    let wl = WorkloadSpec::from_mix("shed", &mix, 4, &wow::workload::Arrival::AllAtOnce, 0);
+    // hog estimates to 4*45*16 + 4*10*2 = 2960 core-s per tenant: a
+    // 6000 core-s budget admits exactly two of four tenants.
+    let cfg = |sigma: f64| RunConfig {
+        strategy: Strategy::Wow,
+        dfs: DfsKind::Ceph,
+        serve: ServeConfig {
+            admission: AdmissionPolicy::LoadShed { max_core_s: 6000.0 },
+            ..Default::default()
+        },
+        uncertain: UncertaintyConfig { noise_sigma: sigma, ..Default::default() },
+        ..Default::default()
+    };
+    let exact = run_workload(&wl, &cfg(0.0)); // uncertainty fully off
+    assert!(!cfg(0.0).uncertain.enabled());
+    assert_eq!(exact.tenants_rejected, 2, "the budget is sized to shed half the fleet");
+    for sigma in [0.5, 1.0] {
+        let noisy = run_workload(&wl, &cfg(sigma));
+        assert_eq!(noisy.tenants_rejected, exact.tenants_rejected, "sigma {sigma}");
+        let verdicts: Vec<bool> = noisy.tenants.iter().map(|t| t.rejected).collect();
+        let base: Vec<bool> = exact.tenants.iter().map(|t| t.rejected).collect();
+        assert_eq!(verdicts, base, "sigma {sigma}: the shed *set* moved with truth noise");
+    }
+}
+
+/// Contract 4b: every traced scheduler decision prices work from the
+/// oracle's estimate — with unbiased estimates that is exactly the
+/// nominal stage runtime, never the noisy truth the executor runs.
+#[test]
+fn scheduler_decisions_price_from_estimates() {
+    let wl = WorkloadSpec::solo(wide());
+    let cfg = RunConfig {
+        strategy: Strategy::Wow,
+        dfs: DfsKind::Ceph,
+        uncertain: UncertaintyConfig { noise_sigma: 1.0, ..Default::default() },
+        ..Default::default()
+    };
+    let obs = ObserveConfig { trace: Some(TraceConfig { sample_every_s: 0.0 }), profile: false };
+    let out = run_workload_observed(&wl, &cfg, Box::new(NativeCost), &obs);
+    let trace = out.trace.expect("tracing was requested");
+    let mut seen = 0;
+    for ev in &trace.events {
+        if let (_, TraceEvent::Decision { est, .. }) = ev {
+            // Nominal stage runtimes are 30 s and 15 s; the estimate
+            // factor is exactly 1.0 (no bias, no EWMA), so any other
+            // value means a truth draw leaked into the decision path.
+            assert!(
+                *est == 30.0 || *est == 15.0 || *est == 0.0,
+                "decision priced with non-estimate runtime {est}"
+            );
+            seen += 1;
+        }
+    }
+    assert!(seen > 0, "an explained run must trace decisions");
+}
